@@ -1,0 +1,81 @@
+//! Kernel explorer: interrogate the simulated GPU testbed the way the
+//! paper's evaluation section does — occupancy per variant, predicted
+//! Table II ranking per machine, limiter analysis, and a what-if sweep
+//! over hypothetical tile shapes (the tuning workflow of §V).
+//!
+//!     cargo run --release --example kernel_explorer
+
+use hostencil::gpusim::arch::{self, GpuArch};
+use hostencil::gpusim::{kernels, occupancy, timing, KernelResources};
+
+fn main() {
+    // 1. occupancy + limiter per paper variant, per machine
+    for machine in arch::all() {
+        println!("=== {} ({}, {} SMs) ===", machine.name, machine.sm_version, machine.sm_count);
+        println!(
+            "{:<22}{:>7}{:>6}{:>7}{:>9}{:>8}  {}",
+            "variant", "block", "regs", "smem", "thWarps", "occ%", "limited by"
+        );
+        for v in kernels::paper_variants() {
+            let res = v.resources_inner();
+            if res.threads_per_block > machine.max_threads_per_block
+                || res.smem_per_block > machine.smem_per_block
+            {
+                println!("{:<22}  (exceeds {} block limits)", v.id, machine.name);
+                continue;
+            }
+            let occ = occupancy::occupancy(&machine, &res);
+            println!(
+                "{:<22}{:>7}{:>6}{:>7}{:>9}{:>8.1}  {:?}",
+                v.id,
+                res.threads_per_block,
+                res.regs_per_thread,
+                res.smem_per_block,
+                occ.active_warps,
+                occ.occupancy_pct,
+                occ.limiter
+            );
+        }
+        top5(&machine);
+        println!();
+    }
+
+    // 2. what-if: sweep hypothetical 2.5D plane shapes on V100 and find
+    //    the occupancy-optimal tile for a register-streaming kernel.
+    println!("=== what-if: st_reg_fixed-style tiles on V100 ===");
+    let a = arch::v100();
+    let mut best: Option<(u32, u32, u32)> = None;
+    for d1 in [8u32, 16, 32, 64] {
+        for d2 in [8u32, 16, 32, 64] {
+            let threads = d1 * d2;
+            if threads > a.max_threads_per_block || threads < 64 {
+                continue;
+            }
+            let regs = if threads >= 1024 { 64 } else { 78 };
+            let smem = (d1 + 8) * (d2 + 8) * 4;
+            let occ = occupancy::occupancy(&a, &KernelResources {
+                threads_per_block: threads,
+                regs_per_thread: regs,
+                smem_per_block: smem,
+            });
+            println!("  {d1:>2}x{d2:<3} threads {threads:>4} regs {regs} -> {:>2} warps ({:.1}%)", occ.active_warps, occ.occupancy_pct);
+            if best.map(|(_, _, w)| occ.active_warps > w).unwrap_or(true) {
+                best = Some((d1, d2, occ.active_warps));
+            }
+        }
+    }
+    let (b1, b2, bw) = best.unwrap();
+    println!("best occupancy tile: {b1}x{b2} ({bw} warps)");
+}
+
+fn top5(machine: &GpuArch) {
+    let mut runs = timing::simulate_all(machine, 1000);
+    runs.sort_by(|a, b| a.time_s.total_cmp(&b.time_s));
+    println!("predicted fastest on {}:", machine.name);
+    for r in runs.iter().take(5) {
+        println!(
+            "  {:<22}{:>9.2}s  {:>6.0} GF/s  AI_dram {:.2}  ({:.0}% of DRAM roof)",
+            r.variant_id, r.time_s, r.gflops, r.ai_dram, r.pct_of_dram_peak
+        );
+    }
+}

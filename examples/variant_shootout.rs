@@ -1,0 +1,77 @@
+//! Variant shootout: run every inner-kernel code shape on the real PJRT
+//! testbed with identical physics, and rank them — the local, measured
+//! analog of a Table II column — then compare the measured ranking with
+//! the gpusim prediction for this class of machine.
+//!
+//!     make artifacts && cargo run --release --example variant_shootout
+
+use std::time::Instant;
+
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::grid::Dim3;
+use hostencil::runtime::Engine;
+use hostencil::wave::{self, Source, VelocityModel};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts")?;
+    engine.preload_all()?;
+    let domain = engine.manifest().domain;
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+    println!(
+        "shootout: {} steps per variant on {} (pml {}), platform {}",
+        steps,
+        domain.interior,
+        domain.pml_width,
+        engine.platform()
+    );
+
+    let v = VelocityModel::Constant(2500.0).build(domain.interior);
+    let eta = wave::eta_profile(&domain, 2500.0);
+    let c = domain.interior.z / 2;
+    let src = Source { pos: Dim3::new(c, c, c), f0: 15.0, amplitude: 1.0 };
+
+    let mut rows: Vec<(String, f64, f64)> = Vec::new();
+    let variants: Vec<String> = engine
+        .manifest()
+        .inner_variants()
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for variant in &variants {
+        let mut coord = Coordinator::new(
+            Some(&engine),
+            domain,
+            Mode::Decomposed,
+            variant,
+            "smem_eta_1",
+            v.clone(),
+            eta.clone(),
+            src,
+            vec![],
+        )?;
+        coord.step()?; // warm the executable cache
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            coord.step()?;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mpts = (domain.interior.volume() * steps) as f64 / dt / 1e6;
+        rows.push((variant.clone(), dt, mpts));
+    }
+    rows.sort_by(|a, b| a.1.total_cmp(&b.1));
+
+    println!("\nmeasured (this machine, CPU PJRT):");
+    for (i, (name, t, mpts)) in rows.iter().enumerate() {
+        println!("  {:>2}. {:<16}{:>8.3}s  {:>8.2} Mpts/s", i + 1, name, t, mpts);
+    }
+
+    println!(
+        "\nnote: on this CPU testbed all variants lower to similar XLA loops, so\n\
+         spreads are small; the per-GPU spreads live in the gpusim model\n\
+         (`hostencil table2` / `hostencil sweep --machine p100`)."
+    );
+    Ok(())
+}

@@ -1,0 +1,185 @@
+"""AOT compile path: lower every (region, variant) step to HLO text.
+
+Python runs exactly once, at build time (`make artifacts`); the Rust
+coordinator loads the emitted `artifacts/*.hlo.txt` through PJRT and the
+request path never touches Python again.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` 0.1.6 crate binds) rejects; the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--nz 48 --ny 48 --nx 48 --pml 8 --h 10 --vmax 3000] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import hashlib
+import json
+import os
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import common, model
+from compile.common import DTYPE, R, ProblemSpec
+
+
+def to_hlo_text(lowered) -> str:
+    """jax lowering -> XlaComputation -> HLO text (id-safe interchange).
+
+    return_tuple=False: every step function returns exactly one array, so
+    the HLO root is that array and the Rust side can fetch results with a
+    single raw device->host copy (no tuple literal unwrap) — see
+    EXPERIMENTS.md §Perf.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower(fn: Callable, args: Sequence[jax.ShapeDtypeStruct]) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def sds(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), DTYPE)
+
+
+def build_artifacts(spec: ProblemSpec, out_dir: str, *, quick: bool = False) -> dict:
+    """Lower the full artifact set; returns the manifest dict."""
+    spec.validate()
+    os.makedirs(out_dir, exist_ok=True)
+    inner = spec.inner
+    entries = []
+
+    def emit(name: str, kind: str, variant: str, region_class: str, fn, inputs, out_shape, extra=None):
+        t0 = time.time()
+        text = lower(fn, [sds(s) for _, s in inputs])
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "kind": kind,
+            "variant": variant,
+            "region_class": region_class,
+            "inputs": [{"name": n, "shape": list(s)} for n, s in inputs],
+            "output_shape": list(out_shape),
+            "hlo_bytes": len(text),
+            "lower_seconds": round(time.time() - t0, 3),
+        }
+        entry.update(extra or {})
+        entries.append(entry)
+        print(f"  {name:34s} {len(text):>9d} B  {entry['lower_seconds']:6.2f}s")
+
+    inner_pad = tuple(s + 2 * R for s in inner)
+    inner_inputs = [("u_pad", inner_pad), ("um", inner), ("v", inner)]
+
+    inner_variants = ("gmem", "st_smem") if quick else model.INNER_VARIANTS
+    pml_variants = ("gmem",) if quick else model.PML_VARIANTS
+
+    print(f"[aot] inner region {inner}, interior {spec.interior}, pml {spec.pml_width}")
+    for var in inner_variants:
+        fn = model.make_inner_step(var, inner, dt=spec.dt, h=spec.h)
+        emit(f"inner_{var}", "inner", var, "inner", fn, inner_inputs, inner)
+
+    for cls in model.FACE_CLASSES:
+        shape = model.face_class_shape(spec, cls)
+        pad1 = tuple(s + 2 for s in shape)
+        inputs = [("u_pad1", pad1), ("um", shape), ("v", shape), ("eta_pad1", pad1)]
+        for var in pml_variants:
+            fn = model.make_pml_step(var, shape, dt=spec.dt, h=spec.h)
+            emit(f"pml_{cls}_{var}", "pml", var, cls, fn, inputs, shape)
+
+    full_pad = spec.padded
+    mono_inputs = [
+        ("u_pad", full_pad),
+        ("um", spec.interior),
+        ("v", spec.interior),
+        ("eta_pad", full_pad),
+    ]
+    emit(
+        "monolithic",
+        "monolithic",
+        "monolithic",
+        "full",
+        model.make_monolithic_step(spec),
+        mono_inputs,
+        spec.interior,
+    )
+    if not quick:
+        emit(
+            "fused",
+            "fused",
+            "gmem",
+            "full",
+            model.make_fused_step(spec),
+            mono_inputs,
+            spec.interior,
+        )
+
+    manifest = {
+        "format_version": 1,
+        "spec": {
+            "interior": list(spec.interior),
+            "pml_width": spec.pml_width,
+            "h": spec.h,
+            "dt": spec.dt,
+            "halo": R,
+        },
+        "artifacts": entries,
+    }
+    return manifest
+
+
+def source_fingerprint() -> str:
+    """Hash of every compile-path source file, for `make` no-op freshness."""
+    base = os.path.dirname(os.path.abspath(__file__))
+    hasher = hashlib.sha256()
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    hasher.update(fh.read())
+    return hasher.hexdigest()
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--nz", type=int, default=48)
+    p.add_argument("--ny", type=int, default=48)
+    p.add_argument("--nx", type=int, default=48)
+    p.add_argument("--pml", type=int, default=8)
+    p.add_argument("--h", type=float, default=10.0)
+    p.add_argument("--vmax", type=float, default=3000.0)
+    p.add_argument("--dt", type=float, default=None, help="override CFL-derived dt")
+    p.add_argument("--quick", action="store_true", help="only gmem/st_smem variants")
+    args = p.parse_args()
+
+    # floor (not round) to 1us so the derived dt never exceeds the CFL bound
+    dt = args.dt if args.dt is not None else math.floor(common.cfl_dt(args.h, args.vmax) * 1e6) / 1e6
+    spec = ProblemSpec(interior=(args.nz, args.ny, args.nx), pml_width=args.pml, h=args.h, dt=dt)
+
+    t0 = time.time()
+    manifest = build_artifacts(spec, args.out_dir, quick=args.quick)
+    manifest["source_fingerprint"] = source_fingerprint()
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts in {time.time()-t0:.1f}s -> {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

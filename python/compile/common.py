@@ -1,0 +1,171 @@
+"""Shared finite-difference machinery for the high-order stencil stack.
+
+This module is the single source of truth for the discretization used by
+every layer: the pure-jnp oracle (`kernels/ref.py`), the Pallas kernel
+variants (`kernels/*.py`), the L2 model (`model.py`), and — by mirrored
+constants — the Rust golden propagator (`rust/src/stencil/`).
+
+Numerics (see DESIGN.md §5):
+
+* Interior: 8th-order, 25-point star Laplacian (halo R = 4), leapfrog in
+  time:  u+ = 2u - u- + dt^2 v^2 lap8(u).
+* PML faces: 2nd-order, 7-point star Laplacian (halo 1) with a damped
+  update driven by eta-bar, the 7-point star smoothing of the damping
+  profile eta (this is what gives eta a halo of 1, exactly the access
+  pattern the paper's smem_eta kernels stage into shared memory):
+      u+ = [2u - (1 - eta_bar dt) u- + dt^2 v^2 lap2(u)] / (1 + eta_bar dt)
+
+Array layout is (z, y, x) with x innermost/contiguous, matching the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+
+# Halo width of the high-order stencil: half of the 8th spatial order.
+R = 4
+# Halo width of the eta array in the PML update (7-point star on eta).
+R_ETA = 1
+
+# 8th-order central finite-difference coefficients for the second
+# derivative, per axis: c0 is the center weight, C8[m] the weight of the
+# +-m neighbors.  (Standard Fornberg weights; divide by h^2.)
+C8 = (
+    -205.0 / 72.0,  # center
+    8.0 / 5.0,  # +-1
+    -1.0 / 5.0,  # +-2
+    8.0 / 315.0,  # +-3
+    -1.0 / 560.0,  # +-4
+)
+
+# 2nd-order central coefficients for the 7-point Laplacian.
+C2 = (-2.0, 1.0)
+
+DTYPE = jnp.float32
+
+
+def cfl_dt(h: float, v_max: float) -> float:
+    """Largest stable leapfrog dt for the 8th-order 3D Laplacian.
+
+    Stability bound: dt <= 2 h / (v sqrt(3 * sum_m |c_m| )) with the
+    (dimensionless) axis coefficients C8. We apply a 0.9 safety factor.
+    """
+    s = abs(C8[0]) + 2.0 * sum(abs(c) for c in C8[1:])
+    return 0.9 * 2.0 * h / (v_max * (3.0 * s) ** 0.5)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemSpec:
+    """Static description of one simulation problem (shapes + constants).
+
+    `interior` is the physical domain INCLUDING the PML sponge but
+    excluding the R-wide ghost layer of zeros (Dirichlet closure) that
+    every padded array carries on all six faces.
+    """
+
+    interior: Tuple[int, int, int]  # (nz, ny, nx)
+    pml_width: int
+    h: float  # grid spacing [m]
+    dt: float  # time step [s]
+
+    @property
+    def padded(self) -> Tuple[int, int, int]:
+        nz, ny, nx = self.interior
+        return (nz + 2 * R, ny + 2 * R, nx + 2 * R)
+
+    @property
+    def inner(self) -> Tuple[int, int, int]:
+        """Shape of the inner (non-PML) region."""
+        nz, ny, nx = self.interior
+        w = self.pml_width
+        return (nz - 2 * w, ny - 2 * w, nx - 2 * w)
+
+    def validate(self) -> None:
+        nz, ny, nx = self.interior
+        w = self.pml_width
+        if w < 1:
+            raise ValueError("pml_width must be >= 1")
+        if min(nz, ny, nx) <= 2 * w:
+            raise ValueError(f"interior {self.interior} too small for PML width {w}")
+
+
+def axis_slices(shape: Sequence[int], halo: int) -> tuple:
+    """Interior slice of a halo-padded array."""
+    return tuple(slice(halo, s - halo) for s in shape)
+
+
+def lap8_tile(t: jnp.ndarray, h: float) -> jnp.ndarray:
+    """25-point 8th-order Laplacian of a tile padded with R cells per face.
+
+    `t` has shape (Dz+2R, Dy+2R, Dx+2R); the result has shape (Dz,Dy,Dx).
+    Written with static slices only so it can be used inside Pallas kernel
+    bodies as well as in plain jnp code.
+    """
+    sz, sy, sx = t.shape
+    core = t[R : sz - R, R : sy - R, R : sx - R]
+    acc = 3.0 * C8[0] * core
+    for m in range(1, R + 1):
+        c = C8[m]
+        acc = acc + c * (
+            t[R + m : sz - R + m, R : sy - R, R : sx - R]
+            + t[R - m : sz - R - m, R : sy - R, R : sx - R]
+            + t[R : sz - R, R + m : sy - R + m, R : sx - R]
+            + t[R : sz - R, R - m : sy - R - m, R : sx - R]
+            + t[R : sz - R, R : sy - R, R + m : sx - R + m]
+            + t[R : sz - R, R : sy - R, R - m : sx - R - m]
+        )
+    return acc / (h * h)
+
+
+def lap2_tile(t: jnp.ndarray, h: float) -> jnp.ndarray:
+    """7-point 2nd-order Laplacian of a tile padded with 1 cell per face."""
+    sz, sy, sx = t.shape
+    core = t[1 : sz - 1, 1 : sy - 1, 1 : sx - 1]
+    acc = 3.0 * C2[0] * core + (
+        t[2:sz, 1 : sy - 1, 1 : sx - 1]
+        + t[0 : sz - 2, 1 : sy - 1, 1 : sx - 1]
+        + t[1 : sz - 1, 2:sy, 1 : sx - 1]
+        + t[1 : sz - 1, 0 : sy - 2, 1 : sx - 1]
+        + t[1 : sz - 1, 1 : sy - 1, 2:sx]
+        + t[1 : sz - 1, 1 : sy - 1, 0 : sx - 2]
+    )
+    return acc / (h * h)
+
+
+def eta_bar_tile(t: jnp.ndarray) -> jnp.ndarray:
+    """7-point star average of eta over a tile padded with 1 cell per face.
+
+    This is the boundary-region "lower-order stencil on eta" of the paper:
+    the PML kernels must read eta with halo R_ETA = 1.
+    """
+    sz, sy, sx = t.shape
+    return (
+        t[1 : sz - 1, 1 : sy - 1, 1 : sx - 1]
+        + t[2:sz, 1 : sy - 1, 1 : sx - 1]
+        + t[0 : sz - 2, 1 : sy - 1, 1 : sx - 1]
+        + t[1 : sz - 1, 2:sy, 1 : sx - 1]
+        + t[1 : sz - 1, 0 : sy - 2, 1 : sx - 1]
+        + t[1 : sz - 1, 1 : sy - 1, 2:sx]
+        + t[1 : sz - 1, 1 : sy - 1, 0 : sx - 2]
+    ) / 7.0
+
+
+def inner_update(core: jnp.ndarray, um: jnp.ndarray, v: jnp.ndarray, lap: jnp.ndarray, dt: float) -> jnp.ndarray:
+    """Leapfrog interior update from precomputed Laplacian."""
+    return 2.0 * core - um + (dt * dt) * v * v * lap
+
+
+def pml_update(
+    core: jnp.ndarray,
+    um: jnp.ndarray,
+    v: jnp.ndarray,
+    eta_bar: jnp.ndarray,
+    lap: jnp.ndarray,
+    dt: float,
+) -> jnp.ndarray:
+    """Damped (sponge) update used in the PML face regions."""
+    ed = eta_bar * dt
+    return (2.0 * core - (1.0 - ed) * um + (dt * dt) * v * v * lap) / (1.0 + ed)

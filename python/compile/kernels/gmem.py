@@ -1,0 +1,59 @@
+"""3D blocking, global-memory-only code shape (paper §IV.1, `gmem_*`).
+
+Each program owns a (Dz, Dy, Dx) output tile and reads its tile + R-wide
+halo directly from the full wavefield ref — the Pallas analog of a CUDA
+threadblock fetching everything straight from global memory. No scratch
+(shared-memory analog) is used; on V100 this shape wins because the
+combined L1/shared block acts as a large cache (paper §V.C).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import common
+from compile.common import DTYPE, R
+
+
+def make_inner_gmem(shape: Tuple[int, int, int], *, dt: float, h: float, block: Tuple[int, int, int]):
+    """Build the gmem inner-region step: (u_pad, um, v) -> u_next.
+
+    shape : (Iz, Iy, Ix) region interior shape
+    block : (Dz, Dy, Dx) tile per program; must divide `shape`
+    """
+    iz, iy, ix = shape
+    dz, dy, dx = block
+    if iz % dz or iy % dy or ix % dx:
+        raise ValueError(f"block {block} must divide region {shape}")
+    grid = (iz // dz, iy // dy, ix // dx)
+    padded = (iz + 2 * R, iy + 2 * R, ix + 2 * R)
+
+    def kernel(u_ref, um_ref, v_ref, o_ref):
+        k, j, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        # "global memory" fetch: tile + halo, straight from the full ref.
+        t = u_ref[
+            pl.dslice(k * dz, dz + 2 * R),
+            pl.dslice(j * dy, dy + 2 * R),
+            pl.dslice(i * dx, dx + 2 * R),
+        ]
+        lap = common.lap8_tile(t, h)
+        core = t[R : R + dz, R : R + dy, R : R + dx]
+        o_ref[...] = common.inner_update(core, um_ref[...], v_ref[...], lap, dt)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded, lambda k, j, i: (0, 0, 0)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        out_shape=jax.ShapeDtypeStruct(shape, DTYPE),
+        interpret=True,
+    )

@@ -1,0 +1,139 @@
+"""PML face-region kernels (paper §IV.3, `smem_eta_1` / `smem_eta_3`).
+
+The boundary update uses a *lower-order* operator: a 7-point star
+Laplacian on u (halo 1) and a 7-point star smoothing of the damping
+profile eta (halo 1) — the combination of a high-order interior stencil
+with a low-order boundary stencil that the paper calls out as seldom
+addressed.
+
+Three code shapes, differing only in how eta reaches the compute phase:
+
+* ``gmem``        — u and eta both read directly from the full refs.
+* ``smem_eta_3``  — eta staged into scratch like ``smem_u``: core plus
+  per-dimension halo slabs, i.e. one predicated copy per dimension
+  ("three conditionals"; 1/64 of the threads do halo work on a GPU).
+* ``smem_eta_1``  — eta staged with a single fused edge-copy pass
+  ("one conditional"; six x-threads cover all six faces, cf. paper
+  Algorithm 2).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from compile import common
+from compile.common import DTYPE, R_ETA
+
+VARIANTS = ("gmem", "smem_eta_1", "smem_eta_3")
+
+
+def make_pml(
+    shape: Tuple[int, int, int],
+    *,
+    dt: float,
+    h: float,
+    block: Tuple[int, int, int],
+    variant: str = "smem_eta_1",
+):
+    """Build a PML face step: (u_pad1, um, v, eta_pad1) -> u_next.
+
+    shape : (Rz, Ry, Rx) face-region interior shape
+    block : (Dz, Dy, Dx) tile per program; must divide `shape`
+    """
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown pml variant {variant!r}; expected one of {VARIANTS}")
+    rz, ry, rx = shape
+    dz, dy, dx = block
+    if rz % dz or ry % dy or rx % dx:
+        raise ValueError(f"block {block} must divide region {shape}")
+    grid = (rz // dz, ry // dy, rx // dx)
+    padded = (rz + 2, ry + 2, rx + 2)
+    sshape = (dz + 2, dy + 2, dx + 2)
+    e = R_ETA  # = 1
+
+    def stage_eta_3(eta_ref, smem, z0, y0, x0):
+        """Core + one halo-slab copy per dimension (three conditionals)."""
+        smem[e : e + dz, e : e + dy, e : e + dx] = eta_ref[
+            pl.dslice(z0 + e, dz), pl.dslice(y0 + e, dy), pl.dslice(x0 + e, dx)
+        ]
+        # dimension 1 of 3: z halos
+        smem[0:e, e : e + dy, e : e + dx] = eta_ref[
+            pl.dslice(z0, e), pl.dslice(y0 + e, dy), pl.dslice(x0 + e, dx)
+        ]
+        smem[e + dz : 2 * e + dz, e : e + dy, e : e + dx] = eta_ref[
+            pl.dslice(z0 + e + dz, e), pl.dslice(y0 + e, dy), pl.dslice(x0 + e, dx)
+        ]
+        # dimension 2 of 3: y halos
+        smem[e : e + dz, 0:e, e : e + dx] = eta_ref[
+            pl.dslice(z0 + e, dz), pl.dslice(y0, e), pl.dslice(x0 + e, dx)
+        ]
+        smem[e : e + dz, e + dy : 2 * e + dy, e : e + dx] = eta_ref[
+            pl.dslice(z0 + e, dz), pl.dslice(y0 + e + dy, e), pl.dslice(x0 + e, dx)
+        ]
+        # dimension 3 of 3: x halos
+        smem[e : e + dz, e : e + dy, 0:e] = eta_ref[
+            pl.dslice(z0 + e, dz), pl.dslice(y0 + e, dy), pl.dslice(x0, e)
+        ]
+        smem[e : e + dz, e : e + dy, e + dx : 2 * e + dx] = eta_ref[
+            pl.dslice(z0 + e, dz), pl.dslice(y0 + e, dy), pl.dslice(x0 + e + dx, e)
+        ]
+
+    def stage_eta_1(eta_ref, smem, z0, y0, x0):
+        """Single fused staging pass (one conditional).
+
+        The whole (Dz+2, Dy+2, Dx+2) halo-extended tile — faces included —
+        is brought in as one contiguous copy, mirroring Algorithm 2 where
+        six threads of the x dimension place all halo faces in one
+        predicated step. Corners are staged too (they are unused by the
+        star stencil; fetching them costs nothing extra in a fused copy).
+        """
+        smem[...] = eta_ref[
+            pl.dslice(z0, dz + 2 * e), pl.dslice(y0, dy + 2 * e), pl.dslice(x0, dx + 2 * e)
+        ]
+
+    def kernel(u_ref, um_ref, v_ref, eta_ref, o_ref, *scratch):
+        k, j, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        z0, y0, x0 = k * dz, j * dy, i * dx
+
+        tu = u_ref[
+            pl.dslice(z0, dz + 2 * e), pl.dslice(y0, dy + 2 * e), pl.dslice(x0, dx + 2 * e)
+        ]
+        if variant == "gmem":
+            te = eta_ref[
+                pl.dslice(z0, dz + 2 * e),
+                pl.dslice(y0, dy + 2 * e),
+                pl.dslice(x0, dx + 2 * e),
+            ]
+        else:
+            smem = scratch[0]
+            if variant == "smem_eta_3":
+                stage_eta_3(eta_ref, smem, z0, y0, x0)
+            else:
+                stage_eta_1(eta_ref, smem, z0, y0, x0)
+            te = smem[...]
+
+        lap = common.lap2_tile(tu, h)
+        eb = common.eta_bar_tile(te)
+        core = tu[e : e + dz, e : e + dy, e : e + dx]
+        o_ref[...] = common.pml_update(core, um_ref[...], v_ref[...], eb, lap, dt)
+
+    scratch_shapes = [] if variant == "gmem" else [pltpu.VMEM(sshape, DTYPE)]
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded, lambda k, j, i: (0, 0, 0)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+            pl.BlockSpec(padded, lambda k, j, i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        out_shape=jax.ShapeDtypeStruct(shape, DTYPE),
+        scratch_shapes=scratch_shapes,
+        interpret=True,
+    )

@@ -1,0 +1,108 @@
+"""Pure-jnp oracle for every kernel variant.
+
+These reference implementations define correctness: every Pallas code
+shape in this package must produce results `allclose` to the functions
+here, and the Rust golden propagator (`rust/src/stencil/`) mirrors the
+same arithmetic ordering so that cross-language comparisons stay within
+a few ULP of f32.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from compile import common
+from compile.common import R
+
+
+def laplacian8(u_pad: jnp.ndarray, h: float) -> jnp.ndarray:
+    """8th-order 25-point Laplacian of an R-padded field."""
+    return common.lap8_tile(u_pad, h)
+
+
+def laplacian2(u_pad1: jnp.ndarray, h: float) -> jnp.ndarray:
+    """2nd-order 7-point Laplacian of a 1-padded field."""
+    return common.lap2_tile(u_pad1, h)
+
+
+def eta_bar(eta_pad1: jnp.ndarray) -> jnp.ndarray:
+    """7-point star smoothing of the damping profile."""
+    return common.eta_bar_tile(eta_pad1)
+
+
+def step_inner_ref(u_pad: jnp.ndarray, um: jnp.ndarray, v: jnp.ndarray, *, dt: float, h: float) -> jnp.ndarray:
+    """Reference leapfrog update for an inner-region tile.
+
+    u_pad : (Dz+2R, Dy+2R, Dx+2R) wavefield at step n, with halos
+    um    : (Dz, Dy, Dx) wavefield at step n-1 (no halo needed)
+    v     : (Dz, Dy, Dx) velocity
+    """
+    sz, sy, sx = u_pad.shape
+    core = u_pad[R : sz - R, R : sy - R, R : sx - R]
+    lap = common.lap8_tile(u_pad, h)
+    return common.inner_update(core, um, v, lap, dt)
+
+
+def step_pml_ref(
+    u_pad1: jnp.ndarray,
+    um: jnp.ndarray,
+    v: jnp.ndarray,
+    eta_pad1: jnp.ndarray,
+    *,
+    dt: float,
+    h: float,
+) -> jnp.ndarray:
+    """Reference damped update for a PML face tile.
+
+    u_pad1, eta_pad1 : (Dz+2, Dy+2, Dx+2) with halo R_ETA = 1
+    um, v            : (Dz, Dy, Dx)
+    """
+    sz, sy, sx = u_pad1.shape
+    core = u_pad1[1 : sz - 1, 1 : sy - 1, 1 : sx - 1]
+    lap = common.lap2_tile(u_pad1, h)
+    eb = common.eta_bar_tile(eta_pad1)
+    return common.pml_update(core, um, v, eb, lap, dt)
+
+
+def step_monolithic_ref(
+    u_pad: jnp.ndarray,
+    um: jnp.ndarray,
+    v: jnp.ndarray,
+    eta_pad: jnp.ndarray,
+    *,
+    dt: float,
+    h: float,
+    pml_width: int,
+) -> jnp.ndarray:
+    """Single-kernel full-domain update with per-point region conditionals.
+
+    This is the paper's rejected "strategy 1" (and our stand-in for the
+    proprietary OpenACC baseline): one kernel, branch per point deciding
+    between the 25-point interior update and the 7-point PML update.
+
+    u_pad   : (Nz+2R, Ny+2R, Nx+2R)
+    um, v   : (Nz, Ny, Nx)
+    eta_pad : (Nz+2R, Ny+2R, Nx+2R)  (same padding for convenience)
+    """
+    sz, sy, sx = u_pad.shape
+    nz, ny, nx = sz - 2 * R, sy - 2 * R, sx - 2 * R
+    w = pml_width
+    core = u_pad[R : sz - R, R : sy - R, R : sx - R]
+
+    lap8 = common.lap8_tile(u_pad, h)
+    inner = common.inner_update(core, um, v, lap8, dt)
+
+    # PML update over the full domain (only selected near the boundary).
+    u1 = u_pad[R - 1 : sz - R + 1, R - 1 : sy - R + 1, R - 1 : sx - R + 1]
+    e1 = eta_pad[R - 1 : sz - R + 1, R - 1 : sy - R + 1, R - 1 : sx - R + 1]
+    lap2 = common.lap2_tile(u1, h)
+    eb = common.eta_bar_tile(e1)
+    pml = common.pml_update(core, um, v, eb, lap2, dt)
+
+    zi = jnp.arange(nz)[:, None, None]
+    yi = jnp.arange(ny)[None, :, None]
+    xi = jnp.arange(nx)[None, None, :]
+    in_inner = (
+        (zi >= w) & (zi < nz - w) & (yi >= w) & (yi < ny - w) & (xi >= w) & (xi < nx - w)
+    )
+    return jnp.where(in_inner, inner, pml)

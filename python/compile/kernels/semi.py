@@ -1,0 +1,82 @@
+"""Semi-stencil over the x axis inside 3D blocks (paper §IV.4, `semi`).
+
+The x-axis contribution of the 25-point stencil is factored into a
+*forward* phase (left-half loads, partial result stored to a scratch
+buffer) and a *backward* phase (right-half loads, final combine). On a
+GPU the partial-result store/reload trades half the x-axis loads for one
+extra store plus a block-wide barrier between phases — the barrier being
+exactly what made this shape slow in the paper (STL_SYNC was the second
+largest stall). Here the phases are two explicit passes through a VMEM
+scratch, preserving the load/store structure.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from compile import common
+from compile.common import DTYPE, R
+
+
+def make_inner_semi(shape: Tuple[int, int, int], *, dt: float, h: float, block: Tuple[int, int, int]):
+    """Build the semi-stencil inner-region step: (u_pad, um, v) -> u_next."""
+    iz, iy, ix = shape
+    dz, dy, dx = block
+    if iz % dz or iy % dy or ix % dx:
+        raise ValueError(f"block {block} must divide region {shape}")
+    grid = (iz // dz, iy // dy, ix // dx)
+    padded = (iz + 2 * R, iy + 2 * R, ix + 2 * R)
+
+    def kernel(u_ref, um_ref, v_ref, o_ref, partial):
+        k, j, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        t = u_ref[
+            pl.dslice(k * dz, dz + 2 * R),
+            pl.dslice(j * dy, dy + 2 * R),
+            pl.dslice(i * dx, dx + 2 * R),
+        ]
+        sz, sy, sx = t.shape
+        cz, cy = slice(R, sz - R), slice(R, sy - R)
+
+        # ---- forward phase: left half of the x-axis sum -> partial store
+        acc = jnp.zeros((dz, dy, dx), DTYPE)
+        for m in range(1, R + 1):
+            acc = acc + common.C8[m] * t[cz, cy, R - m : sx - R - m]
+        partial[...] = acc  # store of the partial result ("+1 store")
+
+        # ---- barrier: on a GPU this is __syncthreads() ----
+
+        # ---- backward phase: reload partial, right half + y/z + center
+        acc = partial[...]  # reload ("+1 load")
+        for m in range(1, R + 1):
+            acc = acc + common.C8[m] * t[cz, cy, R + m : sx - R + m]
+        core = t[R : R + dz, R : R + dy, R : R + dx]
+        acc = acc + 3.0 * common.C8[0] * core
+        for m in range(1, R + 1):
+            c = common.C8[m]
+            acc = acc + c * (
+                t[R + m : sz - R + m, cy, R : sx - R]
+                + t[R - m : sz - R - m, cy, R : sx - R]
+                + t[cz, R + m : sy - R + m, R : sx - R]
+                + t[cz, R - m : sy - R - m, R : sx - R]
+            )
+        lap = acc / (h * h)
+        o_ref[...] = common.inner_update(core, um_ref[...], v_ref[...], lap, dt)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded, lambda k, j, i: (0, 0, 0)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        out_shape=jax.ShapeDtypeStruct(shape, DTYPE),
+        scratch_shapes=[pltpu.VMEM(block, DTYPE)],
+        interpret=True,
+    )

@@ -1,0 +1,83 @@
+"""3D blocking with the u-array staged in scratch (paper §IV.2, `smem_u`).
+
+The wavefield tile + halo is first copied from the full ref into a VMEM
+scratch buffer — the Pallas analog of cooperative shared-memory staging —
+and the 25-point stencil then computes exclusively from the scratch.
+
+The copy mirrors the paper's cooperative fetch: the core tile first, then
+the six face-halo slabs (a star stencil needs no edge/corner halos). On
+a GPU the first 2R threads of each dimension perform the halo fetch; here
+each slab is one explicit staged copy.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from compile import common
+from compile.common import DTYPE, R
+
+
+def make_inner_smem_u(shape: Tuple[int, int, int], *, dt: float, h: float, block: Tuple[int, int, int]):
+    """Build the smem_u inner-region step: (u_pad, um, v) -> u_next."""
+    iz, iy, ix = shape
+    dz, dy, dx = block
+    if iz % dz or iy % dy or ix % dx:
+        raise ValueError(f"block {block} must divide region {shape}")
+    grid = (iz // dz, iy // dy, ix // dx)
+    padded = (iz + 2 * R, iy + 2 * R, ix + 2 * R)
+    sshape = (dz + 2 * R, dy + 2 * R, dx + 2 * R)
+
+    def kernel(u_ref, um_ref, v_ref, o_ref, smem):
+        k, j, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        z0, y0, x0 = k * dz, j * dy, i * dx  # halo-extended tile origin
+
+        # -- staging phase ("shared memory" fill) ------------------------
+        # core: every thread fetches its own point
+        smem[R : R + dz, R : R + dy, R : R + dx] = u_ref[
+            pl.dslice(z0 + R, dz), pl.dslice(y0 + R, dy), pl.dslice(x0 + R, dx)
+        ]
+        # six face-halo slabs: threads 0..R-1 / R..2R-1 per dimension
+        smem[0:R, R : R + dy, R : R + dx] = u_ref[
+            pl.dslice(z0, R), pl.dslice(y0 + R, dy), pl.dslice(x0 + R, dx)
+        ]
+        smem[R + dz : 2 * R + dz, R : R + dy, R : R + dx] = u_ref[
+            pl.dslice(z0 + R + dz, R), pl.dslice(y0 + R, dy), pl.dslice(x0 + R, dx)
+        ]
+        smem[R : R + dz, 0:R, R : R + dx] = u_ref[
+            pl.dslice(z0 + R, dz), pl.dslice(y0, R), pl.dslice(x0 + R, dx)
+        ]
+        smem[R : R + dz, R + dy : 2 * R + dy, R : R + dx] = u_ref[
+            pl.dslice(z0 + R, dz), pl.dslice(y0 + R + dy, R), pl.dslice(x0 + R, dx)
+        ]
+        smem[R : R + dz, R : R + dy, 0:R] = u_ref[
+            pl.dslice(z0 + R, dz), pl.dslice(y0 + R, dy), pl.dslice(x0, R)
+        ]
+        smem[R : R + dz, R : R + dy, R + dx : 2 * R + dx] = u_ref[
+            pl.dslice(z0 + R, dz), pl.dslice(y0 + R, dy), pl.dslice(x0 + R + dx, R)
+        ]
+
+        # -- compute phase: everything reads the scratch -------------------
+        t = smem[...]
+        lap = common.lap8_tile(t, h)
+        core = t[R : R + dz, R : R + dy, R : R + dx]
+        o_ref[...] = common.inner_update(core, um_ref[...], v_ref[...], lap, dt)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded, lambda k, j, i: (0, 0, 0)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        ],
+        out_specs=pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        out_shape=jax.ShapeDtypeStruct(shape, DTYPE),
+        scratch_shapes=[pltpu.VMEM(sshape, DTYPE)],
+        interpret=True,
+    )

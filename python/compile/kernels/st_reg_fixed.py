@@ -1,0 +1,95 @@
+"""2.5D streaming with fixed registers + loop unrolling (paper §IV.7,
+`st_reg_fixed_*`).
+
+Same data placement as `st_reg_shft` (current plane in scratch, z-halo
+columns in registers) but the register queue is never shifted: the
+stream loop is fully unrolled and each unrolled phase addresses the
+2R+1 registers with *statically rotated* names — the analog of the
+paper's macro constructors with register indices as placeholders. No
+data ever moves between registers, which is what hides spill cost on a
+GPU; in HLO terms the loop disappears entirely and XLA sees one long
+straight-line program it is free to software-pipeline.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from compile import common
+from compile.common import DTYPE, R
+
+W = 2 * R + 1
+
+
+def make_inner_st_reg_fixed(shape: Tuple[int, int, int], *, dt: float, h: float, plane: Tuple[int, int]):
+    """Build the st_reg_fixed inner-region step: (u_pad, um, v) -> u_next."""
+    iz, iy, ix = shape
+    dy, dx = plane
+    if iy % dy or ix % dx:
+        raise ValueError(f"plane {plane} must divide region (Iy,Ix)=({iy},{ix})")
+    grid = (iy // dy, ix // dx)
+    padded = (iz + 2 * R, iy + 2 * R, ix + 2 * R)
+    py, px = dy + 2 * R, dx + 2 * R
+    colspec = pl.BlockSpec((iz, dy, dx), lambda j, i: (0, j, i))
+
+    def kernel(u_ref, um_ref, v_ref, o_ref, smem):
+        j, i = pl.program_id(0), pl.program_id(1)
+        y0, x0 = j * dy, i * dx
+
+        def load_core(zp):
+            return u_ref[
+                pl.dslice(zp, 1), pl.dslice(y0 + R, dy), pl.dslice(x0 + R, dx)
+            ].reshape(dy, dx)
+
+        # Fixed registers reg[0..2R]; reg[s] initially holds padded plane s.
+        reg = [load_core(s) for s in range(2 * R)] + [None]
+
+        # Fully unrolled stream loop: z is a *python* constant in each phase,
+        # so every register access below has a static, per-phase-rotated
+        # index — the "macro with register-index placeholders" of the paper.
+        for z in range(iz):
+            reg[(z + 2 * R) % W] = load_core(z + 2 * R)  # overwrite the free slot
+
+            smem[...] = u_ref[
+                pl.dslice(z + R, 1), pl.dslice(y0, py), pl.dslice(x0, px)
+            ].reshape(py, px)
+
+            current = reg[(z + R) % W]
+            acc = 3.0 * common.C8[0] * current
+            for m in range(1, R + 1):
+                acc = acc + common.C8[m] * (reg[(z + R - m) % W] + reg[(z + R + m) % W])
+
+            cur = smem[...]
+            for m in range(1, R + 1):
+                c = common.C8[m]
+                acc = acc + c * (
+                    cur[R + m : R + m + dy, R : R + dx]
+                    + cur[R - m : R - m + dy, R : R + dx]
+                    + cur[R : R + dy, R + m : R + m + dx]
+                    + cur[R : R + dy, R - m : R - m + dx]
+                )
+            lap = acc / (h * h)
+
+            um_z = um_ref[pl.dslice(z, 1), :, :].reshape(dy, dx)
+            v_z = v_ref[pl.dslice(z, 1), :, :].reshape(dy, dx)
+            res = common.inner_update(current, um_z, v_z, lap, dt)
+            o_ref[pl.dslice(z, 1), :, :] = res.reshape(1, dy, dx)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded, lambda j, i: (0, 0, 0)),
+            colspec,
+            colspec,
+        ],
+        out_specs=colspec,
+        out_shape=jax.ShapeDtypeStruct(shape, DTYPE),
+        scratch_shapes=[pltpu.VMEM((py, px), DTYPE)],
+        interpret=True,
+    )

@@ -1,0 +1,94 @@
+"""2.5D streaming with register shifting (paper §IV.6, `st_reg_shft_*`).
+
+Only the *current* XY-subplane (with halo) lives in the scratch buffer;
+the z-axis halo columns live in per-thread "registers" — here 2R+1
+loop-carried (Dy, Dx) arrays named after Micikevicius' variables
+(behind4..front4). Every iteration shifts the whole register queue by
+one and loads the farthest halo plane into front4.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from compile import common
+from compile.common import DTYPE, R
+
+
+def make_inner_st_reg_shft(shape: Tuple[int, int, int], *, dt: float, h: float, plane: Tuple[int, int]):
+    """Build the st_reg_shft inner-region step: (u_pad, um, v) -> u_next."""
+    iz, iy, ix = shape
+    dy, dx = plane
+    if iy % dy or ix % dx:
+        raise ValueError(f"plane {plane} must divide region (Iy,Ix)=({iy},{ix})")
+    grid = (iy // dy, ix // dx)
+    padded = (iz + 2 * R, iy + 2 * R, ix + 2 * R)
+    py, px = dy + 2 * R, dx + 2 * R
+    colspec = pl.BlockSpec((iz, dy, dx), lambda j, i: (0, j, i))
+
+    def kernel(u_ref, um_ref, v_ref, o_ref, smem):
+        j, i = pl.program_id(0), pl.program_id(1)
+        y0, x0 = j * dy, i * dx
+
+        def load_core(zp):
+            """Core (no halo) of padded plane zp — a per-thread register load."""
+            return u_ref[
+                pl.dslice(zp, 1), pl.dslice(y0 + R, dy), pl.dslice(x0 + R, dx)
+            ].reshape(dy, dx)
+
+        def body(z, regs):
+            # regs = (behind4..behind1, current, front1..front3): planes
+            # z..z+2R-1 (padded). Load the farthest halo plane as front4.
+            front4 = load_core(z + 2 * R)
+            q = regs + (front4,)  # q[o] = padded plane z+o, o in [0, 2R]
+
+            # Stage the current plane (with halo) into the scratch buffer.
+            smem[...] = u_ref[
+                pl.dslice(z + R, 1), pl.dslice(y0, py), pl.dslice(x0, px)
+            ].reshape(py, px)
+
+            current = q[R]
+            acc = 3.0 * common.C8[0] * current
+            for m in range(1, R + 1):
+                acc = acc + common.C8[m] * (q[R - m] + q[R + m])  # z from registers
+
+            cur = smem[...]
+            for m in range(1, R + 1):  # x/y from the scratch plane
+                c = common.C8[m]
+                acc = acc + c * (
+                    cur[R + m : R + m + dy, R : R + dx]
+                    + cur[R - m : R - m + dy, R : R + dx]
+                    + cur[R : R + dy, R + m : R + m + dx]
+                    + cur[R : R + dy, R - m : R - m + dx]
+                )
+            lap = acc / (h * h)
+
+            um_z = um_ref[pl.dslice(z, 1), :, :].reshape(dy, dx)
+            v_z = v_ref[pl.dslice(z, 1), :, :].reshape(dy, dx)
+            res = common.inner_update(current, um_z, v_z, lap, dt)
+            o_ref[pl.dslice(z, 1), :, :] = res.reshape(1, dy, dx)
+
+            # Register shifting: behind4 <- behind3 <- ... <- front4.
+            return q[1:]
+
+        regs0 = tuple(load_core(s) for s in range(2 * R))
+        jax.lax.fori_loop(0, iz, body, regs0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded, lambda j, i: (0, 0, 0)),
+            colspec,
+            colspec,
+        ],
+        out_specs=colspec,
+        out_shape=jax.ShapeDtypeStruct(shape, DTYPE),
+        scratch_shapes=[pltpu.VMEM((py, px), DTYPE)],
+        interpret=True,
+    )

@@ -1,0 +1,105 @@
+"""2.5D streaming with a multi-plane scratch ring buffer (paper §IV.5,
+`st_smem_{Dx}_{Dy}`).
+
+The grid is 2D over (y, x) tiles; each program streams through the z
+axis keeping all 2R+1 = 9 active XY-subplanes (tile + halo) resident in
+a VMEM ring buffer — the shared-memory analog. Plane slots are recycled
+with *index rotation* (a rotating tuple of slot indices carried through
+the loop) rather than modulo arithmetic, exactly as the paper advises.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from compile import common
+from compile.common import DTYPE, R
+
+W = 2 * R + 1  # ring-buffer depth: current plane + R above + R below
+
+
+def make_inner_st_smem(shape: Tuple[int, int, int], *, dt: float, h: float, plane: Tuple[int, int]):
+    """Build the st_smem inner-region step: (u_pad, um, v) -> u_next.
+
+    plane : (Dy, Dx) XY tile per program; must divide (Iy, Ix)
+    """
+    iz, iy, ix = shape
+    dy, dx = plane
+    if iy % dy or ix % dx:
+        raise ValueError(f"plane {plane} must divide region (Iy,Ix)=({iy},{ix})")
+    grid = (iy // dy, ix // dx)
+    padded = (iz + 2 * R, iy + 2 * R, ix + 2 * R)
+    py, px = dy + 2 * R, dx + 2 * R  # halo-extended plane extent
+    colspec = pl.BlockSpec((iz, dy, dx), lambda j, i: (0, j, i))
+
+    def kernel(u_ref, um_ref, v_ref, o_ref, buf):
+        j, i = pl.program_id(0), pl.program_id(1)
+        y0, x0 = j * dy, i * dx  # halo-extended tile origin (padded coords)
+
+        def load_plane(zp, slot):
+            """Fetch padded plane zp (tile + halo) into ring slot `slot`."""
+            buf[pl.dslice(slot, 1), :, :] = u_ref[
+                pl.dslice(zp, 1), pl.dslice(y0, py), pl.dslice(x0, px)
+            ]
+
+        def read_plane(slot):
+            return buf[pl.dslice(slot, 1), :, :].reshape(py, px)
+
+        # Preload: R halo planes above + the first R planes (padded z 0..2R-1)
+        for s in range(2 * R):
+            load_plane(s, s)
+
+        def body(z, slots):
+            # slots[o] holds padded plane z+o for o in [0, 2R); slots[2R] is
+            # the free slot that now receives the far halo plane z+2R.
+            load_plane(z + 2 * R, slots[2 * R])
+
+            # z-axis contribution from the ring buffer core columns.
+            core = read_plane(slots[R])[R : R + dy, R : R + dx]
+            acc = 3.0 * common.C8[0] * core
+            for m in range(1, R + 1):
+                up = read_plane(slots[R - m])[R : R + dy, R : R + dx]
+                dn = read_plane(slots[R + m])[R : R + dy, R : R + dx]
+                acc = acc + common.C8[m] * (up + dn)
+
+            # x/y contributions from the current plane (with halo).
+            cur = read_plane(slots[R])
+            for m in range(1, R + 1):
+                c = common.C8[m]
+                acc = acc + c * (
+                    cur[R + m : R + m + dy, R : R + dx]
+                    + cur[R - m : R - m + dy, R : R + dx]
+                    + cur[R : R + dy, R + m : R + m + dx]
+                    + cur[R : R + dy, R - m : R - m + dx]
+                )
+            lap = acc / (h * h)
+
+            um_z = um_ref[pl.dslice(z, 1), :, :].reshape(dy, dx)
+            v_z = v_ref[pl.dslice(z, 1), :, :].reshape(dy, dx)
+            res = common.inner_update(core, um_z, v_z, lap, dt)
+            o_ref[pl.dslice(z, 1), :, :] = res.reshape(1, dy, dx)
+
+            # Index rotation: the slot of plane z is recycled as the free slot.
+            return tuple(slots[1:]) + (slots[0],)
+
+        slots0 = tuple(jnp.int32(s) for s in range(W))
+        jax.lax.fori_loop(0, iz, body, slots0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(padded, lambda j, i: (0, 0, 0)),
+            colspec,
+            colspec,
+        ],
+        out_specs=colspec,
+        out_shape=jax.ShapeDtypeStruct(shape, DTYPE),
+        scratch_shapes=[pltpu.VMEM((W, py, px), DTYPE)],
+        interpret=True,
+    )

@@ -1,0 +1,104 @@
+"""3.5D blocking prototype: 3D spatial tiles x 2-deep temporal blocking
+(paper §VI future work; overlapped-tiling background in §II).
+
+Each program advances its tile TWO time steps inside one kernel using
+overlapped tiling: step 1 is computed redundantly on the R-expanded
+region (its halo), so step 2 needs no inter-block exchange. The price is
+exactly the redundancy the paper warns grows quickly with stencil order:
+
+    redundant work ratio = (D + 2R)^3 / D^3   (8x for D = 8, R = 4!)
+
+which is why the paper defers 3.5D for high-order stencils — this
+prototype makes that trade measurable. Inner region only (the paper
+notes boundary handling impedes time skewing; reintegrating PML into the
+temporal block is listed as future work there too).
+
+Inputs:  u_pad2 = u(n)   with 2R halo,
+         um_pad = u(n-1) with  R halo,
+         v_pad  = v      with  R halo.
+Outputs: (u(n+2) tile, u(n+1) tile) — the caller's next (u, um) pair.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile import common
+from compile.common import DTYPE, R
+
+
+def make_inner_tb2(shape: Tuple[int, int, int], *, dt: float, h: float, block: Tuple[int, int, int]):
+    """Build the 2-step temporally-blocked inner step.
+
+    (u_pad2[S+4R], um_pad[S+2R], v_pad[S+2R]) -> (u2[S], u1[S])
+    """
+    iz, iy, ix = shape
+    dz, dy, dx = block
+    if iz % dz or iy % dy or ix % dx:
+        raise ValueError(f"block {block} must divide region {shape}")
+    grid = (iz // dz, iy // dy, ix // dx)
+    pad2 = (iz + 4 * R, iy + 4 * R, ix + 4 * R)
+    pad1 = (iz + 2 * R, iy + 2 * R, ix + 2 * R)
+
+    def kernel(u_ref, um_ref, v_ref, o2_ref, o1_ref):
+        k, j, i = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+        z0, y0, x0 = k * dz, j * dy, i * dx
+
+        # tile + 2R halo of u(n); R halo of um/v (coords in their arrays)
+        t0 = u_ref[
+            pl.dslice(z0, dz + 4 * R),
+            pl.dslice(y0, dy + 4 * R),
+            pl.dslice(x0, dx + 4 * R),
+        ]
+        um = um_ref[
+            pl.dslice(z0, dz + 2 * R),
+            pl.dslice(y0, dy + 2 * R),
+            pl.dslice(x0, dx + 2 * R),
+        ]
+        v = v_ref[
+            pl.dslice(z0, dz + 2 * R),
+            pl.dslice(y0, dy + 2 * R),
+            pl.dslice(x0, dx + 2 * R),
+        ]
+
+        # ---- step 1, computed redundantly over the R-expanded region ----
+        lap1 = common.lap8_tile(t0, h)  # (D+2R)^3
+        core0 = t0[R : R + dz + 2 * R, R : R + dy + 2 * R, R : R + dx + 2 * R]
+        u1 = common.inner_update(core0, um, v, lap1, dt)  # u(n+1) on (D+2R)^3
+
+        # ---- step 2, on the tile proper (all deps now block-local) ----
+        lap2 = common.lap8_tile(u1, h)  # D^3
+        core1 = u1[R : R + dz, R : R + dy, R : R + dx]
+        um2 = core0[R : R + dz, R : R + dy, R : R + dx]  # u(n) core
+        v2 = v[R : R + dz, R : R + dy, R : R + dx]
+        o2_ref[...] = common.inner_update(core1, um2, v2, lap2, dt)
+        o1_ref[...] = core1
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(pad2, lambda k, j, i: (0, 0, 0)),
+            pl.BlockSpec(pad1, lambda k, j, i: (0, 0, 0)),
+            pl.BlockSpec(pad1, lambda k, j, i: (0, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+            pl.BlockSpec(block, lambda k, j, i: (k, j, i)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(shape, DTYPE),
+            jax.ShapeDtypeStruct(shape, DTYPE),
+        ),
+        interpret=True,
+    )
+
+
+def redundancy_ratio(block: Tuple[int, int, int]) -> float:
+    """Extra step-1 work factor of the overlapped temporal block."""
+    dz, dy, dx = block
+    return ((dz + 2 * R) * (dy + 2 * R) * (dx + 2 * R)) / (dz * dy * dx)

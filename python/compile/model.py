@@ -1,0 +1,232 @@
+"""Layer 2 — the JAX model: region step functions over the Pallas kernels.
+
+The simulation domain (DESIGN.md §6) is decomposed exactly as in the
+paper (Fig. 1): one inner region + six PML face subregions (top, bottom,
+front, back, left, right). Each (region-shape, kernel-variant) pair
+becomes one jitted function; `aot.py` lowers each to an HLO-text
+artifact that the Rust coordinator loads through PJRT.
+
+Every function returns a 1-tuple so the Rust side can uniformly unwrap
+with `to_tuple1` (see /opt/xla-example/load_hlo).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import common
+from compile.common import DTYPE, R, ProblemSpec
+from compile.kernels import gmem, pml, ref, semi, smem_u, st_reg_fixed, st_reg_shft, st_smem
+
+INNER_VARIANTS = ("gmem", "smem_u", "semi", "st_smem", "st_reg_shft", "st_reg_fixed")
+PML_VARIANTS = pml.VARIANTS  # ("gmem", "smem_eta_1", "smem_eta_3")
+
+# The three PML face-shape classes of the paper (symmetric pairs):
+#   top/bottom : (W,        Ny,       Nx)  — z slabs, full extent
+#   front/back : (Nz-2W,    W,        Nx)  — y slabs between the z cuts
+#   left/right : (Nz-2W,    Ny-2W,    W)   — x slabs between both cuts
+FACE_CLASSES = ("top_bottom", "front_back", "left_right")
+
+
+def face_class_shape(spec: ProblemSpec, cls: str) -> Tuple[int, int, int]:
+    nz, ny, nx = spec.interior
+    w = spec.pml_width
+    if cls == "top_bottom":
+        return (w, ny, nx)
+    if cls == "front_back":
+        return (nz - 2 * w, w, nx)
+    if cls == "left_right":
+        return (nz - 2 * w, ny - 2 * w, w)
+    raise ValueError(f"unknown face class {cls!r}")
+
+
+def default_block(shape: Tuple[int, ...], want: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Largest divisor-block <= `want` per axis (paper-style tile picking)."""
+
+    def best(n: int, w: int) -> int:
+        for d in range(min(n, w), 0, -1):
+            if n % d == 0:
+                return d
+        return 1
+
+    return tuple(best(n, w) for n, w in zip(shape, want))
+
+
+def make_inner_step(
+    variant: str,
+    shape: Tuple[int, int, int],
+    *,
+    dt: float,
+    h: float,
+    block: Tuple[int, int, int] | None = None,
+    plane: Tuple[int, int] | None = None,
+) -> Callable:
+    """(u_pad[+2R], um, v) -> (u_next,) for the inner region."""
+    if variant in ("gmem", "smem_u", "semi"):
+        blk = block or default_block(shape, (8, 8, 8))
+        maker = {
+            "gmem": gmem.make_inner_gmem,
+            "smem_u": smem_u.make_inner_smem_u,
+            "semi": semi.make_inner_semi,
+        }[variant]
+        step = maker(shape, dt=dt, h=h, block=blk)
+    elif variant in ("st_smem", "st_reg_shft", "st_reg_fixed"):
+        pln = plane or default_block(shape[1:], (16, 16))
+        maker = {
+            "st_smem": st_smem.make_inner_st_smem,
+            "st_reg_shft": st_reg_shft.make_inner_st_reg_shft,
+            "st_reg_fixed": st_reg_fixed.make_inner_st_reg_fixed,
+        }[variant]
+        step = maker(shape, dt=dt, h=h, plane=pln)
+    else:
+        raise ValueError(f"unknown inner variant {variant!r}")
+
+    def fn(u_pad, um, v):
+        return (step(u_pad, um, v),)
+
+    return fn
+
+
+def make_pml_step(
+    variant: str,
+    shape: Tuple[int, int, int],
+    *,
+    dt: float,
+    h: float,
+    block: Tuple[int, int, int] | None = None,
+) -> Callable:
+    """(u_pad1, um, v, eta_pad1) -> (u_next,) for one PML face class."""
+    blk = block or default_block(shape, (8, 8, 8))
+    step = pml.make_pml(shape, dt=dt, h=h, block=blk, variant=variant)
+
+    def fn(u_pad1, um, v, eta_pad1):
+        return (step(u_pad1, um, v, eta_pad1),)
+
+    return fn
+
+
+def make_monolithic_step(spec: ProblemSpec) -> Callable:
+    """Full-domain single-kernel step with per-point conditionals.
+
+    The paper's strategy 1 / OpenACC-baseline analog; plain XLA (no
+    Pallas): (u_pad, um, v, eta_pad) -> (u_next,).
+    """
+
+    def fn(u_pad, um, v, eta_pad):
+        return (
+            ref.step_monolithic_ref(
+                u_pad, um, v, eta_pad, dt=spec.dt, h=spec.h, pml_width=spec.pml_width
+            ),
+        )
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Region geometry shared with the Rust coordinator (mirrored in
+# rust/src/grid/ — keep in sync).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """One launch region: interior offset + shape, in interior coords."""
+
+    name: str
+    cls: str  # "inner" | FACE_CLASSES
+    offset: Tuple[int, int, int]
+    shape: Tuple[int, int, int]
+
+
+def decompose(spec: ProblemSpec) -> Tuple[Region, ...]:
+    """The paper's 7-region decomposition (Fig. 1), slicing order z, y, x."""
+    nz, ny, nx = spec.interior
+    w = spec.pml_width
+    return (
+        Region("inner", "inner", (w, w, w), spec.inner),
+        Region("top", "top_bottom", (0, 0, 0), (w, ny, nx)),
+        Region("bottom", "top_bottom", (nz - w, 0, 0), (w, ny, nx)),
+        Region("front", "front_back", (w, 0, 0), (nz - 2 * w, w, nx)),
+        Region("back", "front_back", (w, ny - w, 0), (nz - 2 * w, w, nx)),
+        Region("left", "left_right", (w, w, 0), (nz - 2 * w, ny - 2 * w, w)),
+        Region("right", "left_right", (w, w, nx - w), (nz - 2 * w, ny - 2 * w, w)),
+    )
+
+
+def slice_pad(arr: jnp.ndarray, offset, shape, halo: int):
+    """Slice region+halo from an R-padded full array (interior coords)."""
+    oz, oy, ox = offset
+    sz, sy, sx = shape
+    return arr[
+        R + oz - halo : R + oz + sz + halo,
+        R + oy - halo : R + oy + sy + halo,
+        R + ox - halo : R + ox + sx + halo,
+    ]
+
+
+def make_fused_step(
+    spec: ProblemSpec,
+    *,
+    inner_variant: str = "gmem",
+    pml_variant: str = "gmem",
+) -> Callable:
+    """Whole-domain decomposed step fused into ONE executable.
+
+    The Rust coordinator normally launches the 7 regions itself (its
+    scheduling is part of what we study); this fused variant instead does
+    all slicing/launch/scatter inside a single XLA program so the L2 perf
+    pass can measure what fusion buys. (u_pad, um, v, eta_pad) -> (u_next,)
+    """
+    regions = decompose(spec)
+    steps = {}
+    for reg in regions:
+        if reg.cls == "inner":
+            steps[reg.name] = make_inner_step(inner_variant, reg.shape, dt=spec.dt, h=spec.h)
+        else:
+            steps[reg.name] = make_pml_step(pml_variant, reg.shape, dt=spec.dt, h=spec.h)
+
+    def inner_slice(arr, reg):
+        oz, oy, ox = reg.offset
+        sz, sy, sx = reg.shape
+        return arr[oz : oz + sz, oy : oy + sy, ox : ox + sx]
+
+    def fn(u_pad, um, v, eta_pad):
+        out = jnp.zeros(spec.interior, DTYPE)
+        for reg in regions:
+            um_r = inner_slice(um, reg)
+            v_r = inner_slice(v, reg)
+            if reg.cls == "inner":
+                u_r = slice_pad(u_pad, reg.offset, reg.shape, R)
+                (tile,) = steps[reg.name](u_r, um_r, v_r)
+            else:
+                u_r = slice_pad(u_pad, reg.offset, reg.shape, 1)
+                eta_r = slice_pad(eta_pad, reg.offset, reg.shape, 1)
+                (tile,) = steps[reg.name](u_r, um_r, v_r, eta_r)
+            out = jax.lax.dynamic_update_slice(out, tile, reg.offset)
+        return (out,)
+
+    return fn
+
+
+def step_decomposed_ref(spec: ProblemSpec, u_pad, um, v, eta_pad):
+    """Plain-jnp decomposed step (oracle for the fused/coordinated paths)."""
+    regions = decompose(spec)
+    out = jnp.zeros(spec.interior, DTYPE)
+    for reg in regions:
+        oz, oy, ox = reg.offset
+        sz, sy, sx = reg.shape
+        um_r = um[oz : oz + sz, oy : oy + sy, ox : ox + sx]
+        v_r = v[oz : oz + sz, oy : oy + sy, ox : ox + sx]
+        if reg.cls == "inner":
+            u_r = slice_pad(u_pad, reg.offset, reg.shape, R)
+            tile = ref.step_inner_ref(u_r, um_r, v_r, dt=spec.dt, h=spec.h)
+        else:
+            u_r = slice_pad(u_pad, reg.offset, reg.shape, 1)
+            eta_r = slice_pad(eta_pad, reg.offset, reg.shape, 1)
+            tile = ref.step_pml_ref(u_r, um_r, v_r, eta_r, dt=spec.dt, h=spec.h)
+        out = jax.lax.dynamic_update_slice(out, tile, reg.offset)
+    return out

@@ -1,0 +1,64 @@
+"""AOT pipeline tests: lowering, manifest structure, HLO-text validity."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+from compile.common import R, ProblemSpec
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    spec = ProblemSpec(interior=(24, 24, 24), pml_width=4, h=10.0, dt=1e-3)
+    manifest = aot.build_artifacts(spec, out, quick=True)
+    return out, manifest, spec
+
+
+class TestBuild:
+    def test_artifact_files_exist(self, built):
+        out, manifest, _ = built
+        for e in manifest["artifacts"]:
+            path = os.path.join(out, e["file"])
+            assert os.path.exists(path), e["name"]
+            assert os.path.getsize(path) == e["hlo_bytes"]
+
+    def test_hlo_text_is_parseable_text(self, built):
+        out, manifest, _ = built
+        for e in manifest["artifacts"]:
+            with open(os.path.join(out, e["file"])) as f:
+                text = f.read()
+            assert text.startswith("HloModule"), e["name"]
+            # return_tuple=True: the root must be a tuple for to_tuple1.
+            assert "ROOT" in text
+
+    def test_quick_set_contents(self, built):
+        _, manifest, _ = built
+        names = {e["name"] for e in manifest["artifacts"]}
+        assert "inner_gmem" in names
+        assert "inner_st_smem" in names
+        assert "monolithic" in names
+        # one pml artifact per face class in quick mode
+        assert sum(1 for n in names if n.startswith("pml_")) == 3
+
+    def test_input_shapes_recorded(self, built):
+        _, manifest, spec = built
+        by_name = {e["name"]: e for e in manifest["artifacts"]}
+        inner = by_name["inner_gmem"]
+        iz, iy, ix = spec.inner
+        assert inner["inputs"][0]["shape"] == [iz + 2 * R, iy + 2 * R, ix + 2 * R]
+        assert inner["output_shape"] == list(spec.inner)
+        mono = by_name["monolithic"]
+        assert mono["inputs"][0]["shape"] == list(spec.padded)
+
+    def test_spec_round_trips_via_json(self, built):
+        _, manifest, spec = built
+        s = json.loads(json.dumps(manifest))["spec"]
+        assert tuple(s["interior"]) == spec.interior
+        assert s["pml_width"] == spec.pml_width
+        assert s["halo"] == R
+
+    def test_fingerprint_stable(self):
+        assert aot.source_fingerprint() == aot.source_fingerprint()

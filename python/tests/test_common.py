@@ -1,0 +1,115 @@
+"""Unit tests for the shared FD machinery (coefficients, CFL, tiles)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common
+from compile.common import C2, C8, R, ProblemSpec
+
+
+class TestCoefficients:
+    def test_c8_zero_sum(self):
+        # A second-derivative stencil must annihilate constants.
+        s = C8[0] + 2.0 * sum(C8[1:])
+        assert abs(s) < 1e-12
+
+    def test_c2_zero_sum(self):
+        assert abs(C2[0] + 2.0 * C2[1]) < 1e-12
+
+    def test_c8_second_moment(self):
+        # sum m^2 c_m * 2 == 2 so that lap(x^2/2) == 1.
+        s = 2.0 * sum(C8[m] * m * m for m in range(1, R + 1))
+        assert abs(s - 2.0) < 1e-12
+
+    def test_halo_is_half_order(self):
+        assert R == 4  # 8th-order stencil
+
+
+class TestCfl:
+    def test_positive_and_monotone(self):
+        dt1 = common.cfl_dt(10.0, 3000.0)
+        dt2 = common.cfl_dt(10.0, 6000.0)
+        dt3 = common.cfl_dt(20.0, 3000.0)
+        assert dt1 > 0
+        assert dt2 < dt1  # faster medium -> smaller dt
+        assert dt3 > dt1  # coarser grid -> larger dt
+
+    def test_matches_classic_bound_scale(self):
+        # The 8th-order bound is tighter than the 2nd-order h/(v sqrt(3)).
+        dt = common.cfl_dt(10.0, 3000.0)
+        assert dt < 10.0 / (3000.0 * np.sqrt(3.0))
+
+
+class TestProblemSpec:
+    def test_shapes(self):
+        spec = ProblemSpec(interior=(48, 40, 32), pml_width=8, h=10.0, dt=1e-3)
+        assert spec.padded == (56, 48, 40)
+        assert spec.inner == (32, 24, 16)
+
+    def test_validation_rejects_thin_domain(self):
+        spec = ProblemSpec(interior=(16, 16, 16), pml_width=8, h=10.0, dt=1e-3)
+        with pytest.raises(ValueError):
+            spec.validate()
+
+    def test_validation_rejects_zero_pml(self):
+        spec = ProblemSpec(interior=(16, 16, 16), pml_width=0, h=10.0, dt=1e-3)
+        with pytest.raises(ValueError):
+            spec.validate()
+
+
+class TestTiles:
+    def _padded(self, fill, shape=(6, 5, 4), halo=R):
+        pad = tuple(s + 2 * halo for s in shape)
+        return fill(pad)
+
+    def test_lap8_constant_is_zero(self):
+        t = jnp.full((14, 13, 12), 7.5, jnp.float32)
+        lap = common.lap8_tile(t, h=10.0)
+        np.testing.assert_allclose(lap, 0.0, atol=1e-5)
+
+    def test_lap8_quadratic_exact(self):
+        # u = x^2 + 2 y^2 + 3 z^2 -> lap = 2 + 4 + 6 = 12 (8th order is
+        # exact on polynomials up to degree 9).
+        h = 2.0
+        z, y, x = np.meshgrid(
+            np.arange(14) * h, np.arange(13) * h, np.arange(12) * h, indexing="ij"
+        )
+        u = jnp.asarray(3 * z**2 + 2 * y**2 + x**2, jnp.float32)
+        lap = common.lap8_tile(u, h=h)
+        np.testing.assert_allclose(lap, 12.0, rtol=1e-4)
+
+    def test_lap2_quadratic_exact(self):
+        h = 1.0
+        z, y, x = np.meshgrid(np.arange(8) * h, np.arange(7) * h, np.arange(6) * h, indexing="ij")
+        u = jnp.asarray(z**2 + y**2 + x**2, jnp.float32)
+        lap = common.lap2_tile(u, h=h)
+        np.testing.assert_allclose(lap, 6.0, rtol=1e-5)
+
+    def test_eta_bar_constant(self):
+        t = jnp.full((6, 6, 6), 3.0, jnp.float32)
+        np.testing.assert_allclose(common.eta_bar_tile(t), 3.0, rtol=1e-6)
+
+    def test_eta_bar_is_average(self):
+        t = np.zeros((3, 3, 3), np.float32)
+        t[1, 1, 1] = 7.0  # only the center point is hot
+        eb = common.eta_bar_tile(jnp.asarray(t))
+        np.testing.assert_allclose(eb, 1.0, rtol=1e-6)  # 7/7
+
+    def test_pml_update_is_damped(self):
+        # With eta>0 and everything else equal, |u+| must shrink vs eta=0.
+        core = jnp.full((2, 2, 2), 1.0, jnp.float32)
+        um = jnp.full((2, 2, 2), 1.0, jnp.float32)
+        v = jnp.full((2, 2, 2), 2000.0, jnp.float32)
+        lap = jnp.zeros((2, 2, 2), jnp.float32)
+        undamped = common.pml_update(core, um, v, jnp.zeros_like(core), lap, 1e-3)
+        damped = common.pml_update(core, um, v, jnp.full_like(core, 100.0), lap, 1e-3)
+        assert np.all(np.abs(damped) <= np.abs(undamped) + 1e-7)
+
+    def test_inner_update_leapfrog_identity(self):
+        # lap == 0 -> u+ = 2u - u-.
+        core = jnp.asarray(np.random.default_rng(1).standard_normal((3, 3, 3)), jnp.float32)
+        um = jnp.asarray(np.random.default_rng(2).standard_normal((3, 3, 3)), jnp.float32)
+        v = jnp.full((3, 3, 3), 1500.0, jnp.float32)
+        got = common.inner_update(core, um, v, jnp.zeros_like(core), 1e-3)
+        np.testing.assert_allclose(got, 2 * core - um, rtol=1e-6)

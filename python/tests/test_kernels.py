@@ -1,0 +1,152 @@
+"""Pallas kernel variants vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and tile sizes; every code shape must agree
+with `ref.py` to f32 tolerance on random data. This is the CORE
+correctness signal of Layer 1.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.common import R
+from compile.kernels import ref
+
+RTOL, ATOL = 2e-5, 1e-5
+
+
+def rand(shape, seed, scale=1.0):
+    return jnp.asarray(scale * np.random.default_rng(seed).standard_normal(shape), jnp.float32)
+
+
+def make_case(shape, seed=0):
+    pad = tuple(s + 2 * R for s in shape)
+    u = rand(pad, seed)
+    um = rand(shape, seed + 1)
+    v = jnp.asarray(
+        1500.0 + 1500.0 * np.random.default_rng(seed + 2).random(shape), jnp.float32
+    )
+    return u, um, v
+
+
+def make_pml_case(shape, seed=0):
+    pad1 = tuple(s + 2 for s in shape)
+    u = rand(pad1, seed)
+    um = rand(shape, seed + 1)
+    v = jnp.asarray(
+        1500.0 + 1500.0 * np.random.default_rng(seed + 2).random(shape), jnp.float32
+    )
+    eta = jnp.asarray(200.0 * np.random.default_rng(seed + 3).random(pad1), jnp.float32)
+    return u, um, v, eta
+
+
+# Divisible (shape, block) pairs keep every variant launchable.
+dims = st.sampled_from([8, 12, 16, 24])
+blocks3 = st.sampled_from([(4, 4, 4), (8, 8, 8), (4, 8, 8), (8, 4, 4), (2, 4, 8)])
+planes = st.sampled_from([(4, 4), (8, 8), (4, 8), (8, 4), (16, 16), (8, 16)])
+
+
+class TestInnerVariants:
+    @pytest.mark.parametrize("variant", ["gmem", "smem_u", "semi"])
+    @settings(max_examples=8, deadline=None)
+    @given(nz=dims, ny=dims, nx=dims, block=blocks3, seed=st.integers(0, 10**6))
+    def test_3d_blocking_matches_ref(self, variant, nz, ny, nx, block, seed):
+        shape = (nz, ny, nx)
+        if any(s % b for s, b in zip(shape, block)):
+            block = model.default_block(shape, block)
+        u, um, v = make_case(shape, seed)
+        dt, h = 1e-3, 10.0
+        want = ref.step_inner_ref(u, um, v, dt=dt, h=h)
+        (got,) = model.make_inner_step(variant, shape, dt=dt, h=h, block=block)(u, um, v)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("variant", ["st_smem", "st_reg_shft", "st_reg_fixed"])
+    @settings(max_examples=8, deadline=None)
+    @given(nz=dims, ny=dims, nx=dims, plane=planes, seed=st.integers(0, 10**6))
+    def test_streaming_matches_ref(self, variant, nz, ny, nx, plane, seed):
+        shape = (nz, ny, nx)
+        if shape[1] % plane[0] or shape[2] % plane[1]:
+            plane = model.default_block(shape[1:], plane)
+        u, um, v = make_case(shape, seed)
+        dt, h = 1e-3, 10.0
+        want = ref.step_inner_ref(u, um, v, dt=dt, h=h)
+        (got,) = model.make_inner_step(variant, shape, dt=dt, h=h, plane=plane)(u, um, v)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("variant", list(model.INNER_VARIANTS))
+    def test_anisotropic_region(self, variant):
+        # Region shapes like PML faces: thin in one dimension.
+        shape = (8, 24, 16)
+        u, um, v = make_case(shape, 42)
+        dt, h = 8e-4, 12.5
+        want = ref.step_inner_ref(u, um, v, dt=dt, h=h)
+        (got,) = model.make_inner_step(variant, shape, dt=dt, h=h)(u, um, v)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_bad_block_raises(self):
+        with pytest.raises(ValueError):
+            model.make_inner_step("gmem", (10, 10, 10), dt=1e-3, h=10.0, block=(3, 3, 3))
+
+    def test_bad_plane_raises(self):
+        with pytest.raises(ValueError):
+            model.make_inner_step("st_smem", (8, 10, 10), dt=1e-3, h=10.0, plane=(3, 3))
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            model.make_inner_step("warp_specialized", (8, 8, 8), dt=1e-3, h=10.0)
+
+
+class TestPmlVariants:
+    @pytest.mark.parametrize("variant", list(model.PML_VARIANTS))
+    @settings(max_examples=8, deadline=None)
+    @given(nz=dims, ny=dims, nx=dims, block=blocks3, seed=st.integers(0, 10**6))
+    def test_matches_ref(self, variant, nz, ny, nx, block, seed):
+        shape = (nz, ny, nx)
+        if any(s % b for s, b in zip(shape, block)):
+            block = model.default_block(shape, block)
+        u, um, v, eta = make_pml_case(shape, seed)
+        dt, h = 1e-3, 10.0
+        want = ref.step_pml_ref(u, um, v, eta, dt=dt, h=h)
+        (got,) = model.make_pml_step(variant, shape, dt=dt, h=h, block=block)(u, um, v, eta)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    @pytest.mark.parametrize("variant", list(model.PML_VARIANTS))
+    def test_face_shapes(self, variant):
+        # The actual thin face-class shapes used by the coordinator.
+        for shape in [(8, 24, 24), (16, 8, 24), (16, 16, 8)]:
+            u, um, v, eta = make_pml_case(shape, 7)
+            dt, h = 1e-3, 10.0
+            want = ref.step_pml_ref(u, um, v, eta, dt=dt, h=h)
+            (got,) = model.make_pml_step(variant, shape, dt=dt, h=h)(u, um, v, eta)
+            np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+    def test_eta_variants_agree_exactly(self):
+        # The three staging strategies are *the same arithmetic*; they must
+        # agree bit-for-bit with each other (not just within tolerance).
+        shape = (8, 16, 16)
+        u, um, v, eta = make_pml_case(shape, 11)
+        outs = [
+            np.asarray(model.make_pml_step(var, shape, dt=1e-3, h=10.0)(u, um, v, eta)[0])
+            for var in model.PML_VARIANTS
+        ]
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+    def test_unknown_variant_raises(self):
+        with pytest.raises(ValueError):
+            model.make_pml_step("smem_eta_2", (8, 8, 8), dt=1e-3, h=10.0)
+
+
+class TestVariantEquivalence:
+    def test_all_inner_variants_pairwise_close(self):
+        shape = (16, 16, 16)
+        u, um, v = make_case(shape, 123)
+        outs = {}
+        for var in model.INNER_VARIANTS:
+            (got,) = model.make_inner_step(var, shape, dt=1e-3, h=10.0)(u, um, v)
+            outs[var] = np.asarray(got)
+        base = outs["gmem"]
+        for var, o in outs.items():
+            np.testing.assert_allclose(o, base, rtol=RTOL, atol=ATOL, err_msg=var)

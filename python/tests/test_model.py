@@ -1,0 +1,100 @@
+"""Region decomposition and full-step composition tests (Layer 2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import common, model
+from compile.common import R, ProblemSpec
+from compile.kernels import ref
+
+
+def make_fields(spec, seed=0):
+    rng = np.random.default_rng(seed)
+    pad = spec.padded
+    zero = np.zeros(pad, np.float32)
+    u = zero.copy()
+    u[R:-R, R:-R, R:-R] = rng.standard_normal(spec.interior).astype(np.float32)
+    eta = zero.copy()
+    eta[R:-R, R:-R, R:-R] = (100.0 * rng.random(spec.interior)).astype(np.float32)
+    um = rng.standard_normal(spec.interior).astype(np.float32)
+    v = np.full(spec.interior, 2000.0, np.float32)
+    return jnp.asarray(u), jnp.asarray(um), jnp.asarray(v), jnp.asarray(eta)
+
+
+class TestDecomposition:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        nz=st.integers(12, 64),
+        ny=st.integers(12, 64),
+        nx=st.integers(12, 64),
+        w=st.integers(1, 5),
+    )
+    def test_regions_partition_domain(self, nz, ny, nx, w):
+        """The 7 regions tile the interior exactly: disjoint and complete."""
+        spec = ProblemSpec(interior=(nz, ny, nx), pml_width=w, h=10.0, dt=1e-3)
+        spec.validate()
+        cover = np.zeros(spec.interior, np.int32)
+        for reg in model.decompose(spec):
+            oz, oy, ox = reg.offset
+            sz, sy, sx = reg.shape
+            assert sz > 0 and sy > 0 and sx > 0, reg
+            cover[oz : oz + sz, oy : oy + sy, ox : ox + sx] += 1
+        assert cover.min() == 1 and cover.max() == 1
+
+    def test_face_class_shapes_match_regions(self):
+        spec = ProblemSpec(interior=(48, 40, 32), pml_width=8, h=10.0, dt=1e-3)
+        regions = {r.name: r for r in model.decompose(spec)}
+        assert regions["top"].shape == model.face_class_shape(spec, "top_bottom")
+        assert regions["bottom"].shape == model.face_class_shape(spec, "top_bottom")
+        assert regions["front"].shape == model.face_class_shape(spec, "front_back")
+        assert regions["left"].shape == model.face_class_shape(spec, "left_right")
+
+    def test_symmetric_pairs_share_shapes(self):
+        """Paper: the six PML subregions form three symmetric classes."""
+        spec = ProblemSpec(interior=(48, 48, 48), pml_width=8, h=10.0, dt=1e-3)
+        regs = {r.name: r for r in model.decompose(spec)}
+        assert regs["top"].shape == regs["bottom"].shape
+        assert regs["front"].shape == regs["back"].shape
+        assert regs["left"].shape == regs["right"].shape
+
+    def test_inner_region_centered(self):
+        spec = ProblemSpec(interior=(48, 48, 48), pml_width=8, h=10.0, dt=1e-3)
+        inner = model.decompose(spec)[0]
+        assert inner.offset == (8, 8, 8)
+        assert inner.shape == (32, 32, 32)
+
+
+class TestFullStepComposition:
+    def test_monolithic_equals_decomposed(self):
+        """Strategy 1 (branchy single kernel) and strategy 3 (7 launches)
+        must be numerically identical — same arithmetic, different launch
+        topology."""
+        spec = ProblemSpec(interior=(24, 24, 24), pml_width=4, h=10.0, dt=1e-3)
+        u, um, v, eta = make_fields(spec)
+        dref = model.step_decomposed_ref(spec, u, um, v, eta)
+        (mono,) = model.make_monolithic_step(spec)(u, um, v, eta)
+        np.testing.assert_allclose(mono, dref, rtol=2e-5, atol=1e-5)
+
+    def test_fused_equals_decomposed(self):
+        spec = ProblemSpec(interior=(24, 24, 24), pml_width=4, h=10.0, dt=1e-3)
+        u, um, v, eta = make_fields(spec, seed=3)
+        dref = model.step_decomposed_ref(spec, u, um, v, eta)
+        (fused,) = model.make_fused_step(spec)(u, um, v, eta)
+        np.testing.assert_allclose(fused, dref, rtol=2e-5, atol=1e-5)
+
+    def test_fused_variant_choice_is_neutral(self):
+        spec = ProblemSpec(interior=(24, 24, 24), pml_width=4, h=10.0, dt=1e-3)
+        u, um, v, eta = make_fields(spec, seed=4)
+        (a,) = model.make_fused_step(spec, inner_variant="gmem", pml_variant="gmem")(u, um, v, eta)
+        (b,) = model.make_fused_step(spec, inner_variant="st_smem", pml_variant="smem_eta_1")(
+            u, um, v, eta
+        )
+        np.testing.assert_allclose(a, b, rtol=2e-5, atol=1e-5)
+
+    def test_default_block_divides(self):
+        for shape in [(32, 32, 32), (8, 48, 48), (32, 8, 48), (30, 20, 10)]:
+            blk = model.default_block(shape, (8, 8, 8))
+            assert all(s % b == 0 for s, b in zip(shape, blk))
+            assert all(b <= 8 for b in blk)

@@ -1,0 +1,128 @@
+"""Physics-level validation: stability, causality, PML absorption.
+
+These tests propagate actual waves with the reference step functions and
+check the *physical* invariants the paper's application relies on — the
+same checks the Rust golden propagator runs on its side.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import common, model
+from compile.common import R, ProblemSpec
+from compile.kernels import ref
+
+
+def eta_profile(spec: ProblemSpec, v_max: float) -> np.ndarray:
+    """Quadratic PML damping ramp (DESIGN.md §5), zero in the inner region."""
+    nz, ny, nx = spec.interior
+    w = spec.pml_width
+    eta_max = 3.0 * v_max * np.log(1000.0) / (2.0 * w * spec.h)
+    eta = np.zeros(spec.interior, np.float32)
+    for axis, n in enumerate((nz, ny, nx)):
+        idx = np.arange(n, dtype=np.float32)
+        d = np.minimum(idx, n - 1 - idx)  # distance to nearest face
+        ramp = np.where(d < w, ((w - d) / w) ** 2, 0.0).astype(np.float32)
+        shape = [1, 1, 1]
+        shape[axis] = n
+        eta = np.maximum(eta, eta_max * ramp.reshape(shape))
+    return eta
+
+
+def pad_full(arr_interior: np.ndarray) -> jnp.ndarray:
+    return jnp.asarray(np.pad(arr_interior, R), jnp.float32)
+
+
+def ricker(t: np.ndarray, f0: float) -> np.ndarray:
+    a = (np.pi * f0 * (t - 1.2 / f0)) ** 2
+    return (1.0 - 2.0 * a) * np.exp(-a)
+
+
+def propagate(spec: ProblemSpec, steps: int, v0=2000.0, with_pml=True, seed=None):
+    """Leapfrog propagation with a Ricker source at the domain center."""
+    nz, ny, nx = spec.interior
+    v = np.full(spec.interior, v0, np.float32)
+    eta = eta_profile(spec, v0) if with_pml else np.zeros(spec.interior, np.float32)
+    eta_pad = pad_full(eta)
+    u = jnp.zeros(spec.interior, jnp.float32)
+    um = jnp.zeros(spec.interior, jnp.float32)
+    vj = jnp.asarray(v)
+    src = (nz // 2, ny // 2, nx // 2)
+    f0 = 15.0
+    wav = ricker(np.arange(steps) * spec.dt, f0).astype(np.float32)
+    snaps = []
+    for n in range(steps):
+        up = pad_full(np.asarray(u))
+        un = model.step_decomposed_ref(spec, up, um, vj, eta_pad)
+        un = un.at[src].add(spec.dt**2 * v0**2 * wav[n])
+        um, u = u, un
+        snaps.append(u)
+    return u, snaps
+
+
+@pytest.fixture(scope="module")
+def small_spec():
+    h = 10.0
+    dt = common.cfl_dt(h, 2000.0)
+    return ProblemSpec(interior=(36, 36, 36), pml_width=6, h=h, dt=dt)
+
+
+class TestStability:
+    def test_no_blowup_at_cfl(self, small_spec):
+        u, _ = propagate(small_spec, steps=120)
+        a = np.asarray(u)
+        assert np.isfinite(a).all()
+        assert np.abs(a).max() < 1e3  # bounded energy
+
+    def test_zero_source_stays_zero(self, small_spec):
+        spec = small_spec
+        u = jnp.zeros(spec.interior, jnp.float32)
+        um = jnp.zeros(spec.interior, jnp.float32)
+        v = jnp.full(spec.interior, 2000.0, jnp.float32)
+        eta_pad = pad_full(eta_profile(spec, 2000.0))
+        un = model.step_decomposed_ref(spec, pad_full(np.asarray(u)), um, v, eta_pad)
+        np.testing.assert_array_equal(np.asarray(un), 0.0)
+
+
+class TestCausality:
+    def test_wavefront_speed_bounded(self, small_spec):
+        """Energy cannot travel faster than v (discrete front <= v*t + O(h))."""
+        spec = small_spec
+        steps = 60
+        u, _ = propagate(spec, steps=steps)
+        a = np.abs(np.asarray(u))
+        c = np.array(spec.interior) // 2
+        radius_cells = 2000.0 * steps * spec.dt / spec.h + 2 * R  # generous slack
+        zz, yy, xx = np.ogrid[: spec.interior[0], : spec.interior[1], : spec.interior[2]]
+        dist = np.sqrt((zz - c[0]) ** 2 + (yy - c[1]) ** 2 + (xx - c[2]) ** 2)
+        outside = a[dist > radius_cells]
+        if outside.size:
+            assert np.abs(outside).max() < 1e-3 * a.max()
+
+
+class TestPmlAbsorption:
+    def test_pml_damps_boundary_energy(self, small_spec):
+        """After the wave reaches the boundary, the PML run must hold much
+        less energy than the undamped run (reflections suppressed)."""
+        spec = small_spec
+        steps = 220  # enough for the front to hit the boundary and return
+        u_pml, _ = propagate(spec, steps=steps, with_pml=True)
+        u_ref, _ = propagate(spec, steps=steps, with_pml=False)
+        e_pml = float(np.sum(np.asarray(u_pml) ** 2))
+        e_ref = float(np.sum(np.asarray(u_ref) ** 2))
+        assert e_pml < 0.5 * e_ref, (e_pml, e_ref)
+
+    def test_eta_profile_shape(self, small_spec):
+        eta = eta_profile(small_spec, 2000.0)
+        w = small_spec.pml_width
+        # zero strictly inside, positive on the boundary shell
+        assert eta[w:-w, w:-w, w:-w].max() == 0.0
+        assert eta[0].min() > 0.0
+        assert eta[:, 0].min() > 0.0
+        assert eta[:, :, 0].min() > 0.0
+        # monotone ramp toward the face
+        mid = small_spec.interior[1] // 2
+        line = eta[: w + 1, mid, mid]
+        assert np.all(np.diff(line) <= 1e-6)

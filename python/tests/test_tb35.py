@@ -1,0 +1,57 @@
+"""3.5D temporal-blocking prototype vs two applications of the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.common import R
+from compile.kernels import ref, tb35
+
+RTOL, ATOL = 5e-5, 1e-5
+
+
+def two_ref_steps(u_pad2, um_pad, v_pad, dt, h):
+    """Apply the single-step oracle twice over the expanded region."""
+    # step 1 on the R-expanded region
+    s = u_pad2.shape
+    core0 = u_pad2[R : s[0] - R, R : s[1] - R, R : s[2] - R]
+    u1 = ref.step_inner_ref(u_pad2, um_pad, v_pad, dt=dt, h=h)  # (S+2R)
+    # step 2 on the tile proper
+    u2 = ref.step_inner_ref(
+        u1,
+        core0[R:-R, R:-R, R:-R],
+        v_pad[R:-R, R:-R, R:-R],
+        dt=dt,
+        h=h,
+    )
+    return u2, u1[R:-R, R:-R, R:-R]
+
+
+@pytest.mark.parametrize("shape,block", [((16, 16, 16), (8, 8, 8)), ((8, 16, 24), (4, 8, 8))])
+def test_tb2_matches_two_oracle_steps(shape, block):
+    rng = np.random.default_rng(5)
+    pad2 = tuple(s + 4 * R for s in shape)
+    pad1 = tuple(s + 2 * R for s in shape)
+    u = jnp.asarray(rng.standard_normal(pad2), jnp.float32)
+    um = jnp.asarray(rng.standard_normal(pad1), jnp.float32)
+    v = jnp.asarray(1500 + 1500 * rng.random(pad1), jnp.float32)
+    dt, h = 5e-4, 10.0
+
+    want2, want1 = two_ref_steps(u, um, v, dt, h)
+    got2, got1 = tb35.make_inner_tb2(shape, dt=dt, h=h, block=block)(u, um, v)
+    np.testing.assert_allclose(got1, want1, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(got2, want2, rtol=RTOL, atol=ATOL)
+
+
+def test_tb2_rejects_bad_block():
+    with pytest.raises(ValueError):
+        tb35.make_inner_tb2((10, 10, 10), dt=1e-3, h=10.0, block=(3, 3, 3))
+
+
+def test_redundancy_ratio_quantifies_papers_concern():
+    # The paper defers 3.5D for high-order stencils because redundant
+    # computation "grows quickly with stencil width": at the paper's
+    # sweet-spot 8^3 block the overlapped step-1 region is 8x the tile.
+    assert tb35.redundancy_ratio((8, 8, 8)) == pytest.approx(8.0)
+    # larger tiles amortize it, but memory limits cap D on real devices
+    assert tb35.redundancy_ratio((32, 32, 32)) < 2.0

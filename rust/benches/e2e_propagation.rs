@@ -1,0 +1,78 @@
+//! Bench: end-to-end propagation on the real PJRT testbed — the local
+//! analog of the paper's headline "2x over the monolithic baseline"
+//! claim: decomposed (7 launches/step, strategy 3) vs monolithic
+//! (1 branchy launch/step, strategy 1 / OpenACC analog) vs fused
+//! (1 XLA-fused launch/step) vs the pure-Rust golden CPU propagator.
+
+use hostencil::bench::Bencher;
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::grid::Dim3;
+use hostencil::runtime::Engine;
+use hostencil::wave::{self, Source, VelocityModel};
+
+fn mk<'e>(engine: Option<&'e Engine>, domain: hostencil::grid::Domain, mode: Mode) -> Coordinator<'e> {
+    let model = VelocityModel::Constant(2500.0);
+    let c = domain.interior.z / 2;
+    Coordinator::new(
+        engine,
+        domain,
+        mode,
+        "gmem",
+        "smem_eta_1",
+        model.build(domain.interior),
+        wave::eta_profile(&domain, 2500.0),
+        Source { pos: Dim3::new(c, c, c), f0: 15.0, amplitude: 1.0 },
+        vec![],
+    )
+    .expect("coordinator")
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load("artifacts").expect("engine");
+    engine.preload_all().expect("preload");
+    let domain = engine.manifest().domain;
+    let steps: usize = std::env::var("HOSTENCIL_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(5);
+    let pts = (domain.interior.volume() * steps) as f64;
+
+    println!(
+        "e2e: domain {} (pml {}), {steps} steps per sample",
+        domain.interior, domain.pml_width
+    );
+    let mut b = Bencher::from_env();
+    let mut results: Vec<(&str, f64)> = Vec::new();
+    for (name, mode) in [
+        ("decomposed(7-launch)", Mode::Decomposed),
+        ("monolithic(baseline)", Mode::Monolithic),
+        ("fused(1-launch)", Mode::Fused),
+        ("golden(rust-cpu)", Mode::Golden),
+    ] {
+        let eng = if mode.needs_engine() { Some(&engine) } else { None };
+        let mut coord = mk(eng, domain, mode);
+        let stats = b.bench(name, || {
+            for _ in 0..steps {
+                coord.step().unwrap();
+            }
+            coord.wavefield().energy()
+        });
+        results.push((name, stats.median.as_secs_f64()));
+    }
+
+    println!("\nthroughput (median):");
+    for (name, t) in &results {
+        println!("  {:24} {:>8.2} Mpts/s", name, pts / t / 1e6);
+    }
+    let deco = results[0].1;
+    let mono = results[1].1;
+    println!(
+        "\nmonolithic/decomposed time ratio: {:.2}x (paper's headline: ~2x over the OpenACC-style baseline)",
+        mono / deco
+    );
+    println!("\n{}", b.csv());
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate Figure 3 — the L2 and DRAM rooflines with all 25
+//! kernel operating points, for each machine. ASCII to stdout, CSV to
+//! target/fig3_<machine>.csv.
+
+use hostencil::bench::Bencher;
+use hostencil::report;
+
+fn main() {
+    std::fs::create_dir_all("target").ok();
+    for machine in ["v100", "p100", "nvs510"] {
+        let (text, csv) = report::fig3(machine, 1000).expect("fig3");
+        println!("=== Figure 3 ({machine}) ===");
+        println!("{text}");
+        let path = format!("target/fig3_{machine}.csv");
+        std::fs::write(&path, &csv).expect("write csv");
+        println!("wrote {path} ({} rows)\n", csv.lines().count() - 1);
+    }
+
+    let mut b = Bencher::from_env();
+    b.bench("fig3/v100_full_pipeline", || report::fig3("v100", 1000).unwrap().1.len());
+    println!("\n{}", b.csv());
+}

@@ -1,0 +1,77 @@
+//! Bench: regenerate Table II.
+//!
+//! Two parts:
+//!  1. the gpusim prediction for all 25 variants x 3 machines (printed
+//!     against the paper's measurements, with rank agreement), and
+//!  2. measured wall time of the real PJRT artifacts on this CPU
+//!     testbed, per inner-kernel variant (the local analog of a Table II
+//!     column: same workload, same launch topology, real executables).
+
+use hostencil::bench::Bencher;
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::grid::Dim3;
+use hostencil::report;
+use hostencil::runtime::Engine;
+use hostencil::wave::{self, Source, VelocityModel};
+
+fn main() {
+    println!("=== Table II (model vs paper) ===");
+    print!("{}", report::table2(1000));
+    for m in ["v100", "p100", "nvs510"] {
+        println!(
+            "rank agreement ({m}): {:.1}%",
+            100.0 * report::rank_agreement(m, 100).unwrap()
+        );
+    }
+
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("\nartifacts/ missing — skipping measured column (run `make artifacts`)");
+        return;
+    }
+    println!("\n=== Table II (measured, CPU PJRT testbed, {} steps/sample) ===", steps());
+    let engine = Engine::load("artifacts").expect("engine");
+    let domain = engine.manifest().domain;
+    let mut b = Bencher::from_env();
+    let variants: Vec<String> = engine
+        .manifest()
+        .inner_variants()
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    for variant in &variants {
+        let mut coord = mk(&engine, variant, "smem_eta_1");
+        b.bench(&format!("decomposed/{variant}"), || {
+            for _ in 0..steps() {
+                coord.step().unwrap();
+            }
+            coord.wavefield().energy()
+        });
+        let _ = domain;
+    }
+    println!("\n{}", b.csv());
+}
+
+fn steps() -> usize {
+    std::env::var("HOSTENCIL_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}
+
+fn mk<'e>(engine: &'e Engine, inner: &str, pml: &str) -> Coordinator<'e> {
+    let domain = engine.manifest().domain;
+    let model = VelocityModel::Constant(2500.0);
+    let c = domain.interior.z / 2;
+    Coordinator::new(
+        Some(engine),
+        domain,
+        Mode::Decomposed,
+        inner,
+        pml,
+        model.build(domain.interior),
+        wave::eta_profile(&domain, 2500.0),
+        Source { pos: Dim3::new(c, c, c), f0: 15.0, amplitude: 1.0 },
+        vec![],
+    )
+    .expect("coordinator")
+}

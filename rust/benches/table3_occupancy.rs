@@ -1,0 +1,48 @@
+//! Bench: regenerate Table III (kernel characteristics / occupancy) and
+//! time the occupancy calculator itself (it sits inside every timing-
+//! model query, so the sweep tooling wants it fast).
+
+use hostencil::bench::Bencher;
+use hostencil::gpusim::arch::{self, v100};
+use hostencil::gpusim::{kernels, occupancy};
+use hostencil::report;
+
+fn main() {
+    println!("{}", report::table1());
+    println!("=== Table III (model vs paper, V100 inner region) ===");
+    print!("{}", report::table3());
+
+    // PML region classes (Table III bottom): model occupancy per class
+    println!("\n=== Table III (PML kernels, V100) ===");
+    let a = v100();
+    println!(
+        "{:<20}{:>7}{:>6}{:>9}{:>9}",
+        "variant", "block", "regs", "thWarps", "thOcc%"
+    );
+    for v in kernels::paper_variants() {
+        let occ = occupancy::occupancy(&a, &v.resources_pml());
+        println!(
+            "{:<20}{:>7}{:>6}{:>9}{:>9.1}",
+            v.id,
+            v.threads_per_block(),
+            v.regs_pml,
+            occ.active_warps,
+            occ.occupancy_pct
+        );
+    }
+
+    let mut b = Bencher::from_env();
+    let variants = kernels::paper_variants();
+    let machines = arch::all();
+    b.bench("occupancy/25_variants_x_3_machines", || {
+        let mut acc = 0u32;
+        for m in &machines {
+            for v in &variants {
+                acc += occupancy::occupancy(m, &v.resources_inner()).active_warps;
+                acc += occupancy::occupancy(m, &v.resources_pml()).active_warps;
+            }
+        }
+        acc
+    });
+    println!("\n{}", b.csv());
+}

@@ -1,0 +1,35 @@
+//! Bench: regenerate Table IV (roofline performance characteristics)
+//! and time the full whole-machine simulation sweep.
+
+use hostencil::bench::Bencher;
+use hostencil::gpusim::arch;
+use hostencil::gpusim::timing;
+use hostencil::report;
+
+fn main() {
+    println!("=== Table IV (model vs paper, V100) ===");
+    print!("{}", report::table4(1000));
+
+    // summary deltas: mean |model - paper| across the 25 rows
+    let runs = timing::simulate_all(&arch::v100(), 1000);
+    let mut d_ai_l2 = 0.0;
+    let mut d_ai_dram = 0.0;
+    for r in &runs {
+        let p = hostencil::report::paperdata::table4_row(r.variant_id).unwrap();
+        d_ai_l2 += ((r.ai_l2 - p.ai_l2) / p.ai_l2).abs();
+        d_ai_dram += ((r.ai_dram - p.ai_dram) / p.ai_dram).abs();
+    }
+    println!(
+        "\nmean |rel delta| vs paper: AI_L2 {:.1}%  AI_DRAM {:.1}%",
+        100.0 * d_ai_l2 / runs.len() as f64,
+        100.0 * d_ai_dram / runs.len() as f64
+    );
+
+    let mut b = Bencher::from_env();
+    for m in arch::all() {
+        b.bench(&format!("simulate_all/{}", m.name), || {
+            timing::simulate_all(&m, 1000).len()
+        });
+    }
+    println!("\n{}", b.csv());
+}

@@ -1,0 +1,139 @@
+//! Micro-benchmark harness (substrate — no `criterion` in the offline
+//! crate set). Deterministic warmup + sampling with robust statistics;
+//! bench binaries print one line per case plus optional CSV.
+
+use std::time::{Duration, Instant};
+
+/// Robust statistics over one benchmarked case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    fn from_samples(name: &str, mut s: Vec<Duration>) -> Stats {
+        s.sort();
+        let n = s.len();
+        let mean = s.iter().sum::<Duration>() / n as u32;
+        Stats {
+            name: name.to_string(),
+            samples: n,
+            min: s[0],
+            median: s[n / 2],
+            mean,
+            p95: s[(n * 95 / 100).min(n - 1)],
+            max: s[n - 1],
+        }
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:40} n={:<3} min={:>10.3?} med={:>10.3?} mean={:>10.3?} p95={:>10.3?}",
+            self.name, self.samples, self.min, self.median, self.mean, self.p95
+        )
+    }
+}
+
+/// Benchmark runner: time `f` for `samples` iterations after `warmup`
+/// throwaway iterations.
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, samples: 10, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, samples: usize) -> Bencher {
+        assert!(samples >= 1);
+        Bencher { warmup, samples, results: Vec::new() }
+    }
+
+    /// Honors `HOSTENCIL_BENCH_SAMPLES` / `HOSTENCIL_BENCH_WARMUP` env
+    /// overrides so CI can run quick smoke benches.
+    pub fn from_env() -> Bencher {
+        let read = |k: &str, d: usize| {
+            std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+        };
+        Bencher::new(read("HOSTENCIL_BENCH_WARMUP", 1), read("HOSTENCIL_BENCH_SAMPLES", 5))
+    }
+
+    /// Time a closure; its return value is black-boxed to keep the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        let stats = Stats::from_samples(name, samples);
+        println!("{}", stats.line());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[Stats] {
+        &self.results
+    }
+
+    /// Emit all results as CSV (name, median_ns, mean_ns, min_ns, p95_ns).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("name,median_ns,mean_ns,min_ns,p95_ns\n");
+        for s in &self.results {
+            out.push_str(&format!(
+                "{},{},{},{},{}\n",
+                s.name,
+                s.median.as_nanos(),
+                s.mean.as_nanos(),
+                s.min.as_nanos(),
+                s.p95.as_nanos()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering_invariants() {
+        let mut b = Bencher::new(0, 7);
+        b.bench("busy", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        let s = &b.results()[0];
+        assert_eq!(s.samples, 7);
+        assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.max);
+        assert!(s.min > Duration::ZERO);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut b = Bencher::new(0, 2);
+        b.bench("a", || 1);
+        b.bench("b", || 2);
+        let csv = b.csv();
+        assert!(csv.starts_with("name,median_ns"));
+        assert_eq!(csv.lines().count(), 3);
+    }
+}

@@ -1,0 +1,288 @@
+//! Run configuration: a small TOML-subset parser (substrate — no `toml`
+//! crate in the offline set) plus the typed `RunConfig`.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string,
+//! integer, float, and boolean values, `#` comments, blank lines.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::Mode;
+use crate::grid::{Dim3, Domain};
+use crate::stencil;
+use crate::wave::{Source, VelocityModel};
+
+/// Raw parsed config: section -> key -> value.
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Value {
+    fn parse(raw: &str) -> anyhow::Result<Value> {
+        let raw = raw.trim();
+        if let Some(stripped) = raw.strip_prefix('"') {
+            let inner = stripped
+                .strip_suffix('"')
+                .ok_or_else(|| anyhow::anyhow!("unterminated string {raw:?}"))?;
+            return Ok(Value::Str(inner.to_string()));
+        }
+        match raw {
+            "true" => return Ok(Value::Bool(true)),
+            "false" => return Ok(Value::Bool(false)),
+            _ => {}
+        }
+        if let Ok(i) = raw.parse::<i64>() {
+            return Ok(Value::Int(i));
+        }
+        if let Ok(f) = raw.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+        anyhow::bail!("cannot parse value {raw:?}")
+    }
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> anyhow::Result<Toml> {
+        let mut t = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // only strip comments outside strings (strings here never contain '#')
+                Some(i) if !raw[..i].contains('"') || raw[..i].matches('"').count() % 2 == 0 => {
+                    &raw[..i]
+                }
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                t.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value: {raw:?}", lineno + 1))?;
+            let value = Value::parse(v)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            t.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(t)
+    }
+
+    fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> anyhow::Result<String> {
+        match self.get(section, key) {
+            None => Ok(default.to_string()),
+            Some(Value::Str(s)) => Ok(s.clone()),
+            Some(other) => anyhow::bail!("[{section}] {key}: expected string, got {other:?}"),
+        }
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(Value::Int(i)) if *i >= 0 => Ok(*i as usize),
+            Some(other) => anyhow::bail!("[{section}] {key}: expected non-negative int, got {other:?}"),
+        }
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(Value::Float(f)) => Ok(*f),
+            Some(Value::Int(i)) => Ok(*i as f64),
+            Some(other) => anyhow::bail!("[{section}] {key}: expected number, got {other:?}"),
+        }
+    }
+}
+
+/// Fully-resolved run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub domain: Domain,
+    pub steps: usize,
+    pub mode: Mode,
+    pub inner_variant: String,
+    pub pml_variant: String,
+    pub artifacts_dir: String,
+    pub model: VelocityModel,
+    pub source: Source,
+    pub receivers: Vec<Dim3>,
+}
+
+impl RunConfig {
+    /// Defaults matching the default artifact build (48^3, pml 8).
+    pub fn defaults() -> RunConfig {
+        let interior = Dim3::new(48, 48, 48);
+        let h = 10.0;
+        let v = 3000.0;
+        let dt = (stencil::cfl_dt(h, v) * 1e6).floor() / 1e6; // mirror aot.py truncation
+        RunConfig {
+            domain: Domain::new(interior, 8, h, dt).expect("default domain valid"),
+            steps: 100,
+            mode: Mode::Decomposed,
+            inner_variant: "gmem".into(),
+            pml_variant: "smem_eta_1".into(),
+            artifacts_dir: "artifacts".into(),
+            model: VelocityModel::Constant(2500.0),
+            source: Source { pos: Dim3::new(24, 24, 24), f0: 15.0, amplitude: 1.0 },
+            receivers: (0..8).map(|i| Dim3::new(10, 10, 4 + 5 * i)).collect(),
+        }
+    }
+
+    /// Parse a TOML-subset config file; missing keys fall back to defaults.
+    pub fn from_toml(text: &str) -> anyhow::Result<RunConfig> {
+        let t = Toml::parse(text)?;
+        let d = RunConfig::defaults();
+
+        let nz = t.usize_or("domain", "nz", d.domain.interior.z)?;
+        let ny = t.usize_or("domain", "ny", d.domain.interior.y)?;
+        let nx = t.usize_or("domain", "nx", d.domain.interior.x)?;
+        let pml = t.usize_or("domain", "pml_width", d.domain.pml_width)?;
+        let h = t.f64_or("domain", "h", d.domain.h)?;
+
+        let model = match t.str_or("model", "type", "constant")?.as_str() {
+            "constant" => VelocityModel::Constant(t.f64_or("model", "v", 2500.0)? as f32),
+            "gradient" => VelocityModel::GradientZ {
+                v0: t.f64_or("model", "v0", 1500.0)? as f32,
+                k_per_m: t.f64_or("model", "k_per_m", 0.5)? as f32,
+                h,
+            },
+            "layered" => VelocityModel::Layered(vec![
+                (0.0, t.f64_or("model", "v_top", 1500.0)? as f32),
+                (t.f64_or("model", "interface", 0.5)?, t.f64_or("model", "v_bottom", 3500.0)? as f32),
+            ]),
+            other => anyhow::bail!("[model] type: unknown {other:?}"),
+        };
+
+        let v_max = model.v_max() as f64;
+        let dt_default = (stencil::cfl_dt(h, v_max) * 1e6).floor() / 1e6;
+        let dt = t.f64_or("domain", "dt", dt_default)?;
+        let domain = Domain::new(Dim3::new(nz, ny, nx), pml, h, dt)?;
+
+        let source = Source {
+            pos: Dim3::new(
+                t.usize_or("source", "z", nz / 2)?,
+                t.usize_or("source", "y", ny / 2)?,
+                t.usize_or("source", "x", nx / 2)?,
+            ),
+            f0: t.f64_or("source", "f0", 15.0)?,
+            amplitude: t.f64_or("source", "amplitude", 1.0)?,
+        };
+
+        // receivers: a horizontal line at fixed depth
+        let n_recv = t.usize_or("receivers", "count", 8)?;
+        let depth = t.usize_or("receivers", "depth_z", pml + 2)?;
+        let ry = t.usize_or("receivers", "y", ny / 2)?;
+        let receivers = if n_recv == 0 {
+            vec![]
+        } else {
+            let step = (nx - 2 * pml).max(1) / n_recv.max(1);
+            (0..n_recv)
+                .map(|i| Dim3::new(depth, ry, (pml + i * step.max(1)).min(nx - 1)))
+                .collect()
+        };
+
+        Ok(RunConfig {
+            domain,
+            steps: t.usize_or("run", "steps", d.steps)?,
+            mode: Mode::parse(&t.str_or("run", "mode", "decomposed")?)?,
+            inner_variant: t.str_or("run", "inner_variant", &d.inner_variant)?,
+            pml_variant: t.str_or("run", "pml_variant", &d.pml_variant)?,
+            artifacts_dir: t.str_or("run", "artifacts", &d.artifacts_dir)?,
+            model,
+            source,
+            receivers,
+        })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read config {path:?}: {e}"))?;
+        Self::from_toml(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_basic_toml() {
+        let t = Toml::parse(
+            "# comment\n[a]\nx = 3\ny = 1.5\ns = \"hi\" # trailing\nb = true\n\n[b]\nz=-2\n",
+        )
+        .unwrap();
+        assert_eq!(t.usize_or("a", "x", 0).unwrap(), 3);
+        assert_eq!(t.f64_or("a", "y", 0.0).unwrap(), 1.5);
+        assert_eq!(t.str_or("a", "s", "").unwrap(), "hi");
+        assert_eq!(t.get("a", "b"), Some(&Value::Bool(true)));
+        assert_eq!(t.f64_or("b", "z", 0.0).unwrap(), -2.0);
+        assert_eq!(t.usize_or("missing", "k", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Toml::parse("[a]\nnope").is_err());
+        assert!(Toml::parse("[a]\nx = \"unterminated").is_err());
+        assert!(Toml::parse("[a]\nx = what").is_err());
+    }
+
+    #[test]
+    fn type_mismatch_reported() {
+        let t = Toml::parse("[a]\nx = \"s\"\n").unwrap();
+        assert!(t.usize_or("a", "x", 0).is_err());
+        assert!(t.f64_or("a", "x", 0.0).is_err());
+    }
+
+    #[test]
+    fn run_config_defaults_are_valid() {
+        let c = RunConfig::defaults();
+        assert!(c.domain.validate().is_ok());
+        assert_eq!(c.mode, Mode::Decomposed);
+        // default dt respects CFL for the default vmax
+        assert!(c.domain.dt <= stencil::cfl_dt(c.domain.h, 3000.0));
+    }
+
+    #[test]
+    fn run_config_from_toml_overrides() {
+        let cfg = RunConfig::from_toml(
+            "[domain]\nnz = 36\nny = 36\nnx = 36\npml_width = 6\n\
+             [run]\nsteps = 50\nmode = \"golden\"\ninner_variant = \"st_smem\"\n\
+             [model]\ntype = \"gradient\"\nv0 = 1600\nk_per_m = 0.4\n\
+             [source]\nz = 10\nf0 = 20.0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.domain.interior, Dim3::new(36, 36, 36));
+        assert_eq!(cfg.steps, 50);
+        assert_eq!(cfg.mode, Mode::Golden);
+        assert_eq!(cfg.inner_variant, "st_smem");
+        assert_eq!(cfg.source.pos.z, 10);
+        assert!(matches!(cfg.model, VelocityModel::GradientZ { .. }));
+        // dt derived from gradient v_max, still positive
+        assert!(cfg.domain.dt > 0.0);
+    }
+
+    #[test]
+    fn run_config_rejects_bad_mode_and_model() {
+        assert!(RunConfig::from_toml("[run]\nmode = \"hyper\"\n").is_err());
+        assert!(RunConfig::from_toml("[model]\ntype = \"magma\"\n").is_err());
+    }
+}

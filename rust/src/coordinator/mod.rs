@@ -1,0 +1,430 @@
+//! Layer-3 coordinator: the simulation driver.
+//!
+//! Owns the wavefield state and, in decomposed mode, performs the
+//! paper's launch topology every time step: seven region launches (one
+//! inner, six PML faces), each fed a freshly sliced tile + halo and
+//! scattered back into the next wavefield — exactly the role the CUDA
+//! host code plays in the paper, with PJRT executables standing in for
+//! kernel launches.
+//!
+//! Modes:
+//! * `Decomposed`  — 7 launches/step (paper strategy 3, the contribution)
+//! * `Monolithic`  — 1 branchy full-domain launch/step (strategy 1 /
+//!   OpenACC-baseline analog)
+//! * `Fused`       — 1 launch/step of the XLA-fused decomposed graph
+//! * `Golden`      — pure-Rust CPU stencils, no PJRT (validation baseline)
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::grid::{decompose, Dim3, Domain, Field3, Region};
+use crate::runtime::{Engine, ExecArg};
+use crate::wave::Source;
+use crate::{stencil, R};
+
+/// Launch topology selector.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum Mode {
+    Decomposed,
+    Monolithic,
+    Fused,
+    Golden,
+}
+
+impl Mode {
+    pub fn parse(s: &str) -> anyhow::Result<Mode> {
+        Ok(match s {
+            "decomposed" => Mode::Decomposed,
+            "monolithic" => Mode::Monolithic,
+            "fused" => Mode::Fused,
+            "golden" => Mode::Golden,
+            other => anyhow::bail!(
+                "unknown mode {other:?} (expected decomposed|monolithic|fused|golden)"
+            ),
+        })
+    }
+
+    pub fn needs_engine(&self) -> bool {
+        !matches!(self, Mode::Golden)
+    }
+}
+
+/// Summary of a completed run.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub steps: usize,
+    pub wall: Duration,
+    pub launches: u64,
+    pub final_max_abs: f32,
+    pub final_energy: f64,
+    /// interior-points x steps / wall seconds
+    pub points_per_sec: f64,
+    pub energy_log: Vec<f64>,
+    /// per-receiver time series
+    pub traces: Vec<Vec<f32>>,
+}
+
+/// Per-region constant inputs, extracted once at construction and — when
+/// a PJRT engine is attached — uploaded once as resident device buffers
+/// (perf: re-uploading v/eta per launch was pure overhead on the
+/// decomposed hot path; see EXPERIMENTS.md §Perf).
+struct RegionTiles {
+    v: Field3,
+    eta: Option<Field3>, // halo-1 tile, PML regions only
+    v_dev: Option<xla::PjRtBuffer>,
+    eta_dev: Option<xla::PjRtBuffer>,
+}
+
+/// The wave-propagation coordinator.
+pub struct Coordinator<'e> {
+    pub domain: Domain,
+    pub mode: Mode,
+    engine: Option<&'e Engine>,
+    regions: Vec<Region>,
+    region_tiles: Vec<RegionTiles>,
+    inner_artifact: String,
+    pml_artifacts: HashMap<String, String>, // face-class key -> artifact name
+    v: Field3,
+    eta: Field3,
+    eta_pad: Field3,
+    /// wavefield at step n, R-ghost-padded
+    u_pad: Field3,
+    /// wavefield at step n-1, R-ghost-padded (ghost stays zero; regions
+    /// extract their interior tiles from it directly, and the buffers
+    /// rotate by move — no pad/unpad copies on the hot path)
+    um_pad: Field3,
+    source: Source,
+    v_at_src: f32,
+    receivers: Vec<Dim3>,
+    traces: Vec<Vec<f32>>,
+    energy_log: Vec<f64>,
+    steps_done: usize,
+    launches: u64,
+}
+
+impl<'e> Coordinator<'e> {
+    /// Create a coordinator. `engine` may be `None` only for `Mode::Golden`.
+    pub fn new(
+        engine: Option<&'e Engine>,
+        domain: Domain,
+        mode: Mode,
+        inner_variant: &str,
+        pml_variant: &str,
+        v: Field3,
+        eta: Field3,
+        source: Source,
+        receivers: Vec<Dim3>,
+    ) -> anyhow::Result<Self> {
+        domain.validate()?;
+        anyhow::ensure!(v.dims() == domain.interior, "velocity must be interior-sized");
+        anyhow::ensure!(eta.dims() == domain.interior, "eta must be interior-sized");
+        let in_bounds = |p: Dim3| p.z < domain.interior.z && p.y < domain.interior.y && p.x < domain.interior.x;
+        anyhow::ensure!(in_bounds(source.pos), "source {} outside interior", source.pos);
+        for r in &receivers {
+            anyhow::ensure!(in_bounds(*r), "receiver {} outside interior", r);
+        }
+
+        let regions = decompose(&domain);
+        let mut pml_artifacts = HashMap::new();
+        if mode.needs_engine() {
+            let eng = engine.ok_or_else(|| anyhow::anyhow!("mode {mode:?} needs a PJRT engine"))?;
+            let m = eng.manifest();
+            anyhow::ensure!(
+                m.domain == domain,
+                "artifact domain {:?} != run domain {:?}; re-run `make artifacts` with matching dims",
+                m.domain,
+                domain
+            );
+            match mode {
+                Mode::Decomposed => {
+                    m.get(&format!("inner_{inner_variant}"))?;
+                    for cls in ["top_bottom", "front_back", "left_right"] {
+                        let name = format!("pml_{cls}_{pml_variant}");
+                        m.get(&name)?;
+                        pml_artifacts.insert(cls.to_string(), name);
+                    }
+                }
+                Mode::Monolithic => {
+                    m.get("monolithic")?;
+                }
+                Mode::Fused => {
+                    m.get("fused")?;
+                }
+                Mode::Golden => unreachable!(),
+            }
+        }
+
+        let v_at_src = v.get(source.pos.z, source.pos.y, source.pos.x);
+        let n_recv = receivers.len();
+        let eta_pad = eta.pad(R);
+        let region_tiles = regions
+            .iter()
+            .map(|reg| -> anyhow::Result<RegionTiles> {
+                let v_t = v.extract(reg.offset, reg.shape);
+                let eta_t = reg
+                    .class
+                    .is_pml()
+                    .then(|| eta_pad.extract_padded_region(R, reg.offset, reg.shape, 1));
+                let (v_dev, eta_dev) = match (mode, engine) {
+                    (Mode::Decomposed, Some(eng)) => (
+                        Some(eng.upload(&v_t)?),
+                        eta_t.as_ref().map(|e| eng.upload(e)).transpose()?,
+                    ),
+                    _ => (None, None),
+                };
+                Ok(RegionTiles { v: v_t, eta: eta_t, v_dev, eta_dev })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Coordinator {
+            domain,
+            mode,
+            engine,
+            regions,
+            region_tiles,
+            inner_artifact: format!("inner_{inner_variant}"),
+            pml_artifacts,
+            eta_pad,
+            eta,
+            v,
+            u_pad: Field3::zeros(domain.padded()),
+            um_pad: Field3::zeros(domain.padded()),
+            source,
+            v_at_src,
+            receivers,
+            traces: vec![Vec::new(); n_recv],
+            energy_log: Vec::new(),
+            steps_done: 0,
+            launches: 0,
+        })
+    }
+
+    /// One decomposed step: slice -> launch -> scatter, per region.
+    /// Writes region tiles straight into the padded next-step buffer.
+    fn step_decomposed(&mut self) -> anyhow::Result<Field3> {
+        let eng = self.engine.expect("checked in new()");
+        let mut out = Field3::zeros(self.domain.padded());
+        for (reg, tiles) in self.regions.iter().zip(&self.region_tiles) {
+            // NOTE perf: recycling the previous step's output buffers as
+            // um inputs (a two-deep device-buffer queue) was measured at
+            // <5% on this testbed and reverted — see EXPERIMENTS.md §Perf.
+            let um_t = self.um_pad.extract_padded_region(R, reg.offset, reg.shape, 0);
+            let v_dev = tiles.v_dev.as_ref().expect("uploaded in new()");
+            let tile = if reg.class.is_pml() {
+                let u_t = self.u_pad.extract_padded_region(R, reg.offset, reg.shape, 1);
+                let e_dev = tiles.eta_dev.as_ref().expect("pml region has eta buffer");
+                let name = &self.pml_artifacts[reg.class.key()];
+                eng.execute_args(
+                    name,
+                    &[
+                        ExecArg::Host(&u_t),
+                        ExecArg::Host(&um_t),
+                        ExecArg::Device(v_dev),
+                        ExecArg::Device(e_dev),
+                    ],
+                )?
+            } else {
+                let u_t = self.u_pad.extract_padded_region(R, reg.offset, reg.shape, R);
+                eng.execute_args(
+                    &self.inner_artifact,
+                    &[ExecArg::Host(&u_t), ExecArg::Host(&um_t), ExecArg::Device(v_dev)],
+                )?
+            };
+            self.launches += 1;
+            out.scatter(
+                Dim3::new(R + reg.offset.z, R + reg.offset.y, R + reg.offset.x),
+                &tile,
+            );
+        }
+        Ok(out)
+    }
+
+    /// One full-domain launch (monolithic or fused artifact).
+    fn step_full(&mut self, artifact: &str) -> anyhow::Result<Field3> {
+        let eng = self.engine.expect("checked in new()");
+        let um = self.um_pad.unpad(R); // artifact signature takes interior um
+        let out = eng.execute(artifact, &[&self.u_pad, &um, &self.v, &self.eta_pad])?;
+        self.launches += 1;
+        Ok(out.pad(R))
+    }
+
+    /// One pure-Rust step over the same region decomposition.
+    fn step_golden(&mut self) -> Field3 {
+        let mut out = Field3::zeros(self.domain.padded());
+        for (reg, tiles) in self.regions.iter().zip(&self.region_tiles) {
+            let um_t = self.um_pad.extract_padded_region(R, reg.offset, reg.shape, 0);
+            let tile = if reg.class.is_pml() {
+                let u_t = self.u_pad.extract_padded_region(R, reg.offset, reg.shape, 1);
+                let e_t = tiles.eta.as_ref().expect("pml region has eta tile");
+                stencil::step_pml(&u_t, &um_t, &tiles.v, e_t, self.domain.dt, self.domain.h)
+            } else {
+                let u_t = self.u_pad.extract_padded_region(R, reg.offset, reg.shape, R);
+                stencil::step_inner(&u_t, &um_t, &tiles.v, self.domain.dt, self.domain.h)
+            };
+            self.launches += 1;
+            out.scatter(
+                Dim3::new(R + reg.offset.z, R + reg.offset.y, R + reg.offset.x),
+                &tile,
+            );
+        }
+        out
+    }
+
+    /// Advance one time step (stencil update + source injection +
+    /// receiver/energy recording + state rotation).
+    pub fn step(&mut self) -> anyhow::Result<()> {
+        // un is R-ghost-padded (ghost zeros preserved by construction)
+        let mut un = match self.mode {
+            Mode::Decomposed => self.step_decomposed()?,
+            Mode::Monolithic => self.step_full("monolithic")?,
+            Mode::Fused => self.step_full("fused")?,
+            Mode::Golden => self.step_golden(),
+        };
+        let amp = self.source.amp_at(self.steps_done, self.domain.dt, self.v_at_src);
+        un.add(R + self.source.pos.z, R + self.source.pos.y, R + self.source.pos.x, amp);
+
+        for (i, r) in self.receivers.iter().enumerate() {
+            self.traces[i].push(un.get(R + r.z, R + r.y, R + r.x));
+        }
+        // ghost ring is zero, so padded energy == interior energy
+        self.energy_log.push(un.energy());
+
+        // rotate by move: no pad/unpad copies on the hot path
+        self.um_pad = std::mem::replace(&mut self.u_pad, un);
+        self.steps_done += 1;
+        Ok(())
+    }
+
+    /// Run `steps` more steps, returning a summary.
+    pub fn run(&mut self, steps: usize) -> anyhow::Result<RunSummary> {
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            self.step()?;
+            let u = self.wavefield();
+            anyhow::ensure!(
+                !u.has_non_finite(),
+                "wavefield blew up at step {} (CFL violation? dt={}, h={})",
+                self.steps_done,
+                self.domain.dt,
+                self.domain.h
+            );
+        }
+        let wall = t0.elapsed();
+        let u = self.wavefield();
+        Ok(RunSummary {
+            steps,
+            wall,
+            launches: self.launches,
+            final_max_abs: u.max_abs(),
+            final_energy: u.energy(),
+            points_per_sec: (self.domain.interior.volume() * steps) as f64
+                / wall.as_secs_f64().max(1e-12),
+            energy_log: self.energy_log.clone(),
+            traces: self.traces.clone(),
+        })
+    }
+
+    /// Current interior wavefield.
+    pub fn wavefield(&self) -> Field3 {
+        self.u_pad.unpad(R)
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    pub fn launches(&self) -> u64 {
+        self.launches
+    }
+
+    pub fn eta(&self) -> &Field3 {
+        &self.eta
+    }
+
+    pub fn velocity(&self) -> &Field3 {
+        &self.v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wave::{self, VelocityModel};
+
+    fn mk(mode: Mode) -> Coordinator<'static> {
+        let interior = Dim3::new(24, 24, 24);
+        let h = 10.0;
+        let dt = stencil::cfl_dt(h, 2000.0);
+        let domain = Domain::new(interior, 4, h, dt).unwrap();
+        let v = VelocityModel::Constant(2000.0).build(interior);
+        let eta = wave::eta_profile(&domain, 2000.0);
+        let src = Source { pos: Dim3::new(12, 12, 12), f0: 15.0, amplitude: 1.0 };
+        Coordinator::new(None, domain, mode, "gmem", "gmem", v, eta, src, vec![
+            Dim3::new(4, 12, 12),
+        ])
+        .unwrap()
+    }
+
+    #[test]
+    fn golden_mode_runs_without_engine() {
+        let mut c = mk(Mode::Golden);
+        let s = c.run(20).unwrap();
+        assert_eq!(s.steps, 20);
+        assert_eq!(s.launches, 7 * 20);
+        assert!(s.final_max_abs > 0.0);
+        assert_eq!(s.traces.len(), 1);
+        assert_eq!(s.traces[0].len(), 20);
+        assert_eq!(s.energy_log.len(), 20);
+    }
+
+    #[test]
+    fn pjrt_mode_without_engine_fails() {
+        let interior = Dim3::new(24, 24, 24);
+        let domain = Domain::new(interior, 4, 10.0, 1e-3).unwrap();
+        let v = Field3::full(interior, 2000.0);
+        let eta = Field3::zeros(interior);
+        let src = Source { pos: Dim3::new(12, 12, 12), f0: 15.0, amplitude: 1.0 };
+        let err = Coordinator::new(
+            None, domain, Mode::Decomposed, "gmem", "gmem", v, eta, src, vec![],
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn source_outside_interior_rejected() {
+        let interior = Dim3::new(24, 24, 24);
+        let domain = Domain::new(interior, 4, 10.0, 1e-3).unwrap();
+        let v = Field3::full(interior, 2000.0);
+        let eta = Field3::zeros(interior);
+        let src = Source { pos: Dim3::new(50, 12, 12), f0: 15.0, amplitude: 1.0 };
+        assert!(Coordinator::new(None, domain, Mode::Golden, "gmem", "gmem", v, eta, src, vec![]).is_err());
+    }
+
+    #[test]
+    fn golden_matches_golden_propagator() {
+        // The coordinator's Golden mode must agree with GoldenPropagator.
+        let mut c = mk(Mode::Golden);
+        let interior = c.domain.interior;
+        let mut p = stencil::GoldenPropagator::new(
+            c.domain,
+            VelocityModel::Constant(2000.0).build(interior),
+            wave::eta_profile(&c.domain, 2000.0),
+        );
+        let src = Dim3::new(12, 12, 12);
+        for n in 0..30 {
+            c.step().unwrap();
+            let amp = Source { pos: src, f0: 15.0, amplitude: 1.0 }.amp_at(n, c.domain.dt, 2000.0);
+            p.advance(src, amp);
+        }
+        let d = c.wavefield().max_abs_diff(&p.wavefield());
+        assert!(d == 0.0, "coordinator and golden propagator diverged: {d}");
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(Mode::parse("golden").unwrap(), Mode::Golden);
+        assert_eq!(Mode::parse("decomposed").unwrap(), Mode::Decomposed);
+        assert!(Mode::parse("warp").is_err());
+        assert!(Mode::Fused.needs_engine());
+        assert!(!Mode::Golden.needs_engine());
+    }
+}

@@ -1,0 +1,274 @@
+//! GPU microarchitecture descriptions for the paper's three machines
+//! (Table I), with SM resource limits from NVIDIA's published occupancy
+//! data and ERT-style bandwidth/compute ceilings.
+//!
+//! The V100 ceilings are back-derived from the paper's own Table IV
+//! ("machine peak performance" at a given arithmetic intensity implies
+//! the ERT-measured bandwidth: peak = AI * BW), so our roofline uses the
+//! *same* ceilings the authors measured:
+//!   L2:   2566 GF/s at AI 0.78  -> ~3290 GB/s
+//!   DRAM: 1498 GF/s at AI 1.92  ->  ~780 GB/s
+
+/// One GPU generation: everything the occupancy calculator, transaction
+/// model and timing model need to know.
+#[derive(Clone, Debug)]
+pub struct GpuArch {
+    pub name: &'static str,
+    pub sm_version: &'static str,
+    pub sm_count: u32,
+    /// Max resident warps per SM.
+    pub max_warps_per_sm: u32,
+    /// Max resident blocks per SM.
+    pub max_blocks_per_sm: u32,
+    pub max_threads_per_block: u32,
+    /// Register file per SM, in 32-bit registers.
+    pub regs_per_sm: u32,
+    /// SM partitions (processing blocks); Volta/Pascal register
+    /// allocation quantizes per partition, which is what makes Table
+    /// III's 48-warp theoretical numbers come out (not 50).
+    pub sm_partitions: u32,
+    /// Register allocation granularity per warp, in registers.
+    pub reg_alloc_granularity: u32,
+    /// Max shared memory usable per SM (bytes).
+    pub smem_per_sm: u32,
+    /// Max shared memory per block (bytes).
+    pub smem_per_block: u32,
+    /// Shared memory allocation granularity (bytes).
+    pub smem_granularity: u32,
+    pub warp_size: u32,
+    /// L2 cache size (bytes).
+    pub l2_bytes: u64,
+    /// ERT-style measured bandwidths (GB/s) and compute peak (GF/s).
+    pub dram_gbps: f64,
+    pub l2_gbps: f64,
+    pub fp32_gflops: f64,
+    /// Kernel launch overhead (microseconds per launch).
+    pub launch_overhead_us: f64,
+    /// Whether L1 and shared memory are a unified block (Volta+): when a
+    /// kernel uses no shared memory, the whole block acts as L1 cache,
+    /// which is why gmem code shapes win on V100 (paper §V.C).
+    pub unified_l1: bool,
+    /// Warps per SM needed to saturate the memory system (latency hiding).
+    pub warps_to_saturate: f64,
+    /// Multipliers on gmem-family u-read traffic when no shared-memory
+    /// staging is used: how badly this part's L1 path handles the
+    /// 25-point spread (1.0 = Volta unified L1; Kepler globals bypass L1
+    /// entirely).
+    pub gmem_dram_penalty: f64,
+    pub gmem_l2_penalty: f64,
+    /// Relative cost of -maxrregcount register spills (the paper's P100
+    /// and NVS510 columns show far milder spill impact than V100).
+    pub spill_scale: f64,
+    /// Paper Table II evaluation grid (cubic edge length).
+    pub eval_grid: usize,
+    /// Paper PML width used in the evaluation grid (derived from Table
+    /// III grid sizes: inner 948^3 for the 1000^3 V100 grid -> W = 26).
+    pub eval_pml_width: usize,
+}
+
+/// NVIDIA Tesla V100 (Volta, sm_70).
+pub fn v100() -> GpuArch {
+    GpuArch {
+        name: "V100",
+        sm_version: "sm_70",
+        sm_count: 80,
+        max_warps_per_sm: 64,
+        max_blocks_per_sm: 32,
+        max_threads_per_block: 1024,
+        regs_per_sm: 65536,
+        sm_partitions: 4,
+        reg_alloc_granularity: 256,
+        smem_per_sm: 98304,  // 96 KiB usable
+        smem_per_block: 98304,
+        smem_granularity: 256,
+        warp_size: 32,
+        l2_bytes: 6 * 1024 * 1024,
+        dram_gbps: 780.0,  // ERT-implied (Table IV)
+        l2_gbps: 3290.0,   // ERT-implied (Table IV)
+        fp32_gflops: 14_800.0,
+        launch_overhead_us: 4.0,
+        unified_l1: true,
+        warps_to_saturate: 48.0,
+        gmem_dram_penalty: 1.0,
+        gmem_l2_penalty: 1.0,
+        spill_scale: 1.0,
+        eval_grid: 1000,
+        eval_pml_width: 26,
+    }
+}
+
+/// NVIDIA Tesla P100 (Pascal, sm_60).
+pub fn p100() -> GpuArch {
+    GpuArch {
+        name: "P100",
+        sm_version: "sm_60",
+        sm_count: 56,
+        max_warps_per_sm: 64,
+        max_blocks_per_sm: 32,
+        max_threads_per_block: 1024,
+        regs_per_sm: 65536,
+        sm_partitions: 2,
+        reg_alloc_granularity: 256,
+        smem_per_sm: 65536, // 64 KiB
+        smem_per_block: 49152,
+        smem_granularity: 256,
+        warp_size: 32,
+        l2_bytes: 4 * 1024 * 1024,
+        dram_gbps: 550.0,  // ERT-measured scale of the 732 GB/s theoretical
+        l2_gbps: 1900.0,
+        fp32_gflops: 9_300.0,
+        launch_overhead_us: 5.0,
+        unified_l1: false, // separate small L1/tex cache
+        warps_to_saturate: 28.0,
+        gmem_dram_penalty: 1.9,
+        gmem_l2_penalty: 1.6,
+        spill_scale: 0.25,
+        eval_grid: 893,
+        eval_pml_width: 26,
+    }
+}
+
+/// NVIDIA NVS 510 (Kepler GK107, sm_30).
+pub fn nvs510() -> GpuArch {
+    GpuArch {
+        name: "NVS510",
+        sm_version: "sm_30",
+        sm_count: 1, // single SMX (192 cores)
+        max_warps_per_sm: 64,
+        max_blocks_per_sm: 16,
+        max_threads_per_block: 1024,
+        regs_per_sm: 65536,
+        sm_partitions: 1,
+        reg_alloc_granularity: 256,
+        smem_per_sm: 49152, // 48 KiB
+        smem_per_block: 49152,
+        smem_granularity: 256,
+        warp_size: 32,
+        l2_bytes: 256 * 1024,
+        dram_gbps: 25.0,  // 28.5 GB/s theoretical, ERT-scaled
+        l2_gbps: 120.0,
+        fp32_gflops: 306.0, // 192 cores x 0.797 GHz x 2
+        launch_overhead_us: 8.0,
+        unified_l1: false,
+        // 25 GB/s DRAM saturates with very few in-flight warps
+        warps_to_saturate: 8.0,
+        gmem_dram_penalty: 2.6, // sm_3x global loads bypass L1 entirely
+        gmem_l2_penalty: 2.0,
+        spill_scale: 0.15, // sm_30 caps at 63 regs: every variant spills
+        eval_grid: 300,
+        eval_pml_width: 26,
+    }
+}
+
+/// NVIDIA A100 (Ampere, sm_80) — *not* in the paper's testbed; §VI lists
+/// "whether our observations on the V100 also hold for the latest NVIDIA
+/// A100" as future work, so we provide the forward prediction: bigger
+/// unified L1 (192 KiB) and a 40 MiB L2, so the gmem-family absorption
+/// that made gmem_8x8x8 win on V100 strengthens further.
+pub fn a100() -> GpuArch {
+    GpuArch {
+        name: "A100",
+        sm_version: "sm_80",
+        sm_count: 108,
+        max_warps_per_sm: 64,
+        max_blocks_per_sm: 32,
+        max_threads_per_block: 1024,
+        regs_per_sm: 65536,
+        sm_partitions: 4,
+        reg_alloc_granularity: 256,
+        smem_per_sm: 167936, // 164 KiB usable
+        smem_per_block: 167936,
+        smem_granularity: 256,
+        warp_size: 32,
+        l2_bytes: 40 * 1024 * 1024,
+        dram_gbps: 1400.0, // ERT-scale of the 1555 GB/s theoretical
+        l2_gbps: 5200.0,
+        fp32_gflops: 19_500.0,
+        launch_overhead_us: 4.0,
+        unified_l1: true,
+        warps_to_saturate: 40.0,
+        gmem_dram_penalty: 1.0,
+        gmem_l2_penalty: 1.0,
+        spill_scale: 1.0,
+        eval_grid: 1000,
+        eval_pml_width: 26,
+    }
+}
+
+/// All three evaluation machines, in the paper's column order.
+pub fn all() -> Vec<GpuArch> {
+    vec![v100(), p100(), nvs510()]
+}
+
+pub fn by_name(name: &str) -> anyhow::Result<GpuArch> {
+    match name.to_ascii_lowercase().as_str() {
+        "v100" => Ok(v100()),
+        "p100" => Ok(p100()),
+        "nvs510" => Ok(nvs510()),
+        "a100" => Ok(a100()),
+        other => anyhow::bail!("unknown GPU {other:?} (expected v100|p100|nvs510|a100)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_iv_ceiling_consistency() {
+        // The ERT ceilings must reproduce the paper's "machine peak
+        // performance" columns: peak(AI) = AI * BW.
+        let a = v100();
+        let l2_peak_at_078 = 0.78 * a.l2_gbps;
+        assert!((l2_peak_at_078 - 2566.0).abs() / 2566.0 < 0.01, "{l2_peak_at_078}");
+        let dram_peak_at_192 = 1.92 * a.dram_gbps;
+        assert!((dram_peak_at_192 - 1498.0).abs() / 1498.0 < 0.01, "{dram_peak_at_192}");
+    }
+
+    #[test]
+    fn machines_are_ordered_by_capability() {
+        let (v, p, n) = (v100(), p100(), nvs510());
+        assert!(v.dram_gbps > p.dram_gbps && p.dram_gbps > n.dram_gbps);
+        assert!(v.fp32_gflops > p.fp32_gflops && p.fp32_gflops > n.fp32_gflops);
+        assert!(v.unified_l1 && !p.unified_l1 && !n.unified_l1);
+    }
+
+    #[test]
+    fn a100_prediction_extends_v100_findings() {
+        // forward prediction (paper §VI future work): the unified-L1
+        // advantage persists, so gmem_8x8x8 should stay top-tier and the
+        // whole sweep should run ~1.6-1.9x faster than V100 (bandwidth
+        // ratio 1400/780).
+        use crate::gpusim::{kernels, timing};
+        let (a, v) = (a100(), v100());
+        let t_a = timing::simulate(&a, &kernels::by_id("gmem_8x8x8").unwrap(), 1000).time_s;
+        let t_v = timing::simulate(&v, &kernels::by_id("gmem_8x8x8").unwrap(), 1000).time_s;
+        assert!(t_a < t_v / 1.4, "{t_a} vs {t_v}");
+        let best = timing::simulate_all(&a, 1000)
+            .into_iter()
+            .min_by(|x, y| x.time_s.total_cmp(&y.time_s))
+            .unwrap();
+        assert_eq!(best.variant_id, "gmem_8x8x8", "unified-L1 advantage should persist");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for a in all() {
+            assert_eq!(by_name(a.name).unwrap().name, a.name);
+        }
+        assert_eq!(by_name("a100").unwrap().name, "A100");
+        assert!(by_name("h100").is_err());
+    }
+
+    #[test]
+    fn eval_grid_matches_table_iii_inner_grid() {
+        // V100: inner extent 1000 - 2*26 = 948; with 8^3 blocks the inner
+        // grid is ceil(948/8)^3 = 119^3 = 1,685,159 — the Table III value.
+        let a = v100();
+        let inner = a.eval_grid - 2 * a.eval_pml_width;
+        let blocks = |n: usize, d: usize| n.div_ceil(d);
+        assert_eq!(blocks(inner, 8).pow(3), 1_685_159);
+        assert_eq!(blocks(inner, 4).pow(3), 13_312_053);
+        assert_eq!(blocks(inner, 16).pow(2) * blocks(inner, 4), 853_200);
+    }
+}

@@ -1,0 +1,182 @@
+//! Tile-shape autotuner over the gpusim timing model.
+//!
+//! The paper hand-picks tile shapes per machine (Table II's variants);
+//! its conclusion calls for tooling that searches this space. This
+//! module does exactly that: enumerate legal tile shapes for a code
+//! shape family, score each with the occupancy + traffic + timing
+//! models, and return the predicted-best configuration per machine.
+
+use super::arch::GpuArch;
+use super::kernels::{Family, KernelVariant};
+use super::timing::{simulate, KernelRun};
+
+/// One autotuner candidate and its predicted run.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub variant: KernelVariant,
+    pub run: KernelRun,
+}
+
+/// Register counts per family (nvcc allocations from Table III; the
+/// 1024-thread configurations are capped at 64 like the paper's).
+fn regs_for(family: Family, threads: u32) -> (Option<u32>, u32, u32, u32, u32) {
+    let capped = threads >= 1024;
+    match family {
+        Family::Gmem => (None, 40, 48, 40, 48),
+        Family::SmemU => (None, 38, 48, 38, 48),
+        Family::SmemEta1 | Family::SmemEta3 => (None, 40, 32, 40, 32),
+        Family::Semi => (None, 40, 64, 40, 64),
+        Family::StSmem => (None, 56, 72, 56, 72),
+        Family::StRegShft => {
+            if capped {
+                (Some(64), 64, 64, 96, 80)
+            } else {
+                (None, 96, 80, 96, 80)
+            }
+        }
+        Family::StRegFixed => {
+            if capped {
+                (Some(64), 64, 64, 78, 106)
+            } else {
+                (None, 78, 106, 78, 106)
+            }
+        }
+    }
+}
+
+/// Enumerate legal tile shapes for `family` on `arch`.
+pub fn candidates(arch: &GpuArch, family: Family) -> Vec<KernelVariant> {
+    let dims: &[u32] = &[4, 8, 16, 32, 64];
+    let mut out = Vec::new();
+    let streaming = family.is_streaming();
+    let shapes: Vec<(u32, u32, u32)> = if streaming {
+        dims.iter()
+            .flat_map(|&a| dims.iter().map(move |&b| (a, b, 0)))
+            .collect()
+    } else {
+        dims.iter()
+            .flat_map(|&a| {
+                dims.iter().flat_map(move |&b| dims.iter().map(move |&c| (a, b, c)))
+            })
+            .collect()
+    };
+    for (d1, d2, d3) in shapes {
+        let threads = if streaming { d1 * d2 } else { d1 * d2 * d3 };
+        if threads < 32 || threads > arch.max_threads_per_block {
+            continue;
+        }
+        let (nr, ri, rp, rni, rnp) = regs_for(family, threads);
+        let v = KernelVariant {
+            id: "autotune",
+            family,
+            d1,
+            d2,
+            d3,
+            maxrregcount: nr,
+            regs_inner: ri,
+            regs_pml: rp,
+            regs_needed_inner: rni,
+            regs_needed_pml: rnp,
+        };
+        // shared-memory feasibility (the paper: "otherwise, crash the
+        // program execution")
+        if v.smem_inner().max(v.smem_pml()) > arch.smem_per_block {
+            continue;
+        }
+        out.push(v);
+    }
+    out
+}
+
+/// Score every candidate of `family` on `arch`; best (lowest predicted
+/// time) first.
+pub fn tune(arch: &GpuArch, family: Family, steps: usize) -> Vec<Candidate> {
+    let mut scored: Vec<Candidate> = candidates(arch, family)
+        .into_iter()
+        .map(|v| {
+            let run = simulate(arch, &v, steps);
+            Candidate { variant: v, run }
+        })
+        .collect();
+    scored.sort_by(|a, b| a.run.time_s.total_cmp(&b.run.time_s));
+    scored
+}
+
+/// Tune every family on `arch` and return the overall champion.
+pub fn tune_all(arch: &GpuArch, steps: usize) -> Vec<Candidate> {
+    let mut best: Vec<Candidate> = [
+        Family::Gmem,
+        Family::SmemU,
+        Family::Semi,
+        Family::StSmem,
+        Family::StRegShft,
+        Family::StRegFixed,
+    ]
+    .into_iter()
+    .filter_map(|f| tune(arch, f, steps).into_iter().next())
+    .collect();
+    best.sort_by(|a, b| a.run.time_s.total_cmp(&b.run.time_s));
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::arch::{p100, v100};
+    use crate::gpusim::kernels::by_id;
+
+    #[test]
+    fn candidates_respect_hardware_limits() {
+        let a = v100();
+        for fam in [Family::Gmem, Family::StSmem, Family::StRegShft] {
+            let cs = candidates(&a, fam);
+            assert!(!cs.is_empty());
+            for c in cs {
+                assert!(c.threads_per_block() <= a.max_threads_per_block);
+                assert!(c.smem_inner() <= a.smem_per_block);
+            }
+        }
+    }
+
+    #[test]
+    fn tuner_recovers_the_papers_gmem_design_rules_on_v100() {
+        // The paper's hand-tuned 3D gmem answer on V100 is 8x8x8. The
+        // model-driven search must (a) rank it in the top tier, and
+        // (b) agree with the paper's design rules: thick z (full z-halo
+        // amortization) and no thin dz<=2 tiles anywhere near the top.
+        // (The tuner's own pick, 16x4x8, trades y-extent for wider
+        // x-coalescing at the same dz — a shape the paper never tried;
+        // see EXPERIMENTS.md SExtensions.)
+        let ranked = tune(&v100(), Family::Gmem, 1000);
+        let pos_888 = ranked
+            .iter()
+            .position(|c| (c.variant.d1, c.variant.d2, c.variant.d3) == (8, 8, 8))
+            .expect("8x8x8 in search space");
+        assert!(pos_888 < 5, "8x8x8 ranked #{}", pos_888 + 1);
+        let best = &ranked[0];
+        assert!(best.variant.d3 >= 8, "top pick must keep thick z");
+        assert!(best.run.time_s <= ranked[pos_888].run.time_s);
+        for c in ranked.iter().take(5) {
+            assert!(c.variant.d3 > 2, "thin blocks must not reach the top");
+        }
+    }
+
+    #[test]
+    fn tuner_never_loses_to_the_published_variant() {
+        // The search space includes each published tile, so the tuned
+        // result can only match or beat it.
+        let a = p100();
+        let published = simulate(&a, &by_id("st_reg_fixed_32x32").unwrap(), 1000).time_s;
+        let tuned = tune(&a, Family::StRegFixed, 1000)[0].run.time_s;
+        assert!(tuned <= published * 1.001, "{tuned} vs {published}");
+    }
+
+    #[test]
+    fn tune_all_orders_families() {
+        let best = tune_all(&v100(), 100);
+        assert!(!best.is_empty());
+        for w in best.windows(2) {
+            assert!(w[0].run.time_s <= w[1].run.time_s);
+        }
+    }
+}

@@ -1,0 +1,336 @@
+//! Descriptors for the paper's 25 kernel variants (Table II/III rows).
+//!
+//! Register counts are the nvcc-reported values from Table III (V100).
+//! Shared-memory footprints follow each code shape's staging buffers.
+//!
+//! Grid-size mapping (reverse-engineered from Table III and verified
+//! against every published row in unit tests):
+//! * 3D names `gmem_{Dx}x{Dy}x{Dz}`: Dx tiles x, Dy tiles y, Dz tiles z;
+//!   grid = ru(z/Dz) ru(y/Dy) ru(x/Dx).
+//! * 2.5D names `st_*_{A}x{B}`: A tiles z, B tiles y, the kernel streams
+//!   along x; grid = ru(z/A) ru(y/B).
+//! * The paper's eval grid is 1000^3 (V100) with PML width 26: the inner
+//!   extent 948 reproduces Table III exactly (119^3 = 1,685,159 blocks).
+
+use super::arch::GpuArch;
+use super::occupancy::KernelResources;
+use crate::grid::Dim3;
+
+/// Code-shape family (paper §IV).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// 3D blocking, global memory only (§IV.1)
+    Gmem,
+    /// 3D blocking, u staged in shared memory (§IV.2)
+    SmemU,
+    /// 3D blocking, eta staged with one conditional (§IV.3)
+    SmemEta1,
+    /// 3D blocking, eta staged with three conditionals (§IV.3)
+    SmemEta3,
+    /// semi-stencil on x inside 3D blocks (§IV.4)
+    Semi,
+    /// 2.5D streaming, ring buffer of 2R+1 planes in smem (§IV.5)
+    StSmem,
+    /// 2.5D streaming, register shifting (§IV.6)
+    StRegShft,
+    /// 2.5D streaming, fixed registers + unrolling (§IV.7)
+    StRegFixed,
+}
+
+impl Family {
+    pub fn is_streaming(&self) -> bool {
+        matches!(self, Family::StSmem | Family::StRegShft | Family::StRegFixed)
+    }
+
+    /// FLOPs per point update. The paper measured 4.453e13 FLOP for 1e9
+    /// points x 1000 steps = 44.53 FLOP/point for all variants except
+    /// semi (6.4e13 -> 64: the partial-result phases re-do the center
+    /// and double the x-axis FMA chain).
+    pub fn flops_per_point(&self) -> f64 {
+        match self {
+            Family::Semi => 64.0,
+            _ => 44.53,
+        }
+    }
+}
+
+/// One kernel variant = one Table II row.
+#[derive(Clone, Debug)]
+pub struct KernelVariant {
+    pub id: &'static str,
+    pub family: Family,
+    /// Tile dims as named (3D: (dx,dy,dz); 2.5D: (a,b) with dz == 0).
+    pub d1: u32,
+    pub d2: u32,
+    pub d3: u32,
+    /// Explicit -maxrregcount cap (Table II "Nr" column).
+    pub maxrregcount: Option<u32>,
+    /// nvcc register allocation, inner kernel (Table III top).
+    pub regs_inner: u32,
+    /// nvcc register allocation, PML kernels (Table III bottom).
+    pub regs_pml: u32,
+    /// Registers nvcc would allocate without the cap (spill modeling;
+    /// for capped variants the paper reports 96/80 inner/pml for
+    /// st_reg_shft and 78/106 for st_reg_fixed).
+    pub regs_needed_inner: u32,
+    pub regs_needed_pml: u32,
+}
+
+const R: u32 = 4; // halo of the high-order stencil
+
+impl KernelVariant {
+    pub fn is_streaming(&self) -> bool {
+        self.family.is_streaming()
+    }
+
+    pub fn threads_per_block(&self) -> u32 {
+        if self.is_streaming() {
+            self.d1 * self.d2
+        } else if self.family == Family::Semi {
+            // semi uses a 768-thread block on an 8^3 tile (extra warps
+            // drive the two-phase partial pipeline — Table III).
+            768
+        } else {
+            self.d1 * self.d2 * self.d3
+        }
+    }
+
+    /// Shared-memory bytes per block, inner kernel.
+    pub fn smem_inner(&self) -> u32 {
+        match self.family {
+            Family::Gmem | Family::SmemEta1 | Family::SmemEta3 => 0,
+            Family::SmemU => (self.d1 + 2 * R) * (self.d2 + 2 * R) * (self.d3 + 2 * R) * 4,
+            Family::Semi => self.d1 * self.d2 * self.d3 * 4, // partial buffer
+            Family::StSmem => (2 * R + 1) * (self.d1 + 2 * R) * (self.d2 + 2 * R) * 4,
+            Family::StRegShft | Family::StRegFixed => {
+                (self.d1 + 2 * R) * (self.d2 + 2 * R) * 4 // current plane only
+            }
+        }
+    }
+
+    /// Shared-memory bytes per block, PML kernel (eta tile has halo 1).
+    pub fn smem_pml(&self) -> u32 {
+        match self.family {
+            Family::Gmem => 0,
+            Family::SmemEta1 | Family::SmemEta3 => {
+                (self.d1 + 2) * (self.d2 + 2) * (self.d3 + 2) * 4
+            }
+            // the other families stage u exactly like their inner kernel
+            _ => self.smem_inner(),
+        }
+    }
+
+    pub fn resources_inner(&self) -> KernelResources {
+        KernelResources {
+            threads_per_block: self.threads_per_block(),
+            regs_per_thread: self.regs_inner,
+            smem_per_block: self.smem_inner(),
+        }
+    }
+
+    pub fn resources_pml(&self) -> KernelResources {
+        KernelResources {
+            threads_per_block: self.threads_per_block(),
+            regs_per_thread: self.regs_pml,
+            smem_per_block: self.smem_pml(),
+        }
+    }
+
+    /// Registers spilled per thread by an explicit -maxrregcount cap.
+    pub fn spilled_regs(&self, pml: bool) -> u32 {
+        match self.maxrregcount {
+            None => 0,
+            Some(cap) => {
+                let needed = if pml { self.regs_needed_pml } else { self.regs_needed_inner };
+                needed.saturating_sub(cap)
+            }
+        }
+    }
+
+    /// Number of blocks one launch spawns for a region of `dims`.
+    pub fn grid_blocks(&self, dims: Dim3) -> u64 {
+        let ru = |n: usize, d: u32| n.div_ceil(d as usize) as u64;
+        if self.is_streaming() {
+            // plane tiles (z, y); streams along x
+            ru(dims.z, self.d1) * ru(dims.y, self.d2)
+        } else {
+            ru(dims.z, self.d3) * ru(dims.y, self.d2) * ru(dims.x, self.d1)
+        }
+    }
+
+    /// The paper's seven evaluation regions for a cubic grid of edge
+    /// `arch.eval_grid` with PML width `arch.eval_pml_width`:
+    /// (inner, top/bottom x2, front/back x2, left/right x2).
+    pub fn eval_regions(arch: &GpuArch) -> Vec<(&'static str, Dim3, usize)> {
+        let n = arch.eval_grid;
+        let w = arch.eval_pml_width;
+        let i = n - 2 * w;
+        vec![
+            ("inner", Dim3::new(i, i, i), 1),
+            ("top_bottom", Dim3::new(w, n, n), 2),
+            ("front_back", Dim3::new(i, w, n), 2),
+            ("left_right", Dim3::new(i, i, w), 2),
+        ]
+    }
+}
+
+/// All 25 Table II variants, in row order.
+pub fn paper_variants() -> Vec<KernelVariant> {
+    let v = |id, family, d1, d2, d3, nr: Option<u32>, ri, rp, rni, rnp| KernelVariant {
+        id,
+        family,
+        d1,
+        d2,
+        d3,
+        maxrregcount: nr,
+        regs_inner: ri,
+        regs_pml: rp,
+        regs_needed_inner: rni,
+        regs_needed_pml: rnp,
+    };
+    vec![
+        v("gmem_4x4x4", Family::Gmem, 4, 4, 4, None, 40, 48, 40, 48),
+        v("gmem_8x8x4", Family::Gmem, 8, 8, 4, None, 40, 48, 40, 48),
+        v("gmem_8x8x8", Family::Gmem, 8, 8, 8, None, 40, 48, 40, 48),
+        v("gmem_16x16x4", Family::Gmem, 16, 16, 4, None, 40, 48, 40, 48),
+        v("gmem_32x32x1", Family::Gmem, 32, 32, 1, None, 40, 48, 40, 48),
+        v("smem_u", Family::SmemU, 8, 8, 8, None, 38, 48, 38, 48),
+        v("smem_eta_1", Family::SmemEta1, 8, 8, 8, None, 40, 32, 40, 32),
+        v("smem_eta_3", Family::SmemEta3, 8, 8, 8, None, 40, 32, 40, 32),
+        v("semi", Family::Semi, 8, 8, 8, None, 40, 64, 40, 64),
+        v("st_smem_8x8", Family::StSmem, 8, 8, 0, None, 56, 72, 56, 72),
+        v("st_smem_8x16", Family::StSmem, 8, 16, 0, None, 56, 72, 56, 72),
+        v("st_smem_16x8", Family::StSmem, 16, 8, 0, None, 56, 72, 56, 72),
+        v("st_smem_16x16", Family::StSmem, 16, 16, 0, None, 56, 72, 56, 72),
+        v("st_reg_shft_8x8", Family::StRegShft, 8, 8, 0, None, 96, 80, 96, 80),
+        v("st_reg_shft_16x16", Family::StRegShft, 16, 16, 0, None, 96, 80, 96, 80),
+        v("st_reg_shft_16x32", Family::StRegShft, 16, 32, 0, None, 96, 80, 96, 80),
+        v("st_reg_shft_16x64", Family::StRegShft, 16, 64, 0, Some(64), 64, 64, 96, 80),
+        v("st_reg_shft_32x16", Family::StRegShft, 32, 16, 0, None, 96, 80, 96, 80),
+        v("st_reg_shft_32x32", Family::StRegShft, 32, 32, 0, Some(64), 64, 64, 96, 80),
+        v("st_reg_shft_64x16", Family::StRegShft, 64, 16, 0, Some(64), 64, 64, 96, 80),
+        v("st_reg_fixed_8x8", Family::StRegFixed, 8, 8, 0, None, 78, 106, 78, 106),
+        v("st_reg_fixed_16x8", Family::StRegFixed, 16, 8, 0, None, 78, 104, 78, 104),
+        v("st_reg_fixed_16x16", Family::StRegFixed, 16, 16, 0, None, 78, 104, 78, 104),
+        v("st_reg_fixed_32x16", Family::StRegFixed, 32, 16, 0, None, 78, 106, 78, 106),
+        v("st_reg_fixed_32x32", Family::StRegFixed, 32, 32, 0, Some(64), 64, 64, 78, 106),
+    ]
+}
+
+pub fn by_id(id: &str) -> anyhow::Result<KernelVariant> {
+    paper_variants()
+        .into_iter()
+        .find(|v| v.id == id)
+        .ok_or_else(|| anyhow::anyhow!("unknown kernel variant {id:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::arch::v100;
+
+    #[test]
+    fn twenty_five_variants() {
+        let vs = paper_variants();
+        assert_eq!(vs.len(), 25);
+        let mut ids: Vec<_> = vs.iter().map(|v| v.id).collect();
+        ids.dedup();
+        assert_eq!(ids.len(), 25, "ids must be unique");
+    }
+
+    #[test]
+    fn table_iii_block_sizes() {
+        let sizes: Vec<(&str, u32)> = paper_variants()
+            .iter()
+            .map(|v| (v.id, v.threads_per_block()))
+            .collect();
+        let expect = |id: &str, n: u32| {
+            assert_eq!(sizes.iter().find(|(i, _)| *i == id).unwrap().1, n, "{id}")
+        };
+        expect("gmem_4x4x4", 64);
+        expect("gmem_8x8x8", 512);
+        expect("gmem_16x16x4", 1024);
+        expect("semi", 768);
+        expect("st_smem_8x16", 128);
+        expect("st_reg_shft_16x64", 1024);
+        expect("st_reg_fixed_32x16", 512);
+    }
+
+    #[test]
+    fn table_iii_inner_grid_sizes() {
+        // V100: inner region 948^3.
+        let inner = Dim3::new(948, 948, 948);
+        let g = |id: &str| by_id(id).unwrap().grid_blocks(inner);
+        assert_eq!(g("gmem_4x4x4"), 13_312_053);
+        assert_eq!(g("gmem_8x8x4"), 3_356_157);
+        assert_eq!(g("gmem_8x8x8"), 1_685_159);
+        assert_eq!(g("gmem_16x16x4"), 853_200);
+        assert_eq!(g("semi"), 1_685_159);
+        assert_eq!(g("st_smem_8x8"), 14_161);
+        assert_eq!(g("st_smem_8x16"), 7_140);
+        assert_eq!(g("st_smem_16x16"), 3_600);
+        assert_eq!(g("st_reg_shft_16x32"), 1_800);
+        assert_eq!(g("st_reg_shft_16x64"), 900);
+        assert_eq!(g("st_reg_fixed_32x32"), 900);
+    }
+
+    #[test]
+    fn table_iii_pml_grid_sizes() {
+        // top/bottom (26,1000,1000); front/back (948,26,1000);
+        // left/right (948,948,26).
+        let tb = Dim3::new(26, 1000, 1000);
+        let fb = Dim3::new(948, 26, 1000);
+        let lr = Dim3::new(948, 948, 26);
+        let g = |id: &str, d: Dim3| by_id(id).unwrap().grid_blocks(d);
+        assert_eq!(g("gmem_4x4x4", tb), 437_500);
+        assert_eq!(g("gmem_4x4x4", fb), 414_750);
+        assert_eq!(g("gmem_4x4x4", lr), 393_183);
+        assert_eq!(g("gmem_8x8x4", tb), 109_375);
+        assert_eq!(g("gmem_8x8x4", fb), 118_500);
+        assert_eq!(g("gmem_8x8x4", lr), 112_812);
+        assert_eq!(g("gmem_8x8x8", tb), 62_500);
+        assert_eq!(g("gmem_8x8x8", fb), 59_500);
+        assert_eq!(g("gmem_8x8x8", lr), 56_644);
+        assert_eq!(g("st_smem_8x8", tb), 500);
+        assert_eq!(g("st_smem_8x8", fb), 476);
+        assert_eq!(g("st_smem_8x8", lr), 14_161);
+        assert_eq!(g("st_smem_16x16", tb), 126);
+        assert_eq!(g("st_reg_shft_16x32", tb), 64);
+        assert_eq!(g("st_reg_shft_16x64", tb), 32);
+        assert_eq!(g("st_reg_shft_16x64", fb), 60);
+        assert_eq!(g("st_reg_shft_16x64", lr), 900);
+        assert_eq!(g("st_reg_fixed_32x32", fb), 30);
+    }
+
+    #[test]
+    fn smem_footprints() {
+        assert_eq!(by_id("smem_u").unwrap().smem_inner(), 16 * 16 * 16 * 4);
+        assert_eq!(by_id("st_smem_8x8").unwrap().smem_inner(), 9 * 16 * 16 * 4);
+        assert_eq!(by_id("st_reg_shft_16x16").unwrap().smem_inner(), 24 * 24 * 4);
+        assert_eq!(by_id("gmem_8x8x8").unwrap().smem_inner(), 0);
+        assert_eq!(by_id("smem_eta_1").unwrap().smem_pml(), 10 * 10 * 10 * 4);
+        assert_eq!(by_id("smem_eta_1").unwrap().smem_inner(), 0);
+    }
+
+    #[test]
+    fn spill_accounting() {
+        assert_eq!(by_id("st_reg_shft_16x64").unwrap().spilled_regs(false), 32);
+        assert_eq!(by_id("st_reg_shft_16x64").unwrap().spilled_regs(true), 16);
+        assert_eq!(by_id("st_reg_fixed_32x32").unwrap().spilled_regs(false), 14);
+        assert_eq!(by_id("st_reg_shft_16x16").unwrap().spilled_regs(false), 0);
+        assert_eq!(by_id("gmem_8x8x8").unwrap().spilled_regs(false), 0);
+    }
+
+    #[test]
+    fn eval_regions_cover_grid() {
+        let a = v100();
+        let regions = KernelVariant::eval_regions(&a);
+        let total: usize = regions.iter().map(|(_, d, c)| d.volume() * c).sum();
+        assert_eq!(total, a.eval_grid.pow(3));
+    }
+
+    #[test]
+    fn unknown_id_rejected() {
+        assert!(by_id("gmem_2x2x2").is_err());
+    }
+}

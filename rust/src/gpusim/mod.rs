@@ -1,0 +1,36 @@
+//! The simulated GPU testbed (substrate).
+//!
+//! The paper's evaluation ran on physical V100/P100/NVS510 machines with
+//! nvprof/Nsight/HPCToolkit/ERT. None of that hardware exists in this
+//! environment, so — per the substitution rule — we rebuild the testbed
+//! analytically:
+//!
+//! * [`arch`]      — microarchitectural descriptions of the three GPUs
+//!                   (Table I + published SM limits + ERT-style ceilings).
+//! * [`occupancy`] — a CUDA occupancy calculator. Reproduces the paper's
+//!                   Table III *theoretical* warps/occupancy exactly.
+//! * [`kernels`]   — descriptors of all 25 kernel variants (block shapes,
+//!                   register/shared-memory footprints from Table III).
+//! * [`memory`]    — an L2/DRAM transaction model per code shape.
+//! * [`timing`]    — a roofline-style time model with launch-overhead,
+//!                   synchronization and register-spill penalty terms
+//!                   (Table II).
+//! * [`roofline`]  — ERT-like machine characterization + kernel operating
+//!                   points (Table IV, Figure 3).
+//!
+//! The model's goal is the paper's *shape* — who wins, by roughly what
+//! factor, where the crossovers fall — not its absolute numbers; deltas
+//! against the published tables are printed by `report` and asserted
+//! (as orderings) in `rust/tests/gpusim_tables.rs`.
+
+pub mod arch;
+pub mod autotune;
+pub mod kernels;
+pub mod memory;
+pub mod occupancy;
+pub mod roofline;
+pub mod timing;
+
+pub use arch::GpuArch;
+pub use kernels::{Family, KernelVariant};
+pub use occupancy::{occupancy, KernelResources, Limiter, Occupancy};

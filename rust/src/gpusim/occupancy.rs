@@ -1,0 +1,231 @@
+//! CUDA occupancy calculator.
+//!
+//! Computes theoretical resident warps per SM from block resources, with
+//! the per-partition register quantization that NVIDIA's tools apply on
+//! Volta/Pascal. Reproduces the paper's Table III "Theoretical Active
+//! Warps / Theoretical Occupancy" columns exactly (verified in unit
+//! tests against all 26 published rows).
+
+use super::arch::GpuArch;
+
+/// Resources one kernel launch requests per block.
+#[derive(Copy, Clone, Debug)]
+pub struct KernelResources {
+    pub threads_per_block: u32,
+    pub regs_per_thread: u32,
+    pub smem_per_block: u32,
+}
+
+/// What capped the occupancy.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Limiter {
+    Warps,
+    Blocks,
+    Registers,
+    SharedMem,
+}
+
+/// Theoretical occupancy result.
+#[derive(Copy, Clone, Debug)]
+pub struct Occupancy {
+    pub blocks_per_sm: u32,
+    pub active_warps: u32,
+    /// active_warps / max_warps, in percent.
+    pub occupancy_pct: f64,
+    pub limiter: Limiter,
+}
+
+fn div_round_up(a: u32, b: u32) -> u32 {
+    a.div_ceil(b)
+}
+
+fn round_up_to(a: u32, granularity: u32) -> u32 {
+    div_round_up(a, granularity) * granularity
+}
+
+/// Theoretical occupancy for `res` on `arch`.
+pub fn occupancy(arch: &GpuArch, res: &KernelResources) -> Occupancy {
+    assert!(res.threads_per_block >= 1);
+    assert!(
+        res.threads_per_block <= arch.max_threads_per_block,
+        "block of {} threads exceeds {} limit {}",
+        res.threads_per_block,
+        arch.name,
+        arch.max_threads_per_block
+    );
+    let warps_per_block = div_round_up(res.threads_per_block, arch.warp_size);
+
+    // 1. warp-count limit
+    let blocks_by_warps = arch.max_warps_per_sm / warps_per_block;
+
+    // 2. hardware block-slot limit
+    let blocks_by_slots = arch.max_blocks_per_sm;
+
+    // 3. register limit, quantized per SM partition: each partition owns
+    //    regs_per_sm / partitions registers; a warp's allocation rounds
+    //    up to the granularity; warps fit per partition independently.
+    let blocks_by_regs = if res.regs_per_thread == 0 {
+        u32::MAX
+    } else {
+        let per_warp = round_up_to(res.regs_per_thread * arch.warp_size, arch.reg_alloc_granularity);
+        let per_partition = arch.regs_per_sm / arch.sm_partitions;
+        let warps_by_regs = (per_partition / per_warp) * arch.sm_partitions;
+        warps_by_regs / warps_per_block
+    };
+
+    // 4. shared-memory limit
+    let blocks_by_smem = if res.smem_per_block == 0 {
+        u32::MAX
+    } else {
+        assert!(
+            res.smem_per_block <= arch.smem_per_block,
+            "block smem {} exceeds {} limit {}",
+            res.smem_per_block,
+            arch.name,
+            arch.smem_per_block
+        );
+        arch.smem_per_sm / round_up_to(res.smem_per_block, arch.smem_granularity)
+    };
+
+    let (blocks, limiter) = [
+        (blocks_by_warps, Limiter::Warps),
+        (blocks_by_slots, Limiter::Blocks),
+        (blocks_by_regs, Limiter::Registers),
+        (blocks_by_smem, Limiter::SharedMem),
+    ]
+    .into_iter()
+    .min_by_key(|&(b, _)| b)
+    .unwrap();
+
+    let active_warps = blocks * warps_per_block;
+    Occupancy {
+        blocks_per_sm: blocks,
+        active_warps,
+        occupancy_pct: 100.0 * active_warps as f64 / arch.max_warps_per_sm as f64,
+        limiter,
+    }
+}
+
+/// Achieved occupancy model: the theoretical value shaved by (a) grid
+/// starvation — too few blocks to fill every SM to its per-SM block
+/// count — and (b) a small scheduling-tail factor for very large grids.
+pub fn achieved_warps(arch: &GpuArch, occ: &Occupancy, grid_blocks: u64, tail_factor: f64) -> f64 {
+    let warps_per_block = occ.active_warps as f64 / occ.blocks_per_sm.max(1) as f64;
+    let blocks_per_sm_avail = grid_blocks as f64 / arch.sm_count as f64;
+    let resident = blocks_per_sm_avail.min(occ.blocks_per_sm as f64);
+    (resident * warps_per_block * tail_factor).min(occ.active_warps as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::arch::v100;
+
+    fn occ(threads: u32, regs: u32, smem: u32) -> Occupancy {
+        occupancy(&v100(), &KernelResources {
+            threads_per_block: threads,
+            regs_per_thread: regs,
+            smem_per_block: smem,
+        })
+    }
+
+    /// Every inner-region row of Table III (top), V100.
+    #[test]
+    fn table_iii_inner_theoretical_warps() {
+        // (threads, regs, smem_bytes, expected_warps, expected_pct)
+        let rows: &[(u32, u32, u32, u32, f64)] = &[
+            (64, 40, 0, 48, 75.0),        // gmem_4x4x4
+            (256, 40, 0, 48, 75.0),       // gmem_8x8x4
+            (512, 40, 0, 48, 75.0),       // gmem_8x8x8
+            (1024, 40, 0, 32, 50.0),      // gmem_16x16x4
+            (1024, 40, 0, 32, 50.0),      // gmem_32x32x1
+            (512, 38, 16384, 48, 75.0),   // smem_u (16^3 tile)
+            (512, 40, 0, 48, 75.0),       // smem_eta_1 (inner kernel = gmem)
+            (512, 40, 0, 48, 75.0),       // smem_eta_3
+            (768, 40, 3072, 48, 75.0),    // semi (+partial buffer)
+            (64, 56, 9216, 20, 31.25),    // st_smem_8x8: 9 planes 16x16
+            (128, 56, 9 * 16 * 24 * 4, 28, 43.75), // st_smem_8x16
+            (128, 56, 9 * 24 * 16 * 4, 28, 43.75), // st_smem_16x8
+            (256, 56, 9 * 24 * 24 * 4, 32, 50.0),  // st_smem_16x16
+            (64, 96, 16 * 16 * 4, 20, 31.25),      // st_reg_shft_8x8
+            (256, 96, 24 * 24 * 4, 16, 25.0),      // st_reg_shft_16x16
+            (512, 96, 24 * 40 * 4, 16, 25.0),      // st_reg_shft_16x32
+            (1024, 64, 24 * 72 * 4, 32, 50.0),     // st_reg_shft_16x64 (Nr=64)
+            (512, 96, 40 * 24 * 4, 16, 25.0),      // st_reg_shft_32x16
+            (1024, 64, 40 * 40 * 4, 32, 50.0),     // st_reg_shft_32x32 (Nr=64)
+            (1024, 64, 72 * 24 * 4, 32, 50.0),     // st_reg_shft_64x16 (Nr=64)
+            (64, 78, 16 * 16 * 4, 24, 37.5),       // st_reg_fixed_8x8
+            (128, 78, 24 * 16 * 4, 24, 37.5),      // st_reg_fixed_16x8
+            (256, 78, 24 * 24 * 4, 24, 37.5),      // st_reg_fixed_16x16
+            (512, 78, 40 * 24 * 4, 16, 25.0),      // st_reg_fixed_32x16
+            (1024, 64, 40 * 40 * 4, 32, 50.0),     // st_reg_fixed_32x32 (Nr=64)
+        ];
+        for &(t, r, s, want_warps, want_pct) in rows {
+            let o = occ(t, r, s);
+            assert_eq!(
+                o.active_warps, want_warps,
+                "threads={t} regs={r} smem={s}: got {} warps, want {want_warps}",
+                o.active_warps
+            );
+            assert!((o.occupancy_pct - want_pct).abs() < 0.1);
+        }
+    }
+
+    /// PML rows of Table III (bottom) with distinct register counts.
+    #[test]
+    fn table_iii_pml_theoretical_warps() {
+        let rows: &[(u32, u32, u32, u32, f64)] = &[
+            (64, 48, 0, 40, 62.5),       // gmem_4x4x4 pml
+            (256, 48, 0, 40, 62.5),      // gmem_8x8x4 pml
+            (512, 48, 0, 32, 50.0),      // gmem_8x8x8 pml
+            (1024, 48, 0, 32, 50.0),     // gmem_16x16x4 pml
+            (512, 48, 16384, 32, 50.0),  // smem_u pml
+            (512, 32, 4000, 64, 100.0),  // smem_eta_1 pml: 10^3 eta tile
+            (512, 32, 4000, 64, 100.0),  // smem_eta_3 pml
+            (768, 64, 3072, 24, 37.5),   // semi pml
+            (64, 72, 9216, 20, 31.25),   // st_smem_8x8 pml
+            (64, 80, 1024, 24, 37.5),    // st_reg_shft_8x8 pml
+            (64, 106, 1024, 16, 25.0),   // st_reg_fixed_8x8 pml
+            (128, 104, 1536, 16, 25.0),  // st_reg_fixed_16x8 pml
+            (512, 106, 3840, 16, 25.0),  // st_reg_fixed_32x16 pml
+        ];
+        for &(t, r, s, want_warps, want_pct) in rows {
+            let o = occ(t, r, s);
+            assert_eq!(
+                o.active_warps, want_warps,
+                "threads={t} regs={r} smem={s}: got {} want {want_warps}",
+                o.active_warps
+            );
+            assert!((o.occupancy_pct - want_pct).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn limiter_identification() {
+        assert_eq!(occ(1024, 32, 0).limiter, Limiter::Warps); // 2 blocks x 32 warps
+        assert_eq!(occ(64, 96, 1024).limiter, Limiter::Registers);
+        assert_eq!(occ(64, 56, 9216).limiter, Limiter::SharedMem);
+        assert_eq!(occ(32, 16, 0).limiter, Limiter::Blocks); // tiny blocks cap at 32
+    }
+
+    #[test]
+    fn achieved_caps_at_grid_starvation() {
+        // st_smem_8x8 PML top/bottom: grid 500 blocks over 80 SMs with
+        // 10-block occupancy -> 500/80 = 6.25 resident -> 12.5 warps
+        // (paper achieved: 12.4).
+        let a = v100();
+        let o = occ(64, 72, 9216);
+        assert_eq!(o.blocks_per_sm, 10);
+        let got = achieved_warps(&a, &o, 500, 1.0);
+        assert!((got - 12.5).abs() < 0.1, "{got}");
+        // huge grid: full theoretical
+        let got = achieved_warps(&a, &o, 1_000_000, 1.0);
+        assert!((got - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_block_panics() {
+        occ(2048, 32, 0);
+    }
+}

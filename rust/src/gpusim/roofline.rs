@@ -1,0 +1,176 @@
+//! ERT-like machine characterization + roofline operating points
+//! (Table IV columns, Figure 3 series).
+
+use super::arch::GpuArch;
+use super::timing::KernelRun;
+
+/// One roofline ceiling: performance(AI) = min(AI * bw, peak).
+#[derive(Copy, Clone, Debug)]
+pub struct Ceiling {
+    pub name: &'static str,
+    pub bw_gbps: f64,
+    pub peak_gflops: f64,
+}
+
+impl Ceiling {
+    pub fn at(&self, ai: f64) -> f64 {
+        (ai * self.bw_gbps).min(self.peak_gflops)
+    }
+
+    /// AI where the slanted roof meets the flat peak.
+    pub fn ridge(&self) -> f64 {
+        self.peak_gflops / self.bw_gbps
+    }
+}
+
+/// The empirical machine characterization the paper obtains from ERT.
+pub fn ceilings(arch: &GpuArch) -> (Ceiling, Ceiling) {
+    (
+        Ceiling { name: "L2", bw_gbps: arch.l2_gbps, peak_gflops: arch.fp32_gflops },
+        Ceiling { name: "DRAM", bw_gbps: arch.dram_gbps, peak_gflops: arch.fp32_gflops },
+    )
+}
+
+/// One kernel's operating point on one roofline.
+#[derive(Clone, Debug)]
+pub struct RoofPoint {
+    pub variant_id: &'static str,
+    pub ai: f64,
+    pub gflops: f64,
+    pub peak_at_ai: f64,
+    pub pct_of_peak: f64,
+}
+
+/// Figure-3 data: points for every kernel under both rooflines.
+pub struct RooflineData {
+    pub arch: &'static str,
+    pub l2: Ceiling,
+    pub dram: Ceiling,
+    pub l2_points: Vec<RoofPoint>,
+    pub dram_points: Vec<RoofPoint>,
+}
+
+pub fn roofline_data(arch: &GpuArch, runs: &[KernelRun]) -> RooflineData {
+    let (l2, dram) = ceilings(arch);
+    let mk = |ai: f64, gflops: f64, c: &Ceiling, id: &'static str| RoofPoint {
+        variant_id: id,
+        ai,
+        gflops,
+        peak_at_ai: c.at(ai),
+        pct_of_peak: 100.0 * gflops / c.at(ai),
+    };
+    RooflineData {
+        arch: arch.name,
+        l2,
+        dram,
+        l2_points: runs.iter().map(|r| mk(r.ai_l2, r.gflops, &l2, r.variant_id)).collect(),
+        dram_points: runs.iter().map(|r| mk(r.ai_dram, r.gflops, &dram, r.variant_id)).collect(),
+    }
+}
+
+impl RooflineData {
+    /// CSV with one row per (roof, kernel) pair — the Figure 3 series.
+    pub fn csv(&self) -> String {
+        let mut out = String::from("roof,kernel,ai,gflops,peak_at_ai,pct_of_peak\n");
+        for (roof, pts) in [("L2", &self.l2_points), ("DRAM", &self.dram_points)] {
+            for p in pts {
+                out.push_str(&format!(
+                    "{roof},{},{:.4},{:.1},{:.1},{:.2}\n",
+                    p.variant_id, p.ai, p.gflops, p.peak_at_ai, p.pct_of_peak
+                ));
+            }
+        }
+        out
+    }
+
+    /// Crude ASCII log-log scatter of a point set under its ceiling —
+    /// the terminal rendition of Fig. 3a/3b.
+    pub fn ascii_plot(&self, dram: bool) -> String {
+        let (c, pts) = if dram { (&self.dram, &self.dram_points) } else { (&self.l2, &self.l2_points) };
+        let (w, h) = (72usize, 20usize);
+        let (ai_min, ai_max) = (0.05f64, 20.0f64);
+        let (gf_min, gf_max) = (10.0f64, c.peak_gflops * 1.5);
+        let xi = |ai: f64| {
+            (((ai.max(ai_min).ln() - ai_min.ln()) / (ai_max.ln() - ai_min.ln())) * (w - 1) as f64)
+                as usize
+        };
+        let yi = |gf: f64| {
+            h - 1
+                - (((gf.clamp(gf_min, gf_max).ln() - gf_min.ln()) / (gf_max.ln() - gf_min.ln()))
+                    * (h - 1) as f64) as usize
+        };
+        let mut canvas = vec![vec![b' '; w]; h];
+        // ceiling
+        for px in 0..w {
+            let ai = (ai_min.ln() + (ai_max.ln() - ai_min.ln()) * px as f64 / (w - 1) as f64).exp();
+            let gf = c.at(ai);
+            let py = yi(gf);
+            canvas[py][px] = b'-';
+        }
+        // points
+        for p in pts {
+            let (px, py) = (xi(p.ai).min(w - 1), yi(p.gflops).min(h - 1));
+            canvas[py][px] = b'*';
+        }
+        let mut out = format!(
+            "{} roofline ({}): bw {:.0} GB/s, peak {:.0} GF/s, ridge AI {:.2}\n",
+            c.name,
+            self.arch,
+            c.bw_gbps,
+            c.peak_gflops,
+            c.ridge()
+        );
+        for row in canvas {
+            out.push_str(std::str::from_utf8(&row).unwrap());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "x: AI [{:.2}..{:.0}] FLOP/byte (log)   y: [{:.0}..{:.0}] GF/s (log)   *=kernel\n",
+            ai_min, ai_max, gf_min, gf_max
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::arch::v100;
+    use crate::gpusim::timing::simulate_all;
+
+    #[test]
+    fn ceiling_math() {
+        let c = Ceiling { name: "DRAM", bw_gbps: 780.0, peak_gflops: 14800.0 };
+        assert!((c.at(1.92) - 1497.6).abs() < 0.1);
+        assert_eq!(c.at(1000.0), 14800.0);
+        assert!((c.ridge() - 14800.0 / 780.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn points_below_ceiling() {
+        let a = v100();
+        let runs = simulate_all(&a, 100);
+        let data = roofline_data(&a, &runs);
+        for p in data.dram_points.iter().chain(&data.l2_points) {
+            assert!(p.gflops <= p.peak_at_ai * 1.0001, "{} above roof", p.variant_id);
+            assert!(p.pct_of_peak > 0.0);
+        }
+    }
+
+    #[test]
+    fn csv_has_50_rows() {
+        let a = v100();
+        let runs = simulate_all(&a, 10);
+        let csv = roofline_data(&a, &runs).csv();
+        assert_eq!(csv.lines().count(), 1 + 2 * 25);
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let a = v100();
+        let runs = simulate_all(&a, 10);
+        let plot = roofline_data(&a, &runs).ascii_plot(true);
+        assert!(plot.contains('*'));
+        assert!(plot.contains("DRAM roofline"));
+    }
+}

@@ -1,0 +1,275 @@
+//! Roofline-style timing model (Table II).
+//!
+//! Per region: time = max(compute, L2, DRAM) / efficiency + penalties,
+//! where efficiency combines a per-arch base factor (real stencils never
+//! hit ERT streaming bandwidth; the paper's best kernels achieve ~50% of
+//! the DRAM roofline, which is what `base_eff` encodes) with an
+//! occupancy-derived latency-hiding factor. Semi-stencil pays a
+//! synchronization multiplier (its dominant stall in the paper was
+//! STL_SYNC); register-capped variants already pay spill traffic in the
+//! memory model.
+
+use super::arch::GpuArch;
+use super::kernels::KernelVariant;
+use super::memory::point_traffic;
+use super::occupancy::{achieved_warps, occupancy, Occupancy};
+use crate::grid::Dim3;
+
+/// Per-arch calibration constants (documented, single source of truth).
+#[derive(Copy, Clone, Debug)]
+pub struct Calib {
+    /// Fraction of the ERT bandwidth ceiling a tuned stencil sustains.
+    pub base_eff: f64,
+    /// Synchronization multiplier for semi-stencil's two-phase barriers.
+    pub semi_sync: f64,
+    /// Extra multiplier for staging eta through shared memory (slightly
+    /// counterproductive on unified-L1 parts, mildly helpful on Kepler).
+    pub pml_eta_smem: f64,
+}
+
+pub fn calib(arch: &GpuArch) -> Calib {
+    match arch.name {
+        "V100" => Calib { base_eff: 0.63, semi_sync: 2.2, pml_eta_smem: 1.25 },
+        // forward prediction: Ampere behaves like Volta, slightly better
+        // sustained fraction (larger L2, async copy)
+        "A100" => Calib { base_eff: 0.66, semi_sync: 2.2, pml_eta_smem: 1.25 },
+        "P100" => Calib { base_eff: 0.40, semi_sync: 1.6, pml_eta_smem: 1.02 },
+        _ => Calib { base_eff: 0.15, semi_sync: 2.0, pml_eta_smem: 0.90 },
+    }
+}
+
+/// Cost of one region's launch for one time step.
+#[derive(Clone, Debug)]
+pub struct RegionCost {
+    pub region: &'static str,
+    pub points: f64,
+    pub grid_blocks: u64,
+    pub occ: Occupancy,
+    pub achieved_warps: f64,
+    pub l2_bytes: f64,
+    pub dram_bytes: f64,
+    pub flops: f64,
+    pub time_s: f64,
+}
+
+/// Whole-run prediction for one kernel variant on one machine.
+#[derive(Clone, Debug)]
+pub struct KernelRun {
+    pub variant_id: &'static str,
+    pub arch: &'static str,
+    pub steps: usize,
+    pub time_s: f64,
+    pub flops_total: f64,
+    pub gflops: f64,
+    pub l2_transactions: f64,
+    pub dram_transactions: f64,
+    pub ai_l2: f64,
+    pub ai_dram: f64,
+    pub l2_peak_gflops: f64,
+    pub dram_peak_gflops: f64,
+    pub pct_of_l2_peak: f64,
+    pub pct_of_dram_peak: f64,
+    pub regions: Vec<RegionCost>,
+}
+
+/// Occupancy-derived latency-hiding factor: below the saturation warp
+/// count, sustained bandwidth falls with the square root of the deficit
+/// (MLP compounds sub-linearly; calibrated against the paper's
+/// st_smem_8x8 vs 16x8 gap and the V100 gmem-vs-streaming crossover).
+fn occ_factor(arch: &GpuArch, warps: f64) -> f64 {
+    (warps / arch.warps_to_saturate).min(1.0).sqrt()
+}
+
+fn region_cost(
+    arch: &GpuArch,
+    v: &KernelVariant,
+    name: &'static str,
+    dims: Dim3,
+    pml: bool,
+) -> RegionCost {
+    let c = calib(arch);
+    let points = dims.volume() as f64;
+    let res = if pml { v.resources_pml() } else { v.resources_inner() };
+    let occ = occupancy(arch, &res);
+    let grid_blocks = v.grid_blocks(dims);
+    let aw = achieved_warps(arch, &occ, grid_blocks, 0.97);
+
+    let t = point_traffic(arch, v, pml);
+    let l2_bytes = t.l2_bytes * points;
+    let dram_bytes = t.dram_bytes * points;
+    let fpp = if pml { 30.0 } else { v.family.flops_per_point() };
+    let flops = fpp * points;
+
+    let eff = c.base_eff * occ_factor(arch, aw);
+    let t_l2 = l2_bytes / (arch.l2_gbps * 1e9) / eff;
+    let t_dram = dram_bytes / (arch.dram_gbps * 1e9) / eff;
+    let t_comp = flops / (arch.fp32_gflops * 1e9 * 0.85);
+    let mut time = t_l2.max(t_dram).max(t_comp) + arch.launch_overhead_us * 1e-6;
+
+    if v.family == super::kernels::Family::Semi {
+        time *= c.semi_sync;
+    }
+    // The 2R+1-deep ring buffer costs a block-wide barrier plus 9 smem
+    // round-trips per plane (register variants avoid both).
+    if v.family == super::kernels::Family::StSmem {
+        time *= 1.12;
+    }
+    // On unified-L1 parts explicit shared-memory staging is redundant
+    // work the cache would have done anyway (paper: smem_u loses to
+    // gmem_8x8x8 on V100 and wins everywhere else).
+    if arch.unified_l1
+        && !pml
+        && matches!(
+            v.family,
+            super::kernels::Family::SmemU | super::kernels::Family::StSmem
+        )
+    {
+        time *= 1.10;
+    }
+    // Register-streaming loop bookkeeping is visible on Volta, where the
+    // memory system would otherwise have kept up.
+    if arch.unified_l1
+        && matches!(
+            v.family,
+            super::kernels::Family::StRegShft | super::kernels::Family::StRegFixed
+        )
+    {
+        time *= 1.06;
+    }
+    if pml
+        && matches!(
+            v.family,
+            super::kernels::Family::SmemEta1 | super::kernels::Family::SmemEta3
+        )
+    {
+        time *= c.pml_eta_smem;
+    }
+
+    RegionCost {
+        region: name,
+        points,
+        grid_blocks,
+        occ,
+        achieved_warps: aw,
+        l2_bytes,
+        dram_bytes,
+        flops,
+        time_s: time,
+    }
+}
+
+/// Predict a full Table II cell: `steps` iterations of the 7-region
+/// decomposition on `arch`'s evaluation grid.
+pub fn simulate(arch: &GpuArch, v: &KernelVariant, steps: usize) -> KernelRun {
+    let mut regions = Vec::new();
+    let mut step_time = 0.0;
+    let mut l2 = 0.0;
+    let mut dram = 0.0;
+    let mut flops = 0.0;
+    for (name, dims, count) in KernelVariant::eval_regions(arch) {
+        let pml = name != "inner";
+        let rc = region_cost(arch, v, name, dims, pml);
+        step_time += rc.time_s * count as f64;
+        l2 += rc.l2_bytes * count as f64;
+        dram += rc.dram_bytes * count as f64;
+        flops += rc.flops * count as f64;
+        regions.push(rc);
+    }
+    let time_s = step_time * steps as f64;
+    let flops_total = flops * steps as f64;
+    let gflops = flops_total / time_s / 1e9;
+    let l2_transactions = l2 * steps as f64 / 32.0;
+    let dram_transactions = dram * steps as f64 / 32.0;
+    let ai_l2 = flops_total / (l2 * steps as f64);
+    let ai_dram = flops_total / (dram * steps as f64);
+    let l2_peak = (ai_l2 * arch.l2_gbps).min(arch.fp32_gflops);
+    let dram_peak = (ai_dram * arch.dram_gbps).min(arch.fp32_gflops);
+    KernelRun {
+        variant_id: v.id,
+        arch: arch.name,
+        steps,
+        time_s,
+        flops_total,
+        gflops,
+        l2_transactions,
+        dram_transactions,
+        ai_l2,
+        ai_dram,
+        l2_peak_gflops: l2_peak,
+        dram_peak_gflops: dram_peak,
+        pct_of_l2_peak: 100.0 * gflops / l2_peak,
+        pct_of_dram_peak: 100.0 * gflops / dram_peak,
+        regions,
+    }
+}
+
+/// Simulate every paper variant on `arch` (Table II column).
+pub fn simulate_all(arch: &GpuArch, steps: usize) -> Vec<KernelRun> {
+    super::kernels::paper_variants()
+        .iter()
+        .map(|v| simulate(arch, v, steps))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::arch::{nvs510, p100, v100};
+    use crate::gpusim::kernels::by_id;
+
+    fn time(arch: &GpuArch, id: &str) -> f64 {
+        simulate(arch, &by_id(id).unwrap(), 1000).time_s
+    }
+
+    #[test]
+    fn v100_gmem_8x8x8_in_band() {
+        // Paper: 53.88 s. Accept a generous band — the assertion that
+        // matters (fastest on V100) lives in tests/gpusim_tables.rs.
+        let t = time(&v100(), "gmem_8x8x8");
+        assert!((25.0..110.0).contains(&t), "{t}");
+    }
+
+    #[test]
+    fn orderings_v100() {
+        let a = v100();
+        let g888 = time(&a, "gmem_8x8x8");
+        assert!(g888 < time(&a, "gmem_4x4x4"));
+        assert!(g888 < time(&a, "gmem_32x32x1") / 3.0, "thin blocks catastrophic");
+        assert!(g888 < time(&a, "semi") / 2.0, "semi pays sync");
+        // spilling 1024-thread shft variants lose to their 256-thread kin
+        assert!(time(&a, "st_reg_shft_16x16") < time(&a, "st_reg_shft_16x64"));
+    }
+
+    #[test]
+    fn orderings_p100() {
+        let a = p100();
+        // paper: smem_u (76.2) beats gmem_8x8x8 (117.7) on P100 ...
+        assert!(time(&a, "smem_u") < time(&a, "gmem_8x8x8"));
+        // ... and the best kernel is a 2.5D register variant
+        assert!(time(&a, "st_reg_fixed_32x32") < time(&a, "smem_u"));
+    }
+
+    #[test]
+    fn orderings_nvs510() {
+        let a = nvs510();
+        assert!(time(&a, "smem_u") < time(&a, "gmem_8x8x8"));
+        assert!(time(&a, "st_reg_fixed_16x8") < time(&a, "smem_u"));
+        assert!(time(&a, "gmem_32x32x1") > 2.5 * time(&a, "gmem_8x8x8"));
+    }
+
+    #[test]
+    fn run_metrics_consistent() {
+        let r = simulate(&v100(), &by_id("gmem_8x8x8").unwrap(), 1000);
+        assert!(r.gflops > 0.0);
+        assert!((r.ai_l2 - r.flops_total / (r.l2_transactions * 32.0)).abs() < 1e-9);
+        assert!(r.pct_of_dram_peak > 0.0 && r.pct_of_dram_peak < 100.0);
+        assert_eq!(r.regions.len(), 4); // inner + 3 face classes
+        // FLOP total matches the paper's scale (4.45e13 for 1e9 x 1000)
+        assert!((r.flops_total - 4.453e13).abs() / 4.453e13 < 0.05, "{}", r.flops_total);
+    }
+
+    #[test]
+    fn simulate_all_covers_25() {
+        assert_eq!(simulate_all(&v100(), 10).len(), 25);
+    }
+}

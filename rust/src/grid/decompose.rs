@@ -1,0 +1,165 @@
+//! The paper's 7-region domain decomposition (Fig. 1).
+//!
+//! The domain is cut along the top and bottom of the inner region first
+//! (z), then front/back (y), then left/right (x), yielding one inner
+//! region and six PML face subregions in three symmetric shape classes.
+//! Mirrors `compile.model.decompose` — keep in sync.
+
+use super::{Dim3, Domain};
+
+/// Which kernel family a region needs (inner 25-point vs PML 7-point),
+/// and — for PML — which of the paper's three symmetric shape classes it
+/// belongs to (Table III groups characteristics by these classes).
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Hash)]
+pub enum RegionClass {
+    Inner,
+    TopBottom,
+    FrontBack,
+    LeftRight,
+}
+
+impl RegionClass {
+    /// Manifest `region_class` string used in artifact names.
+    pub fn key(&self) -> &'static str {
+        match self {
+            RegionClass::Inner => "inner",
+            RegionClass::TopBottom => "top_bottom",
+            RegionClass::FrontBack => "front_back",
+            RegionClass::LeftRight => "left_right",
+        }
+    }
+
+    pub fn is_pml(&self) -> bool {
+        !matches!(self, RegionClass::Inner)
+    }
+}
+
+/// One launch region, in interior coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Region {
+    pub name: &'static str,
+    pub class: RegionClass,
+    pub offset: Dim3,
+    pub shape: Dim3,
+}
+
+impl Region {
+    /// Stencil halo this region's kernel reads (R for inner, 1 for PML).
+    pub fn halo(&self) -> usize {
+        if self.class.is_pml() {
+            crate::R_ETA
+        } else {
+            crate::R
+        }
+    }
+}
+
+/// Decompose the domain into the paper's 7 launch regions. The regions
+/// partition the interior exactly (validated by property tests).
+pub fn decompose(d: &Domain) -> Vec<Region> {
+    let Dim3 { z: nz, y: ny, x: nx } = d.interior;
+    let w = d.pml_width;
+    vec![
+        Region {
+            name: "inner",
+            class: RegionClass::Inner,
+            offset: Dim3::new(w, w, w),
+            shape: d.inner(),
+        },
+        Region {
+            name: "top",
+            class: RegionClass::TopBottom,
+            offset: Dim3::new(0, 0, 0),
+            shape: Dim3::new(w, ny, nx),
+        },
+        Region {
+            name: "bottom",
+            class: RegionClass::TopBottom,
+            offset: Dim3::new(nz - w, 0, 0),
+            shape: Dim3::new(w, ny, nx),
+        },
+        Region {
+            name: "front",
+            class: RegionClass::FrontBack,
+            offset: Dim3::new(w, 0, 0),
+            shape: Dim3::new(nz - 2 * w, w, nx),
+        },
+        Region {
+            name: "back",
+            class: RegionClass::FrontBack,
+            offset: Dim3::new(w, ny - w, 0),
+            shape: Dim3::new(nz - 2 * w, w, nx),
+        },
+        Region {
+            name: "left",
+            class: RegionClass::LeftRight,
+            offset: Dim3::new(w, w, 0),
+            shape: Dim3::new(nz - 2 * w, ny - 2 * w, w),
+        },
+        Region {
+            name: "right",
+            class: RegionClass::LeftRight,
+            offset: Dim3::new(w, w, nx - w),
+            shape: Dim3::new(nz - 2 * w, ny - 2 * w, w),
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn domain() -> Domain {
+        Domain::new(Dim3::new(48, 40, 32), 8, 10.0, 1e-3).unwrap()
+    }
+
+    #[test]
+    fn seven_regions_partition_interior() {
+        let d = domain();
+        let regs = decompose(&d);
+        assert_eq!(regs.len(), 7);
+        let mut cover = vec![0u8; d.interior.volume()];
+        for r in &regs {
+            for z in 0..r.shape.z {
+                for y in 0..r.shape.y {
+                    for x in 0..r.shape.x {
+                        let i = ((r.offset.z + z) * d.interior.y + r.offset.y + y) * d.interior.x
+                            + r.offset.x
+                            + x;
+                        cover[i] += 1;
+                    }
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1), "regions must tile exactly once");
+    }
+
+    #[test]
+    fn symmetric_pairs_share_shape() {
+        let regs = decompose(&domain());
+        let by_name: std::collections::HashMap<_, _> =
+            regs.iter().map(|r| (r.name, r)).collect();
+        assert_eq!(by_name["top"].shape, by_name["bottom"].shape);
+        assert_eq!(by_name["front"].shape, by_name["back"].shape);
+        assert_eq!(by_name["left"].shape, by_name["right"].shape);
+    }
+
+    #[test]
+    fn halo_per_class() {
+        let regs = decompose(&domain());
+        for r in &regs {
+            match r.class {
+                RegionClass::Inner => assert_eq!(r.halo(), crate::R),
+                _ => assert_eq!(r.halo(), crate::R_ETA),
+            }
+        }
+    }
+
+    #[test]
+    fn class_keys_match_manifest_names() {
+        assert_eq!(RegionClass::TopBottom.key(), "top_bottom");
+        assert_eq!(RegionClass::Inner.key(), "inner");
+        assert!(RegionClass::LeftRight.is_pml());
+        assert!(!RegionClass::Inner.is_pml());
+    }
+}

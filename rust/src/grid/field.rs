@@ -1,0 +1,251 @@
+//! Dense f32 3D field with `(z, y, x)` row-major layout.
+
+use super::Dim3;
+
+/// A dense 3D scalar field. The workhorse container of the coordinator:
+/// wavefields, velocity models, damping profiles, and region tiles are
+/// all `Field3`s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Field3 {
+    dims: Dim3,
+    data: Vec<f32>,
+}
+
+impl Field3 {
+    /// Zero-filled field.
+    pub fn zeros(dims: Dim3) -> Self {
+        Field3 { dims, data: vec![0.0; dims.volume()] }
+    }
+
+    /// Constant-filled field.
+    pub fn full(dims: Dim3, value: f32) -> Self {
+        Field3 { dims, data: vec![value; dims.volume()] }
+    }
+
+    /// Wrap an existing buffer (must match `dims.volume()`).
+    pub fn from_vec(dims: Dim3, data: Vec<f32>) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            data.len() == dims.volume(),
+            "buffer length {} != {} volume {}",
+            data.len(),
+            dims,
+            dims.volume()
+        );
+        Ok(Field3 { dims, data })
+    }
+
+    /// Build from a closure over (z, y, x).
+    pub fn from_fn(dims: Dim3, mut f: impl FnMut(usize, usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(dims.volume());
+        for z in 0..dims.z {
+            for y in 0..dims.y {
+                for x in 0..dims.x {
+                    data.push(f(z, y, x));
+                }
+            }
+        }
+        Field3 { dims, data }
+    }
+
+    pub fn dims(&self) -> Dim3 {
+        self.dims
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, z: usize, y: usize, x: usize) -> usize {
+        debug_assert!(z < self.dims.z && y < self.dims.y && x < self.dims.x);
+        (z * self.dims.y + y) * self.dims.x + x
+    }
+
+    #[inline(always)]
+    pub fn get(&self, z: usize, y: usize, x: usize) -> f32 {
+        self.data[self.idx(z, y, x)]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, z: usize, y: usize, x: usize, v: f32) {
+        let i = self.idx(z, y, x);
+        self.data[i] = v;
+    }
+
+    #[inline(always)]
+    pub fn add(&mut self, z: usize, y: usize, x: usize, v: f32) {
+        let i = self.idx(z, y, x);
+        self.data[i] += v;
+    }
+
+    /// Extract a sub-box `[offset, offset+shape)` (coordinates in this
+    /// field's own index space).
+    pub fn extract(&self, offset: Dim3, shape: Dim3) -> Field3 {
+        assert!(
+            offset.z + shape.z <= self.dims.z
+                && offset.y + shape.y <= self.dims.y
+                && offset.x + shape.x <= self.dims.x,
+            "extract [{offset}+{shape}] out of bounds for {}",
+            self.dims
+        );
+        let mut out = Vec::with_capacity(shape.volume());
+        for z in 0..shape.z {
+            for y in 0..shape.y {
+                let base = self.idx(offset.z + z, offset.y + y, offset.x);
+                out.extend_from_slice(&self.data[base..base + shape.x]);
+            }
+        }
+        Field3 { dims: shape, data: out }
+    }
+
+    /// Extract `[offset-halo, offset+shape+halo)` where `offset` is in
+    /// *interior* coordinates of an `R`-ghost-padded field. Mirrors
+    /// `compile.model.slice_pad`.
+    pub fn extract_padded_region(&self, ghost: usize, offset: Dim3, shape: Dim3, halo: usize) -> Field3 {
+        let o = Dim3::new(
+            ghost + offset.z - halo,
+            ghost + offset.y - halo,
+            ghost + offset.x - halo,
+        );
+        self.extract(o, shape.padded(halo))
+    }
+
+    /// Write `tile` into this field at `offset` (own index space).
+    pub fn scatter(&mut self, offset: Dim3, tile: &Field3) {
+        let s = tile.dims;
+        assert!(
+            offset.z + s.z <= self.dims.z
+                && offset.y + s.y <= self.dims.y
+                && offset.x + s.x <= self.dims.x,
+            "scatter [{offset}+{s}] out of bounds for {}",
+            self.dims
+        );
+        for z in 0..s.z {
+            for y in 0..s.y {
+                let src = tile.idx(z, y, 0);
+                let dst = self.idx(offset.z + z, offset.y + y, offset.x);
+                self.data[dst..dst + s.x].copy_from_slice(&tile.data[src..src + s.x]);
+            }
+        }
+    }
+
+    /// Embed an interior-sized field into a `halo`-ghost-padded field of
+    /// zeros (the Dirichlet closure used by every wavefield array).
+    pub fn pad(&self, halo: usize) -> Field3 {
+        let mut out = Field3::zeros(self.dims.padded(halo));
+        out.scatter(Dim3::new(halo, halo, halo), self);
+        out
+    }
+
+    /// Strip a `halo`-wide border.
+    pub fn unpad(&self, halo: usize) -> Field3 {
+        let inner = Dim3::new(
+            self.dims.z - 2 * halo,
+            self.dims.y - 2 * halo,
+            self.dims.x - 2 * halo,
+        );
+        self.extract(Dim3::new(halo, halo, halo), inner)
+    }
+
+    /// Sum of squares — the energy monitor's core.
+    pub fn energy(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Largest absolute value.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+    }
+
+    /// True if any element is NaN or infinite.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|v| !v.is_finite())
+    }
+
+    /// Max |a - b| over two same-shaped fields.
+    pub fn max_abs_diff(&self, other: &Field3) -> f32 {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_row_major_x_innermost() {
+        let f = Field3::from_fn(Dim3::new(2, 3, 4), |z, y, x| (z * 100 + y * 10 + x) as f32);
+        assert_eq!(f.get(0, 0, 0), 0.0);
+        assert_eq!(f.get(0, 0, 3), 3.0);
+        assert_eq!(f.get(1, 2, 3), 123.0);
+        assert_eq!(f.as_slice()[1], 1.0); // x is contiguous
+        assert_eq!(f.as_slice()[4], 10.0); // then y
+    }
+
+    #[test]
+    fn extract_scatter_roundtrip() {
+        let f = Field3::from_fn(Dim3::new(6, 6, 6), |z, y, x| (z * 36 + y * 6 + x) as f32);
+        let tile = f.extract(Dim3::new(1, 2, 3), Dim3::new(2, 3, 2));
+        assert_eq!(tile.get(0, 0, 0), f.get(1, 2, 3));
+        assert_eq!(tile.get(1, 2, 1), f.get(2, 4, 4));
+        let mut g = Field3::zeros(Dim3::new(6, 6, 6));
+        g.scatter(Dim3::new(1, 2, 3), &tile);
+        assert_eq!(g.get(2, 4, 4), f.get(2, 4, 4));
+        assert_eq!(g.get(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn pad_unpad_roundtrip() {
+        let f = Field3::from_fn(Dim3::new(3, 3, 3), |z, y, x| (z + y + x) as f32 + 1.0);
+        let p = f.pad(4);
+        assert_eq!(p.dims(), Dim3::new(11, 11, 11));
+        assert_eq!(p.get(0, 0, 0), 0.0);
+        assert_eq!(p.get(4, 4, 4), 1.0);
+        assert_eq!(p.unpad(4), f);
+    }
+
+    #[test]
+    fn extract_padded_region_matches_manual() {
+        // padded field with ghost 4; region offset (1,1,1), shape (2,2,2), halo 1
+        let p = Field3::from_fn(Dim3::new(12, 12, 12), |z, y, x| (z * 144 + y * 12 + x) as f32);
+        let t = p.extract_padded_region(4, Dim3::new(1, 1, 1), Dim3::new(2, 2, 2), 1);
+        assert_eq!(t.dims(), Dim3::new(4, 4, 4));
+        assert_eq!(t.get(0, 0, 0), p.get(4, 4, 4));
+        assert_eq!(t.get(3, 3, 3), p.get(7, 7, 7));
+    }
+
+    #[test]
+    fn energy_and_diff() {
+        let a = Field3::full(Dim3::new(2, 2, 2), 2.0);
+        let b = Field3::full(Dim3::new(2, 2, 2), 1.5);
+        assert_eq!(a.energy(), 32.0);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+        assert_eq!(a.max_abs(), 2.0);
+        assert!(!a.has_non_finite());
+    }
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(Field3::from_vec(Dim3::new(2, 2, 2), vec![0.0; 7]).is_err());
+        assert!(Field3::from_vec(Dim3::new(2, 2, 2), vec![0.0; 8]).is_ok());
+    }
+
+    #[test]
+    #[should_panic]
+    fn extract_out_of_bounds_panics() {
+        let f = Field3::zeros(Dim3::new(2, 2, 2));
+        f.extract(Dim3::new(1, 1, 1), Dim3::new(2, 2, 2));
+    }
+}

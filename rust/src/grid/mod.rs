@@ -1,0 +1,126 @@
+//! Grid substrate: 3D fields, domain geometry, and the paper's 7-region
+//! decomposition (Fig. 1).
+//!
+//! Layout matches the Python side: arrays are row-major `(z, y, x)` with
+//! x innermost/contiguous. Wavefields carry an `R`-wide ghost layer of
+//! zeros on every face (Dirichlet closure); `um`/`v` are interior-sized.
+
+mod decompose;
+mod field;
+
+pub use decompose::{decompose, Region, RegionClass};
+pub use field::Field3;
+
+use crate::R;
+
+/// Integer 3D extent/coordinate in `(z, y, x)` order.
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Hash)]
+pub struct Dim3 {
+    pub z: usize,
+    pub y: usize,
+    pub x: usize,
+}
+
+impl Dim3 {
+    pub const fn new(z: usize, y: usize, x: usize) -> Self {
+        Dim3 { z, y, x }
+    }
+
+    /// Total number of points.
+    pub fn volume(&self) -> usize {
+        self.z * self.y * self.x
+    }
+
+    /// Grow every face by `halo` cells.
+    pub fn padded(&self, halo: usize) -> Dim3 {
+        Dim3::new(self.z + 2 * halo, self.y + 2 * halo, self.x + 2 * halo)
+    }
+
+    pub fn as_array(&self) -> [usize; 3] {
+        [self.z, self.y, self.x]
+    }
+}
+
+impl std::fmt::Display for Dim3 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}x{}", self.z, self.y, self.x)
+    }
+}
+
+/// The simulation domain: interior (physical + PML sponge) geometry and
+/// discretization constants. Mirrors `compile.common.ProblemSpec`.
+#[derive(Copy, Clone, Debug, PartialEq)]
+pub struct Domain {
+    /// Interior extent (physical domain + PML), excluding ghost cells.
+    pub interior: Dim3,
+    /// PML sponge thickness on every face, in cells.
+    pub pml_width: usize,
+    /// Grid spacing in meters.
+    pub h: f64,
+    /// Time step in seconds.
+    pub dt: f64,
+}
+
+impl Domain {
+    pub fn new(interior: Dim3, pml_width: usize, h: f64, dt: f64) -> anyhow::Result<Self> {
+        let d = Domain { interior, pml_width, h, dt };
+        d.validate()?;
+        Ok(d)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pml_width >= 1, "pml_width must be >= 1");
+        anyhow::ensure!(
+            self.interior.z > 2 * self.pml_width
+                && self.interior.y > 2 * self.pml_width
+                && self.interior.x > 2 * self.pml_width,
+            "interior {} too small for PML width {}",
+            self.interior,
+            self.pml_width
+        );
+        anyhow::ensure!(self.h > 0.0 && self.dt > 0.0, "h and dt must be positive");
+        Ok(())
+    }
+
+    /// Extent of ghost-padded wavefield arrays.
+    pub fn padded(&self) -> Dim3 {
+        self.interior.padded(R)
+    }
+
+    /// Extent of the inner (non-PML) region.
+    pub fn inner(&self) -> Dim3 {
+        let w = self.pml_width;
+        Dim3::new(
+            self.interior.z - 2 * w,
+            self.interior.y - 2 * w,
+            self.interior.x - 2 * w,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dim3_volume_and_padding() {
+        let d = Dim3::new(2, 3, 4);
+        assert_eq!(d.volume(), 24);
+        assert_eq!(d.padded(4), Dim3::new(10, 11, 12));
+        assert_eq!(format!("{d}"), "2x3x4");
+    }
+
+    #[test]
+    fn domain_shapes() {
+        let d = Domain::new(Dim3::new(48, 40, 32), 8, 10.0, 1e-3).unwrap();
+        assert_eq!(d.padded(), Dim3::new(56, 48, 40));
+        assert_eq!(d.inner(), Dim3::new(32, 24, 16));
+    }
+
+    #[test]
+    fn domain_rejects_thin_interior() {
+        assert!(Domain::new(Dim3::new(16, 16, 16), 8, 10.0, 1e-3).is_err());
+        assert!(Domain::new(Dim3::new(16, 16, 16), 0, 10.0, 1e-3).is_err());
+        assert!(Domain::new(Dim3::new(32, 32, 32), 8, -1.0, 1e-3).is_err());
+    }
+}

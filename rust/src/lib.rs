@@ -1,0 +1,35 @@
+//! `hostencil` — a Rust + JAX + Pallas reproduction of *"Accelerating
+//! High-Order Stencils on GPUs"* (Sai et al., 2020).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//!
+//! * **Layer 1** (build time, Python): Pallas kernels expressing the
+//!   paper's CUDA code shapes (`python/compile/kernels/`).
+//! * **Layer 2** (build time, Python): the JAX region step functions,
+//!   AOT-lowered to HLO text artifacts (`python/compile/{model,aot}.py`).
+//! * **Layer 3** (run time, this crate): the simulation coordinator —
+//!   region scheduling over PJRT-loaded executables, wavefield state
+//!   management, sources/receivers — plus the simulated GPU testbed
+//!   (`gpusim`) that regenerates the paper's evaluation tables/figures.
+//!
+//! Python never runs on the simulation path: after `make artifacts` the
+//! `hostencil` binary is self-contained.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod gpusim;
+pub mod grid;
+pub mod json;
+pub mod manifest;
+pub mod report;
+pub mod runtime;
+pub mod stencil;
+pub mod testkit;
+pub mod wave;
+
+/// Halo width of the high-order stencil (half the 8th spatial order).
+pub const R: usize = 4;
+
+/// Halo width of the eta array in the PML update.
+pub const R_ETA: usize = 1;

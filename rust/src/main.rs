@@ -1,0 +1,370 @@
+//! `hostencil` CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands:
+//!   info        platform + artifact manifest + machine table (Table I)
+//!   run         run a wave simulation (PJRT or golden backend)
+//!   validate    PJRT executables vs the pure-Rust golden propagator
+//!   table2      regenerate Table II  (predicted wall time vs paper)
+//!   table3      regenerate Table III (occupancy characteristics)
+//!   table4      regenerate Table IV  (roofline characteristics)
+//!   fig3        regenerate Figure 3  (roofline plots + CSV)
+//!   occupancy   occupancy calculator for ad-hoc kernel resources
+//!   sweep       tile-size sweep on the gpusim timing model
+
+use std::collections::HashMap;
+
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::gpusim::{arch, kernels, occupancy, timing, KernelResources};
+use hostencil::runtime::Engine;
+use hostencil::wave;
+use hostencil::{config::RunConfig, report};
+
+/// Tiny `--key value` / `--flag` argument parser (no clap offline).
+struct Args {
+    cmd: String,
+    opts: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".to_string());
+        let mut opts = HashMap::new();
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let k = rest[i].trim_start_matches("--").to_string();
+            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                opts.insert(k, rest[i + 1].clone());
+                i += 2;
+            } else {
+                opts.insert(k, "true".to_string());
+                i += 1;
+            }
+        }
+        Args { cmd, opts }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.opts.get(k).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, k: &str, d: usize) -> anyhow::Result<usize> {
+        match self.get(k) {
+            None => Ok(d),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{k}: {e}")),
+        }
+    }
+}
+
+const HELP: &str = "hostencil — high-order stencil reproduction (Sai et al. 2020)
+
+USAGE: hostencil <command> [options]
+
+commands:
+  info                         platform, artifacts, machines
+  run        [--config f] [--steps N] [--mode decomposed|monolithic|fused|golden]
+             [--variant gmem|smem_u|semi|st_smem|st_reg_shft|st_reg_fixed]
+             [--pml-variant gmem|smem_eta_1|smem_eta_3] [--artifacts dir]
+  validate   [--artifacts dir] [--steps N]    PJRT vs golden, all variants
+  table2     [--steps N]                      predicted wall time vs paper
+  table3                                      occupancy characteristics
+  table4     [--steps N]                      roofline characteristics
+  fig3       [--machine v100|p100|nvs510] [--csv path]
+  occupancy  --threads N --regs N [--smem bytes] [--machine v100]
+  sweep      [--machine v100]                 tile-size sweep (timing model)
+  autotune   [--machine v100] [--family st_reg_fixed|gmem|...]
+                                               search tile shapes on the model
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::parse();
+    match args.cmd.as_str() {
+        "info" => cmd_info(&args),
+        "run" => cmd_run(&args),
+        "validate" => cmd_validate(&args),
+        "table2" => {
+            print!("{}", report::table2(args.usize_or("steps", 1000)?));
+            for m in ["v100", "p100", "nvs510"] {
+                println!(
+                    "rank agreement vs paper ({m}): {:.1}% of variant pairs ordered identically",
+                    100.0 * report::rank_agreement(m, 100)?
+                );
+            }
+            Ok(())
+        }
+        "table3" => {
+            print!("{}", report::table3());
+            Ok(())
+        }
+        "table4" => {
+            print!("{}", report::table4(args.usize_or("steps", 1000)?));
+            Ok(())
+        }
+        "fig3" => cmd_fig3(&args),
+        "occupancy" => cmd_occupancy(&args),
+        "sweep" => cmd_sweep(&args),
+        "autotune" => cmd_autotune(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{HELP}"),
+    }
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    println!("{}", report::table1());
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    match Engine::load(dir) {
+        Ok(engine) => {
+            let m = engine.manifest();
+            println!("PJRT platform : {}", engine.platform());
+            println!(
+                "artifacts     : {} in {dir:?} (domain {} pml {} dt {} h {})",
+                m.artifacts.len(),
+                m.domain.interior,
+                m.domain.pml_width,
+                m.domain.dt,
+                m.domain.h
+            );
+            println!("inner variants: {}", m.inner_variants().join(", "));
+            println!("pml variants  : {}", m.pml_variants().join(", "));
+        }
+        Err(e) => println!("artifacts     : unavailable ({e})"),
+    }
+    Ok(())
+}
+
+/// Build a coordinator from a run config (shared by run/validate).
+fn build_coordinator<'e>(
+    cfg: &RunConfig,
+    engine: Option<&'e Engine>,
+) -> anyhow::Result<Coordinator<'e>> {
+    let v = cfg.model.build(cfg.domain.interior);
+    let v_max = v.as_slice().iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+    let eta = wave::eta_profile(&cfg.domain, v_max);
+    Coordinator::new(
+        engine,
+        cfg.domain,
+        cfg.mode,
+        &cfg.inner_variant,
+        &cfg.pml_variant,
+        v,
+        eta,
+        cfg.source,
+        cfg.receivers.clone(),
+    )
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::defaults(),
+    };
+    if let Some(s) = args.get("steps") {
+        cfg.steps = s.parse()?;
+    }
+    if let Some(m) = args.get("mode") {
+        cfg.mode = Mode::parse(m)?;
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.inner_variant = v.to_string();
+    }
+    if let Some(v) = args.get("pml-variant") {
+        cfg.pml_variant = v.to_string();
+    }
+    if let Some(d) = args.get("artifacts") {
+        cfg.artifacts_dir = d.to_string();
+    }
+
+    let engine = if cfg.mode.needs_engine() {
+        Some(Engine::load(&cfg.artifacts_dir)?)
+    } else {
+        None
+    };
+    if let Some(eng) = &engine {
+        // the artifact domain wins (it was fixed at AOT time)
+        cfg.domain = eng.manifest().domain;
+    }
+
+    println!(
+        "run: {} steps, mode {:?}, inner {}, pml {}, domain {} (pml {})",
+        cfg.steps,
+        cfg.mode,
+        cfg.inner_variant,
+        cfg.pml_variant,
+        cfg.domain.interior,
+        cfg.domain.pml_width
+    );
+    let mut coord = build_coordinator(&cfg, engine.as_ref())?;
+    let summary = coord.run(cfg.steps)?;
+    println!(
+        "done: {} launches, wall {:.3?}, {:.2} Mpts/s, final |u|max {:.3e}, energy {:.3e}",
+        summary.launches,
+        summary.wall,
+        summary.points_per_sec / 1e6,
+        summary.final_max_abs,
+        summary.final_energy
+    );
+    if let Some(eng) = &engine {
+        println!("\nper-artifact engine stats:");
+        for (name, s) in eng.stats() {
+            println!(
+                "  {:32} calls {:>6}  mean exec {:>10.3?}  compile {:>8.3?}",
+                name,
+                s.calls,
+                s.mean_exec(),
+                s.compile_time
+            );
+        }
+    }
+    if !summary.traces.is_empty() {
+        let rms: Vec<f64> = summary
+            .traces
+            .iter()
+            .map(|t| (t.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / t.len().max(1) as f64).sqrt())
+            .collect();
+        let rms_str: Vec<String> = rms.iter().map(|r| format!("{r:.3e}")).collect();
+        println!("receiver RMS: [{}]", rms_str.join(", "));
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let steps = args.usize_or("steps", 10)?;
+    let engine = Engine::load(dir)?;
+    let domain = engine.manifest().domain;
+    let inner_variants: Vec<String> = engine
+        .manifest()
+        .inner_variants()
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    println!(
+        "validating {} steps on domain {} against golden CPU stencils",
+        steps, domain.interior
+    );
+    let mut worst_overall = 0.0f32;
+    for variant in &inner_variants {
+        for pml_variant in engine.manifest().pml_variants() {
+            let mut cfg = RunConfig::defaults();
+            cfg.domain = domain;
+            cfg.mode = Mode::Decomposed;
+            cfg.inner_variant = variant.clone();
+            cfg.pml_variant = pml_variant.clone();
+            let mut pjrt = build_coordinator(&cfg, Some(&engine))?;
+            cfg.mode = Mode::Golden;
+            let mut gold = build_coordinator(&cfg, None)?;
+            for _ in 0..steps {
+                pjrt.step()?;
+                gold.step()?;
+            }
+            let d = pjrt.wavefield().max_abs_diff(&gold.wavefield());
+            let scale = gold.wavefield().max_abs().max(1e-30);
+            let rel = d / scale;
+            worst_overall = worst_overall.max(rel);
+            println!(
+                "  inner {variant:14} pml {pml_variant:12} max|diff| {d:.3e} (rel {rel:.3e})"
+            );
+            anyhow::ensure!(rel < 1e-4, "{variant}/{pml_variant} diverged from golden");
+        }
+    }
+    println!("validate OK (worst relative deviation {worst_overall:.3e})");
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> anyhow::Result<()> {
+    let machine = args.get("machine").unwrap_or("v100");
+    let (text, csv) = report::fig3(machine, args.usize_or("steps", 1000)?)?;
+    println!("{text}");
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, &csv)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_occupancy(args: &Args) -> anyhow::Result<()> {
+    let machine = arch::by_name(args.get("machine").unwrap_or("v100"))?;
+    let res = KernelResources {
+        threads_per_block: args.usize_or("threads", 256)? as u32,
+        regs_per_thread: args.usize_or("regs", 32)? as u32,
+        smem_per_block: args.usize_or("smem", 0)? as u32,
+    };
+    let occ = occupancy(&machine, &res);
+    println!(
+        "{}: {} blocks/SM, {} active warps, {:.1}% occupancy (limited by {:?})",
+        machine.name, occ.blocks_per_sm, occ.active_warps, occ.occupancy_pct, occ.limiter
+    );
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
+    use hostencil::gpusim::{autotune, Family};
+    let machine = arch::by_name(args.get("machine").unwrap_or("v100"))?;
+    let family = match args.get("family") {
+        None => None,
+        Some("gmem") => Some(Family::Gmem),
+        Some("smem_u") => Some(Family::SmemU),
+        Some("semi") => Some(Family::Semi),
+        Some("st_smem") => Some(Family::StSmem),
+        Some("st_reg_shft") => Some(Family::StRegShft),
+        Some("st_reg_fixed") => Some(Family::StRegFixed),
+        Some(other) => anyhow::bail!("unknown family {other:?}"),
+    };
+    let show = |c: &autotune::Candidate| {
+        let v = &c.variant;
+        let shape = if v.is_streaming() {
+            format!("{}x{}", v.d1, v.d2)
+        } else {
+            format!("{}x{}x{}", v.d1, v.d2, v.d3)
+        };
+        println!(
+            "  {:?} {:<10} {:>6} thr {:>8.2}s  {:>6.0} GF/s",
+            v.family,
+            shape,
+            v.threads_per_block(),
+            c.run.time_s,
+            c.run.gflops
+        );
+    };
+    match family {
+        Some(f) => {
+            println!("autotune {:?} on {} (top 8 of the search space):", f, machine.name);
+            for c in autotune::tune(&machine, f, 1000).iter().take(8) {
+                show(c);
+            }
+        }
+        None => {
+            println!("autotune all families on {} (best per family):", machine.name);
+            for c in autotune::tune_all(&machine, 1000) {
+                show(&c);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let machine = arch::by_name(args.get("machine").unwrap_or("v100"))?;
+    println!("tile-size sweep on {} (timing model, 1000 steps):", machine.name);
+    let mut rows: Vec<(String, f64)> = kernels::paper_variants()
+        .iter()
+        .map(|v| (v.id.to_string(), timing::simulate(&machine, v, 1000).time_s))
+        .collect();
+    rows.sort_by(|a, b| a.1.total_cmp(&b.1));
+    for (i, (id, t)) in rows.iter().enumerate() {
+        println!("  {:>2}. {:<22}{:>9.2}s", i + 1, id, t);
+    }
+    println!("\nbest predicted kernel: {}", rows[0].0);
+    Ok(())
+}

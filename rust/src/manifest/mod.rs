@@ -1,0 +1,185 @@
+//! Typed view of `artifacts/manifest.json` (written by `compile.aot`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::grid::{Dim3, Domain};
+use crate::json::Json;
+
+/// One AOT artifact: an HLO-text executable plus its I/O signature.
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,         // "inner" | "pml" | "monolithic" | "fused"
+    pub variant: String,      // kernel variant id
+    pub region_class: String, // "inner" | face class | "full"
+    pub input_shapes: Vec<(String, Dim3)>,
+    pub output_shape: Dim3,
+}
+
+/// The manifest: problem spec + artifact index.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub domain: Domain,
+    pub artifacts: Vec<Artifact>,
+    by_name: HashMap<String, usize>,
+    pub dir: PathBuf,
+}
+
+fn dim3_of(j: &Json) -> anyhow::Result<Dim3> {
+    let a = j.as_arr()?;
+    anyhow::ensure!(a.len() == 3, "expected 3-element shape, got {}", a.len());
+    Ok(Dim3::new(a[0].as_usize()?, a[1].as_usize()?, a[2].as_usize()?))
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?} (run `make artifacts`?): {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (artifact files resolved relative to `dir`).
+    pub fn parse(text: &str, dir: PathBuf) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text)?;
+        let version = j.get("format_version")?.as_usize()?;
+        anyhow::ensure!(version == 1, "unsupported manifest format_version {version}");
+
+        let spec = j.get("spec")?;
+        let interior = dim3_of(spec.get("interior")?)?;
+        let halo = spec.get("halo")?.as_usize()?;
+        anyhow::ensure!(halo == crate::R, "artifact halo {halo} != crate R {}", crate::R);
+        let domain = Domain::new(
+            interior,
+            spec.get("pml_width")?.as_usize()?,
+            spec.get("h")?.as_f64()?,
+            spec.get("dt")?.as_f64()?,
+        )?;
+
+        let mut artifacts = Vec::new();
+        for e in j.get("artifacts")?.as_arr()? {
+            let mut input_shapes = Vec::new();
+            for inp in e.get("inputs")?.as_arr()? {
+                input_shapes.push((
+                    inp.get("name")?.as_str()?.to_string(),
+                    dim3_of(inp.get("shape")?)?,
+                ));
+            }
+            artifacts.push(Artifact {
+                name: e.get("name")?.as_str()?.to_string(),
+                file: dir.join(e.get("file")?.as_str()?),
+                kind: e.get("kind")?.as_str()?.to_string(),
+                variant: e.get("variant")?.as_str()?.to_string(),
+                region_class: e.get("region_class")?.as_str()?.to_string(),
+                input_shapes,
+                output_shape: dim3_of(e.get("output_shape")?)?,
+            });
+        }
+        anyhow::ensure!(!artifacts.is_empty(), "manifest has no artifacts");
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Manifest { domain, artifacts, by_name, dir })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Artifact> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.artifacts[i])
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "artifact {name:?} not in manifest (have: {})",
+                    self.names().join(", ")
+                )
+            })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.iter().map(|a| a.name.as_str()).collect()
+    }
+
+    /// All inner-region kernel variants present.
+    pub fn inner_variants(&self) -> Vec<&str> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == "inner")
+            .map(|a| a.variant.as_str())
+            .collect()
+    }
+
+    /// All PML variants present (deduplicated across face classes).
+    pub fn pml_variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "pml")
+            .map(|a| a.variant.clone())
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "spec": {"interior": [48,48,48], "pml_width": 8, "h": 10.0, "dt": 0.001, "halo": 4},
+      "artifacts": [
+        {"name": "inner_gmem", "file": "inner_gmem.hlo.txt", "kind": "inner",
+         "variant": "gmem", "region_class": "inner",
+         "inputs": [{"name": "u_pad", "shape": [40,40,40]},
+                    {"name": "um", "shape": [32,32,32]},
+                    {"name": "v", "shape": [32,32,32]}],
+         "output_shape": [32,32,32]},
+        {"name": "pml_top_bottom_gmem", "file": "p.hlo.txt", "kind": "pml",
+         "variant": "gmem", "region_class": "top_bottom",
+         "inputs": [{"name": "u_pad1", "shape": [10,50,50]}],
+         "output_shape": [8,48,48]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        assert_eq!(m.domain.interior, Dim3::new(48, 48, 48));
+        assert_eq!(m.domain.pml_width, 8);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.get("inner_gmem").unwrap();
+        assert_eq!(a.input_shapes[0].1, Dim3::new(40, 40, 40));
+        assert_eq!(a.output_shape, Dim3::new(32, 32, 32));
+        assert_eq!(a.file, PathBuf::from("/tmp/a/inner_gmem.hlo.txt"));
+        assert_eq!(m.inner_variants(), vec!["gmem"]);
+        assert_eq!(m.pml_variants(), vec!["gmem".to_string()]);
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("inner_gmem"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_version_or_halo() {
+        let bad = SAMPLE.replace("\"format_version\": 1", "\"format_version\": 9");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+        let bad = SAMPLE.replace("\"halo\": 4", "\"halo\": 2");
+        assert!(Manifest::parse(&bad, PathBuf::from("/tmp")).is_err());
+    }
+
+    #[test]
+    fn load_missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,259 @@
+//! Table/figure renderers: regenerate the paper's evaluation artifacts
+//! (Tables I-IV, Figure 3) from the `gpusim` models, side by side with
+//! the published numbers.
+
+pub mod paperdata;
+
+use crate::gpusim::{arch, occupancy, timing};
+use crate::grid::Dim3;
+
+fn hr(width: usize) -> String {
+    "-".repeat(width)
+}
+
+/// Table I: machine specifications.
+pub fn table1() -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<14}{:>12}{:>12}{:>12}\n",
+        "Table I", "V100", "P100", "NVS510"
+    ));
+    out.push_str(&hr(50));
+    out.push('\n');
+    let rows: Vec<(&str, Box<dyn Fn(&arch::GpuArch) -> String>)> = vec![
+        ("SMs", Box::new(|a: &arch::GpuArch| a.sm_count.to_string())),
+        ("sm version", Box::new(|a| a.sm_version.to_string())),
+        ("DRAM GB/s", Box::new(|a| format!("{:.0}", a.dram_gbps))),
+        ("L2 GB/s", Box::new(|a| format!("{:.0}", a.l2_gbps))),
+        ("L2 bytes", Box::new(|a| format!("{}K", a.l2_bytes / 1024))),
+        ("fp32 GF/s", Box::new(|a| format!("{:.0}", a.fp32_gflops))),
+        ("eval grid", Box::new(|a| format!("{0}^3", a.eval_grid))),
+    ];
+    let machines = arch::all();
+    for (name, f) in rows {
+        out.push_str(&format!(
+            "{:<14}{:>12}{:>12}{:>12}\n",
+            name,
+            f(&machines[0]),
+            f(&machines[1]),
+            f(&machines[2])
+        ));
+    }
+    out
+}
+
+/// Table II: modeled wall-time (s, 1000 steps) vs the paper's
+/// measurements on all three machines.
+pub fn table2(steps: usize) -> String {
+    let machines = arch::all();
+    let mut out = format!(
+        "{:<20}{:>9}{:>9}{:>7}{:>9}{:>9}{:>7}{:>9}{:>9}{:>7}\n",
+        "Table II (s)", "V100", "paper", "d%", "P100", "paper", "d%", "NVS510", "paper", "d%"
+    );
+    out.push_str(&hr(95));
+    out.push('\n');
+    let runs: Vec<Vec<timing::KernelRun>> =
+        machines.iter().map(|a| timing::simulate_all(a, steps)).collect();
+    for (i, v) in crate::gpusim::kernels::paper_variants().iter().enumerate() {
+        let p = paperdata::table2_row(v.id).expect("paper row");
+        let paper = [p.v100, p.p100, p.nvs510];
+        out.push_str(&format!("{:<20}", v.id));
+        for m in 0..3 {
+            let model = runs[m][i].time_s;
+            let delta = 100.0 * (model - paper[m]) / paper[m];
+            out.push_str(&format!("{model:>9.2}{:>9.2}{delta:>+7.0}", paper[m]));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Table III (inner region, V100): occupancy model vs paper.
+pub fn table3() -> String {
+    let a = arch::v100();
+    let inner = Dim3::new(
+        a.eval_grid - 2 * a.eval_pml_width,
+        a.eval_grid - 2 * a.eval_pml_width,
+        a.eval_grid - 2 * a.eval_pml_width,
+    );
+    let mut out = format!(
+        "{:<20}{:>7}{:>11}{:>6}{:>8}{:>8}{:>9}{:>9}{:>8}{:>8}\n",
+        "Table III (V100)",
+        "block",
+        "grid",
+        "regs",
+        "thWarps",
+        "paper",
+        "achWarps",
+        "paper",
+        "thOcc%",
+        "paper"
+    );
+    out.push_str(&hr(94));
+    out.push('\n');
+    for v in crate::gpusim::kernels::paper_variants() {
+        let p = paperdata::table3_row(v.id).expect("paper row");
+        let occ = occupancy::occupancy(&a, &v.resources_inner());
+        let grid = v.grid_blocks(inner);
+        let ach = occupancy::achieved_warps(&a, &occ, grid, 0.97);
+        out.push_str(&format!(
+            "{:<20}{:>7}{:>11}{:>6}{:>8}{:>8.1}{:>9.1}{:>9.1}{:>8.1}{:>8.1}\n",
+            v.id,
+            v.threads_per_block(),
+            grid,
+            v.regs_inner,
+            occ.active_warps,
+            p.theoretical_warps,
+            ach,
+            p.achieved_warps,
+            occ.occupancy_pct,
+            p.theoretical_occupancy,
+        ));
+    }
+    out
+}
+
+/// Table IV (V100): performance characteristics, model vs paper.
+pub fn table4(steps: usize) -> String {
+    let a = arch::v100();
+    let runs = timing::simulate_all(&a, steps);
+    let mut out = format!(
+        "{:<20}{:>8}{:>7}{:>7}{:>8}{:>7}{:>7}{:>8}{:>7}{:>8}{:>8}\n",
+        "Table IV (V100)",
+        "GF/s",
+        "paper",
+        "aiL2",
+        "paper",
+        "aiDRAM",
+        "paper",
+        "L2e12",
+        "paper",
+        "DRe11",
+        "paper"
+    );
+    out.push_str(&hr(95));
+    out.push('\n');
+    for r in &runs {
+        let p = paperdata::table4_row(r.variant_id).expect("paper row");
+        out.push_str(&format!(
+            "{:<20}{:>8.0}{:>7.0}{:>7.2}{:>8.2}{:>7.2}{:>7.2}{:>8.2}{:>7.2}{:>8.2}{:>8.2}\n",
+            r.variant_id,
+            r.gflops,
+            p.gflops,
+            r.ai_l2,
+            p.ai_l2,
+            r.ai_dram,
+            p.ai_dram,
+            r.l2_transactions / 1e12,
+            p.l2_trans_e12,
+            r.dram_transactions / 1e11,
+            p.dram_trans_e11,
+        ));
+    }
+    out
+}
+
+/// Figure 3: roofline plot data (ASCII) + CSV for external plotting.
+pub fn fig3(machine: &str, steps: usize) -> anyhow::Result<(String, String)> {
+    let a = arch::by_name(machine)?;
+    let runs = timing::simulate_all(&a, steps);
+    let data = crate::gpusim::roofline::roofline_data(&a, &runs);
+    let mut text = String::new();
+    text.push_str(&data.ascii_plot(false));
+    text.push('\n');
+    text.push_str(&data.ascii_plot(true));
+    Ok((text, data.csv()))
+}
+
+/// Kendall-tau-style rank agreement between model times and paper times
+/// on one machine: fraction of concordant variant pairs. Used by tests
+/// and EXPERIMENTS.md to quantify "the shape holds".
+pub fn rank_agreement(machine: &str, steps: usize) -> anyhow::Result<f64> {
+    let a = arch::by_name(machine)?;
+    let runs = timing::simulate_all(&a, steps);
+    let sel = |r: &paperdata::Table2Row| -> f64 {
+        match machine.to_ascii_lowercase().as_str() {
+            "v100" => r.v100,
+            "p100" => r.p100,
+            _ => r.nvs510,
+        }
+    };
+    let pairs: Vec<(f64, f64)> = runs
+        .iter()
+        .map(|r| {
+            let p = paperdata::table2_row(r.variant_id).expect("paper row");
+            (r.time_s, sel(p))
+        })
+        .collect();
+    let mut concordant = 0usize;
+    let mut total = 0usize;
+    for i in 0..pairs.len() {
+        for j in i + 1..pairs.len() {
+            total += 1;
+            let model = pairs[i].0 - pairs[j].0;
+            let paper = pairs[i].1 - pairs[j].1;
+            if model * paper > 0.0 {
+                concordant += 1;
+            }
+        }
+    }
+    Ok(concordant as f64 / total as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_renders_three_machines() {
+        let t = table1();
+        assert!(t.contains("V100") && t.contains("P100") && t.contains("NVS510"));
+        assert!(t.contains("sm_70"));
+    }
+
+    #[test]
+    fn table2_has_25_rows_plus_header() {
+        let t = table2(1000);
+        assert_eq!(t.lines().count(), 2 + 25);
+        assert!(t.contains("gmem_8x8x8"));
+    }
+
+    #[test]
+    fn table3_theoretical_matches_paper_exactly() {
+        // the occupancy calculator must reproduce every published value
+        let a = arch::v100();
+        for v in crate::gpusim::kernels::paper_variants() {
+            let p = paperdata::table3_row(v.id).unwrap();
+            let occ = occupancy::occupancy(&a, &v.resources_inner());
+            assert_eq!(
+                occ.active_warps as f64, p.theoretical_warps,
+                "{}: theoretical warps",
+                v.id
+            );
+            assert!((occ.occupancy_pct - p.theoretical_occupancy).abs() < 0.3, "{}", v.id);
+        }
+    }
+
+    #[test]
+    fn table4_renders() {
+        let t = table4(1000);
+        assert_eq!(t.lines().count(), 2 + 25);
+    }
+
+    #[test]
+    fn fig3_produces_plot_and_csv() {
+        let (text, csv) = fig3("v100", 100).unwrap();
+        assert!(text.contains("DRAM roofline"));
+        assert_eq!(csv.lines().count(), 51);
+    }
+
+    #[test]
+    fn rank_agreement_is_meaningful() {
+        // the model must order variant pairs like the paper far more
+        // often than chance on every machine
+        for m in ["v100", "p100", "nvs510"] {
+            let tau = rank_agreement(m, 100).unwrap();
+            assert!(tau > 0.70, "{m}: rank agreement only {tau}");
+        }
+    }
+}

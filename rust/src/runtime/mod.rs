@@ -1,0 +1,244 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client. This is the only module that touches the `xla` crate.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
+//! The Python side lowers with `return_tuple=False` (each step function
+//! returns exactly one array), so outputs come back as a single buffer
+//! with no tuple unwrap; inputs go host->device directly as PjRtBuffers
+//! with no Literal intermediate (see EXPERIMENTS.md §Perf).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::grid::{Dim3, Field3};
+use crate::manifest::Manifest;
+
+/// Per-artifact execution statistics (compile once, execute many).
+#[derive(Clone, Debug, Default)]
+pub struct ExecStats {
+    pub compile_time: Duration,
+    pub calls: u64,
+    pub exec_time: Duration,
+    /// host->device literal preparation + device->host fetch
+    pub transfer_time: Duration,
+}
+
+impl ExecStats {
+    pub fn mean_exec(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.exec_time / self.calls as u32
+        }
+    }
+}
+
+/// The PJRT engine: a CPU client plus a lazily-compiled executable cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<HashMap<String, ExecStats>>,
+}
+
+/// Convert a field to a device literal (f32, row-major (z,y,x)).
+pub fn literal_from_field(f: &Field3) -> anyhow::Result<xla::Literal> {
+    let d = f.dims();
+    let lit = xla::Literal::vec1(f.as_slice());
+    Ok(lit.reshape(&[d.z as i64, d.y as i64, d.x as i64])?)
+}
+
+/// One executable argument: either host data (uploaded per call) or a
+/// resident device buffer (uploaded once via [`Engine::upload`] — used
+/// for run-constant inputs like the velocity model and eta tiles).
+pub enum ExecArg<'a> {
+    Host(&'a Field3),
+    Device(&'a xla::PjRtBuffer),
+}
+
+/// Convert a device literal back to a field with expected dims.
+pub fn field_from_literal(lit: &xla::Literal, dims: Dim3) -> anyhow::Result<Field3> {
+    let data = lit.to_vec::<f32>()?;
+    Field3::from_vec(dims, data)
+}
+
+impl Engine {
+    /// Open the artifact directory and create the PJRT CPU client.
+    /// Compilation is lazy: artifacts compile on first use.
+    pub fn load(artifact_dir: impl AsRef<std::path::Path>) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact now (no-op if cached). Returns compile time.
+    pub fn preload(&self, name: &str) -> anyhow::Result<Duration> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(Duration::ZERO);
+        }
+        let art = self.manifest.get(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            art.file
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 artifact path {:?}", art.file))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let dt = t0.elapsed();
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        self.stats.borrow_mut().entry(name.to_string()).or_default().compile_time = dt;
+        Ok(dt)
+    }
+
+    /// Compile every artifact in the manifest.
+    pub fn preload_all(&self) -> anyhow::Result<Duration> {
+        let names: Vec<String> = self.manifest.names().iter().map(|s| s.to_string()).collect();
+        let mut total = Duration::ZERO;
+        for n in &names {
+            total += self.preload(n)?;
+        }
+        Ok(total)
+    }
+
+    /// Upload a field to a resident device buffer (host->device once;
+    /// pass back via [`ExecArg::Device`] on every subsequent call).
+    pub fn upload(&self, f: &Field3) -> anyhow::Result<xla::PjRtBuffer> {
+        let d = f.dims();
+        Ok(self
+            .client
+            .buffer_from_host_buffer::<f32>(f.as_slice(), &[d.z, d.y, d.x], None)?)
+    }
+
+    /// Execute artifact `name` on the given input fields; returns the
+    /// output field (shape from the manifest). Input shapes are validated
+    /// against the recorded signature before launch.
+    pub fn execute(&self, name: &str, inputs: &[&Field3]) -> anyhow::Result<Field3> {
+        let args: Vec<ExecArg> = inputs.iter().map(|f| ExecArg::Host(f)).collect();
+        self.execute_args(name, &args)
+    }
+
+    /// Execute with a mix of host fields and resident device buffers.
+    pub fn execute_args(&self, name: &str, inputs: &[ExecArg]) -> anyhow::Result<Field3> {
+        Ok(self.execute_args_keep(name, inputs)?.0)
+    }
+
+    /// Like [`execute_args`], but also hands back the output's device
+    /// buffer so the caller can feed it to a later launch without a
+    /// host round-trip (the coordinator's um-recycling optimization).
+    ///
+    /// Fast path: host args go straight to device buffers (no Literal
+    /// intermediate) and the single untupled output is fetched with one
+    /// literal copy.
+    pub fn execute_args_keep(
+        &self,
+        name: &str,
+        inputs: &[ExecArg],
+    ) -> anyhow::Result<(Field3, xla::PjRtBuffer)> {
+        self.preload(name)?;
+        let art = self.manifest.get(name)?;
+        anyhow::ensure!(
+            inputs.len() == art.input_shapes.len(),
+            "{name}: expected {} inputs, got {}",
+            art.input_shapes.len(),
+            inputs.len()
+        );
+        for (a, (pname, want)) in inputs.iter().zip(&art.input_shapes) {
+            if let ExecArg::Host(f) = a {
+                anyhow::ensure!(
+                    f.dims() == *want,
+                    "{name}: input {pname:?} shape {} != expected {want}",
+                    f.dims()
+                );
+            }
+        }
+
+        let t0 = Instant::now();
+        let uploaded: Vec<Option<xla::PjRtBuffer>> = inputs
+            .iter()
+            .map(|a| match a {
+                ExecArg::Host(f) => self.upload(f).map(Some),
+                ExecArg::Device(_) => Ok(None),
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let args: Vec<&xla::PjRtBuffer> = inputs
+            .iter()
+            .zip(&uploaded)
+            .map(|(a, up)| match a {
+                ExecArg::Host(_) => up.as_ref().expect("uploaded above"),
+                ExecArg::Device(b) => *b,
+            })
+            .collect();
+        let t_prep = t0.elapsed();
+
+        let t1 = Instant::now();
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).expect("preloaded above");
+        let mut outputs = exe.execute_b::<&xla::PjRtBuffer>(&args)?;
+        let t_exec = t1.elapsed();
+
+        let t2 = Instant::now();
+        // (copy_raw_to_host is unimplemented on the CPU PJRT client; the
+        // untupled output still saves the tuple unwrap + one copy)
+        let out_buf = outputs[0].remove(0);
+        let lit = out_buf.to_literal_sync()?;
+        let field = field_from_literal(&lit, art.output_shape)?;
+        let t_fetch = t2.elapsed();
+
+        let mut stats = self.stats.borrow_mut();
+        let s = stats.entry(name.to_string()).or_default();
+        s.calls += 1;
+        s.exec_time += t_exec;
+        s.transfer_time += t_prep + t_fetch;
+        Ok((field, out_buf))
+    }
+
+    /// Snapshot of per-artifact statistics.
+    pub fn stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<(String, ExecStats)> =
+            self.stats.borrow().iter().map(|(k, s)| (k.clone(), s.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    /// Total executable launches so far (the coordinator's "kernel launch"
+    /// counter — 7 per step in decomposed mode).
+    pub fn total_calls(&self) -> u64 {
+        self.stats.borrow().values().map(|s| s.calls).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let f = Field3::from_fn(Dim3::new(2, 3, 4), |z, y, x| (z * 12 + y * 4 + x) as f32);
+        let lit = literal_from_field(&f).unwrap();
+        let g = field_from_literal(&lit, f.dims()).unwrap();
+        assert_eq!(f, g);
+    }
+
+    #[test]
+    fn field_from_literal_rejects_wrong_dims() {
+        let f = Field3::zeros(Dim3::new(2, 2, 2));
+        let lit = literal_from_field(&f).unwrap();
+        assert!(field_from_literal(&lit, Dim3::new(3, 3, 3)).is_err());
+    }
+}

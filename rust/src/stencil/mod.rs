@@ -1,0 +1,251 @@
+//! Pure-Rust golden stencils: the CPU reference implementation of the
+//! same numerics as `python/compile/common.py` / `kernels/ref.py`.
+//!
+//! Used (a) to validate PJRT executable outputs end-to-end, (b) as the
+//! `Backend::Golden` propagator when artifacts are unavailable, and
+//! (c) as the CPU baseline in benches. Arithmetic *ordering* mirrors the
+//! jnp reference so f32 results agree to a few ULP.
+
+mod golden;
+
+pub use golden::GoldenPropagator;
+
+use crate::grid::{Dim3, Field3};
+use crate::{R, R_ETA};
+
+/// 8th-order per-axis second-derivative coefficients (center, +-1..+-4).
+pub const C8: [f32; 5] = [
+    -205.0 / 72.0,
+    8.0 / 5.0,
+    -1.0 / 5.0,
+    8.0 / 315.0,
+    -1.0 / 560.0,
+];
+
+/// 2nd-order coefficients (center, +-1).
+pub const C2: [f32; 2] = [-2.0, 1.0];
+
+/// Largest stable leapfrog dt (mirrors `compile.common.cfl_dt`).
+pub fn cfl_dt(h: f64, v_max: f64) -> f64 {
+    let s: f64 = C8[0].abs() as f64 + 2.0 * C8[1..].iter().map(|c| c.abs() as f64).sum::<f64>();
+    0.9 * 2.0 * h / (v_max * (3.0 * s).sqrt())
+}
+
+/// 25-point 8th-order Laplacian of an R-padded tile -> interior shape.
+pub fn lap8(t: &Field3, h: f64) -> Field3 {
+    let p = t.dims();
+    let s = Dim3::new(p.z - 2 * R, p.y - 2 * R, p.x - 2 * R);
+    let inv_h2 = (1.0 / (h * h)) as f32;
+    let mut out = Field3::zeros(s);
+    for z in 0..s.z {
+        for y in 0..s.y {
+            for x in 0..s.x {
+                let (cz, cy, cx) = (z + R, y + R, x + R);
+                // Mirror jnp ordering: 3*c0*core, then per-m (z+,z-,y+,y-,x+,x-).
+                let mut acc = 3.0 * C8[0] * t.get(cz, cy, cx);
+                for m in 1..=R {
+                    acc += C8[m]
+                        * (t.get(cz + m, cy, cx)
+                            + t.get(cz - m, cy, cx)
+                            + t.get(cz, cy + m, cx)
+                            + t.get(cz, cy - m, cx)
+                            + t.get(cz, cy, cx + m)
+                            + t.get(cz, cy, cx - m));
+                }
+                out.set(z, y, x, acc * inv_h2);
+            }
+        }
+    }
+    out
+}
+
+/// 7-point 2nd-order Laplacian of a 1-padded tile -> interior shape.
+pub fn lap2(t: &Field3, h: f64) -> Field3 {
+    let p = t.dims();
+    let s = Dim3::new(p.z - 2, p.y - 2, p.x - 2);
+    let inv_h2 = (1.0 / (h * h)) as f32;
+    let mut out = Field3::zeros(s);
+    for z in 0..s.z {
+        for y in 0..s.y {
+            for x in 0..s.x {
+                let (cz, cy, cx) = (z + 1, y + 1, x + 1);
+                let acc = 3.0 * C2[0] * t.get(cz, cy, cx)
+                    + (t.get(cz + 1, cy, cx)
+                        + t.get(cz - 1, cy, cx)
+                        + t.get(cz, cy + 1, cx)
+                        + t.get(cz, cy - 1, cx)
+                        + t.get(cz, cy, cx + 1)
+                        + t.get(cz, cy, cx - 1));
+                out.set(z, y, x, acc * inv_h2);
+            }
+        }
+    }
+    out
+}
+
+/// 7-point star average of eta over a 1-padded tile -> interior shape.
+pub fn eta_bar(t: &Field3) -> Field3 {
+    let p = t.dims();
+    let s = Dim3::new(p.z - 2, p.y - 2, p.x - 2);
+    let mut out = Field3::zeros(s);
+    for z in 0..s.z {
+        for y in 0..s.y {
+            for x in 0..s.x {
+                let (cz, cy, cx) = (z + 1, y + 1, x + 1);
+                let acc = t.get(cz, cy, cx)
+                    + t.get(cz + 1, cy, cx)
+                    + t.get(cz - 1, cy, cx)
+                    + t.get(cz, cy + 1, cx)
+                    + t.get(cz, cy - 1, cx)
+                    + t.get(cz, cy, cx + 1)
+                    + t.get(cz, cy, cx - 1);
+                out.set(z, y, x, acc / 7.0);
+            }
+        }
+    }
+    out
+}
+
+/// Leapfrog update for an inner-region tile: u+ = 2u - um + dt^2 v^2 lap8(u).
+pub fn step_inner(u_pad: &Field3, um: &Field3, v: &Field3, dt: f64, h: f64) -> Field3 {
+    let lap = lap8(u_pad, h);
+    let s = lap.dims();
+    assert_eq!(um.dims(), s);
+    assert_eq!(v.dims(), s);
+    let dt2 = (dt * dt) as f32;
+    let mut out = Field3::zeros(s);
+    for z in 0..s.z {
+        for y in 0..s.y {
+            for x in 0..s.x {
+                let core = u_pad.get(z + R, y + R, x + R);
+                let vv = v.get(z, y, x);
+                let val = 2.0 * core - um.get(z, y, x) + dt2 * vv * vv * lap.get(z, y, x);
+                out.set(z, y, x, val);
+            }
+        }
+    }
+    out
+}
+
+/// Damped PML update:
+/// u+ = [2u - (1 - eta_bar dt) um + dt^2 v^2 lap2(u)] / (1 + eta_bar dt).
+pub fn step_pml(
+    u_pad1: &Field3,
+    um: &Field3,
+    v: &Field3,
+    eta_pad1: &Field3,
+    dt: f64,
+    h: f64,
+) -> Field3 {
+    let lap = lap2(u_pad1, h);
+    let eb = eta_bar(eta_pad1);
+    let s = lap.dims();
+    assert_eq!(um.dims(), s);
+    assert_eq!(v.dims(), s);
+    let dt2 = (dt * dt) as f32;
+    let dt_f = dt as f32;
+    let mut out = Field3::zeros(s);
+    for z in 0..s.z {
+        for y in 0..s.y {
+            for x in 0..s.x {
+                let core = u_pad1.get(z + R_ETA, y + R_ETA, x + R_ETA);
+                let ed = eb.get(z, y, x) * dt_f;
+                let vv = v.get(z, y, x);
+                let num =
+                    2.0 * core - (1.0 - ed) * um.get(z, y, x) + dt2 * vv * vv * lap.get(z, y, x);
+                out.set(z, y, x, num / (1.0 + ed));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{Dim3, Field3};
+
+    #[test]
+    fn coefficients_annihilate_constants() {
+        let s: f32 = C8[0] + 2.0 * C8[1..].iter().sum::<f32>();
+        assert!(s.abs() < 1e-6);
+    }
+
+    #[test]
+    fn lap8_constant_is_zero() {
+        let t = Field3::full(Dim3::new(12, 12, 12), 7.5);
+        let l = lap8(&t, 10.0);
+        assert!(l.max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn lap8_quadratic_exact() {
+        // u = 3z^2 + 2y^2 + x^2 -> lap = 12.
+        let h = 2.0f64;
+        let t = Field3::from_fn(Dim3::new(14, 13, 12), |z, y, x| {
+            let (zf, yf, xf) = (z as f64 * h, y as f64 * h, x as f64 * h);
+            (3.0 * zf * zf + 2.0 * yf * yf + xf * xf) as f32
+        });
+        let l = lap8(&t, h);
+        let d = l.dims();
+        for z in 0..d.z {
+            for y in 0..d.y {
+                for x in 0..d.x {
+                    assert!((l.get(z, y, x) - 12.0).abs() < 2e-3, "{}", l.get(z, y, x));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lap2_quadratic_exact() {
+        let t = Field3::from_fn(Dim3::new(8, 7, 6), |z, y, x| {
+            ((z * z + y * y + x * x) as f32) * 1.0
+        });
+        let l = lap2(&t, 1.0);
+        assert!((l.get(0, 0, 0) - 6.0).abs() < 1e-3);
+        assert!((l.get(5, 4, 3) - 6.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn eta_bar_point_source() {
+        let mut t = Field3::zeros(Dim3::new(3, 3, 3));
+        t.set(1, 1, 1, 7.0);
+        let eb = eta_bar(&t);
+        assert_eq!(eb.dims(), Dim3::new(1, 1, 1));
+        assert!((eb.get(0, 0, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn inner_step_leapfrog_identity_when_flat() {
+        // constant field => lap == 0 => u+ = 2u - um
+        let u = Field3::full(Dim3::new(10, 10, 10), 3.0);
+        let um = Field3::full(Dim3::new(2, 2, 2), 1.0);
+        let v = Field3::full(Dim3::new(2, 2, 2), 2000.0);
+        let out = step_inner(&u, &um, &v, 1e-3, 10.0);
+        for &val in out.as_slice() {
+            assert!((val - 5.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn pml_step_damps() {
+        let u = Field3::full(Dim3::new(4, 4, 4), 1.0);
+        let um = Field3::full(Dim3::new(2, 2, 2), 1.0);
+        let v = Field3::full(Dim3::new(2, 2, 2), 2000.0);
+        let eta0 = Field3::zeros(Dim3::new(4, 4, 4));
+        let eta1 = Field3::full(Dim3::new(4, 4, 4), 100.0);
+        let a = step_pml(&u, &um, &v, &eta0, 1e-3, 10.0);
+        let b = step_pml(&u, &um, &v, &eta1, 1e-3, 10.0);
+        for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+            assert!(y.abs() <= x.abs() + 1e-6);
+        }
+    }
+
+    #[test]
+    fn cfl_is_tighter_than_second_order() {
+        let dt = cfl_dt(10.0, 3000.0);
+        assert!(dt > 0.0);
+        assert!(dt < 10.0 / (3000.0 * 3.0f64.sqrt()));
+    }
+}

@@ -1,0 +1,137 @@
+//! Property-testing helpers (substrate — no `proptest` in the offline
+//! crate set): a fast deterministic RNG plus shrink-free random-case
+//! runners used by the `rust/tests/proptests.rs` suite.
+
+use crate::grid::{Dim3, Field3};
+
+/// xorshift64* — deterministic, seedable, good enough for test-case
+/// generation (NOT cryptographic).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + (self.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    /// Standard-normal-ish value (sum of uniforms; adequate for tests).
+    pub fn normal(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            s += self.f32();
+        }
+        s - 6.0
+    }
+
+    /// Pick one element.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.range(0, items.len() - 1)]
+    }
+
+    /// Random field with normal-ish entries.
+    pub fn field(&mut self, dims: Dim3) -> Field3 {
+        Field3::from_fn(dims, |_, _, _| self.normal())
+    }
+
+    /// Random positive field in [lo, hi).
+    pub fn field_in(&mut self, dims: Dim3, lo: f32, hi: f32) -> Field3 {
+        Field3::from_fn(dims, |_, _, _| self.range_f32(lo, hi))
+    }
+}
+
+/// Run `f` for `cases` seeded cases; panics with the failing seed so the
+/// case can be replayed exactly.
+pub fn check(name: &str, cases: usize, mut f: impl FnMut(&mut Rng)) {
+    let base = 0x5EED_0000u64;
+    for i in 0..cases {
+        let seed = base + i as u64;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed on case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_respects_bounds() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let v = r.range(3, 9);
+            assert!((3..=9).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_is_roughly_centered() {
+        let mut r = Rng::new(11);
+        let mean: f32 = (0..4000).map(|_| r.normal()).sum::<f32>() / 4000.0;
+        assert!(mean.abs() < 0.2, "{mean}");
+    }
+
+    #[test]
+    fn field_has_right_dims() {
+        let mut r = Rng::new(3);
+        let f = r.field(Dim3::new(2, 3, 4));
+        assert_eq!(f.dims(), Dim3::new(2, 3, 4));
+        let g = r.field_in(Dim3::new(2, 2, 2), 1.0, 2.0);
+        assert!(g.as_slice().iter().all(|&v| (1.0..2.0).contains(&v)));
+    }
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("counter", 17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+}

@@ -1,0 +1,181 @@
+//! Wave-physics substrate: velocity models, source wavelets, and the PML
+//! damping profile. Mirrors `python/tests/test_physics.py::eta_profile`
+//! and the constants in DESIGN.md §5.
+
+use crate::grid::{Dim3, Domain, Field3};
+
+/// Velocity models used by the examples and benches.
+#[derive(Clone, Debug)]
+pub enum VelocityModel {
+    /// Homogeneous medium.
+    Constant(f32),
+    /// Horizontally layered medium: (top_z_fraction, velocity) pairs,
+    /// sorted by depth; each layer extends to the next boundary.
+    Layered(Vec<(f64, f32)>),
+    /// Linear velocity gradient with depth: v(z) = v0 + k * z * h.
+    GradientZ { v0: f32, k_per_m: f32, h: f64 },
+}
+
+impl VelocityModel {
+    /// Materialize onto an interior grid.
+    pub fn build(&self, interior: Dim3) -> Field3 {
+        match self {
+            VelocityModel::Constant(v) => Field3::full(interior, *v),
+            VelocityModel::Layered(layers) => {
+                assert!(!layers.is_empty(), "layered model needs at least one layer");
+                Field3::from_fn(interior, |z, _, _| {
+                    let frac = z as f64 / interior.z.max(1) as f64;
+                    let mut v = layers[0].1;
+                    for &(top, vel) in layers {
+                        if frac >= top {
+                            v = vel;
+                        }
+                    }
+                    v
+                })
+            }
+            VelocityModel::GradientZ { v0, k_per_m, h } => {
+                Field3::from_fn(interior, |z, _, _| v0 + k_per_m * (z as f64 * h) as f32)
+            }
+        }
+    }
+
+    /// Maximum velocity (for CFL / eta_max).
+    pub fn v_max(&self) -> f32 {
+        match self {
+            VelocityModel::Constant(v) => *v,
+            VelocityModel::Layered(layers) => {
+                layers.iter().map(|&(_, v)| v).fold(0.0f32, f32::max)
+            }
+            VelocityModel::GradientZ { v0, k_per_m, .. } => {
+                // caller materializes on a finite grid; bound with a generous depth
+                v0 + k_per_m * 1.0e4
+            }
+        }
+    }
+}
+
+/// Ricker wavelet with peak frequency `f0`, delayed so it starts near 0.
+pub fn ricker(t: f64, f0: f64) -> f64 {
+    let a = (std::f64::consts::PI * f0 * (t - 1.2 / f0)).powi(2);
+    (1.0 - 2.0 * a) * (-a).exp()
+}
+
+/// Quadratic PML damping ramp (DESIGN.md §5):
+/// eta(d) = eta_max ((W-d)/W)^2 within the sponge, 0 in the inner region,
+/// eta_max = 3 v_max ln(1/Rc) / (2 W h), Rc = 1e-3. Per-axis ramps are
+/// combined with max(), mirroring the Python profile exactly.
+pub fn eta_profile(domain: &Domain, v_max: f64) -> Field3 {
+    let w = domain.pml_width;
+    let eta_max = 3.0 * v_max * (1000.0f64).ln() / (2.0 * w as f64 * domain.h);
+    let n = domain.interior;
+    let ramp = |i: usize, len: usize| -> f64 {
+        let d = (i.min(len - 1 - i)) as f64; // distance to nearest face
+        if d < w as f64 {
+            let r = (w as f64 - d) / w as f64;
+            r * r
+        } else {
+            0.0
+        }
+    };
+    Field3::from_fn(n, |z, y, x| {
+        let r = ramp(z, n.z).max(ramp(y, n.y)).max(ramp(x, n.x));
+        (eta_max * r) as f32
+    })
+}
+
+/// Source descriptor: an interior grid position + Ricker parameters.
+#[derive(Copy, Clone, Debug)]
+pub struct Source {
+    pub pos: Dim3,
+    pub f0: f64,
+    pub amplitude: f64,
+}
+
+impl Source {
+    /// Injection amplitude at step n (the coordinator adds this to u+):
+    /// dt^2 v(src)^2 amplitude ricker(n dt).
+    pub fn amp_at(&self, n: usize, dt: f64, v_at_src: f32) -> f32 {
+        let w = ricker(n as f64 * dt, self.f0);
+        (dt * dt * (v_at_src as f64) * (v_at_src as f64) * self.amplitude * w) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn domain() -> Domain {
+        Domain::new(Dim3::new(36, 36, 36), 6, 10.0, 1e-3).unwrap()
+    }
+
+    #[test]
+    fn constant_model() {
+        let v = VelocityModel::Constant(2500.0).build(Dim3::new(4, 4, 4));
+        assert!(v.as_slice().iter().all(|&x| x == 2500.0));
+        assert_eq!(VelocityModel::Constant(2500.0).v_max(), 2500.0);
+    }
+
+    #[test]
+    fn layered_model_monotone_depth() {
+        let m = VelocityModel::Layered(vec![(0.0, 1500.0), (0.4, 2500.0), (0.8, 4000.0)]);
+        let v = m.build(Dim3::new(10, 2, 2));
+        assert_eq!(v.get(0, 0, 0), 1500.0);
+        assert_eq!(v.get(5, 0, 0), 2500.0);
+        assert_eq!(v.get(9, 0, 0), 4000.0);
+        assert_eq!(m.v_max(), 4000.0);
+    }
+
+    #[test]
+    fn gradient_model() {
+        let m = VelocityModel::GradientZ { v0: 1500.0, k_per_m: 0.5, h: 10.0 };
+        let v = m.build(Dim3::new(5, 1, 1));
+        assert_eq!(v.get(0, 0, 0), 1500.0);
+        assert_eq!(v.get(4, 0, 0), 1500.0 + 0.5 * 40.0);
+    }
+
+    #[test]
+    fn ricker_peaks_near_delay() {
+        let f0 = 15.0;
+        let t_peak = 1.2 / f0;
+        assert!((ricker(t_peak, f0) - 1.0).abs() < 1e-9);
+        assert!(ricker(0.0, f0).abs() < 0.01);
+        assert!(ricker(10.0, f0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eta_profile_zero_inside_positive_on_shell() {
+        let d = domain();
+        let eta = eta_profile(&d, 2000.0);
+        let w = d.pml_width;
+        // strictly inside: zero
+        for z in w..d.interior.z - w {
+            assert_eq!(eta.get(z, d.interior.y / 2, d.interior.x / 2), 0.0);
+        }
+        // faces: positive, maximal at the outer face
+        assert!(eta.get(0, 18, 18) > eta.get(w - 1, 18, 18));
+        assert!(eta.get(0, 18, 18) > 0.0);
+        assert!(eta.get(18, 0, 18) > 0.0);
+        assert!(eta.get(18, 18, d.interior.x - 1) > 0.0);
+    }
+
+    #[test]
+    fn eta_profile_matches_python_formula() {
+        let d = domain();
+        let eta = eta_profile(&d, 2000.0);
+        let eta_max = 3.0 * 2000.0 * (1000.0f64).ln() / (2.0 * 6.0 * 10.0);
+        // corner-most cell has d=0 -> full eta_max
+        assert!((eta.get(0, 0, 0) as f64 - eta_max).abs() / eta_max < 1e-6);
+        // one cell in: ((6-1)/6)^2 * eta_max along a single axis
+        let want = eta_max * (5.0f64 / 6.0).powi(2);
+        assert!((eta.get(1, 18, 18) as f64 - want).abs() / want < 1e-6);
+    }
+
+    #[test]
+    fn source_amplitude_scales() {
+        let s = Source { pos: Dim3::new(1, 1, 1), f0: 15.0, amplitude: 1.0 };
+        let a = s.amp_at(10, 1e-3, 2000.0);
+        let b = s.amp_at(10, 1e-3, 4000.0);
+        assert!((b / a - 4.0).abs() < 1e-3); // quadratic in v
+    }
+}

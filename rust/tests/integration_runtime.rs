@@ -1,0 +1,155 @@
+//! Integration: PJRT runtime over the real AOT artifacts.
+//!
+//! Requires `make artifacts` (skips with a message otherwise — the
+//! Makefile `test` target guarantees them).
+
+use hostencil::grid::{Dim3, Field3};
+use hostencil::runtime::Engine;
+use hostencil::stencil;
+use hostencil::testkit::Rng;
+use hostencil::R;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Engine::load("artifacts").expect("engine loads"))
+}
+
+#[test]
+fn manifest_covers_expected_artifact_set() {
+    let Some(eng) = engine() else { return };
+    let m = eng.manifest();
+    for v in ["gmem", "smem_u", "semi", "st_smem", "st_reg_shft", "st_reg_fixed"] {
+        assert!(m.get(&format!("inner_{v}")).is_ok(), "inner_{v}");
+    }
+    for cls in ["top_bottom", "front_back", "left_right"] {
+        for v in ["gmem", "smem_eta_1", "smem_eta_3"] {
+            assert!(m.get(&format!("pml_{cls}_{v}")).is_ok(), "pml_{cls}_{v}");
+        }
+    }
+    assert!(m.get("monolithic").is_ok());
+    assert!(m.get("fused").is_ok());
+}
+
+#[test]
+fn every_inner_artifact_matches_rust_golden_stencil() {
+    let Some(eng) = engine() else { return };
+    let m = eng.manifest().clone();
+    let domain = m.domain;
+    let inner = domain.inner();
+    let mut rng = Rng::new(0xFEED);
+    let u_pad = rng.field(inner.padded(R));
+    let um = rng.field(inner);
+    let v = rng.field_in(inner, 1500.0, 3000.0);
+    let want = stencil::step_inner(&u_pad, &um, &v, domain.dt, domain.h);
+
+    for variant in m.inner_variants() {
+        let got = eng
+            .execute(&format!("inner_{variant}"), &[&u_pad, &um, &v])
+            .unwrap_or_else(|e| panic!("{variant}: {e}"));
+        let d = got.max_abs_diff(&want);
+        let rel = d / want.max_abs().max(1e-30);
+        assert!(rel < 5e-5, "inner_{variant} diverges: rel {rel}");
+    }
+}
+
+#[test]
+fn every_pml_artifact_matches_rust_golden_stencil() {
+    let Some(eng) = engine() else { return };
+    let m = eng.manifest().clone();
+    let domain = m.domain;
+    let mut rng = Rng::new(0xBEEF);
+    for art in m.artifacts.iter().filter(|a| a.kind == "pml") {
+        let shape = art.output_shape;
+        let pad1 = shape.padded(1);
+        let u = rng.field(pad1);
+        let um = rng.field(shape);
+        let v = rng.field_in(shape, 1500.0, 3000.0);
+        let eta = rng.field_in(pad1, 0.0, 300.0);
+        let want = stencil::step_pml(&u, &um, &v, &eta, domain.dt, domain.h);
+        let got = eng.execute(&art.name, &[&u, &um, &v, &eta]).expect(&art.name);
+        let d = got.max_abs_diff(&want);
+        let rel = d / want.max_abs().max(1e-30);
+        assert!(rel < 5e-5, "{} diverges: rel {rel}", art.name);
+    }
+}
+
+#[test]
+fn monolithic_and_fused_match_composed_golden() {
+    let Some(eng) = engine() else { return };
+    let domain = eng.manifest().domain;
+    let n = domain.interior;
+    let mut rng = Rng::new(0xCAFE);
+    // interior data embedded in zero ghost (the coordinator invariant)
+    let u_pad = rng.field(n).pad(R);
+    let um = rng.field(n);
+    let v = rng.field_in(n, 1500.0, 3000.0);
+    let eta_pad = rng.field_in(n, 0.0, 200.0).pad(R);
+
+    let got = eng.execute("monolithic", &[&u_pad, &um, &v, &eta_pad]).unwrap();
+    let fused = eng.execute("fused", &[&u_pad, &um, &v, &eta_pad]).unwrap();
+
+    // golden decomposed
+    let mut want = Field3::zeros(n);
+    for reg in hostencil::grid::decompose(&domain) {
+        let um_t = um.extract(reg.offset, reg.shape);
+        let v_t = v.extract(reg.offset, reg.shape);
+        let tile = if reg.class.is_pml() {
+            let u_t = u_pad.extract_padded_region(R, reg.offset, reg.shape, 1);
+            let e_t = eta_pad.extract_padded_region(R, reg.offset, reg.shape, 1);
+            stencil::step_pml(&u_t, &um_t, &v_t, &e_t, domain.dt, domain.h)
+        } else {
+            let u_t = u_pad.extract_padded_region(R, reg.offset, reg.shape, R);
+            stencil::step_inner(&u_t, &um_t, &v_t, domain.dt, domain.h)
+        };
+        want.scatter(reg.offset, &tile);
+    }
+    let scale = want.max_abs().max(1e-30);
+    assert!(got.max_abs_diff(&want) / scale < 5e-5, "monolithic vs golden");
+    assert!(fused.max_abs_diff(&want) / scale < 5e-5, "fused vs golden");
+}
+
+#[test]
+fn execute_rejects_wrong_shapes_and_arity() {
+    let Some(eng) = engine() else { return };
+    let domain = eng.manifest().domain;
+    let inner = domain.inner();
+    let bad = Field3::zeros(Dim3::new(2, 2, 2));
+    assert!(eng.execute("inner_gmem", &[&bad, &bad, &bad]).is_err());
+    let ok_pad = Field3::zeros(inner.padded(R));
+    assert!(eng.execute("inner_gmem", &[&ok_pad]).is_err());
+    assert!(eng.execute("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn engine_stats_accumulate() {
+    let Some(eng) = engine() else { return };
+    let domain = eng.manifest().domain;
+    let inner = domain.inner();
+    let u_pad = Field3::zeros(inner.padded(R));
+    let um = Field3::zeros(inner);
+    let v = Field3::full(inner, 2000.0);
+    let before = eng.total_calls();
+    for _ in 0..3 {
+        eng.execute("inner_gmem", &[&u_pad, &um, &v]).unwrap();
+    }
+    assert_eq!(eng.total_calls(), before + 3);
+    let stats = eng.stats();
+    let s = stats.iter().find(|(n, _)| n == "inner_gmem").unwrap();
+    assert!(s.1.calls >= 3);
+    assert!(s.1.exec_time > std::time::Duration::ZERO);
+}
+
+#[test]
+fn zero_wavefield_stays_zero_through_pjrt() {
+    let Some(eng) = engine() else { return };
+    let domain = eng.manifest().domain;
+    let inner = domain.inner();
+    let u_pad = Field3::zeros(inner.padded(R));
+    let um = Field3::zeros(inner);
+    let v = Field3::full(inner, 2500.0);
+    let out = eng.execute("inner_gmem", &[&u_pad, &um, &v]).unwrap();
+    assert_eq!(out.max_abs(), 0.0);
+}
