@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         (0.75, 3000.0), // salt  (v_max sets the CFL and eta_max)
     ]);
     let v = model.build(n);
-    let eta = wave::eta_profile(&domain, model.v_max() as f64);
+    let eta = wave::eta_profile(&domain, model.v_max_on(n) as f64);
 
     // --- acquisition geometry -----------------------------------------
     let w = domain.pml_width;

@@ -1,0 +1,56 @@
+//! Scenario gauntlet: run the whole named-scenario catalogue on the
+//! pure-Rust golden backend (no AOT artifacts needed), print each
+//! verdict with its criteria, then fan the scenario x variant matrix
+//! out as a quick campaign on one machine.
+//!
+//!     cargo run --release --example scenario_gauntlet [machine]
+
+use hostencil::report;
+use hostencil::scenario::campaign::{run_campaign, CampaignSpec};
+use hostencil::scenario::{run_scenario, RunnerOptions, ScenarioId};
+
+fn main() -> anyhow::Result<()> {
+    let machine = std::env::args().nth(1).unwrap_or_else(|| "v100".to_string());
+
+    // 1. every scenario, sequentially, with full criterion detail
+    println!("=== scenario gauntlet (golden backend) ===");
+    let mut unexpected = 0;
+    for id in ScenarioId::all() {
+        let run = run_scenario(id, &RunnerOptions::default())?;
+        let ok = run.as_expected();
+        println!(
+            "\n{} — {} (expected {}){}",
+            id.name(),
+            run.result.overall.name(),
+            id.expected_verdict().name(),
+            if ok { "" } else { "  <-- UNEXPECTED" }
+        );
+        println!("  {}", id.describe());
+        for c in run.result.failed() {
+            println!("  FAIL {:<22} {}", c.name, c.detail);
+        }
+        println!(
+            "  {} steps, peak |u| {:.3e}, leakage {:.3}, {:.1} ms",
+            run.metrics.steps_completed,
+            run.metrics.peak_abs,
+            run.metrics.boundary_leakage,
+            run.metrics.wall_ms
+        );
+        if !ok {
+            unexpected += 1;
+        }
+    }
+
+    // 2. the same catalogue as a parallel campaign on one machine
+    println!("\n=== quick campaign on {machine} ===");
+    let spec = CampaignSpec {
+        steps_scale: Some(0.5),
+        ..CampaignSpec::full(vec![machine])
+    };
+    let report = run_campaign(&spec);
+    print!("{}", report::campaign_table(&report));
+
+    anyhow::ensure!(unexpected == 0, "{unexpected} scenario(s) off-catalogue");
+    anyhow::ensure!(report.off_expectation_count() == 0, "campaign deviated from the catalogue");
+    Ok(())
+}

@@ -172,7 +172,8 @@ impl RunConfig {
             other => anyhow::bail!("[model] type: unknown {other:?}"),
         };
 
-        let v_max = model.v_max() as f64;
+        // CFL from the velocity the grid will actually materialize
+        let v_max = model.v_max_on(Dim3::new(nz, ny, nx)) as f64;
         let dt_default = (stencil::cfl_dt(h, v_max) * 1e6).floor() / 1e6;
         let dt = t.f64_or("domain", "dt", dt_default)?;
         let domain = Domain::new(Dim3::new(nz, ny, nx), pml, h, dt)?;

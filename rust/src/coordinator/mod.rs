@@ -49,9 +49,38 @@ impl Mode {
     }
 }
 
+/// Hook called after every completed time step of an observed run
+/// (`Coordinator::run_observed`). Observers see the `R`-ghost-padded
+/// wavefield at step n+1 — the ghost ring is zero by construction, so
+/// padded aggregates (energy, max|u|) equal interior aggregates —
+/// plus the step's already-computed interior energy (the coordinator
+/// logs it anyway; passing it avoids a redundant full-field pass per
+/// step). The scenario metrics collector is the canonical implementor.
+pub trait StepObserver {
+    fn on_step(&mut self, step: usize, u_pad: &Field3, energy: f64);
+}
+
+/// Options for [`Coordinator::run_observed`].
+#[derive(Copy, Clone, Debug)]
+pub struct RunOptions {
+    /// When true (the `run` default), a NaN/Inf wavefield aborts the run
+    /// with an error. Scenario stress runs set false: the run stops
+    /// stepping (NaN only spreads) but returns a summary so the metrics
+    /// collector can report *where* the field blew up.
+    pub halt_on_non_finite: bool,
+}
+
+impl Default for RunOptions {
+    fn default() -> Self {
+        RunOptions { halt_on_non_finite: true }
+    }
+}
+
 /// Summary of a completed run.
 #[derive(Clone, Debug)]
 pub struct RunSummary {
+    /// Steps actually completed (short of the request only when a
+    /// non-halting observed run hit a non-finite wavefield).
     pub steps: usize,
     pub wall: Duration,
     pub launches: u64,
@@ -93,8 +122,9 @@ pub struct Coordinator<'e> {
     /// extract their interior tiles from it directly, and the buffers
     /// rotate by move — no pad/unpad copies on the hot path)
     um_pad: Field3,
-    source: Source,
-    v_at_src: f32,
+    /// Injection sources with the velocity sampled at each position
+    /// (primary source from the constructor + any `add_source` extras).
+    sources: Vec<(Source, f32)>,
     receivers: Vec<Dim3>,
     traces: Vec<Vec<f32>>,
     energy_log: Vec<f64>,
@@ -155,6 +185,7 @@ impl<'e> Coordinator<'e> {
         }
 
         let v_at_src = v.get(source.pos.z, source.pos.y, source.pos.x);
+        let sources = vec![(source, v_at_src)];
         let n_recv = receivers.len();
         let eta_pad = eta.pad(R);
         let region_tiles = regions
@@ -188,8 +219,7 @@ impl<'e> Coordinator<'e> {
             v,
             u_pad: Field3::zeros(domain.padded()),
             um_pad: Field3::zeros(domain.padded()),
-            source,
-            v_at_src,
+            sources,
             receivers,
             traces: vec![Vec::new(); n_recv],
             energy_log: Vec::new(),
@@ -279,8 +309,10 @@ impl<'e> Coordinator<'e> {
             Mode::Fused => self.step_full("fused")?,
             Mode::Golden => self.step_golden(),
         };
-        let amp = self.source.amp_at(self.steps_done, self.domain.dt, self.v_at_src);
-        un.add(R + self.source.pos.z, R + self.source.pos.y, R + self.source.pos.x, amp);
+        for (src, v_at) in &self.sources {
+            let amp = src.amp_at(self.steps_done, self.domain.dt, *v_at);
+            un.add(R + src.pos.z, R + src.pos.y, R + src.pos.x, amp);
+        }
 
         for (i, r) in self.receivers.iter().enumerate() {
             self.traces[i].push(un.get(R + r.z, R + r.y, R + r.x));
@@ -294,29 +326,71 @@ impl<'e> Coordinator<'e> {
         Ok(())
     }
 
+    /// Register an additional injection source (multi-source scenarios:
+    /// interference patterns, simultaneous-shot stress). The primary
+    /// source from the constructor is always present.
+    pub fn add_source(&mut self, source: Source) -> anyhow::Result<()> {
+        let n = self.domain.interior;
+        anyhow::ensure!(
+            source.pos.z < n.z && source.pos.y < n.y && source.pos.x < n.x,
+            "source {} outside interior {}",
+            source.pos,
+            n
+        );
+        let v_at = self.v.get(source.pos.z, source.pos.y, source.pos.x);
+        self.sources.push((source, v_at));
+        Ok(())
+    }
+
     /// Run `steps` more steps, returning a summary.
     pub fn run(&mut self, steps: usize) -> anyhow::Result<RunSummary> {
+        self.run_observed(steps, RunOptions::default(), None)
+    }
+
+    /// Run `steps` more steps with an optional per-step observer. With
+    /// `halt_on_non_finite` cleared, a blown-up wavefield ends the loop
+    /// early (the summary's `steps` reports how far it got) instead of
+    /// erroring — scenario stress runs rely on this to collect metrics
+    /// from deliberately unstable configurations.
+    pub fn run_observed(
+        &mut self,
+        steps: usize,
+        opts: RunOptions,
+        mut observer: Option<&mut dyn StepObserver>,
+    ) -> anyhow::Result<RunSummary> {
         let t0 = Instant::now();
+        let mut done = 0;
         for _ in 0..steps {
             self.step()?;
-            let u = self.wavefield();
-            anyhow::ensure!(
-                !u.has_non_finite(),
-                "wavefield blew up at step {} (CFL violation? dt={}, h={})",
-                self.steps_done,
-                self.domain.dt,
-                self.domain.h
-            );
+            done += 1;
+            // step() just logged this step's energy; a finite f32 field
+            // always sums to a finite f64, so a non-finite energy is an
+            // exact (and O(1)-here) proxy for a non-finite wavefield.
+            let energy = self.energy_log.last().copied().unwrap_or(0.0);
+            if let Some(obs) = observer.as_deref_mut() {
+                obs.on_step(self.steps_done, &self.u_pad, energy);
+            }
+            if !energy.is_finite() {
+                anyhow::ensure!(
+                    !opts.halt_on_non_finite,
+                    "wavefield blew up at step {} (CFL violation? dt={}, h={})",
+                    self.steps_done,
+                    self.domain.dt,
+                    self.domain.h
+                );
+                // NaN/Inf only spreads from here; stop stepping.
+                break;
+            }
         }
         let wall = t0.elapsed();
         let u = self.wavefield();
         Ok(RunSummary {
-            steps,
+            steps: done,
             wall,
             launches: self.launches,
             final_max_abs: u.max_abs(),
             final_energy: u.energy(),
-            points_per_sec: (self.domain.interior.volume() * steps) as f64
+            points_per_sec: (self.domain.interior.volume() * done) as f64
                 / wall.as_secs_f64().max(1e-12),
             energy_log: self.energy_log.clone(),
             traces: self.traces.clone(),
@@ -417,6 +491,94 @@ mod tests {
         }
         let d = c.wavefield().max_abs_diff(&p.wavefield());
         assert!(d == 0.0, "coordinator and golden propagator diverged: {d}");
+    }
+
+    #[test]
+    fn multi_source_superposes() {
+        // the update is linear: u(srcA + srcB) ~= u(srcA) + u(srcB)
+        let mk_src = |pos| Source { pos, f0: 15.0, amplitude: 1.0 };
+        let a_pos = Dim3::new(9, 12, 12);
+        let b_pos = Dim3::new(15, 12, 12);
+        let interior = Dim3::new(24, 24, 24);
+        let h = 10.0;
+        let dt = stencil::cfl_dt(h, 2000.0);
+        let domain = Domain::new(interior, 4, h, dt).unwrap();
+        let build = |srcs: &[Dim3]| -> Field3 {
+            let v = VelocityModel::Constant(2000.0).build(interior);
+            let eta = wave::eta_profile(&domain, 2000.0);
+            let mut c = Coordinator::new(
+                None, domain, Mode::Golden, "gmem", "gmem", v, eta, mk_src(srcs[0]), vec![],
+            )
+            .unwrap();
+            for &p in &srcs[1..] {
+                c.add_source(mk_src(p)).unwrap();
+            }
+            c.run(25).unwrap();
+            c.wavefield()
+        };
+        let ua = build(&[a_pos]);
+        let ub = build(&[b_pos]);
+        let uab = build(&[a_pos, b_pos]);
+        let sum = Field3::from_vec(
+            interior,
+            ua.as_slice().iter().zip(ub.as_slice()).map(|(&x, &y)| x + y).collect(),
+        )
+        .unwrap();
+        let rel = uab.max_abs_diff(&sum) / sum.max_abs().max(1e-30);
+        assert!(rel < 1e-3, "superposition broken: rel {rel}");
+    }
+
+    #[test]
+    fn add_source_out_of_bounds_rejected() {
+        let mut c = mk(Mode::Golden);
+        let bad = Source { pos: Dim3::new(99, 0, 0), f0: 15.0, amplitude: 1.0 };
+        assert!(c.add_source(bad).is_err());
+    }
+
+    struct Counter {
+        calls: usize,
+        saw_non_finite: bool,
+    }
+
+    impl StepObserver for Counter {
+        fn on_step(&mut self, _step: usize, u_pad: &Field3, energy: f64) {
+            self.calls += 1;
+            self.saw_non_finite |= !energy.is_finite() || u_pad.has_non_finite();
+        }
+    }
+
+    #[test]
+    fn observer_sees_every_step() {
+        let mut c = mk(Mode::Golden);
+        let mut obs = Counter { calls: 0, saw_non_finite: false };
+        let s = c.run_observed(12, RunOptions::default(), Some(&mut obs)).unwrap();
+        assert_eq!(s.steps, 12);
+        assert_eq!(obs.calls, 12);
+        assert!(!obs.saw_non_finite);
+    }
+
+    fn mk_unstable() -> Coordinator<'static> {
+        let interior = Dim3::new(20, 20, 20);
+        let h = 10.0;
+        let dt = 3.0 * stencil::cfl_dt(h, 2000.0); // well past the CFL bound
+        let domain = Domain::new(interior, 4, h, dt).unwrap();
+        let v = VelocityModel::Constant(2000.0).build(interior);
+        let eta = wave::eta_profile(&domain, 2000.0);
+        let src = Source { pos: Dim3::new(10, 10, 10), f0: 15.0, amplitude: 1.0 };
+        Coordinator::new(None, domain, Mode::Golden, "gmem", "gmem", v, eta, src, vec![]).unwrap()
+    }
+
+    #[test]
+    fn unstable_run_errors_by_default_but_observed_run_reports() {
+        let mut c = mk_unstable();
+        assert!(c.run(400).is_err(), "CFL violation must abort a plain run");
+
+        let mut c = mk_unstable();
+        let mut obs = Counter { calls: 0, saw_non_finite: false };
+        let opts = RunOptions { halt_on_non_finite: false };
+        let s = c.run_observed(400, opts, Some(&mut obs)).unwrap();
+        assert!(s.steps < 400, "blow-up should end the run early, got {}", s.steps);
+        assert!(obs.saw_non_finite, "observer must witness the blow-up");
     }
 
     #[test]

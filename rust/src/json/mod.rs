@@ -68,6 +68,75 @@ impl Json {
             .get(key)
             .ok_or_else(|| anyhow::anyhow!("missing key {key:?}"))
     }
+
+    /// Emit as canonical JSON text: `parse(emit(v)) == v` for any value
+    /// with finite numbers (non-finite numbers — which JSON cannot
+    /// represent — emit as `null`; producers like the campaign report
+    /// sanitize them to `Json::Null` up front for exact round-trips).
+    pub fn emit(&self) -> String {
+        let mut out = String::new();
+        self.emit_into(&mut out);
+        out
+    }
+
+    fn emit_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    // f64 Display is shortest-roundtrip and never uses
+                    // exponent notation — always valid JSON.
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => emit_string(s, out),
+            Json::Arr(a) => {
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.emit_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(o) => {
+                out.push('{');
+                for (i, (k, v)) in o.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    emit_string(k, out);
+                    out.push(':');
+                    v.emit_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn emit_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            '\u{8}' => out.push_str("\\b"),
+            '\u{c}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 impl fmt::Display for Json {
@@ -293,6 +362,39 @@ mod tests {
         assert!(j.get("s").unwrap().as_f64().is_err());
         assert!(j.get("missing").is_err());
         assert!(Json::parse("1.5").unwrap().as_usize().is_err());
+    }
+
+    #[test]
+    fn emit_renders_canonical_text() {
+        let j = Json::parse(r#"{"b": [1, 2.5, true, null], "a": "x\ny"}"#).unwrap();
+        // BTreeMap keys sort, integers drop the fraction, escapes survive
+        assert_eq!(j.emit(), r#"{"a":"x\ny","b":[1,2.5,true,null]}"#);
+        assert_eq!(Json::Num(3.0).emit(), "3");
+        assert_eq!(Json::Num(-0.125).emit(), "-0.125");
+        assert_eq!(Json::Str("q\"\\".into()).emit(), r#""q\"\\""#);
+        assert_eq!(Json::Str("\u{1}".into()).emit(), "\"\\u0001\"");
+    }
+
+    #[test]
+    fn emit_parse_roundtrip_is_identity() {
+        let text = r#"{
+          "nested": {"arr": [1, -2.75, "s", {"k": null}], "t": true},
+          "big": 123456789, "tiny": 0.001
+        }"#;
+        let j = Json::parse(text).unwrap();
+        let j2 = Json::parse(&j.emit()).unwrap();
+        assert_eq!(j, j2);
+        // emitting twice is a fixed point
+        assert_eq!(j.emit(), j2.emit());
+    }
+
+    #[test]
+    fn emit_sanitizes_non_finite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).emit(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).emit(), "null");
+        let arr = Json::Arr(vec![Json::Num(1.0), Json::Num(f64::NEG_INFINITY)]);
+        assert_eq!(arr.emit(), "[1,null]");
+        assert!(Json::parse(&arr.emit()).is_ok());
     }
 
     #[test]

@@ -14,6 +14,17 @@
 //!
 //! Python never runs on the simulation path: after `make artifacts` the
 //! `hostencil` binary is self-contained.
+//!
+//! On top of the coordinator sits the **scenario subsystem**
+//! ([`scenario`]): a catalogue of named physics stress scenarios
+//! (homogeneous point source, layered reflector, gradient medium, PML
+//! corner absorption, multi-source interference, long-run energy
+//! stability, CFL-margin stress, degenerate tiny grids), each judged
+//! against named pass/fail criteria into a `Pass`/`SoftFail`/`HardFail`
+//! verdict, plus a campaign runner that fans the scenario x kernel
+//! variant x machine matrix out over worker threads and exports a
+//! report table + JSON. See `hostencil scenario` / `hostencil campaign`
+//! and `examples/scenario_gauntlet.rs`.
 
 pub mod bench;
 pub mod config;
@@ -24,6 +35,7 @@ pub mod json;
 pub mod manifest;
 pub mod report;
 pub mod runtime;
+pub mod scenario;
 pub mod stencil;
 pub mod testkit;
 pub mod wave;

@@ -10,6 +10,8 @@
 //!   fig3        regenerate Figure 3  (roofline plots + CSV)
 //!   occupancy   occupancy calculator for ad-hoc kernel resources
 //!   sweep       tile-size sweep on the gpusim timing model
+//!   scenario    named physics stress scenarios with pass/fail verdicts
+//!   campaign    parallel scenario x variant x machine verdict matrix
 
 use std::collections::HashMap;
 
@@ -19,38 +21,83 @@ use hostencil::runtime::Engine;
 use hostencil::wave;
 use hostencil::{config::RunConfig, report};
 
-/// Tiny `--key value` / `--flag` argument parser (no clap offline).
+/// Tiny `--key value` / `--key=value` / `--flag` argument parser (no
+/// clap offline). Values that merely *look* like flags — negative
+/// numbers such as `-1.5e-3` — are accepted as values; stray
+/// positionals and malformed tokens are rejected instead of being
+/// silently swallowed as flags.
 struct Args {
     cmd: String,
     opts: HashMap<String, String>,
+    /// Options that appeared with no value (`--quick`). Kept separate
+    /// from `opts` so `--json` with a forgotten path errors instead of
+    /// silently becoming the value `"true"`.
+    flags: std::collections::HashSet<String>,
+}
+
+/// A token that may follow `--key` as its value: anything not starting
+/// with `-`, or a negative number (`-5`, `-1.5e-3`, `-.25`).
+fn is_value_token(tok: &str) -> bool {
+    if !tok.starts_with('-') {
+        return true;
+    }
+    let body = tok.trim_start_matches('-');
+    if tok.starts_with("--") || body.is_empty() {
+        return false;
+    }
+    body.starts_with(|c: char| c.is_ascii_digit() || c == '.')
 }
 
 impl Args {
-    fn parse() -> Args {
-        let mut it = std::env::args().skip(1);
+    fn parse() -> anyhow::Result<Args> {
+        Self::parse_from(std::env::args().skip(1).collect())
+    }
+
+    fn parse_from(tokens: Vec<String>) -> anyhow::Result<Args> {
+        let mut it = tokens.into_iter();
         let cmd = it.next().unwrap_or_else(|| "help".to_string());
-        let mut opts = HashMap::new();
         let rest: Vec<String> = it.collect();
+        let mut opts = HashMap::new();
+        let mut flags = std::collections::HashSet::new();
         let mut i = 0;
         while i < rest.len() {
-            let k = rest[i].trim_start_matches("--").to_string();
-            if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
-                opts.insert(k, rest[i + 1].clone());
+            let tok = &rest[i];
+            let Some(body) = tok.strip_prefix("--") else {
+                anyhow::bail!(
+                    "unexpected argument {tok:?} (options are --key value, --key=value or --flag)"
+                );
+            };
+            anyhow::ensure!(!body.is_empty(), "bare \"--\" is not a valid option");
+            if let Some((k, v)) = body.split_once('=') {
+                opts.insert(k.to_string(), v.to_string());
+                i += 1;
+            } else if i + 1 < rest.len() && is_value_token(&rest[i + 1]) {
+                opts.insert(body.to_string(), rest[i + 1].clone());
                 i += 2;
             } else {
-                opts.insert(k, "true".to_string());
+                flags.insert(body.to_string());
                 i += 1;
             }
         }
-        Args { cmd, opts }
+        Ok(Args { cmd, opts, flags })
     }
 
-    fn get(&self, k: &str) -> Option<&str> {
-        self.opts.get(k).map(|s| s.as_str())
+    /// Value of a value-taking option: `Ok(None)` when absent, an error
+    /// when the option was given with no value.
+    fn get(&self, k: &str) -> anyhow::Result<Option<&str>> {
+        anyhow::ensure!(
+            !self.flags.contains(k),
+            "option --{k} needs a value (got a bare flag)"
+        );
+        Ok(self.opts.get(k).map(|s| s.as_str()))
+    }
+
+    fn has_flag(&self, k: &str) -> bool {
+        self.flags.contains(k)
     }
 
     fn usize_or(&self, k: &str, d: usize) -> anyhow::Result<usize> {
-        match self.get(k) {
+        match self.get(k)? {
             None => Ok(d),
             Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{k}: {e}")),
         }
@@ -75,6 +122,16 @@ commands:
   sweep      [--machine v100]                 tile-size sweep (timing model)
   autotune   [--machine v100] [--family st_reg_fixed|gmem|...]
                                                search tile shapes on the model
+  scenario   [--id name|all] [--list] [--steps N] [--machine m --variant v]
+             [--json path]                  run named physics stress scenarios
+                                            (golden backend) with pass/fail
+                                            verdicts; stress ids expect HardFail
+  campaign   [--machine v100|p100|nvs510|a100|all] [--variant id|all]
+             [--quick] [--threads N] [--json path] [--steps-scale f]
+                                            scenario x variant x machine matrix
+                                            in parallel; non-zero exit when any
+                                            cell deviates from its expected
+                                            verdict (stress ids expect HardFail)
 ";
 
 fn main() {
@@ -85,7 +142,7 @@ fn main() {
 }
 
 fn run() -> anyhow::Result<()> {
-    let args = Args::parse();
+    let args = Args::parse()?;
     match args.cmd.as_str() {
         "info" => cmd_info(&args),
         "run" => cmd_run(&args),
@@ -112,6 +169,8 @@ fn run() -> anyhow::Result<()> {
         "occupancy" => cmd_occupancy(&args),
         "sweep" => cmd_sweep(&args),
         "autotune" => cmd_autotune(&args),
+        "scenario" => cmd_scenario(&args),
+        "campaign" => cmd_campaign(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -122,7 +181,7 @@ fn run() -> anyhow::Result<()> {
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     println!("{}", report::table1());
-    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let dir = args.get("artifacts")?.unwrap_or("artifacts");
     match Engine::load(dir) {
         Ok(engine) => {
             let m = engine.manifest();
@@ -165,23 +224,23 @@ fn build_coordinator<'e>(
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
-    let mut cfg = match args.get("config") {
+    let mut cfg = match args.get("config")? {
         Some(path) => RunConfig::load(path)?,
         None => RunConfig::defaults(),
     };
-    if let Some(s) = args.get("steps") {
+    if let Some(s) = args.get("steps")? {
         cfg.steps = s.parse()?;
     }
-    if let Some(m) = args.get("mode") {
+    if let Some(m) = args.get("mode")? {
         cfg.mode = Mode::parse(m)?;
     }
-    if let Some(v) = args.get("variant") {
+    if let Some(v) = args.get("variant")? {
         cfg.inner_variant = v.to_string();
     }
-    if let Some(v) = args.get("pml-variant") {
+    if let Some(v) = args.get("pml-variant")? {
         cfg.pml_variant = v.to_string();
     }
-    if let Some(d) = args.get("artifacts") {
+    if let Some(d) = args.get("artifacts")? {
         cfg.artifacts_dir = d.to_string();
     }
 
@@ -239,7 +298,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_validate(args: &Args) -> anyhow::Result<()> {
-    let dir = args.get("artifacts").unwrap_or("artifacts");
+    let dir = args.get("artifacts")?.unwrap_or("artifacts");
     let steps = args.usize_or("steps", 10)?;
     let engine = Engine::load(dir)?;
     let domain = engine.manifest().domain;
@@ -283,10 +342,10 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_fig3(args: &Args) -> anyhow::Result<()> {
-    let machine = args.get("machine").unwrap_or("v100");
+    let machine = args.get("machine")?.unwrap_or("v100");
     let (text, csv) = report::fig3(machine, args.usize_or("steps", 1000)?)?;
     println!("{text}");
-    if let Some(path) = args.get("csv") {
+    if let Some(path) = args.get("csv")? {
         std::fs::write(path, &csv)?;
         println!("wrote {path}");
     }
@@ -294,7 +353,7 @@ fn cmd_fig3(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_occupancy(args: &Args) -> anyhow::Result<()> {
-    let machine = arch::by_name(args.get("machine").unwrap_or("v100"))?;
+    let machine = arch::by_name(args.get("machine")?.unwrap_or("v100"))?;
     let res = KernelResources {
         threads_per_block: args.usize_or("threads", 256)? as u32,
         regs_per_thread: args.usize_or("regs", 32)? as u32,
@@ -310,8 +369,8 @@ fn cmd_occupancy(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
     use hostencil::gpusim::{autotune, Family};
-    let machine = arch::by_name(args.get("machine").unwrap_or("v100"))?;
-    let family = match args.get("family") {
+    let machine = arch::by_name(args.get("machine")?.unwrap_or("v100"))?;
+    let family = match args.get("family")? {
         None => None,
         Some("gmem") => Some(Family::Gmem),
         Some("smem_u") => Some(Family::SmemU),
@@ -355,7 +414,7 @@ fn cmd_autotune(args: &Args) -> anyhow::Result<()> {
 }
 
 fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
-    let machine = arch::by_name(args.get("machine").unwrap_or("v100"))?;
+    let machine = arch::by_name(args.get("machine")?.unwrap_or("v100"))?;
     println!("tile-size sweep on {} (timing model, 1000 steps):", machine.name);
     let mut rows: Vec<(String, f64)> = kernels::paper_variants()
         .iter()
@@ -367,4 +426,227 @@ fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
     }
     println!("\nbest predicted kernel: {}", rows[0].0);
     Ok(())
+}
+
+fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+    use hostencil::scenario::{run_scenario, RunnerOptions, ScenarioId};
+
+    if args.has_flag("list") {
+        println!("{:<28}{:<10}{}", "scenario", "expects", "description");
+        for id in ScenarioId::all() {
+            println!("{:<28}{:<10}{}", id.name(), id.expected_verdict().name(), id.describe());
+        }
+        return Ok(());
+    }
+
+    let ids = match args.get("id")? {
+        None | Some("all") => ScenarioId::all(),
+        Some(name) => vec![ScenarioId::parse(name)?],
+    };
+    let opts = RunnerOptions {
+        steps_override: match args.get("steps")? {
+            None => None,
+            Some(s) => Some(s.parse().map_err(|e| anyhow::anyhow!("--steps: {e}"))?),
+        },
+        steps_scale: None,
+        machine: args.get("machine")?.map(|s| s.to_string()),
+        variant: match args.get("variant")? {
+            None => None,
+            Some(v) => Some(hostencil::scenario::campaign::resolve_variant(v)?),
+        },
+    };
+
+    let mut unexpected = Vec::new();
+    let mut json_runs = Vec::new();
+    for id in ids {
+        let run = run_scenario(id, &opts)?;
+        let tag = if run.as_expected() { "" } else { "  <-- UNEXPECTED" };
+        println!(
+            "{:<28}{:<10}(expected {}){tag}",
+            id.name(),
+            run.result.overall.name(),
+            id.expected_verdict().name()
+        );
+        for c in &run.result.criteria {
+            println!(
+                "    {} {:<22} {}",
+                if c.passed { "ok  " } else { "FAIL" },
+                c.name,
+                c.detail
+            );
+        }
+        println!(
+            "    [{} steps, peak |u| {:.3e}, final energy {:.3e}, {:.1} ms]",
+            run.metrics.steps_completed,
+            run.metrics.peak_abs,
+            run.metrics.final_energy,
+            run.metrics.wall_ms
+        );
+        if !run.as_expected() {
+            unexpected.push(id.name());
+        }
+        if args.get("json")?.is_some() {
+            let mut o = std::collections::BTreeMap::new();
+            o.insert("scenario".to_string(), hostencil::json::Json::Str(id.name().into()));
+            o.insert(
+                "verdict".to_string(),
+                hostencil::json::Json::Str(run.result.overall.name().into()),
+            );
+            o.insert(
+                "failed_criteria".to_string(),
+                hostencil::json::Json::Arr(
+                    run.result
+                        .failed()
+                        .iter()
+                        .map(|c| hostencil::json::Json::Str(c.name.into()))
+                        .collect(),
+                ),
+            );
+            json_runs.push(hostencil::json::Json::Obj(o));
+        }
+    }
+    if let Some(path) = args.get("json")? {
+        std::fs::write(path, hostencil::json::Json::Arr(json_runs).emit())?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(
+        unexpected.is_empty(),
+        "scenarios with unexpected verdicts: {}",
+        unexpected.join(", ")
+    );
+    Ok(())
+}
+
+fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
+    use hostencil::scenario::campaign::{self, CampaignSpec};
+
+    let machines: Vec<String> = match args.get("machine")? {
+        None | Some("all") => ["v100", "p100", "nvs510"].iter().map(|s| s.to_string()).collect(),
+        Some(m) => {
+            arch::by_name(m)?; // validate early
+            vec![m.to_string()]
+        }
+    };
+    let mut spec = if args.has_flag("quick") {
+        CampaignSpec::quick(machines)
+    } else {
+        CampaignSpec::full(machines)
+    };
+    match args.get("variant")? {
+        None | Some("all") => {}
+        Some(v) => spec.variants = vec![campaign::resolve_variant(v)?],
+    }
+    if let Some(s) = args.get("steps-scale")? {
+        let scale: f64 = s.parse().map_err(|e| anyhow::anyhow!("--steps-scale: {e}"))?;
+        anyhow::ensure!(scale > 0.0, "--steps-scale must be positive");
+        spec.steps_scale = Some(scale);
+    }
+    spec.threads = args.usize_or("threads", 0)?;
+
+    println!(
+        "campaign: {} scenarios x {} variants x {} machines = {} cells",
+        spec.scenarios.len(),
+        spec.variants.len(),
+        spec.machines.len(),
+        spec.scenarios.len() * spec.variants.len() * spec.machines.len()
+    );
+    let report = campaign::run_campaign(&spec);
+    print!("{}", report::campaign_table(&report));
+
+    if let Some(path) = args.get("json")? {
+        std::fs::write(path, report.to_json().emit())?;
+        println!("wrote {path}");
+    }
+    anyhow::ensure!(
+        report.off_expectation_count() == 0,
+        "{} cell(s) deviated from their expected verdict",
+        report.off_expectation_count()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string()).collect()).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = parse(&["run", "--steps", "50", "--quick", "--mode", "golden"]);
+        assert_eq!(a.cmd, "run");
+        assert_eq!(a.get("steps").unwrap(), Some("50"));
+        assert_eq!(a.get("mode").unwrap(), Some("golden"));
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 50);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn negative_numeric_values_are_values_not_flags() {
+        // regression: `--key -1.5` used to be at the mercy of the flag
+        // heuristic; negative numbers must parse as values
+        let a = parse(&["sweep", "--offset", "-3", "--dt", "-1.5e-3", "--frac", "-.25"]);
+        assert_eq!(a.get("offset").unwrap(), Some("-3"));
+        assert_eq!(a.get("dt").unwrap(), Some("-1.5e-3"));
+        assert_eq!(a.get("frac").unwrap(), Some("-.25"));
+        assert!(!a.has_flag("offset"));
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let a = parse(&["run", "--steps=80", "--variant=gmem"]);
+        assert_eq!(a.get("steps").unwrap(), Some("80"));
+        assert_eq!(a.get("variant").unwrap(), Some("gmem"));
+    }
+
+    #[test]
+    fn flag_followed_by_option_stays_a_flag() {
+        let a = parse(&["campaign", "--quick", "--machine", "v100"]);
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.get("machine").unwrap(), Some("v100"));
+    }
+
+    #[test]
+    fn stray_positionals_and_bad_tokens_are_rejected() {
+        let bad = |toks: &[&str]| {
+            Args::parse_from(toks.iter().map(|s| s.to_string()).collect()).is_err()
+        };
+        assert!(bad(&["run", "oops"]));
+        assert!(bad(&["run", "--steps", "50", "stray"]));
+        assert!(bad(&["run", "-x"])); // single-dash non-numeric
+        assert!(bad(&["run", "--"]));
+    }
+
+    #[test]
+    fn value_token_classifier() {
+        assert!(is_value_token("50"));
+        assert!(is_value_token("golden"));
+        assert!(is_value_token("-5"));
+        assert!(is_value_token("-1.5e-3"));
+        assert!(is_value_token("-.25"));
+        assert!(!is_value_token("--steps"));
+        assert!(!is_value_token("-x"));
+        assert!(!is_value_token("-"));
+    }
+
+    #[test]
+    fn value_taking_option_without_value_errors() {
+        // regression: `--json` with a forgotten path used to become the
+        // literal value "true" (and write a file named "true")
+        let a = parse(&["campaign", "--json"]);
+        assert!(a.has_flag("json"));
+        assert!(a.get("json").is_err());
+        let b = parse(&["run", "--steps"]);
+        assert!(b.usize_or("steps", 5).is_err());
+    }
+
+    #[test]
+    fn usize_or_reports_bad_values() {
+        let a = parse(&["run", "--steps", "-5"]);
+        let err = a.usize_or("steps", 0).unwrap_err().to_string();
+        assert!(err.contains("--steps"), "{err}");
+    }
 }

@@ -165,6 +165,54 @@ pub fn fig3(machine: &str, steps: usize) -> anyhow::Result<(String, String)> {
     Ok((text, data.csv()))
 }
 
+/// Campaign verdict table: one row per scenario x variant x machine
+/// cell, plus an aggregate footer. (The campaign itself lives in
+/// `crate::scenario::campaign`; this is just its renderer, kept with
+/// the other table renderers.)
+pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> String {
+    let mut out = format!(
+        "{:<26}{:<20}{:<9}{:>9}{:>11}{:>11}{:>10}  {}\n",
+        "scenario", "variant", "machine", "verdict", "steps", "pred st/s", "leak", "notes"
+    );
+    out.push_str(&hr(110));
+    out.push('\n');
+    for c in &report.cells {
+        let notes = if let Some(e) = &c.error {
+            format!("error: {e}")
+        } else if c.verdict == crate::scenario::Verdict::Pass {
+            String::new()
+        } else if c.verdict == c.expected {
+            format!("expected ({})", c.failed_criteria.join(", "))
+        } else {
+            c.failed_criteria.join(", ")
+        };
+        out.push_str(&format!(
+            "{:<26}{:<20}{:<9}{:>9}{:>11}{:>11.1}{:>10.3}  {}\n",
+            c.scenario.name(),
+            c.variant,
+            c.machine,
+            c.verdict.name(),
+            c.steps_completed,
+            c.predicted_steps_per_sec,
+            c.boundary_leakage,
+            notes
+        ));
+    }
+    out.push_str(&hr(110));
+    out.push('\n');
+    out.push_str(&format!(
+        "{} cells: {} Pass, {} SoftFail, {} HardFail ({} off-expectation) — {:.2?} on {} threads\n",
+        report.cells.len(),
+        report.count(crate::scenario::Verdict::Pass),
+        report.count(crate::scenario::Verdict::SoftFail),
+        report.count(crate::scenario::Verdict::HardFail),
+        report.off_expectation_count(),
+        report.wall,
+        report.threads
+    ));
+    out
+}
+
 /// Kendall-tau-style rank agreement between model times and paper times
 /// on one machine: fraction of concordant variant pairs. Used by tests
 /// and EXPERIMENTS.md to quantify "the shape holds".
@@ -245,6 +293,23 @@ mod tests {
         let (text, csv) = fig3("v100", 100).unwrap();
         assert!(text.contains("DRAM roofline"));
         assert_eq!(csv.lines().count(), 51);
+    }
+
+    #[test]
+    fn campaign_table_renders_cells_and_footer() {
+        use crate::scenario::campaign::{run_campaign, CampaignSpec};
+        use crate::scenario::ScenarioId;
+        let spec = CampaignSpec {
+            scenarios: vec![ScenarioId::TinyGrid],
+            variants: vec!["gmem_8x8x8".to_string()],
+            machines: vec!["v100".to_string()],
+            steps_scale: Some(0.5),
+            threads: 1,
+        };
+        let t = campaign_table(&run_campaign(&spec));
+        assert!(t.contains("tiny-grid"), "{t}");
+        assert!(t.contains("gmem_8x8x8"));
+        assert!(t.contains("1 cells:"), "{t}");
     }
 
     #[test]

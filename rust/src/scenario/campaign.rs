@@ -1,0 +1,392 @@
+//! Campaign runner: fan the scenario x variant x machine matrix out
+//! over `std::thread` worker threads, aggregate per-cell verdicts into
+//! a report table plus a JSON export (`json::Json`-consumable).
+//!
+//! Cells are independent (each runs its own golden-backend physics and
+//! its own gpusim prediction), so the matrix is embarrassingly
+//! parallel; a shared atomic cursor feeds a fixed worker pool.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::{run_scenario, RunnerOptions, ScenarioId, Verdict};
+use crate::json::Json;
+
+/// The matrix to run.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    pub scenarios: Vec<ScenarioId>,
+    /// gpusim kernel variant ids (e.g. `gmem_8x8x8`).
+    pub variants: Vec<String>,
+    /// gpusim machine names (e.g. `v100`).
+    pub machines: Vec<String>,
+    /// Scale every scenario's step count (`--quick` smoke runs).
+    pub steps_scale: Option<f64>,
+    /// Worker threads; 0 = one per available core, capped by cell count.
+    pub threads: usize,
+}
+
+/// One representative variant per code-shape family (the six families
+/// the AOT artifact set ships as inner kernels).
+pub fn default_variants() -> Vec<String> {
+    ["gmem_8x8x8", "smem_u", "semi", "st_smem_16x16", "st_reg_shft_16x16", "st_reg_fixed_32x32"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Map a family shorthand (the `run --variant` names) to its
+/// representative gpusim id; full gpusim ids pass through validated.
+pub fn resolve_variant(name: &str) -> anyhow::Result<String> {
+    let shorthand = match name {
+        "gmem" => Some("gmem_8x8x8"),
+        "smem_u" => Some("smem_u"),
+        "semi" => Some("semi"),
+        "st_smem" => Some("st_smem_16x16"),
+        "st_reg_shft" => Some("st_reg_shft_16x16"),
+        "st_reg_fixed" => Some("st_reg_fixed_32x32"),
+        _ => None,
+    };
+    let id = shorthand.unwrap_or(name);
+    crate::gpusim::kernels::by_id(id)?;
+    Ok(id.to_string())
+}
+
+impl CampaignSpec {
+    /// The full catalogue x family representatives on the given machines.
+    pub fn full(machines: Vec<String>) -> CampaignSpec {
+        CampaignSpec {
+            scenarios: ScenarioId::all(),
+            variants: default_variants(),
+            machines,
+            steps_scale: None,
+            threads: 0,
+        }
+    }
+
+    /// Quick smoke matrix: every scenario, one variant, quartered steps,
+    /// on all the requested machines.
+    pub fn quick(machines: Vec<String>) -> CampaignSpec {
+        CampaignSpec {
+            scenarios: ScenarioId::all(),
+            variants: vec!["gmem_8x8x8".to_string()],
+            machines,
+            steps_scale: Some(0.25),
+            threads: 0,
+        }
+    }
+
+    fn cells(&self) -> Vec<(ScenarioId, String, String)> {
+        let mut out = Vec::new();
+        for &sc in &self.scenarios {
+            for v in &self.variants {
+                for m in &self.machines {
+                    out.push((sc, v.clone(), m.clone()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One evaluated cell of the matrix.
+#[derive(Clone, Debug)]
+pub struct CampaignCell {
+    pub scenario: ScenarioId,
+    pub variant: String,
+    pub machine: String,
+    pub verdict: Verdict,
+    pub expected: Verdict,
+    /// Names of failed criteria, in evaluation order.
+    pub failed_criteria: Vec<String>,
+    pub steps_completed: usize,
+    pub peak_abs: f32,
+    pub final_energy: f64,
+    pub boundary_leakage: f64,
+    pub predicted_steps_per_sec: f64,
+    pub wall_ms: f64,
+    /// Runner error (cell recorded as HardFail), if any.
+    pub error: Option<String>,
+}
+
+impl CampaignCell {
+    /// The cell deviated from the catalogue: wrong verdict in either
+    /// direction (a non-stress scenario failing, a stress scenario
+    /// unexpectedly passing) or a runner error. This — not raw
+    /// HardFail counts — is what fails a campaign, so a regression
+    /// that stops a stress scenario from hard-failing is caught too.
+    pub fn off_expectation(&self) -> bool {
+        self.error.is_some() || self.verdict != self.expected
+    }
+}
+
+/// The aggregated campaign outcome.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    pub cells: Vec<CampaignCell>,
+    pub wall: Duration,
+    pub threads: usize,
+}
+
+impl CampaignReport {
+    pub fn count(&self, v: Verdict) -> usize {
+        self.cells.iter().filter(|c| c.verdict == v).count()
+    }
+
+    pub fn off_expectation_count(&self) -> usize {
+        self.cells.iter().filter(|c| c.off_expectation()).count()
+    }
+
+    /// Render as a `json::Json` document (finite numbers only — blown-up
+    /// metrics export as null so the emitted text always re-parses).
+    pub fn to_json(&self) -> Json {
+        fn num(v: f64) -> Json {
+            if v.is_finite() {
+                Json::Num(v)
+            } else {
+                Json::Null
+            }
+        }
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut o = BTreeMap::new();
+                o.insert("scenario".into(), Json::Str(c.scenario.name().into()));
+                o.insert("variant".into(), Json::Str(c.variant.clone()));
+                o.insert("machine".into(), Json::Str(c.machine.clone()));
+                o.insert("verdict".into(), Json::Str(c.verdict.name().into()));
+                o.insert("expected".into(), Json::Str(c.expected.name().into()));
+                o.insert(
+                    "failed_criteria".into(),
+                    Json::Arr(c.failed_criteria.iter().map(|f| Json::Str(f.clone())).collect()),
+                );
+                o.insert("steps_completed".into(), Json::Num(c.steps_completed as f64));
+                o.insert("peak_abs".into(), num(c.peak_abs as f64));
+                o.insert("final_energy".into(), num(c.final_energy));
+                o.insert("boundary_leakage".into(), num(c.boundary_leakage));
+                o.insert("predicted_steps_per_sec".into(), num(c.predicted_steps_per_sec));
+                o.insert("wall_ms".into(), num(c.wall_ms));
+                if let Some(e) = &c.error {
+                    o.insert("error".into(), Json::Str(e.clone()));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let mut summary = BTreeMap::new();
+        summary.insert("total".into(), Json::Num(self.cells.len() as f64));
+        summary.insert("pass".into(), Json::Num(self.count(Verdict::Pass) as f64));
+        summary.insert("soft_fail".into(), Json::Num(self.count(Verdict::SoftFail) as f64));
+        summary.insert("hard_fail".into(), Json::Num(self.count(Verdict::HardFail) as f64));
+        summary.insert(
+            "off_expectation".into(),
+            Json::Num(self.off_expectation_count() as f64),
+        );
+        summary.insert("wall_ms".into(), num(self.wall.as_secs_f64() * 1e3));
+        summary.insert("threads".into(), Json::Num(self.threads as f64));
+        let mut root = BTreeMap::new();
+        root.insert("format_version".into(), Json::Num(1.0));
+        root.insert("kind".into(), Json::Str("hostencil-campaign".into()));
+        root.insert("summary".into(), Json::Obj(summary));
+        root.insert("cells".into(), Json::Arr(cells));
+        Json::Obj(root)
+    }
+}
+
+fn run_cell(spec: &CampaignSpec, sc: ScenarioId, variant: &str, machine: &str) -> CampaignCell {
+    let opts = RunnerOptions {
+        steps_override: None,
+        steps_scale: spec.steps_scale,
+        machine: Some(machine.to_string()),
+        variant: Some(variant.to_string()),
+    };
+    match run_scenario(sc, &opts) {
+        Ok(run) => CampaignCell {
+            scenario: sc,
+            variant: variant.to_string(),
+            machine: machine.to_string(),
+            verdict: run.result.overall,
+            expected: sc.expected_verdict(),
+            failed_criteria: run.result.failed().iter().map(|c| c.name.to_string()).collect(),
+            steps_completed: run.metrics.steps_completed,
+            peak_abs: run.metrics.peak_abs,
+            final_energy: run.metrics.final_energy,
+            boundary_leakage: run.metrics.boundary_leakage,
+            predicted_steps_per_sec: run
+                .metrics
+                .predicted
+                .as_ref()
+                .map(|p| p.steps_per_sec)
+                .unwrap_or(0.0),
+            wall_ms: run.metrics.wall_ms,
+            error: None,
+        },
+        Err(e) => CampaignCell {
+            scenario: sc,
+            variant: variant.to_string(),
+            machine: machine.to_string(),
+            verdict: Verdict::HardFail,
+            expected: sc.expected_verdict(),
+            failed_criteria: vec!["runner_error".to_string()],
+            steps_completed: 0,
+            peak_abs: 0.0,
+            final_energy: 0.0,
+            boundary_leakage: 0.0,
+            predicted_steps_per_sec: 0.0,
+            wall_ms: 0.0,
+            error: Some(e.to_string()),
+        },
+    }
+}
+
+/// Run the whole matrix. Worker threads pull cells off a shared atomic
+/// cursor; results come back in deterministic matrix order regardless
+/// of scheduling.
+pub fn run_campaign(spec: &CampaignSpec) -> CampaignReport {
+    let cells = spec.cells();
+    let n_threads = if spec.threads > 0 {
+        spec.threads
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+    .min(cells.len())
+    .max(1);
+
+    let t0 = Instant::now();
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<CampaignCell>>> = Mutex::new((0..cells.len()).map(|_| None).collect());
+
+    std::thread::scope(|s| {
+        for _ in 0..n_threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let (sc, variant, machine) = &cells[i];
+                let cell = run_cell(spec, *sc, variant, machine);
+                results.lock().unwrap()[i] = Some(cell);
+            });
+        }
+    });
+
+    let cells = results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|c| c.expect("every cell ran"))
+        .collect();
+    CampaignReport { cells, wall: t0.elapsed(), threads: n_threads }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> CampaignSpec {
+        CampaignSpec {
+            scenarios: vec![ScenarioId::TinyGrid],
+            variants: vec!["gmem_8x8x8".to_string()],
+            machines: vec!["v100".to_string()],
+            steps_scale: Some(0.5),
+            threads: 2,
+        }
+    }
+
+    #[test]
+    fn cells_cover_the_cartesian_product() {
+        let spec = CampaignSpec {
+            scenarios: vec![ScenarioId::TinyGrid, ScenarioId::CflMarginStress],
+            variants: vec!["a".into(), "b".into(), "c".into()],
+            machines: vec!["m1".into(), "m2".into()],
+            steps_scale: None,
+            threads: 0,
+        };
+        assert_eq!(spec.cells().len(), 2 * 3 * 2);
+    }
+
+    #[test]
+    fn resolve_variant_accepts_family_shorthand_and_full_ids() {
+        assert_eq!(resolve_variant("gmem").unwrap(), "gmem_8x8x8");
+        assert_eq!(resolve_variant("st_reg_fixed").unwrap(), "st_reg_fixed_32x32");
+        assert_eq!(resolve_variant("gmem_4x4x4").unwrap(), "gmem_4x4x4");
+        assert!(resolve_variant("warp_specialized").is_err());
+    }
+
+    #[test]
+    fn default_variants_are_valid_gpusim_ids() {
+        for v in default_variants() {
+            assert!(crate::gpusim::kernels::by_id(&v).is_ok(), "{v}");
+        }
+    }
+
+    #[test]
+    fn tiny_campaign_runs_and_reports() {
+        let report = run_campaign(&tiny_spec());
+        assert_eq!(report.cells.len(), 1);
+        let c = &report.cells[0];
+        assert_eq!(c.scenario, ScenarioId::TinyGrid);
+        assert!(c.predicted_steps_per_sec > 0.0);
+        assert_eq!(report.off_expectation_count(), 0, "{:?}", c);
+    }
+
+    #[test]
+    fn report_json_has_summary_and_cells() {
+        let report = run_campaign(&tiny_spec());
+        let j = report.to_json();
+        assert_eq!(j.get("format_version").unwrap().as_usize().unwrap(), 1);
+        let cells = j.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].get("scenario").unwrap().as_str().unwrap(), "tiny-grid");
+        let s = j.get("summary").unwrap();
+        assert_eq!(s.get("total").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn runner_error_cells_are_hard_fails() {
+        // an invalid machine name forces the error path
+        let cell = run_cell(&tiny_spec(), ScenarioId::TinyGrid, "gmem_8x8x8", "h100");
+        assert_eq!(cell.verdict, Verdict::HardFail);
+        assert!(cell.off_expectation());
+        assert!(cell.error.is_some());
+    }
+
+    #[test]
+    fn runner_error_on_a_stress_cell_is_still_off_expectation() {
+        // a stress scenario is expected to HardFail for *physics*
+        // reasons; an infrastructure error must not hide behind that
+        let cell = run_cell(&tiny_spec(), ScenarioId::CflMarginStress, "gmem_8x8x8", "h100");
+        assert_eq!(cell.verdict, cell.expected);
+        assert!(cell.off_expectation(), "errors must never count as expected");
+    }
+
+    #[test]
+    fn stress_cell_that_passes_is_off_expectation() {
+        let cell = CampaignCell {
+            scenario: ScenarioId::CflMarginStress,
+            variant: "gmem_8x8x8".into(),
+            machine: "v100".into(),
+            verdict: Verdict::Pass,
+            expected: Verdict::HardFail,
+            failed_criteria: vec![],
+            steps_completed: 10,
+            peak_abs: 1.0,
+            final_energy: 1.0,
+            boundary_leakage: 0.1,
+            predicted_steps_per_sec: 1.0,
+            wall_ms: 1.0,
+            error: None,
+        };
+        assert!(cell.off_expectation(), "an unexpectedly-green stress cell must fail the gate");
+    }
+
+    #[test]
+    fn quick_spec_keeps_every_requested_machine() {
+        let spec = CampaignSpec::quick(vec!["v100".into(), "p100".into(), "nvs510".into()]);
+        assert_eq!(spec.machines.len(), 3);
+        assert_eq!(spec.variants.len(), 1);
+        assert_eq!(spec.steps_scale, Some(0.25));
+    }
+}

@@ -1,0 +1,524 @@
+//! Scenario subsystem: named physics stress scenarios with pass/fail
+//! verdicts, plus the parallel variant x machine campaign runner.
+//!
+//! The paper evaluates its 25 kernel variants across three machines on
+//! one physics workload; cross-architecture follow-ups (arXiv:2404.04441,
+//! arXiv:2406.08923) show such claims only hold under a *matrix* of
+//! scenarios. This module supplies that matrix for the Rust testbed:
+//!
+//! * [`ScenarioId`] — a seeded catalogue of named stress scenarios,
+//!   each materializing a full `RunConfig` (domain, velocity model,
+//!   sources, receivers, dt) plus [`Expectations`] thresholds.
+//! * [`MetricsCollector`] — a `StepObserver` hooked into
+//!   `Coordinator::run_observed`: energy trace, peak amplitude,
+//!   boundary-leakage ratio, NaN/Inf watch, plus gpusim-predicted
+//!   steps/sec per variant x machine.
+//! * [`evaluate_pass_fail`] — named criteria folded into a
+//!   [`Verdict`] (`Pass` / `SoftFail` / `HardFail`).
+//! * [`campaign`] — fans scenario x variant x machine cells out over
+//!   `std::thread`, aggregates a report table + JSON export.
+//!
+//! Physics always runs on the pure-Rust golden backend, so scenarios
+//! need no AOT artifacts; the variant/machine axes feed the gpusim
+//! performance model and its occupancy feasibility check.
+
+pub mod campaign;
+pub mod metrics;
+pub mod verdict;
+
+pub use metrics::{predict_perf, Metrics, MetricsCollector, PredictedPerf};
+pub use verdict::{evaluate_pass_fail, Criterion, Expectations, ScenarioResult, Severity, Verdict};
+
+use crate::config::RunConfig;
+use crate::coordinator::{Coordinator, Mode, RunOptions};
+use crate::grid::{Dim3, Domain};
+use crate::stencil;
+use crate::wave::{self, Source, VelocityModel};
+
+/// The scenario catalogue. Every entry is deterministic: same id, same
+/// physics, same verdict.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum ScenarioId {
+    /// Point source in a homogeneous medium — the baseline sanity run.
+    HomogeneousPoint,
+    /// Three-layer earth model with strong impedance contrasts; the
+    /// reflector bounces energy back through the grid.
+    LayeredReflector,
+    /// Linear velocity gradient with depth — exercises the
+    /// materialized-grid CFL bound (the old 1e4 m depth assumption
+    /// would have mis-throttled dt by ~6x here).
+    GradientMedium,
+    /// Source tucked next to a PML corner: the sponge absorbs at
+    /// grazing incidence, its weakest regime.
+    PmlCornerAbsorption,
+    /// Three simultaneous sources, one in antiphase — interference
+    /// must superpose linearly without spurious growth.
+    MultiSourceInterference,
+    /// Long run well past the source wavelet: energy must decay, not
+    /// plateau or creep.
+    EnergyStability,
+    /// Deliberate CFL violation (dt 2.5x the stable limit): the verdict
+    /// must be HardFail. The campaign treats this as expected-fail.
+    CflMarginStress,
+    /// Degenerate anisotropic tiny grid (single-digit extents, PML 2):
+    /// decomposition and stencils must survive the smallest shapes.
+    TinyGrid,
+}
+
+/// A materialized scenario: run configuration, any extra sources, and
+/// the thresholds its metrics are judged against.
+#[derive(Clone, Debug)]
+pub struct ScenarioSpec {
+    pub config: RunConfig,
+    pub extra_sources: Vec<Source>,
+    pub expectations: Expectations,
+}
+
+impl ScenarioId {
+    /// Every scenario, in catalogue order.
+    pub fn all() -> Vec<ScenarioId> {
+        vec![
+            ScenarioId::HomogeneousPoint,
+            ScenarioId::LayeredReflector,
+            ScenarioId::GradientMedium,
+            ScenarioId::PmlCornerAbsorption,
+            ScenarioId::MultiSourceInterference,
+            ScenarioId::EnergyStability,
+            ScenarioId::CflMarginStress,
+            ScenarioId::TinyGrid,
+        ]
+    }
+
+    /// Kebab-case name (CLI id and JSON key).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ScenarioId::HomogeneousPoint => "homogeneous-point",
+            ScenarioId::LayeredReflector => "layered-reflector",
+            ScenarioId::GradientMedium => "gradient-medium",
+            ScenarioId::PmlCornerAbsorption => "pml-corner-absorption",
+            ScenarioId::MultiSourceInterference => "multi-source-interference",
+            ScenarioId::EnergyStability => "energy-stability",
+            ScenarioId::CflMarginStress => "cfl-margin-stress",
+            ScenarioId::TinyGrid => "tiny-grid",
+        }
+    }
+
+    /// One-line description for listings.
+    pub fn describe(&self) -> &'static str {
+        match self {
+            ScenarioId::HomogeneousPoint => "point source, homogeneous medium (baseline)",
+            ScenarioId::LayeredReflector => "3-layer reflector with strong contrasts",
+            ScenarioId::GradientMedium => "linear v(z) gradient; CFL from the real grid",
+            ScenarioId::PmlCornerAbsorption => "source against a PML corner (grazing absorption)",
+            ScenarioId::MultiSourceInterference => "3 simultaneous sources, one antiphase",
+            ScenarioId::EnergyStability => "long run; energy must decay after the wavelet",
+            ScenarioId::CflMarginStress => "dt 2.5x past CFL — expected HardFail",
+            ScenarioId::TinyGrid => "degenerate 9x7x11 grid, PML width 2",
+        }
+    }
+
+    /// Parse a CLI/JSON name (kebab or snake case).
+    pub fn parse(s: &str) -> anyhow::Result<ScenarioId> {
+        let norm = s.trim().to_ascii_lowercase().replace('_', "-");
+        Self::all()
+            .into_iter()
+            .find(|id| id.name() == norm)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario {s:?} (expected one of: {})",
+                    Self::all().iter().map(|i| i.name()).collect::<Vec<_>>().join(", ")
+                )
+            })
+    }
+
+    /// Deliberately mis-configured scenarios: the campaign expects
+    /// these to fail and does not count them against the exit code.
+    pub fn is_stress(&self) -> bool {
+        matches!(self, ScenarioId::CflMarginStress)
+    }
+
+    /// The verdict a healthy implementation should produce.
+    pub fn expected_verdict(&self) -> Verdict {
+        if self.is_stress() {
+            Verdict::HardFail
+        } else {
+            Verdict::Pass
+        }
+    }
+
+    /// Materialize the scenario into a runnable spec. Grids are kept
+    /// small so the whole catalogue runs in seconds on the golden
+    /// backend; dt always derives from the materialized velocity grid.
+    pub fn materialize(&self) -> ScenarioSpec {
+        let base = RunConfig::defaults();
+        let spec = |interior: Dim3,
+                    pml: usize,
+                    h: f64,
+                    model: VelocityModel,
+                    dt_scale: f64,
+                    steps: usize,
+                    source: Source,
+                    receivers: Vec<Dim3>|
+         -> RunConfig {
+            let v_max = model.v_max_on(interior) as f64;
+            let dt = stencil::cfl_dt(h, v_max) * dt_scale;
+            RunConfig {
+                domain: Domain { interior, pml_width: pml, h, dt },
+                steps,
+                mode: Mode::Golden,
+                model,
+                source,
+                receivers,
+                ..base.clone()
+            }
+        };
+        let src = |pos: Dim3, f0: f64, amplitude: f64| Source { pos, f0, amplitude };
+        let shallow_line = |interior: Dim3, pml: usize| -> Vec<Dim3> {
+            let y = interior.y / 2;
+            (0..3)
+                .map(|i| Dim3::new(pml + 1, y, pml + 2 + i * ((interior.x - 2 * pml) / 3).max(1)))
+                .collect()
+        };
+
+        match self {
+            ScenarioId::HomogeneousPoint => {
+                let n = Dim3::new(32, 32, 32);
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        5,
+                        10.0,
+                        VelocityModel::Constant(2500.0),
+                        1.0,
+                        180,
+                        src(Dim3::new(16, 16, 16), 25.0, 1.0),
+                        shallow_line(n, 5),
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        max_leakage: 0.6,
+                        max_final_fraction: 0.8,
+                        require_receivers: true,
+                        ..Expectations::default()
+                    },
+                }
+            }
+            ScenarioId::LayeredReflector => {
+                let n = Dim3::new(36, 32, 32);
+                let model = VelocityModel::Layered(vec![
+                    (0.0, 1800.0),
+                    (0.45, 3200.0),
+                    (0.75, 4200.0),
+                ]);
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        5,
+                        10.0,
+                        model,
+                        1.0,
+                        180,
+                        src(Dim3::new(9, 16, 16), 22.0, 1.0),
+                        shallow_line(n, 5),
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        max_leakage: 0.7, // reflector pushes energy at the faces
+                        max_final_fraction: 0.9,
+                        require_receivers: true,
+                        ..Expectations::default()
+                    },
+                }
+            }
+            ScenarioId::GradientMedium => {
+                let n = Dim3::new(40, 28, 28);
+                let model = VelocityModel::GradientZ { v0: 1500.0, k_per_m: 1.0, h: 10.0 };
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        5,
+                        10.0,
+                        model,
+                        1.0,
+                        180,
+                        src(Dim3::new(12, 14, 14), 22.0, 1.0),
+                        vec![],
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        max_leakage: 0.7,
+                        max_final_fraction: 0.9,
+                        ..Expectations::default()
+                    },
+                }
+            }
+            ScenarioId::PmlCornerAbsorption => {
+                let n = Dim3::new(32, 32, 32);
+                let pml = 6;
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        pml,
+                        10.0,
+                        VelocityModel::Constant(2500.0),
+                        1.0,
+                        200,
+                        src(Dim3::new(pml + 2, pml + 2, pml + 2), 25.0, 1.0),
+                        vec![],
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        max_leakage: 0.7,
+                        max_final_fraction: 0.9,
+                        ..Expectations::default()
+                    },
+                }
+            }
+            ScenarioId::MultiSourceInterference => {
+                let n = Dim3::new(36, 36, 36);
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        5,
+                        10.0,
+                        VelocityModel::Constant(2500.0),
+                        1.0,
+                        160,
+                        src(Dim3::new(18, 18, 12), 25.0, 1.0),
+                        shallow_line(n, 5),
+                    ),
+                    extra_sources: vec![
+                        src(Dim3::new(18, 18, 24), 25.0, 1.0),
+                        src(Dim3::new(18, 12, 18), 25.0, -1.0), // antiphase
+                    ],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        max_leakage: 0.7,
+                        max_final_fraction: 0.9,
+                        require_receivers: true,
+                        ..Expectations::default()
+                    },
+                }
+            }
+            ScenarioId::EnergyStability => {
+                let n = Dim3::new(28, 28, 28);
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        5,
+                        10.0,
+                        VelocityModel::Constant(2200.0),
+                        1.0,
+                        400,
+                        src(Dim3::new(14, 14, 14), 30.0, 1.0),
+                        vec![],
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        max_leakage: 0.7,
+                        max_late_growth: 1.5,
+                        max_final_fraction: 0.6,
+                        ..Expectations::default()
+                    },
+                }
+            }
+            ScenarioId::CflMarginStress => {
+                let n = Dim3::new(28, 28, 28);
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        4,
+                        10.0,
+                        VelocityModel::Constant(2500.0),
+                        2.5, // dt deliberately past the stable limit
+                        200,
+                        src(Dim3::new(14, 14, 14), 25.0, 1.0),
+                        vec![],
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations::default(),
+                }
+            }
+            ScenarioId::TinyGrid => {
+                let n = Dim3::new(9, 7, 11);
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        2,
+                        10.0,
+                        VelocityModel::Constant(2000.0),
+                        1.0,
+                        80,
+                        src(Dim3::new(4, 3, 5), 40.0, 1.0),
+                        vec![],
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-6,
+                        max_leakage: 1.0, // PML width 2 barely absorbs
+                        // few modes -> sum(u^2) swings; only order-of-
+                        // magnitude growth means instability here
+                        max_late_growth: 4.0,
+                        max_final_fraction: 1.0,
+                        check_absorption: false,
+                        ..Expectations::default()
+                    },
+                }
+            }
+        }
+    }
+}
+
+/// Knobs for a single scenario run.
+#[derive(Clone, Debug, Default)]
+pub struct RunnerOptions {
+    /// Override the scenario's step count outright.
+    pub steps_override: Option<usize>,
+    /// Scale the scenario's step count (campaign `--quick`); floor 20.
+    pub steps_scale: Option<f64>,
+    /// Attach a gpusim performance prediction for this machine...
+    pub machine: Option<String>,
+    /// ...and this kernel variant id (both or neither).
+    pub variant: Option<String>,
+}
+
+/// One completed scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioRun {
+    pub id: ScenarioId,
+    pub metrics: Metrics,
+    pub result: ScenarioResult,
+}
+
+impl ScenarioRun {
+    /// Did the verdict match what the catalogue expects? (Stress
+    /// scenarios are *supposed* to fail hard.)
+    pub fn as_expected(&self) -> bool {
+        self.result.overall == self.id.expected_verdict()
+    }
+}
+
+/// Run one scenario on the golden backend and evaluate it.
+pub fn run_scenario(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Result<ScenarioRun> {
+    let spec = id.materialize();
+    let cfg = &spec.config;
+    let mut steps = opts.steps_override.unwrap_or(cfg.steps);
+    if let Some(scale) = opts.steps_scale {
+        steps = ((steps as f64 * scale) as usize).max(20);
+    }
+
+    let interior = cfg.domain.interior;
+    let v = cfg.model.build(interior);
+    let v_max_grid = v.as_slice().iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+    let eta = wave::eta_profile(&cfg.domain, v_max_grid);
+    let mut coord = Coordinator::new(
+        None,
+        cfg.domain,
+        Mode::Golden,
+        &cfg.inner_variant,
+        &cfg.pml_variant,
+        v,
+        eta,
+        cfg.source,
+        cfg.receivers.clone(),
+    )?;
+    for s in &spec.extra_sources {
+        coord.add_source(*s)?;
+    }
+
+    let mut collector = MetricsCollector::new(cfg.domain);
+    let summary = coord.run_observed(
+        steps,
+        RunOptions { halt_on_non_finite: false },
+        Some(&mut collector),
+    )?;
+    let mut metrics = collector.finish(steps, &summary, v_max_grid);
+
+    match (&opts.machine, &opts.variant) {
+        (Some(m), Some(vid)) => metrics.predicted = Some(predict_perf(m, vid)?),
+        (None, None) => {}
+        _ => anyhow::bail!("prediction needs both --machine and --variant (or neither)"),
+    }
+
+    let result = evaluate_pass_fail(&metrics, &spec.expectations);
+    Ok(ScenarioRun { id, metrics, result })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_has_at_least_eight_named_scenarios() {
+        let all = ScenarioId::all();
+        assert!(all.len() >= 8, "{}", all.len());
+        let mut names: Vec<_> = all.iter().map(|i| i.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "names must be unique");
+        for id in &all {
+            assert!(!id.describe().is_empty());
+            assert_eq!(ScenarioId::parse(id.name()).unwrap(), *id);
+        }
+        assert_eq!(
+            ScenarioId::parse("cfl_margin_stress").unwrap(),
+            ScenarioId::CflMarginStress
+        );
+        assert!(ScenarioId::parse("black-thursday").is_err());
+    }
+
+    #[test]
+    fn every_spec_materializes_a_valid_domain() {
+        for id in ScenarioId::all() {
+            let s = id.materialize();
+            s.config.domain.validate().unwrap_or_else(|e| panic!("{}: {e}", id.name()));
+            assert!(s.config.steps >= 20, "{}", id.name());
+            let n = s.config.domain.interior;
+            let inb = |p: Dim3| p.z < n.z && p.y < n.y && p.x < n.x;
+            assert!(inb(s.config.source.pos), "{}: source oob", id.name());
+            for r in &s.config.receivers {
+                assert!(inb(*r), "{}: receiver oob", id.name());
+            }
+            for x in &s.extra_sources {
+                assert!(inb(x.pos), "{}: extra source oob", id.name());
+            }
+        }
+    }
+
+    #[test]
+    fn stress_flags_line_up_with_expected_verdicts() {
+        for id in ScenarioId::all() {
+            if id.is_stress() {
+                assert_eq!(id.expected_verdict(), Verdict::HardFail);
+            } else {
+                assert_eq!(id.expected_verdict(), Verdict::Pass);
+            }
+        }
+        assert!(ScenarioId::CflMarginStress.is_stress());
+    }
+
+    #[test]
+    fn cfl_stress_dt_is_actually_unstable() {
+        let s = ScenarioId::CflMarginStress.materialize();
+        let v_max = s.config.model.v_max_on(s.config.domain.interior) as f64;
+        assert!(s.config.domain.dt > stencil::cfl_dt(s.config.domain.h, v_max) * 2.0);
+    }
+
+    #[test]
+    fn tiny_grid_runs_to_completion() {
+        let run = run_scenario(ScenarioId::TinyGrid, &RunnerOptions::default()).unwrap();
+        assert!(run.metrics.first_non_finite.is_none());
+        assert_eq!(run.metrics.steps_completed, run.metrics.steps_requested);
+    }
+
+    #[test]
+    fn runner_rejects_half_specified_prediction() {
+        let opts = RunnerOptions { machine: Some("v100".into()), ..Default::default() };
+        assert!(run_scenario(ScenarioId::TinyGrid, &opts).is_err());
+    }
+}

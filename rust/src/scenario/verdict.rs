@@ -1,0 +1,325 @@
+//! Pass/fail evaluation: named criteria over collected [`Metrics`] and
+//! the three-level verdict the campaign runner aggregates on.
+
+use std::fmt;
+
+use super::metrics::Metrics;
+
+/// Scenario verdict, worst-criterion-wins.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    Pass,
+    SoftFail,
+    HardFail,
+}
+
+impl Verdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "Pass",
+            Verdict::SoftFail => "SoftFail",
+            Verdict::HardFail => "HardFail",
+        }
+    }
+
+    fn worst(self, other: Verdict) -> Verdict {
+        self.max(other)
+    }
+}
+
+impl fmt::Display for Verdict {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// What a failed criterion costs.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Severity {
+    /// Quality concern: the physics ran but looks degraded.
+    Soft,
+    /// Correctness/stability violation: the run cannot be trusted.
+    Hard,
+}
+
+impl Severity {
+    fn verdict_on_failure(self) -> Verdict {
+        match self {
+            Severity::Soft => Verdict::SoftFail,
+            Severity::Hard => Verdict::HardFail,
+        }
+    }
+}
+
+/// One evaluated criterion.
+#[derive(Clone, Debug)]
+pub struct Criterion {
+    pub name: &'static str,
+    pub passed: bool,
+    pub severity: Severity,
+    /// Human-readable measured-vs-threshold detail.
+    pub detail: String,
+}
+
+/// The full evaluation: every criterion plus the aggregate verdict.
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub criteria: Vec<Criterion>,
+    pub overall: Verdict,
+}
+
+impl ScenarioResult {
+    pub fn failed(&self) -> Vec<&Criterion> {
+        self.criteria.iter().filter(|c| !c.passed).collect()
+    }
+
+    fn from_criteria(criteria: Vec<Criterion>) -> ScenarioResult {
+        let overall = criteria.iter().filter(|c| !c.passed).fold(Verdict::Pass, |acc, c| {
+            acc.worst(c.severity.verdict_on_failure())
+        });
+        ScenarioResult { criteria, overall }
+    }
+}
+
+/// Per-scenario thresholds. Scenarios materialize these alongside their
+/// `RunConfig`; stress scenarios keep the same thresholds (the point is
+/// that they *violate* them) but mark the expected verdict.
+#[derive(Copy, Clone, Debug)]
+pub struct Expectations {
+    /// The wave must actually show up: peak |u| over the run.
+    pub min_peak_abs: f32,
+    /// Boundary containment: peak |u| on the outermost interior layer,
+    /// normalized by the overall peak, must stay below this.
+    pub max_leakage: f64,
+    /// Late-run energy growth ratio (final vs the 3/4-point of the
+    /// energy trace) must stay below this — catches slow instability
+    /// that never reaches NaN within the step budget.
+    pub max_late_growth: f64,
+    /// Absorption: final energy as a fraction of peak energy.
+    pub max_final_fraction: f64,
+    /// Whether the absorption criterion applies (meaningless for runs
+    /// shorter than the source wavelet or for degenerate grids).
+    pub check_absorption: bool,
+    /// Whether every receiver must have recorded signal.
+    pub require_receivers: bool,
+}
+
+impl Default for Expectations {
+    fn default() -> Self {
+        Expectations {
+            min_peak_abs: 1e-6,
+            max_leakage: 0.5,
+            max_late_growth: 2.0,
+            max_final_fraction: 0.9,
+            check_absorption: true,
+            require_receivers: false,
+        }
+    }
+}
+
+/// Evaluate collected metrics against scenario expectations. Criteria
+/// are always all listed (passed or not) so reports stay comparable
+/// across scenarios; the verdict is worst-criterion-wins.
+pub fn evaluate_pass_fail(m: &Metrics, exp: &Expectations) -> ScenarioResult {
+    let mut criteria = Vec::new();
+    let mut push = |name, passed, severity, detail: String| {
+        criteria.push(Criterion { name, passed, severity, detail });
+    };
+
+    // 1. finite_field (hard): NaN/Inf anywhere, ever, is fatal.
+    push(
+        "finite_field",
+        m.first_non_finite.is_none(),
+        Severity::Hard,
+        match m.first_non_finite {
+            None => format!("all {} steps finite", m.steps_completed),
+            Some(s) => format!("non-finite wavefield at step {s}"),
+        },
+    );
+
+    // 2. cfl_respected (hard): dt against the CFL bound computed from
+    //    the *materialized* velocity grid (not a nominal bound).
+    let cfl_ok = m.dt <= m.cfl_dt * (1.0 + 1e-9);
+    push(
+        "cfl_respected",
+        cfl_ok,
+        Severity::Hard,
+        format!("dt {:.4e} vs CFL limit {:.4e} (v_max {:.0})", m.dt, m.cfl_dt, m.v_max),
+    );
+
+    // 3. wave_propagated (hard): a silent simulation is a broken one.
+    push(
+        "wave_propagated",
+        m.peak_abs >= exp.min_peak_abs,
+        Severity::Hard,
+        format!("peak |u| {:.3e} vs required {:.3e}", m.peak_abs, exp.min_peak_abs),
+    );
+
+    // 4. energy_bounded (hard): late-run growth means instability even
+    //    if the field never reached non-finite within the budget.
+    let growth_ok = m.late_growth.is_finite() && m.late_growth <= exp.max_late_growth;
+    push(
+        "energy_bounded",
+        growth_ok,
+        Severity::Hard,
+        format!("late energy growth x{:.3} vs allowed x{:.2}", m.late_growth, exp.max_late_growth),
+    );
+
+    // 5. boundary_containment (soft): PML should keep the outermost
+    //    interior layer quiet relative to the run's peak amplitude.
+    let leak_ok = m.boundary_leakage.is_finite() && m.boundary_leakage <= exp.max_leakage;
+    push(
+        "boundary_containment",
+        leak_ok,
+        Severity::Soft,
+        format!("edge/peak amplitude ratio {:.3} vs allowed {:.3}", m.boundary_leakage, exp.max_leakage),
+    );
+
+    // 6. energy_absorbed (soft): after the source dies, the sponge
+    //    should have swallowed most of the injected energy.
+    let final_frac = if m.peak_energy > 0.0 { m.final_energy / m.peak_energy } else { 0.0 };
+    let absorb_ok =
+        !exp.check_absorption || (final_frac.is_finite() && final_frac <= exp.max_final_fraction);
+    push(
+        "energy_absorbed",
+        absorb_ok,
+        Severity::Soft,
+        if exp.check_absorption {
+            format!("final/peak energy {:.3} vs allowed {:.3}", final_frac, exp.max_final_fraction)
+        } else {
+            "not applicable for this scenario".to_string()
+        },
+    );
+
+    // 7. receivers_live (soft): every receiver recorded real signal.
+    let recv_ok = !exp.require_receivers
+        || (!m.receiver_peak.is_empty() && m.receiver_peak.iter().all(|&p| p > 0.0 && p.is_finite()));
+    push(
+        "receivers_live",
+        recv_ok,
+        Severity::Soft,
+        format!(
+            "{}/{} receivers saw signal",
+            m.receiver_peak.iter().filter(|&&p| p > 0.0 && p.is_finite()).count(),
+            m.receiver_peak.len()
+        ),
+    );
+
+    // 8. throughput_model (soft): the gpusim prediction for this
+    //    variant x machine must be sane (occupancy >= 1 block, finite
+    //    positive steps/sec). Vacuously true when no prediction was
+    //    requested.
+    let (thr_ok, thr_detail) = match &m.predicted {
+        None => (true, "no machine/variant prediction requested".to_string()),
+        Some(p) => (
+            p.steps_per_sec.is_finite() && p.steps_per_sec > 0.0 && p.blocks_per_sm >= 1,
+            format!(
+                "{} on {}: {:.2} steps/s predicted, {} blocks/SM",
+                p.variant, p.machine, p.steps_per_sec, p.blocks_per_sm
+            ),
+        ),
+    };
+    push("throughput_model", thr_ok, Severity::Soft, thr_detail);
+
+    ScenarioResult::from_criteria(criteria)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scenario::metrics::{Metrics, PredictedPerf};
+
+    fn healthy() -> Metrics {
+        Metrics {
+            steps_requested: 100,
+            steps_completed: 100,
+            dt: 1.0e-3,
+            h: 10.0,
+            v_max: 2500.0,
+            cfl_dt: 1.5e-3,
+            energy_trace: vec![1.0; 100],
+            peak_energy: 10.0,
+            final_energy: 1.0,
+            peak_abs: 5.0,
+            final_max_abs: 0.5,
+            edge_peak_abs: 0.5,
+            boundary_leakage: 0.1,
+            late_growth: 0.8,
+            first_non_finite: None,
+            receiver_peak: vec![0.2, 0.3],
+            wall_ms: 12.0,
+            measured_mpts_per_sec: 1.0,
+            predicted: None,
+        }
+    }
+
+    #[test]
+    fn healthy_metrics_pass_every_criterion() {
+        let r = evaluate_pass_fail(&healthy(), &Expectations::default());
+        assert_eq!(r.overall, Verdict::Pass, "failed: {:?}", r.failed());
+        assert_eq!(r.criteria.len(), 8);
+    }
+
+    #[test]
+    fn non_finite_is_a_hard_fail() {
+        let mut m = healthy();
+        m.first_non_finite = Some(42);
+        let r = evaluate_pass_fail(&m, &Expectations::default());
+        assert_eq!(r.overall, Verdict::HardFail);
+        assert!(r.failed().iter().any(|c| c.name == "finite_field"));
+    }
+
+    #[test]
+    fn cfl_violation_is_a_hard_fail() {
+        let mut m = healthy();
+        m.dt = 2.0 * m.cfl_dt;
+        let r = evaluate_pass_fail(&m, &Expectations::default());
+        assert_eq!(r.overall, Verdict::HardFail);
+        assert!(r.failed().iter().any(|c| c.name == "cfl_respected"));
+    }
+
+    #[test]
+    fn leakage_alone_is_a_soft_fail() {
+        let mut m = healthy();
+        m.boundary_leakage = 0.9;
+        let r = evaluate_pass_fail(&m, &Expectations::default());
+        assert_eq!(r.overall, Verdict::SoftFail);
+        assert!(r.failed().iter().any(|c| c.name == "boundary_containment"));
+    }
+
+    #[test]
+    fn hard_beats_soft_in_aggregate() {
+        let mut m = healthy();
+        m.boundary_leakage = 0.9; // soft
+        m.late_growth = 100.0; // hard
+        let r = evaluate_pass_fail(&m, &Expectations::default());
+        assert_eq!(r.overall, Verdict::HardFail);
+        assert_eq!(r.failed().len(), 2);
+    }
+
+    #[test]
+    fn bad_prediction_is_soft() {
+        let mut m = healthy();
+        m.predicted = Some(PredictedPerf {
+            machine: "V100".into(),
+            variant: "gmem_8x8x8".into(),
+            steps_per_sec: 0.0,
+            gflops: 0.0,
+            blocks_per_sm: 0,
+        });
+        let r = evaluate_pass_fail(&m, &Expectations::default());
+        assert_eq!(r.overall, Verdict::SoftFail);
+        assert!(r.failed().iter().any(|c| c.name == "throughput_model"));
+    }
+
+    #[test]
+    fn verdict_ordering_and_names() {
+        assert!(Verdict::Pass < Verdict::SoftFail && Verdict::SoftFail < Verdict::HardFail);
+        assert_eq!(Verdict::HardFail.to_string(), "HardFail");
+        let exp = Expectations { check_absorption: false, ..Expectations::default() };
+        let mut m = healthy();
+        m.final_energy = 100.0; // would fail absorption if checked
+        let r = evaluate_pass_fail(&m, &exp);
+        assert_eq!(r.overall, Verdict::Pass);
+    }
+}

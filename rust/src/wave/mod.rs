@@ -40,16 +40,21 @@ impl VelocityModel {
         }
     }
 
-    /// Maximum velocity (for CFL / eta_max).
-    pub fn v_max(&self) -> f32 {
+    /// Maximum velocity over the grid this model would materialize on
+    /// (for CFL / eta_max). For `GradientZ` this is the velocity at the
+    /// actual bottom of the grid — not a nominal depth bound, which
+    /// used to overstate v_max (and so over-throttle dt) by the ratio
+    /// of the assumed to the real depth.
+    pub fn v_max_on(&self, interior: Dim3) -> f32 {
         match self {
             VelocityModel::Constant(v) => *v,
             VelocityModel::Layered(layers) => {
                 layers.iter().map(|&(_, v)| v).fold(0.0f32, f32::max)
             }
-            VelocityModel::GradientZ { v0, k_per_m, .. } => {
-                // caller materializes on a finite grid; bound with a generous depth
-                v0 + k_per_m * 1.0e4
+            VelocityModel::GradientZ { v0, k_per_m, h } => {
+                let depth_m = interior.z.saturating_sub(1) as f64 * h;
+                // negative gradients peak at the surface
+                v0.max(v0 + k_per_m * depth_m as f32)
             }
         }
     }
@@ -113,7 +118,7 @@ mod tests {
     fn constant_model() {
         let v = VelocityModel::Constant(2500.0).build(Dim3::new(4, 4, 4));
         assert!(v.as_slice().iter().all(|&x| x == 2500.0));
-        assert_eq!(VelocityModel::Constant(2500.0).v_max(), 2500.0);
+        assert_eq!(VelocityModel::Constant(2500.0).v_max_on(Dim3::new(4, 4, 4)), 2500.0);
     }
 
     #[test]
@@ -123,7 +128,7 @@ mod tests {
         assert_eq!(v.get(0, 0, 0), 1500.0);
         assert_eq!(v.get(5, 0, 0), 2500.0);
         assert_eq!(v.get(9, 0, 0), 4000.0);
-        assert_eq!(m.v_max(), 4000.0);
+        assert_eq!(m.v_max_on(Dim3::new(10, 2, 2)), 4000.0);
     }
 
     #[test]
@@ -132,6 +137,24 @@ mod tests {
         let v = m.build(Dim3::new(5, 1, 1));
         assert_eq!(v.get(0, 0, 0), 1500.0);
         assert_eq!(v.get(4, 0, 0), 1500.0 + 0.5 * 40.0);
+    }
+
+    #[test]
+    fn gradient_v_max_tracks_the_materialized_grid() {
+        let m = VelocityModel::GradientZ { v0: 1500.0, k_per_m: 1.0, h: 10.0 };
+        for nz in [5usize, 40, 200] {
+            let dims = Dim3::new(nz, 2, 2);
+            let built_max =
+                m.build(dims).as_slice().iter().fold(0.0f32, |a, &b| a.max(b));
+            assert_eq!(m.v_max_on(dims), built_max, "nz = {nz}");
+        }
+        // the old behavior bounded depth at 1e4 m — on a 40-cell grid
+        // that overstated v_max by ~6x (11500 vs 1890) and would have
+        // over-throttled dt by the same factor
+        assert!(m.v_max_on(Dim3::new(40, 2, 2)) < 2000.0);
+        // negative gradients peak at the surface, never below v0
+        let neg = VelocityModel::GradientZ { v0: 3000.0, k_per_m: -2.0, h: 10.0 };
+        assert_eq!(neg.v_max_on(Dim3::new(50, 2, 2)), 3000.0);
     }
 
     #[test]

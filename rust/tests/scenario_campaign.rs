@@ -1,0 +1,149 @@
+//! Integration: the scenario catalogue and campaign runner.
+//!
+//! Everything here runs on the pure-Rust golden backend — no AOT
+//! artifacts required — so these tests always execute (no skip gate).
+
+use hostencil::json::Json;
+use hostencil::scenario::campaign::{run_campaign, CampaignSpec};
+use hostencil::scenario::{run_scenario, RunnerOptions, ScenarioId, Verdict};
+
+/// Trimmed runner options so debug-profile test runs stay fast; the
+/// criteria are step-count independent except absorption, which the
+/// scale keeps meaningful.
+fn quick() -> RunnerOptions {
+    RunnerOptions { steps_scale: Some(0.5), ..RunnerOptions::default() }
+}
+
+#[test]
+fn every_non_stress_scenario_passes() {
+    for id in ScenarioId::all().into_iter().filter(|id| !id.is_stress()) {
+        let run = run_scenario(id, &RunnerOptions::default()).expect(id.name());
+        assert_eq!(
+            run.result.overall,
+            Verdict::Pass,
+            "{} should Pass; failed criteria: {:?}",
+            id.name(),
+            run.result
+                .failed()
+                .iter()
+                .map(|c| format!("{}: {}", c.name, c.detail))
+                .collect::<Vec<_>>()
+        );
+    }
+}
+
+#[test]
+fn cfl_violation_scenario_hard_fails() {
+    // the deliberately mis-configured scenario: dt 2.5x past the CFL
+    // bound must produce a HardFail verdict (and say why)
+    let run = run_scenario(ScenarioId::CflMarginStress, &quick()).unwrap();
+    assert_eq!(run.result.overall, Verdict::HardFail);
+    let failed: Vec<&str> = run.result.failed().iter().map(|c| c.name).collect();
+    assert!(failed.contains(&"cfl_respected"), "{failed:?}");
+    // and the catalogue knows it: the run is *expected* to fail
+    assert!(run.as_expected());
+}
+
+#[test]
+fn cfl_stress_actually_blows_up_the_field() {
+    let run = run_scenario(ScenarioId::CflMarginStress, &RunnerOptions::default()).unwrap();
+    assert!(
+        run.metrics.first_non_finite.is_some(),
+        "2.5x CFL should reach non-finite within the step budget"
+    );
+    assert!(run.metrics.steps_completed < run.metrics.steps_requested);
+}
+
+#[test]
+fn scenario_runs_are_deterministic() {
+    let a = run_scenario(ScenarioId::HomogeneousPoint, &quick()).unwrap();
+    let b = run_scenario(ScenarioId::HomogeneousPoint, &quick()).unwrap();
+    assert_eq!(a.metrics.energy_trace, b.metrics.energy_trace);
+    assert_eq!(a.metrics.peak_abs, b.metrics.peak_abs);
+    assert_eq!(a.result.overall, b.result.overall);
+}
+
+#[test]
+fn campaign_matrix_runs_in_parallel_and_aggregates() {
+    let spec = CampaignSpec {
+        scenarios: vec![ScenarioId::TinyGrid, ScenarioId::CflMarginStress],
+        variants: vec!["gmem_8x8x8".to_string(), "st_reg_fixed_32x32".to_string()],
+        machines: vec!["v100".to_string()],
+        steps_scale: Some(0.5),
+        threads: 4,
+    };
+    let report = run_campaign(&spec);
+    assert_eq!(report.cells.len(), 4);
+    assert!(report.threads >= 1 && report.threads <= 4);
+
+    // cells come back in deterministic matrix order
+    assert_eq!(report.cells[0].scenario, ScenarioId::TinyGrid);
+    assert_eq!(report.cells[0].variant, "gmem_8x8x8");
+    assert_eq!(report.cells[3].scenario, ScenarioId::CflMarginStress);
+
+    // stress cells hard-fail, but *expectedly* — the campaign stays green
+    for c in &report.cells {
+        if c.scenario.is_stress() {
+            assert_eq!(c.verdict, Verdict::HardFail, "{c:?}");
+            assert!(!c.off_expectation());
+        } else {
+            assert_ne!(c.verdict, Verdict::HardFail, "{c:?}");
+        }
+        assert!(c.predicted_steps_per_sec > 0.0, "{c:?}");
+    }
+    assert_eq!(report.off_expectation_count(), 0);
+}
+
+#[test]
+fn campaign_json_is_parseable_and_round_trips() {
+    let spec = CampaignSpec {
+        scenarios: vec![ScenarioId::TinyGrid, ScenarioId::CflMarginStress],
+        variants: vec!["gmem_8x8x8".to_string()],
+        machines: vec!["v100".to_string()],
+        steps_scale: Some(0.5),
+        threads: 2,
+    };
+    let report = run_campaign(&spec);
+    let j = report.to_json();
+    let text = j.emit();
+
+    // the emitted text is valid JSON for our own strict parser...
+    let parsed = Json::parse(&text).expect("campaign JSON must parse");
+    // ...and round-trips exactly (non-finite metrics were sanitized)
+    assert_eq!(parsed, j);
+
+    // schema spot-checks a consumer would rely on
+    assert_eq!(parsed.get("kind").unwrap().as_str().unwrap(), "hostencil-campaign");
+    let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+    assert_eq!(cells.len(), 2);
+    let stress = &cells[1];
+    assert_eq!(stress.get("scenario").unwrap().as_str().unwrap(), "cfl-margin-stress");
+    assert_eq!(stress.get("verdict").unwrap().as_str().unwrap(), "HardFail");
+    let summary = parsed.get("summary").unwrap();
+    assert_eq!(summary.get("total").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(summary.get("off_expectation").unwrap().as_usize().unwrap(), 0);
+}
+
+#[test]
+fn campaign_single_thread_matches_parallel() {
+    let mk = |threads| CampaignSpec {
+        scenarios: vec![ScenarioId::TinyGrid],
+        variants: vec!["gmem_8x8x8".to_string()],
+        machines: vec!["v100".to_string(), "nvs510".to_string()],
+        steps_scale: Some(0.5),
+        threads,
+    };
+    let serial = run_campaign(&mk(1));
+    let parallel = run_campaign(&mk(2));
+    assert_eq!(serial.cells.len(), parallel.cells.len());
+    for (a, b) in serial.cells.iter().zip(&parallel.cells) {
+        assert_eq!(a.scenario, b.scenario);
+        assert_eq!(a.machine, b.machine);
+        assert_eq!(a.verdict, b.verdict);
+        assert_eq!(a.peak_abs, b.peak_abs, "physics must be scheduling-independent");
+    }
+    // machine axis feeds the perf model: V100 predicts faster steps
+    let v100 = &serial.cells[0];
+    let nvs = &serial.cells[1];
+    assert!(v100.predicted_steps_per_sec > nvs.predicted_steps_per_sec);
+}

@@ -1,0 +1,125 @@
+//! Vendored shim of the `anyhow` API surface used by `hostencil`.
+//!
+//! The offline crate set has no crates.io access, so this tiny crate
+//! supplies exactly what the codebase calls: [`Error`], [`Result`], and
+//! the `anyhow!` / `bail!` / `ensure!` macros. Errors are a single
+//! rendered message (the codebase never chains contexts), and any
+//! `std::error::Error` converts via `?` just like the real crate.
+
+use std::fmt;
+
+/// A rendered error message. Like the real `anyhow::Error`, this type
+/// deliberately does NOT implement `std::error::Error`, which is what
+/// makes the blanket `From<E: std::error::Error>` impl possible.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (the `anyhow!` macro's
+    /// backing constructor).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (or any displayable).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)+) => {
+        return ::core::result::Result::Err($crate::anyhow!($($t)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let x = 3;
+        let e: Error = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e: Error = anyhow!("x = {}", x);
+        assert_eq!(e.to_string(), "x = 3");
+        let e: Error = anyhow!("x = {x}");
+        assert_eq!(e.to_string(), "x = 3");
+    }
+
+    #[test]
+    fn ensure_and_bail_return_early() {
+        assert_eq!(fails(false).unwrap(), 7);
+        let err = fails(true).unwrap_err();
+        assert_eq!(err.to_string(), "flag was true");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        fn parse(s: &str) -> Result<i64> {
+            Ok(s.parse::<i64>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+}

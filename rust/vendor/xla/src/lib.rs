@@ -1,0 +1,240 @@
+//! Vendored stub of the `xla` crate surface used by `hostencil::runtime`.
+//!
+//! The offline build has no PJRT/XLA shared libraries, so this crate
+//! supplies the same types and signatures with host-side behavior:
+//!
+//! * [`Literal`] and [`PjRtBuffer`] are real f32 containers — shape
+//!   bookkeeping, reshape validation, and host round-trips all work
+//!   (the runtime unit tests exercise them).
+//! * [`PjRtClient::compile`] reports "unavailable": executing AOT HLO
+//!   artifacts needs the real PJRT runtime. Every artifact-gated test
+//!   in the repo already skips when `artifacts/manifest.json` is
+//!   missing, so the stub only surfaces when someone actually tries to
+//!   launch an executable.
+//!
+//! Swap this path dependency for the real `xla` crate (and delete the
+//! stub) once the environment ships PJRT.
+
+use std::fmt;
+
+/// Error type matching the real crate's role; converts into
+/// `anyhow::Error` through the blanket `std::error::Error` impl.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    fn new(msg: impl Into<String>) -> XlaError {
+        XlaError { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla(stub): {}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+/// Element types the stub can move between host slices and buffers.
+pub trait NativeType: Copy {
+    fn to_f32(self) -> f32;
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn to_f32(self) -> f32 {
+        self
+    }
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+}
+
+impl NativeType for f64 {
+    fn to_f32(self) -> f32 {
+        self as f32
+    }
+    fn from_f32(v: f32) -> Self {
+        v as f64
+    }
+}
+
+/// A host literal: dense f32 data plus a shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(XlaError::new(format!(
+                "reshape to {:?} ({} elements) from {} elements",
+                dims,
+                want,
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// A "device" buffer — host-resident in the stub.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl PjRtBuffer {
+    /// Synchronous device->host copy.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal { data: self.data.clone(), dims: self.dims.clone() })
+    }
+}
+
+/// Parsed (well, carried) HLO module text.
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    /// Read an HLO text artifact from disk. File I/O is real; parsing is
+    /// deferred to `compile`, which the stub cannot perform.
+    pub fn from_text_file(path: impl AsRef<std::path::Path>) -> Result<HloModuleProto> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError::new(format!("cannot read HLO text {path:?}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// A computation wrapping an HLO module.
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _text: proto.text.clone() }
+    }
+}
+
+/// A compiled executable. Unreachable through the stub client (compile
+/// always errors), but the type and signatures exist so the runtime
+/// layer typechecks identically against the real crate.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(
+            "PJRT execution is unavailable in the stub runtime (vendored rust/vendor/xla)",
+        ))
+    }
+}
+
+/// The (stub) CPU PJRT client.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(
+            "HLO compilation is unavailable in the stub runtime; build against the real \
+             xla crate (see rust/vendor/xla/src/lib.rs) to execute AOT artifacts",
+        ))
+    }
+
+    /// Host->"device" transfer.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let want: usize = dims.iter().product();
+        if want != data.len() {
+            return Err(XlaError::new(format!(
+                "host buffer has {} elements but dims {:?} imply {}",
+                data.len(),
+                dims,
+                want
+            )));
+        }
+        Ok(PjRtBuffer {
+            data: data.iter().map(|&v| v.to_f32()).collect(),
+            dims: dims.iter().map(|&d| d as i64).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_and_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn buffer_transfer_roundtrip() {
+        let c = PjRtClient::cpu().unwrap();
+        let b = c.buffer_from_host_buffer::<f32>(&[1.0, 2.0, 3.0, 4.0], &[2, 2], None).unwrap();
+        let l = b.to_literal_sync().unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(c.buffer_from_host_buffer::<f32>(&[1.0], &[2, 2], None).is_err());
+    }
+
+    #[test]
+    fn compile_reports_stub() {
+        let c = PjRtClient::cpu().unwrap();
+        let proto = HloModuleProto { text: "HloModule m".into() };
+        let comp = XlaComputation::from_proto(&proto);
+        let err = c.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("stub"), "{err}");
+    }
+}
