@@ -21,11 +21,15 @@ impl Stats {
         s.sort();
         let n = s.len();
         let mean = s.iter().sum::<Duration>() / n as u32;
+        // even sample counts average the two middle samples; taking
+        // s[n/2] alone biased the median high by up to half the
+        // inter-sample spread
+        let median = if n % 2 == 0 { (s[n / 2 - 1] + s[n / 2]) / 2 } else { s[n / 2] };
         Stats {
             name: name.to_string(),
             samples: n,
             min: s[0],
-            median: s[n / 2],
+            median,
             mean,
             p95: s[(n * 95 / 100).min(n - 1)],
             max: s[n - 1],
@@ -125,6 +129,20 @@ mod tests {
         assert_eq!(s.samples, 7);
         assert!(s.min <= s.median && s.median <= s.p95 && s.p95 <= s.max);
         assert!(s.min > Duration::ZERO);
+    }
+
+    #[test]
+    fn even_sample_median_averages_the_middle_pair() {
+        // regression: s[n/2] on an even count took the upper-middle
+        // sample instead of the midpoint
+        let ns = |v: u64| Duration::from_nanos(v);
+        let even = Stats::from_samples("even", vec![ns(40), ns(10), ns(100), ns(20)]);
+        assert_eq!(even.median, ns(30), "median of 10,20,40,100 is (20+40)/2");
+        let odd = Stats::from_samples("odd", vec![ns(30), ns(10), ns(20)]);
+        assert_eq!(odd.median, ns(20));
+        let pair = Stats::from_samples("pair", vec![ns(10), ns(20)]);
+        assert_eq!(pair.median, ns(15));
+        assert!(even.min <= even.median && even.median <= even.max);
     }
 
     #[test]

@@ -12,15 +12,21 @@
 //! * `Monolithic`  — 1 branchy full-domain launch/step (strategy 1 /
 //!   OpenACC-baseline analog)
 //! * `Fused`       — 1 launch/step of the XLA-fused decomposed graph
-//! * `Golden`      — pure-Rust CPU stencils, no PJRT (validation baseline)
+//! * `Golden`      — pure-Rust CPU propagators, no PJRT. The kernel
+//!   variant name selects the *code shape* here too: it resolves to one
+//!   of the executable CPU analogs in `stencil::propagator` (naive,
+//!   3D-blocked, 2.5D streaming, semi-stencil), so CPU runs measure
+//!   real shape-dependent cost instead of always walking the golden
+//!   per-point loop.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
 use crate::runtime::{Engine, ExecArg};
+use crate::stencil::propagator::{self, Propagator, PropagatorInputs};
 use crate::wave::Source;
-use crate::{stencil, R};
+use crate::R;
 
 /// Launch topology selector.
 #[derive(Copy, Clone, PartialEq, Eq, Debug)]
@@ -93,15 +99,14 @@ pub struct RunSummary {
     pub traces: Vec<Vec<f32>>,
 }
 
-/// Per-region constant inputs, extracted once at construction and — when
-/// a PJRT engine is attached — uploaded once as resident device buffers
-/// (perf: re-uploading v/eta per launch was pure overhead on the
-/// decomposed hot path; see EXPERIMENTS.md §Perf).
+/// Per-region device-resident constants for the decomposed PJRT path,
+/// uploaded once at construction (perf: re-uploading v/eta per launch
+/// was pure overhead on the decomposed hot path; see EXPERIMENTS.md
+/// §Perf). The CPU path reads `v`/`eta_pad` directly through the
+/// propagator engine and needs no per-region host tiles.
 struct RegionTiles {
-    v: Field3,
-    eta: Option<Field3>, // halo-1 tile, PML regions only
-    v_dev: Option<xla::PjRtBuffer>,
-    eta_dev: Option<xla::PjRtBuffer>,
+    v_dev: xla::PjRtBuffer,
+    eta_dev: Option<xla::PjRtBuffer>, // PML regions only
 }
 
 /// The wave-propagation coordinator.
@@ -122,6 +127,12 @@ pub struct Coordinator<'e> {
     /// extract their interior tiles from it directly, and the buffers
     /// rotate by move — no pad/unpad copies on the hot path)
     um_pad: Field3,
+    /// CPU code-shape engine, selected from the kernel-variant id
+    /// (Golden mode only).
+    propagator: Option<Box<dyn Propagator>>,
+    /// Worker threads for the propagator tile fan-out (0 = one per
+    /// core). The campaign sets 1: its cell fan-out owns the cores.
+    cpu_threads: usize,
     /// Injection sources with the velocity sampled at each position
     /// (primary source from the constructor + any `add_source` extras).
     sources: Vec<(Source, f32)>,
@@ -134,6 +145,7 @@ pub struct Coordinator<'e> {
 
 impl<'e> Coordinator<'e> {
     /// Create a coordinator. `engine` may be `None` only for `Mode::Golden`.
+    #[allow(clippy::too_many_arguments)] // mirrors the launch ABI: state + topology + physics
     pub fn new(
         engine: Option<&'e Engine>,
         domain: Domain,
@@ -184,28 +196,36 @@ impl<'e> Coordinator<'e> {
             }
         }
 
+        // Golden mode: resolve the variant name to its executable CPU
+        // code shape up front, so unknown names fail at construction
+        // exactly like unknown artifact names on the PJRT path.
+        let cpu_propagator = if mode == Mode::Golden {
+            Some(propagator::build(inner_variant)?)
+        } else {
+            None
+        };
+
         let v_at_src = v.get(source.pos.z, source.pos.y, source.pos.x);
         let sources = vec![(source, v_at_src)];
         let n_recv = receivers.len();
         let eta_pad = eta.pad(R);
-        let region_tiles = regions
-            .iter()
-            .map(|reg| -> anyhow::Result<RegionTiles> {
-                let v_t = v.extract(reg.offset, reg.shape);
-                let eta_t = reg
-                    .class
-                    .is_pml()
-                    .then(|| eta_pad.extract_padded_region(R, reg.offset, reg.shape, 1));
-                let (v_dev, eta_dev) = match (mode, engine) {
-                    (Mode::Decomposed, Some(eng)) => (
-                        Some(eng.upload(&v_t)?),
-                        eta_t.as_ref().map(|e| eng.upload(e)).transpose()?,
-                    ),
-                    _ => (None, None),
-                };
-                Ok(RegionTiles { v: v_t, eta: eta_t, v_dev, eta_dev })
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
+        let region_tiles = match (mode, engine) {
+            (Mode::Decomposed, Some(eng)) => regions
+                .iter()
+                .map(|reg| -> anyhow::Result<RegionTiles> {
+                    let v_t = v.extract(reg.offset, reg.shape);
+                    let eta_t = reg
+                        .class
+                        .is_pml()
+                        .then(|| eta_pad.extract_padded_region(R, reg.offset, reg.shape, 1));
+                    Ok(RegionTiles {
+                        v_dev: eng.upload(&v_t)?,
+                        eta_dev: eta_t.as_ref().map(|e| eng.upload(e)).transpose()?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+            _ => Vec::new(),
+        };
         Ok(Coordinator {
             domain,
             mode,
@@ -219,6 +239,8 @@ impl<'e> Coordinator<'e> {
             v,
             u_pad: Field3::zeros(domain.padded()),
             um_pad: Field3::zeros(domain.padded()),
+            propagator: cpu_propagator,
+            cpu_threads: 0,
             sources,
             receivers,
             traces: vec![Vec::new(); n_recv],
@@ -238,7 +260,7 @@ impl<'e> Coordinator<'e> {
             // um inputs (a two-deep device-buffer queue) was measured at
             // <5% on this testbed and reverted — see EXPERIMENTS.md §Perf.
             let um_t = self.um_pad.extract_padded_region(R, reg.offset, reg.shape, 0);
-            let v_dev = tiles.v_dev.as_ref().expect("uploaded in new()");
+            let v_dev = &tiles.v_dev;
             let tile = if reg.class.is_pml() {
                 let u_t = self.u_pad.extract_padded_region(R, reg.offset, reg.shape, 1);
                 let e_dev = tiles.eta_dev.as_ref().expect("pml region has eta buffer");
@@ -277,25 +299,23 @@ impl<'e> Coordinator<'e> {
         Ok(out.pad(R))
     }
 
-    /// One pure-Rust step over the same region decomposition.
-    fn step_golden(&mut self) -> Field3 {
-        let mut out = Field3::zeros(self.domain.padded());
-        for (reg, tiles) in self.regions.iter().zip(&self.region_tiles) {
-            let um_t = self.um_pad.extract_padded_region(R, reg.offset, reg.shape, 0);
-            let tile = if reg.class.is_pml() {
-                let u_t = self.u_pad.extract_padded_region(R, reg.offset, reg.shape, 1);
-                let e_t = tiles.eta.as_ref().expect("pml region has eta tile");
-                stencil::step_pml(&u_t, &um_t, &tiles.v, e_t, self.domain.dt, self.domain.h)
-            } else {
-                let u_t = self.u_pad.extract_padded_region(R, reg.offset, reg.shape, R);
-                stencil::step_inner(&u_t, &um_t, &tiles.v, self.domain.dt, self.domain.h)
-            };
-            self.launches += 1;
-            out.scatter(
-                Dim3::new(R + reg.offset.z, R + reg.offset.y, R + reg.offset.x),
-                &tile,
-            );
-        }
+    /// One pure-Rust step through the selected CPU code shape. The
+    /// propagator owns the tile fan-out; launch bookkeeping stays one
+    /// logical launch per decomposition region, matching the PJRT
+    /// decomposed path.
+    fn step_propagated(&mut self) -> Field3 {
+        let out = {
+            let prop = self.propagator.as_ref().expect("built in new() for Golden mode");
+            prop.step(&PropagatorInputs {
+                domain: &self.domain,
+                u_pad: &self.u_pad,
+                um_pad: &self.um_pad,
+                v: &self.v,
+                eta_pad: &self.eta_pad,
+                threads: self.cpu_threads,
+            })
+        };
+        self.launches += self.regions.len() as u64;
         out
     }
 
@@ -307,7 +327,7 @@ impl<'e> Coordinator<'e> {
             Mode::Decomposed => self.step_decomposed()?,
             Mode::Monolithic => self.step_full("monolithic")?,
             Mode::Fused => self.step_full("fused")?,
-            Mode::Golden => self.step_golden(),
+            Mode::Golden => self.step_propagated(),
         };
         for (src, v_at) in &self.sources {
             let amp = src.amp_at(self.steps_done, self.domain.dt, *v_at);
@@ -402,6 +422,24 @@ impl<'e> Coordinator<'e> {
         self.u_pad.unpad(R)
     }
 
+    /// Worker threads for the CPU propagator tile fan-out (0 = one per
+    /// core). The campaign sets 1 because its own cell fan-out already
+    /// saturates the machine.
+    pub fn set_cpu_threads(&mut self, threads: usize) {
+        self.cpu_threads = threads;
+    }
+
+    /// Name of the active CPU code shape (Golden mode only).
+    pub fn propagator_name(&self) -> Option<&'static str> {
+        self.propagator.as_ref().map(|p| p.name())
+    }
+
+    /// Physics signature of the active CPU code shape (Golden mode
+    /// only): kind + tile dims, as used by campaign physics sharing.
+    pub fn propagator_signature(&self) -> Option<String> {
+        self.propagator.as_ref().map(|p| p.signature())
+    }
+
     pub fn steps_done(&self) -> usize {
         self.steps_done
     }
@@ -422,6 +460,7 @@ impl<'e> Coordinator<'e> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::stencil;
     use crate::wave::{self, VelocityModel};
 
     fn mk(mode: Mode) -> Coordinator<'static> {
@@ -491,6 +530,71 @@ mod tests {
         }
         let d = c.wavefield().max_abs_diff(&p.wavefield());
         assert!(d == 0.0, "coordinator and golden propagator diverged: {d}");
+    }
+
+    #[test]
+    fn golden_mode_selects_code_shape_from_variant_id() {
+        let mk_variant = |variant: &str| {
+            let interior = Dim3::new(24, 24, 24);
+            let h = 10.0;
+            let dt = stencil::cfl_dt(h, 2000.0);
+            let domain = Domain::new(interior, 4, h, dt).unwrap();
+            let v = VelocityModel::Constant(2000.0).build(interior);
+            let eta = wave::eta_profile(&domain, 2000.0);
+            let src = Source { pos: Dim3::new(12, 12, 12), f0: 15.0, amplitude: 1.0 };
+            Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, vec![])
+                .unwrap()
+        };
+        let mut base = mk_variant("naive");
+        assert_eq!(base.propagator_name(), Some("naive"));
+        base.run(15).unwrap();
+        assert_eq!(base.launches(), 7 * 15, "one logical launch per region per step");
+
+        for (variant, name) in [
+            ("gmem", "blocked3d"),
+            ("st_smem_16x16", "streaming2.5d"),
+            ("st_reg_shft", "streaming2.5d"),
+        ] {
+            let mut c = mk_variant(variant);
+            assert_eq!(c.propagator_name(), Some(name), "{variant}");
+            c.set_cpu_threads(2);
+            c.run(15).unwrap();
+            assert_eq!(c.launches(), 7 * 15);
+            let d = c.wavefield().max_abs_diff(&base.wavefield());
+            assert_eq!(d, 0.0, "{variant} deviated from naive");
+        }
+
+        // semi-stencil re-associates the x chain: ULP-level agreement
+        let mut semi = mk_variant("semi");
+        assert_eq!(semi.propagator_name(), Some("semi_stencil"));
+        semi.run(15).unwrap();
+        let rel = semi.wavefield().max_abs_diff(&base.wavefield())
+            / base.wavefield().max_abs().max(1e-30);
+        assert!(rel < 1e-4, "semi drifted: rel {rel}");
+
+        // unknown code shapes are rejected at construction
+        let interior = Dim3::new(24, 24, 24);
+        let domain = Domain::new(interior, 4, 10.0, 1e-3).unwrap();
+        let v = Field3::full(interior, 2000.0);
+        let eta = Field3::zeros(interior);
+        let src = Source { pos: Dim3::new(12, 12, 12), f0: 15.0, amplitude: 1.0 };
+        assert!(Coordinator::new(
+            None, domain, Mode::Golden, "warp_specialized", "gmem", v, eta, src, vec![]
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn cpu_thread_count_does_not_change_physics() {
+        let run_with = |threads: usize| {
+            let mut c = mk(Mode::Golden);
+            c.set_cpu_threads(threads);
+            c.run(12).unwrap();
+            c.wavefield()
+        };
+        let serial = run_with(1);
+        let parallel = run_with(4);
+        assert_eq!(serial.max_abs_diff(&parallel), 0.0, "tile scheduling leaked into physics");
     }
 
     #[test]

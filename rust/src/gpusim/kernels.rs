@@ -224,6 +224,27 @@ pub fn by_id(id: &str) -> anyhow::Result<KernelVariant> {
         .ok_or_else(|| anyhow::anyhow!("unknown kernel variant {id:?}"))
 }
 
+/// Representative Table II id for a family shorthand (the `run
+/// --variant` names), or `None` for anything else.
+pub fn family_representative(name: &str) -> Option<&'static str> {
+    match name {
+        "gmem" => Some("gmem_8x8x8"),
+        "smem_u" => Some("smem_u"),
+        "semi" => Some("semi"),
+        "st_smem" => Some("st_smem_16x16"),
+        "st_reg_shft" => Some("st_reg_shft_16x16"),
+        "st_reg_fixed" => Some("st_reg_fixed_32x32"),
+        _ => None,
+    }
+}
+
+/// Resolve a family shorthand or full Table II id to its variant.
+/// Single source of truth for every layer that accepts either form
+/// (CLI `--variant`, campaign specs, the CPU propagator factory).
+pub fn resolve(name: &str) -> anyhow::Result<KernelVariant> {
+    by_id(family_representative(name).unwrap_or(name))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,5 +353,13 @@ mod tests {
     #[test]
     fn unknown_id_rejected() {
         assert!(by_id("gmem_2x2x2").is_err());
+    }
+
+    #[test]
+    fn resolve_accepts_shorthands_and_full_ids() {
+        assert_eq!(resolve("gmem").unwrap().id, "gmem_8x8x8");
+        assert_eq!(resolve("st_reg_fixed").unwrap().id, "st_reg_fixed_32x32");
+        assert_eq!(resolve("gmem_4x4x4").unwrap().id, "gmem_4x4x4");
+        assert!(resolve("warp_specialized").is_err());
     }
 }

@@ -52,6 +52,37 @@ impl Region {
             crate::R
         }
     }
+
+    /// Split this region into at-most-`tile`-sized sub-boxes (the last
+    /// tile on each axis is clipped, so non-tile-aligned extents are
+    /// covered exactly). Name and class are inherited; offsets stay in
+    /// interior coordinates. The CPU propagators fan these sub-regions
+    /// over worker threads — the host-side analog of a kernel's block
+    /// grid.
+    pub fn split(&self, tile: Dim3) -> Vec<Region> {
+        let (tz, ty, tx) = (tile.z.max(1), tile.y.max(1), tile.x.max(1));
+        let mut out = Vec::new();
+        for z0 in (0..self.shape.z).step_by(tz) {
+            let sz = tz.min(self.shape.z - z0);
+            for y0 in (0..self.shape.y).step_by(ty) {
+                let sy = ty.min(self.shape.y - y0);
+                for x0 in (0..self.shape.x).step_by(tx) {
+                    let sx = tx.min(self.shape.x - x0);
+                    out.push(Region {
+                        name: self.name,
+                        class: self.class,
+                        offset: Dim3::new(
+                            self.offset.z + z0,
+                            self.offset.y + y0,
+                            self.offset.x + x0,
+                        ),
+                        shape: Dim3::new(sz, sy, sx),
+                    });
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Decompose the domain into the paper's 7 launch regions. The regions
@@ -153,6 +184,46 @@ mod tests {
                 _ => assert_eq!(r.halo(), crate::R_ETA),
             }
         }
+    }
+
+    #[test]
+    fn split_covers_region_exactly_with_clipped_tiles() {
+        let d = domain();
+        for reg in decompose(&d) {
+            // deliberately non-divisor tile extents
+            let tiles = reg.split(Dim3::new(5, 7, 3));
+            let mut cover = vec![0u8; reg.shape.volume()];
+            for t in &tiles {
+                assert_eq!(t.class, reg.class);
+                assert!(t.shape.z <= 5 && t.shape.y <= 7 && t.shape.x <= 3);
+                for z in 0..t.shape.z {
+                    for y in 0..t.shape.y {
+                        for x in 0..t.shape.x {
+                            let (lz, ly, lx) = (
+                                t.offset.z - reg.offset.z + z,
+                                t.offset.y - reg.offset.y + y,
+                                t.offset.x - reg.offset.x + x,
+                            );
+                            cover[(lz * reg.shape.y + ly) * reg.shape.x + lx] += 1;
+                        }
+                    }
+                }
+            }
+            assert!(cover.iter().all(|&c| c == 1), "{}: tiles must partition", reg.name);
+        }
+    }
+
+    #[test]
+    fn split_with_oversized_tile_is_identity() {
+        let d = domain();
+        let inner = &decompose(&d)[0];
+        let tiles = inner.split(Dim3::new(999, 999, 999));
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0].offset, inner.offset);
+        assert_eq!(tiles[0].shape, inner.shape);
+        // zero tile extents are clamped to 1 instead of looping forever
+        let degenerate = inner.split(Dim3::new(0, 999, 999));
+        assert_eq!(degenerate.len(), inner.shape.z);
     }
 
     #[test]

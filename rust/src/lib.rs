@@ -25,6 +25,25 @@
 //! variant x machine matrix out over worker threads and exports a
 //! report table + JSON. See `hostencil scenario` / `hostencil campaign`
 //! and `examples/scenario_gauntlet.rs`.
+//!
+//! The CPU side executes through the **code-shape engine**
+//! ([`stencil::propagator`]): a `Propagator` trait with tiled,
+//! multithreaded CPU analogs of the paper's kernel families —
+//!
+//! | kernel variant id          | family (§IV)      | CPU code shape  |
+//! |----------------------------|-------------------|-----------------|
+//! | `naive` / `golden`         | — (reference)     | `Naive`         |
+//! | `gmem_*`, `smem_u`, `smem_eta_*` | 3D blocking | `Blocked3D`     |
+//! | `semi`                     | semi-stencil      | `SemiStencil`   |
+//! | `st_smem_*`, `st_reg_*`    | 2.5D streaming    | `Streaming25D`  |
+//!
+//! — so a kernel-variant id picks real executable code on the CPU path
+//! (`Mode::Golden`), and campaign cells report *measured* steps/sec
+//! (CPU engine, shared per propagator signature) next to *predicted*
+//! steps/sec (gpusim model). All shapes except semi-stencil are
+//! bit-identical to the golden reference; semi re-associates the
+//! x-axis chain and agrees to a few ULP (`hostencil bench`,
+//! `rust/tests/propagator_equivalence.rs`).
 
 pub mod bench;
 pub mod config;

@@ -12,6 +12,7 @@
 //!   sweep       tile-size sweep on the gpusim timing model
 //!   scenario    named physics stress scenarios with pass/fail verdicts
 //!   campaign    parallel scenario x variant x machine verdict matrix
+//!   bench       measured CPU propagator matrix (code-shape engine)
 
 use std::collections::HashMap;
 
@@ -113,6 +114,9 @@ commands:
   run        [--config f] [--steps N] [--mode decomposed|monolithic|fused|golden]
              [--variant gmem|smem_u|semi|st_smem|st_reg_shft|st_reg_fixed]
              [--pml-variant gmem|smem_eta_1|smem_eta_3] [--artifacts dir]
+             [--propagator naive|<variant>] force the CPU code-shape engine:
+                                            golden mode with that propagator
+             [--cpu-threads N]              propagator tile worker threads
   validate   [--artifacts dir] [--steps N]    PJRT vs golden, all variants
   table2     [--steps N]                      predicted wall time vs paper
   table3                                      occupancy characteristics
@@ -123,15 +127,26 @@ commands:
   autotune   [--machine v100] [--family st_reg_fixed|gmem|...]
                                                search tile shapes on the model
   scenario   [--id name|all] [--list] [--steps N] [--machine m --variant v]
-             [--json path]                  run named physics stress scenarios
-                                            (golden backend) with pass/fail
-                                            verdicts; stress ids expect HardFail
+             [--propagator p] [--json path] run named physics stress scenarios
+                                            (CPU propagator backend) with
+                                            pass/fail verdicts; stress ids
+                                            expect HardFail
   campaign   [--machine v100|p100|nvs510|a100|all] [--variant id|all]
              [--quick] [--threads N] [--json path] [--steps-scale f]
                                             scenario x variant x machine matrix
-                                            in parallel; non-zero exit when any
-                                            cell deviates from its expected
-                                            verdict (stress ids expect HardFail)
+                                            in parallel; each cell shows
+                                            measured (CPU code shape) and
+                                            predicted (gpusim) steps/sec;
+                                            physics is shared across cells with
+                                            the same propagator signature;
+                                            non-zero exit when any cell deviates
+                                            from its expected verdict
+  bench      [--size N] [--steps N] [--json path] [--cpu-threads N]
+                                            time the CPU propagator matrix
+                                            (naive/blocked/streaming/semi) on a
+                                            fixed grid via the bench harness;
+                                            honors HOSTENCIL_BENCH_SAMPLES /
+                                            HOSTENCIL_BENCH_WARMUP
 ";
 
 fn main() {
@@ -171,6 +186,7 @@ fn run() -> anyhow::Result<()> {
         "autotune" => cmd_autotune(&args),
         "scenario" => cmd_scenario(&args),
         "campaign" => cmd_campaign(&args),
+        "bench" => cmd_bench(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -243,6 +259,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     if let Some(d) = args.get("artifacts")? {
         cfg.artifacts_dir = d.to_string();
     }
+    if let Some(p) = args.get("propagator")? {
+        // the code-shape engine is CPU-side: force golden mode and let
+        // the variant id select the executable shape
+        cfg.mode = Mode::Golden;
+        cfg.inner_variant = p.to_string();
+    }
 
     let engine = if cfg.mode.needs_engine() {
         Some(Engine::load(&cfg.artifacts_dir)?)
@@ -264,12 +286,18 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         cfg.domain.pml_width
     );
     let mut coord = build_coordinator(&cfg, engine.as_ref())?;
+    coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+    if let Some(sig) = coord.propagator_signature() {
+        println!("cpu code shape: {sig}");
+    }
     let summary = coord.run(cfg.steps)?;
     println!(
-        "done: {} launches, wall {:.3?}, {:.2} Mpts/s, final |u|max {:.3e}, energy {:.3e}",
+        "done: {} launches, wall {:.3?}, {:.2} Mpts/s ({:.1} steps/s measured), \
+         final |u|max {:.3e}, energy {:.3e}",
         summary.launches,
         summary.wall,
         summary.points_per_sec / 1e6,
+        summary.steps as f64 / summary.wall.as_secs_f64().max(1e-12),
         summary.final_max_abs,
         summary.final_energy
     );
@@ -454,6 +482,8 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
             None => None,
             Some(v) => Some(hostencil::scenario::campaign::resolve_variant(v)?),
         },
+        propagator: args.get("propagator")?.map(|s| s.to_string()),
+        cpu_threads: 0,
     };
 
     let mut unexpected = Vec::new();
@@ -562,6 +592,80 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         "{} cell(s) deviated from their expected verdict",
         report.off_expectation_count()
     );
+    Ok(())
+}
+
+/// Time the executable CPU propagator matrix on a fixed small grid and
+/// optionally emit a `BENCH_*.json`-compatible file, so the repo's perf
+/// trajectory tracks *measured* numbers (`hostencil bench --json
+/// BENCH_0.json`). Sample counts honor `HOSTENCIL_BENCH_SAMPLES` /
+/// `HOSTENCIL_BENCH_WARMUP` for CI smoke runs.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    use hostencil::bench::Bencher;
+    use hostencil::grid::{Dim3, Domain};
+    use hostencil::json::Json;
+    use hostencil::stencil::{self, propagator};
+    use hostencil::wave::{Source, VelocityModel};
+    use std::collections::BTreeMap;
+
+    let n = args.usize_or("size", 24)?;
+    anyhow::ensure!(n >= 12, "--size must be >= 12 (needs room for PML width 4)");
+    let steps = args.usize_or("steps", 8)?;
+    anyhow::ensure!(steps >= 1, "--steps must be >= 1");
+    let h = 10.0;
+    let v0 = 2500.0f32;
+    let dt = stencil::cfl_dt(h, v0 as f64);
+    let domain = Domain::new(Dim3::new(n, n, n), 4, h, dt)?;
+    let interior = domain.interior;
+
+    let mut b = Bencher::from_env();
+    println!(
+        "bench: propagator matrix on {} interior (pml {}), {} steps/sample, {} samples (+{} warmup)",
+        interior, domain.pml_width, steps, b.samples, b.warmup
+    );
+    let mut rows: Vec<(String, u128, u128, f64)> = Vec::new();
+    for (label, variant) in propagator::bench_matrix() {
+        let v = VelocityModel::Constant(v0).build(interior);
+        let eta = wave::eta_profile(&domain, v0 as f64);
+        let src = Source { pos: Dim3::new(n / 2, n / 2, n / 2), f0: 15.0, amplitude: 1.0 };
+        let mut coord =
+            Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, vec![])?;
+        coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+        let (median_ns, mean_ns) = {
+            let s = b.bench(label, || coord.run(steps).expect("bench step").final_max_abs);
+            (s.median.as_nanos(), s.mean.as_nanos())
+        };
+        let pps = (interior.volume() * steps) as f64 / (median_ns as f64 / 1e9).max(1e-12);
+        rows.push((label.to_string(), median_ns, mean_ns, pps));
+    }
+    rows.sort_by(|x, y| x.1.cmp(&y.1));
+    println!("\nranking (median):");
+    for (i, (name, _, _, pps)) in rows.iter().enumerate() {
+        println!("  {:>2}. {:<22}{:>10.2} Mpts/s", i + 1, name, pps / 1e6);
+    }
+
+    if let Some(path) = args.get("json")? {
+        let cases: Vec<Json> = rows
+            .iter()
+            .map(|(name, med, mean, pps)| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(name.clone()));
+                o.insert("median_ns".to_string(), Json::Num(*med as f64));
+                o.insert("mean_ns".to_string(), Json::Num(*mean as f64));
+                o.insert("points_per_sec".to_string(), Json::Num(*pps));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("format_version".to_string(), Json::Num(1.0));
+        root.insert("kind".to_string(), Json::Str("hostencil-bench".to_string()));
+        root.insert("grid".to_string(), Json::Str(format!("{interior}")));
+        root.insert("steps_per_sample".to_string(), Json::Num(steps as f64));
+        root.insert("samples".to_string(), Json::Num(b.samples as f64));
+        root.insert("cases".to_string(), Json::Arr(cases));
+        std::fs::write(path, Json::Obj(root).emit())?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 

@@ -171,10 +171,11 @@ pub fn fig3(machine: &str, steps: usize) -> anyhow::Result<(String, String)> {
 /// the other table renderers.)
 pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> String {
     let mut out = format!(
-        "{:<26}{:<20}{:<9}{:>9}{:>11}{:>11}{:>10}  {}\n",
-        "scenario", "variant", "machine", "verdict", "steps", "pred st/s", "leak", "notes"
+        "{:<26}{:<20}{:<9}{:>9}{:>7}{:>11}{:>11}{:>9}  {}\n",
+        "scenario", "variant", "machine", "verdict", "steps", "meas st/s", "pred st/s", "leak",
+        "notes"
     );
-    out.push_str(&hr(110));
+    out.push_str(&hr(116));
     out.push('\n');
     for c in &report.cells {
         let notes = if let Some(e) = &c.error {
@@ -187,28 +188,31 @@ pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> Str
             c.failed_criteria.join(", ")
         };
         out.push_str(&format!(
-            "{:<26}{:<20}{:<9}{:>9}{:>11}{:>11.1}{:>10.3}  {}\n",
+            "{:<26}{:<20}{:<9}{:>9}{:>7}{:>11.1}{:>11.1}{:>9.3}  {}\n",
             c.scenario.name(),
             c.variant,
             c.machine,
             c.verdict.name(),
             c.steps_completed,
+            c.measured_steps_per_sec,
             c.predicted_steps_per_sec,
             c.boundary_leakage,
             notes
         ));
     }
-    out.push_str(&hr(110));
+    out.push_str(&hr(116));
     out.push('\n');
     out.push_str(&format!(
-        "{} cells: {} Pass, {} SoftFail, {} HardFail ({} off-expectation) — {:.2?} on {} threads\n",
+        "{} cells: {} Pass, {} SoftFail, {} HardFail ({} off-expectation) — \
+         {:.2?} on {} threads, {} shared physics run(s)\n",
         report.cells.len(),
         report.count(crate::scenario::Verdict::Pass),
         report.count(crate::scenario::Verdict::SoftFail),
         report.count(crate::scenario::Verdict::HardFail),
         report.off_expectation_count(),
         report.wall,
-        report.threads
+        report.threads,
+        report.physics_runs
     ));
     out
 }
@@ -309,7 +313,9 @@ mod tests {
         let t = campaign_table(&run_campaign(&spec));
         assert!(t.contains("tiny-grid"), "{t}");
         assert!(t.contains("gmem_8x8x8"));
+        assert!(t.contains("meas st/s") && t.contains("pred st/s"), "{t}");
         assert!(t.contains("1 cells:"), "{t}");
+        assert!(t.contains("1 shared physics run(s)"), "{t}");
     }
 
     #[test]

@@ -2,17 +2,23 @@
 //! over `std::thread` worker threads, aggregate per-cell verdicts into
 //! a report table plus a JSON export (`json::Json`-consumable).
 //!
-//! Cells are independent (each runs its own golden-backend physics and
-//! its own gpusim prediction), so the matrix is embarrassingly
-//! parallel; a shared atomic cursor feeds a fixed worker pool.
+//! Physics is shared: cells whose variants resolve to the same CPU
+//! propagator signature (and machine cells, which only differ in
+//! predicted perf) reuse one measured physics run per scenario. Only
+//! the unique (scenario, signature) jobs fan out over the worker pool;
+//! per-cell prediction + verdict assembly is cheap and serial.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::{run_scenario, RunnerOptions, ScenarioId, Verdict};
+use super::{
+    evaluate_pass_fail, predict_perf, run_scenario_physics, Metrics, RunnerOptions, ScenarioId,
+    Verdict,
+};
 use crate::json::Json;
+use crate::stencil::propagator;
 
 /// The matrix to run.
 #[derive(Clone, Debug)]
@@ -40,18 +46,7 @@ pub fn default_variants() -> Vec<String> {
 /// Map a family shorthand (the `run --variant` names) to its
 /// representative gpusim id; full gpusim ids pass through validated.
 pub fn resolve_variant(name: &str) -> anyhow::Result<String> {
-    let shorthand = match name {
-        "gmem" => Some("gmem_8x8x8"),
-        "smem_u" => Some("smem_u"),
-        "semi" => Some("semi"),
-        "st_smem" => Some("st_smem_16x16"),
-        "st_reg_shft" => Some("st_reg_shft_16x16"),
-        "st_reg_fixed" => Some("st_reg_fixed_32x32"),
-        _ => None,
-    };
-    let id = shorthand.unwrap_or(name);
-    crate::gpusim::kernels::by_id(id)?;
-    Ok(id.to_string())
+    Ok(crate::gpusim::kernels::resolve(name)?.id.to_string())
 }
 
 impl CampaignSpec {
@@ -105,7 +100,13 @@ pub struct CampaignCell {
     pub peak_abs: f32,
     pub final_energy: f64,
     pub boundary_leakage: f64,
+    /// gpusim-modeled full-step rate for variant x machine.
     pub predicted_steps_per_sec: f64,
+    /// Measured full-step rate of the CPU propagator that ran this
+    /// cell's physics (shared across cells with the same signature).
+    pub measured_steps_per_sec: f64,
+    /// Signature of that propagator (e.g. `blocked3d:8x8x8`).
+    pub propagator: String,
     pub wall_ms: f64,
     /// Runner error (cell recorded as HardFail), if any.
     pub error: Option<String>,
@@ -128,6 +129,8 @@ pub struct CampaignReport {
     pub cells: Vec<CampaignCell>,
     pub wall: Duration,
     pub threads: usize,
+    /// Unique physics runs executed (<= cells: the sharing win).
+    pub physics_runs: usize,
 }
 
 impl CampaignReport {
@@ -168,6 +171,8 @@ impl CampaignReport {
                 o.insert("final_energy".into(), num(c.final_energy));
                 o.insert("boundary_leakage".into(), num(c.boundary_leakage));
                 o.insert("predicted_steps_per_sec".into(), num(c.predicted_steps_per_sec));
+                o.insert("measured_steps_per_sec".into(), num(c.measured_steps_per_sec));
+                o.insert("propagator".into(), Json::Str(c.propagator.clone()));
                 o.insert("wall_ms".into(), num(c.wall_ms));
                 if let Some(e) = &c.error {
                     o.insert("error".into(), Json::Str(e.clone()));
@@ -186,6 +191,7 @@ impl CampaignReport {
         );
         summary.insert("wall_ms".into(), num(self.wall.as_secs_f64() * 1e3));
         summary.insert("threads".into(), Json::Num(self.threads as f64));
+        summary.insert("physics_runs".into(), Json::Num(self.physics_runs as f64));
         let mut root = BTreeMap::new();
         root.insert("format_version".into(), Json::Num(1.0));
         root.insert("kind".into(), Json::Str("hostencil-campaign".into()));
@@ -195,90 +201,152 @@ impl CampaignReport {
     }
 }
 
-fn run_cell(spec: &CampaignSpec, sc: ScenarioId, variant: &str, machine: &str) -> CampaignCell {
-    let opts = RunnerOptions {
-        steps_override: None,
-        steps_scale: spec.steps_scale,
-        machine: Some(machine.to_string()),
-        variant: Some(variant.to_string()),
+/// Assemble one cell from its (possibly shared) physics outcome plus a
+/// per-cell gpusim prediction and verdict. Any error — physics or
+/// prediction — records the cell as an errored HardFail.
+fn assemble_cell(
+    sc: ScenarioId,
+    variant: &str,
+    machine: &str,
+    physics: &anyhow::Result<Metrics>,
+) -> CampaignCell {
+    let error_cell = |e: String| CampaignCell {
+        scenario: sc,
+        variant: variant.to_string(),
+        machine: machine.to_string(),
+        verdict: Verdict::HardFail,
+        expected: sc.expected_verdict(),
+        failed_criteria: vec!["runner_error".to_string()],
+        steps_completed: 0,
+        peak_abs: 0.0,
+        final_energy: 0.0,
+        boundary_leakage: 0.0,
+        predicted_steps_per_sec: 0.0,
+        measured_steps_per_sec: 0.0,
+        propagator: String::new(),
+        wall_ms: 0.0,
+        error: Some(e),
     };
-    match run_scenario(sc, &opts) {
-        Ok(run) => CampaignCell {
-            scenario: sc,
-            variant: variant.to_string(),
-            machine: machine.to_string(),
-            verdict: run.result.overall,
-            expected: sc.expected_verdict(),
-            failed_criteria: run.result.failed().iter().map(|c| c.name.to_string()).collect(),
-            steps_completed: run.metrics.steps_completed,
-            peak_abs: run.metrics.peak_abs,
-            final_energy: run.metrics.final_energy,
-            boundary_leakage: run.metrics.boundary_leakage,
-            predicted_steps_per_sec: run
-                .metrics
-                .predicted
-                .as_ref()
-                .map(|p| p.steps_per_sec)
-                .unwrap_or(0.0),
-            wall_ms: run.metrics.wall_ms,
-            error: None,
-        },
-        Err(e) => CampaignCell {
-            scenario: sc,
-            variant: variant.to_string(),
-            machine: machine.to_string(),
-            verdict: Verdict::HardFail,
-            expected: sc.expected_verdict(),
-            failed_criteria: vec!["runner_error".to_string()],
-            steps_completed: 0,
-            peak_abs: 0.0,
-            final_energy: 0.0,
-            boundary_leakage: 0.0,
-            predicted_steps_per_sec: 0.0,
-            wall_ms: 0.0,
-            error: Some(e.to_string()),
-        },
+    let base = match physics {
+        Ok(m) => m,
+        Err(e) => return error_cell(e.to_string()),
+    };
+    let predicted = match predict_perf(machine, variant) {
+        Ok(p) => p,
+        Err(e) => return error_cell(e.to_string()),
+    };
+    let mut metrics = base.clone();
+    metrics.predicted = Some(predicted);
+    let result = evaluate_pass_fail(&metrics, &sc.materialize().expectations);
+    CampaignCell {
+        scenario: sc,
+        variant: variant.to_string(),
+        machine: machine.to_string(),
+        verdict: result.overall,
+        expected: sc.expected_verdict(),
+        failed_criteria: result.failed().iter().map(|c| c.name.to_string()).collect(),
+        steps_completed: metrics.steps_completed,
+        peak_abs: metrics.peak_abs,
+        final_energy: metrics.final_energy,
+        boundary_leakage: metrics.boundary_leakage,
+        predicted_steps_per_sec: metrics
+            .predicted
+            .as_ref()
+            .map(|p| p.steps_per_sec)
+            .unwrap_or(0.0),
+        measured_steps_per_sec: metrics.measured_steps_per_sec,
+        propagator: metrics.propagator.clone(),
+        wall_ms: metrics.wall_ms,
+        error: None,
     }
 }
 
-/// Run the whole matrix. Worker threads pull cells off a shared atomic
-/// cursor; results come back in deterministic matrix order regardless
-/// of scheduling.
+fn physics_opts(spec: &CampaignSpec, variant: &str) -> RunnerOptions {
+    RunnerOptions {
+        steps_scale: spec.steps_scale,
+        variant: Some(variant.to_string()),
+        // worker threads own the cores; keep the tile fan-out serial
+        cpu_threads: 1,
+        ..RunnerOptions::default()
+    }
+}
+
+/// Run one cell standalone (fresh physics). The campaign itself goes
+/// through the shared-physics path; this is the single-cell building
+/// block (and what tests poke directly).
+fn run_cell(spec: &CampaignSpec, sc: ScenarioId, variant: &str, machine: &str) -> CampaignCell {
+    let physics = run_scenario_physics(sc, &physics_opts(spec, variant));
+    assemble_cell(sc, variant, machine, &physics)
+}
+
+/// Run the whole matrix. The physics is deduplicated to one run per
+/// (scenario, propagator signature); worker threads pull those jobs
+/// off a shared atomic cursor, then every cell is assembled from its
+/// job's metrics plus a per-cell prediction. Results come back in
+/// deterministic matrix order regardless of scheduling.
 pub fn run_campaign(spec: &CampaignSpec) -> CampaignReport {
     let cells = spec.cells();
+    // group cells into unique physics jobs
+    let mut jobs: Vec<(ScenarioId, String)> = Vec::new();
+    let mut job_index: HashMap<(ScenarioId, String), usize> = HashMap::new();
+    let mut job_of_cell = Vec::with_capacity(cells.len());
+    for (sc, variant, _machine) in &cells {
+        // unresolvable variants get their own job so the resolve error
+        // surfaces per cell instead of poisoning a shared run
+        let sig = propagator::signature(variant)
+            .unwrap_or_else(|_| format!("unresolvable:{variant}"));
+        let next = jobs.len();
+        let idx = *job_index.entry((*sc, sig)).or_insert_with(|| {
+            jobs.push((*sc, variant.clone()));
+            next
+        });
+        job_of_cell.push(idx);
+    }
+
     let n_threads = if spec.threads > 0 {
         spec.threads
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     }
-    .min(cells.len())
+    .min(jobs.len())
     .max(1);
 
     let t0 = Instant::now();
     let cursor = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<CampaignCell>>> = Mutex::new((0..cells.len()).map(|_| None).collect());
+    let physics: Mutex<Vec<Option<anyhow::Result<Metrics>>>> =
+        Mutex::new((0..jobs.len()).map(|_| None).collect());
 
     std::thread::scope(|s| {
         for _ in 0..n_threads {
             s.spawn(|| loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= cells.len() {
+                if i >= jobs.len() {
                     break;
                 }
-                let (sc, variant, machine) = &cells[i];
-                let cell = run_cell(spec, *sc, variant, machine);
-                results.lock().unwrap()[i] = Some(cell);
+                let (sc, variant) = &jobs[i];
+                let m = run_scenario_physics(*sc, &physics_opts(spec, variant));
+                physics.lock().unwrap()[i] = Some(m);
             });
         }
     });
 
-    let cells = results
+    let physics: Vec<anyhow::Result<Metrics>> = physics
         .into_inner()
         .unwrap()
         .into_iter()
-        .map(|c| c.expect("every cell ran"))
+        .map(|m| m.expect("every physics job ran"))
         .collect();
-    CampaignReport { cells, wall: t0.elapsed(), threads: n_threads }
+    let out = cells
+        .iter()
+        .zip(&job_of_cell)
+        .map(|((sc, variant, machine), &j)| assemble_cell(*sc, variant, machine, &physics[j]))
+        .collect();
+    CampaignReport {
+        cells: out,
+        wall: t0.elapsed(),
+        threads: n_threads,
+        physics_runs: jobs.len(),
+    }
 }
 
 #[cfg(test)]
@@ -326,10 +394,41 @@ mod tests {
     fn tiny_campaign_runs_and_reports() {
         let report = run_campaign(&tiny_spec());
         assert_eq!(report.cells.len(), 1);
+        assert_eq!(report.physics_runs, 1);
         let c = &report.cells[0];
         assert_eq!(c.scenario, ScenarioId::TinyGrid);
         assert!(c.predicted_steps_per_sec > 0.0);
+        assert!(c.measured_steps_per_sec > 0.0, "{:?}", c);
+        assert_eq!(c.propagator, "blocked3d:8x8x8");
         assert_eq!(report.off_expectation_count(), 0, "{:?}", c);
+    }
+
+    #[test]
+    fn physics_is_shared_across_equivalent_variants_and_machines() {
+        // gmem_8x8x8 and smem_u collapse onto the same CPU code shape
+        // (blocked3d:8x8x8); two machines only differ in prediction.
+        // 1 scenario x 2 variants x 2 machines = 4 cells, 1 physics run.
+        let spec = CampaignSpec {
+            scenarios: vec![ScenarioId::TinyGrid],
+            variants: vec!["gmem_8x8x8".to_string(), "smem_u".to_string()],
+            machines: vec!["v100".to_string(), "p100".to_string()],
+            steps_scale: Some(0.5),
+            threads: 2,
+        };
+        let report = run_campaign(&spec);
+        assert_eq!(report.cells.len(), 4);
+        assert_eq!(report.physics_runs, 1, "equivalent cells must share one physics run");
+        for c in &report.cells {
+            assert_eq!(c.propagator, "blocked3d:8x8x8");
+            assert_eq!(c.measured_steps_per_sec, report.cells[0].measured_steps_per_sec);
+            assert_eq!(c.peak_abs, report.cells[0].peak_abs, "shared physics must be identical");
+        }
+        // a different tile shape forces its own physics run
+        let spec2 = CampaignSpec {
+            variants: vec!["gmem_8x8x8".to_string(), "gmem_16x16x4".to_string()],
+            ..spec
+        };
+        assert_eq!(run_campaign(&spec2).physics_runs, 2);
     }
 
     #[test]
@@ -376,6 +475,8 @@ mod tests {
             final_energy: 1.0,
             boundary_leakage: 0.1,
             predicted_steps_per_sec: 1.0,
+            measured_steps_per_sec: 1.0,
+            propagator: "naive".to_string(),
             wall_ms: 1.0,
             error: None,
         };

@@ -69,6 +69,13 @@ pub struct Metrics {
     pub receiver_peak: Vec<f32>,
     pub wall_ms: f64,
     pub measured_mpts_per_sec: f64,
+    /// Measured full-step rate of the CPU propagator that actually ran
+    /// this scenario's physics — the empirical column next to the
+    /// gpusim `predicted` one.
+    pub measured_steps_per_sec: f64,
+    /// Code shape that produced the measured physics (propagator
+    /// signature, e.g. `blocked3d:8x8x8`).
+    pub propagator: String,
     pub predicted: Option<PredictedPerf>,
 }
 
@@ -123,8 +130,16 @@ impl MetricsCollector {
     }
 
     /// Fold the per-step accumulators and the run summary into the
-    /// final record. `v_max` is the materialized-grid maximum velocity.
-    pub fn finish(self, steps_requested: usize, summary: &RunSummary, v_max: f64) -> Metrics {
+    /// final record. `v_max` is the materialized-grid maximum velocity;
+    /// `propagator` is the signature of the CPU code shape that ran
+    /// the physics.
+    pub fn finish(
+        self,
+        steps_requested: usize,
+        summary: &RunSummary,
+        v_max: f64,
+        propagator: String,
+    ) -> Metrics {
         let energy = self.energy;
         let peak_energy = energy.iter().copied().filter(|e| e.is_finite()).fold(0.0, f64::max);
         let final_energy = energy.last().copied().unwrap_or(0.0);
@@ -180,6 +195,9 @@ impl MetricsCollector {
                 .collect(),
             wall_ms: summary.wall.as_secs_f64() * 1e3,
             measured_mpts_per_sec: summary.points_per_sec / 1e6,
+            measured_steps_per_sec: summary.steps as f64
+                / summary.wall.as_secs_f64().max(1e-12),
+            propagator,
             energy_trace: energy,
             predicted: None,
         }
@@ -252,13 +270,16 @@ mod tests {
         u.set(R, R, R, f32::NAN);
         c.on_step(3, &u, u.energy());
         assert_eq!(c.first_non_finite, Some(3));
-        let m = c.finish(10, &summary(3), 2500.0);
+        let m = c.finish(10, &summary(3), 2500.0, "naive".to_string());
         assert_eq!(m.peak_abs, 3.0);
         assert_eq!(m.steps_completed, 3);
         assert_eq!(m.steps_requested, 10);
         assert_eq!(m.energy_trace.len(), 3);
         assert_eq!(m.receiver_peak, vec![0.4]);
         assert!(m.cfl_dt > 0.0);
+        assert_eq!(m.propagator, "naive");
+        // 3 steps over 5 ms of wall
+        assert!((m.measured_steps_per_sec - 600.0).abs() < 1e-6, "{}", m.measured_steps_per_sec);
     }
 
     #[test]
@@ -278,8 +299,8 @@ mod tests {
             g.set(R + 5, R + 5, R + 5, (32 - i) as f32);
             decay.on_step(i + 1, &g, g.energy());
         }
-        let mg = grow.finish(32, &summary(32), 2500.0);
-        let md = decay.finish(32, &summary(32), 2500.0);
+        let mg = grow.finish(32, &summary(32), 2500.0, "naive".to_string());
+        let md = decay.finish(32, &summary(32), 2500.0, "naive".to_string());
         assert!(mg.late_growth > 1.5, "{}", mg.late_growth);
         assert!(md.late_growth < 1.0, "{}", md.late_growth);
     }

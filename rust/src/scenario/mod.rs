@@ -18,9 +18,13 @@
 //! * [`campaign`] — fans scenario x variant x machine cells out over
 //!   `std::thread`, aggregates a report table + JSON export.
 //!
-//! Physics always runs on the pure-Rust golden backend, so scenarios
-//! need no AOT artifacts; the variant/machine axes feed the gpusim
-//! performance model and its occupancy feasibility check.
+//! Physics always runs on the pure-Rust CPU backend, so scenarios need
+//! no AOT artifacts — but the variant axis is no longer cosmetic: each
+//! kernel-variant id resolves to its executable CPU code shape
+//! (`stencil::propagator`), so every cell carries a *measured*
+//! steps/sec next to the gpusim-*predicted* one. The campaign runs the
+//! physics once per (scenario, propagator signature) and reuses the
+//! metrics across cells that only differ in predicted perf.
 
 pub mod campaign;
 pub mod metrics;
@@ -385,6 +389,23 @@ pub struct RunnerOptions {
     pub machine: Option<String>,
     /// ...and this kernel variant id (both or neither).
     pub variant: Option<String>,
+    /// CPU code shape for the physics run. Defaults to the variant's
+    /// propagator analog, or `naive` when no variant is given — so a
+    /// predicted cell also *measures* the shape it predicts.
+    pub propagator: Option<String>,
+    /// Worker threads inside the propagator tile fan-out (0 = one per
+    /// core). The campaign sets 1: its cell fan-out owns the cores.
+    pub cpu_threads: usize,
+}
+
+impl RunnerOptions {
+    /// The propagator name this run's physics will execute with.
+    pub fn physics_propagator(&self) -> String {
+        self.propagator
+            .clone()
+            .or_else(|| self.variant.clone())
+            .unwrap_or_else(|| "naive".to_string())
+    }
 }
 
 /// One completed scenario run.
@@ -403,8 +424,12 @@ impl ScenarioRun {
     }
 }
 
-/// Run one scenario on the golden backend and evaluate it.
-pub fn run_scenario(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Result<ScenarioRun> {
+/// Run one scenario's *physics* on the CPU propagator selected by
+/// `opts` and collect metrics — no prediction, no verdict. The
+/// campaign fans these out once per (scenario, propagator signature)
+/// and reuses the metrics across every cell that only differs in
+/// predicted perf.
+pub fn run_scenario_physics(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Result<Metrics> {
     let spec = id.materialize();
     let cfg = &spec.config;
     let mut steps = opts.steps_override.unwrap_or(cfg.steps);
@@ -412,6 +437,7 @@ pub fn run_scenario(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Result<Scen
         steps = ((steps as f64 * scale) as usize).max(20);
     }
 
+    let propagator = opts.physics_propagator();
     let interior = cfg.domain.interior;
     let v = cfg.model.build(interior);
     let v_max_grid = v.as_slice().iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
@@ -420,16 +446,18 @@ pub fn run_scenario(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Result<Scen
         None,
         cfg.domain,
         Mode::Golden,
-        &cfg.inner_variant,
+        &propagator,
         &cfg.pml_variant,
         v,
         eta,
         cfg.source,
         cfg.receivers.clone(),
     )?;
+    coord.set_cpu_threads(opts.cpu_threads);
     for s in &spec.extra_sources {
         coord.add_source(*s)?;
     }
+    let signature = coord.propagator_signature().expect("Golden mode has a propagator");
 
     let mut collector = MetricsCollector::new(cfg.domain);
     let summary = coord.run_observed(
@@ -437,15 +465,21 @@ pub fn run_scenario(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Result<Scen
         RunOptions { halt_on_non_finite: false },
         Some(&mut collector),
     )?;
-    let mut metrics = collector.finish(steps, &summary, v_max_grid);
+    Ok(collector.finish(steps, &summary, v_max_grid, signature))
+}
 
+/// Run one scenario end to end: propagator physics, optional gpusim
+/// prediction, pass/fail verdict.
+pub fn run_scenario(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Result<ScenarioRun> {
     match (&opts.machine, &opts.variant) {
-        (Some(m), Some(vid)) => metrics.predicted = Some(predict_perf(m, vid)?),
-        (None, None) => {}
+        (Some(_), Some(_)) | (None, None) => {}
         _ => anyhow::bail!("prediction needs both --machine and --variant (or neither)"),
     }
-
-    let result = evaluate_pass_fail(&metrics, &spec.expectations);
+    let mut metrics = run_scenario_physics(id, opts)?;
+    if let (Some(m), Some(vid)) = (&opts.machine, &opts.variant) {
+        metrics.predicted = Some(predict_perf(m, vid)?);
+    }
+    let result = evaluate_pass_fail(&metrics, &id.materialize().expectations);
     Ok(ScenarioRun { id, metrics, result })
 }
 
@@ -520,5 +554,28 @@ mod tests {
     fn runner_rejects_half_specified_prediction() {
         let opts = RunnerOptions { machine: Some("v100".into()), ..Default::default() };
         assert!(run_scenario(ScenarioId::TinyGrid, &opts).is_err());
+    }
+
+    #[test]
+    fn physics_propagator_defaults_and_overrides() {
+        assert_eq!(RunnerOptions::default().physics_propagator(), "naive");
+        let from_variant =
+            RunnerOptions { variant: Some("st_smem_16x16".into()), ..Default::default() };
+        assert_eq!(from_variant.physics_propagator(), "st_smem_16x16");
+        let explicit = RunnerOptions {
+            variant: Some("gmem_8x8x8".into()),
+            propagator: Some("semi".into()),
+            ..Default::default()
+        };
+        assert_eq!(explicit.physics_propagator(), "semi");
+    }
+
+    #[test]
+    fn scenario_metrics_record_the_measured_shape() {
+        let opts = RunnerOptions { propagator: Some("st_smem_8x8".into()), ..Default::default() };
+        let run = run_scenario(ScenarioId::TinyGrid, &opts).unwrap();
+        assert_eq!(run.metrics.propagator, "streaming2.5d:8x8");
+        assert!(run.metrics.measured_steps_per_sec > 0.0);
+        assert!(run.metrics.predicted.is_none());
     }
 }

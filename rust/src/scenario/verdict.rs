@@ -207,15 +207,27 @@ pub fn evaluate_pass_fail(m: &Metrics, exp: &Expectations) -> ScenarioResult {
 
     // 8. throughput_model (soft): the gpusim prediction for this
     //    variant x machine must be sane (occupancy >= 1 block, finite
-    //    positive steps/sec). Vacuously true when no prediction was
-    //    requested.
+    //    positive steps/sec). The detail places the *measured* CPU
+    //    propagator rate next to the prediction so reports show both
+    //    columns. Vacuously true when no prediction was requested.
     let (thr_ok, thr_detail) = match &m.predicted {
-        None => (true, "no machine/variant prediction requested".to_string()),
+        None => (
+            true,
+            format!(
+                "no prediction requested; measured {:.1} steps/s ({})",
+                m.measured_steps_per_sec, m.propagator
+            ),
+        ),
         Some(p) => (
             p.steps_per_sec.is_finite() && p.steps_per_sec > 0.0 && p.blocks_per_sm >= 1,
             format!(
-                "{} on {}: {:.2} steps/s predicted, {} blocks/SM",
-                p.variant, p.machine, p.steps_per_sec, p.blocks_per_sm
+                "{} on {}: predicted {:.2} steps/s ({} blocks/SM); measured {:.1} steps/s ({})",
+                p.variant,
+                p.machine,
+                p.steps_per_sec,
+                p.blocks_per_sm,
+                m.measured_steps_per_sec,
+                m.propagator
             ),
         ),
     };
@@ -249,6 +261,8 @@ mod tests {
             receiver_peak: vec![0.2, 0.3],
             wall_ms: 12.0,
             measured_mpts_per_sec: 1.0,
+            measured_steps_per_sec: 8000.0,
+            propagator: "naive".to_string(),
             predicted: None,
         }
     }

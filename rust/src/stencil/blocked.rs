@@ -1,0 +1,59 @@
+//! 3D-blocked propagator: the CPU analog of the paper's `gmem` /
+//! `smem_u` / `smem_eta_*` families (§IV.1-3).
+//!
+//! On the GPU those families differ in *staging* (global memory vs
+//! shared-memory tiles); on the CPU the cache hierarchy does the
+//! staging, so they collapse onto one shape: split every decomposition
+//! region into the variant's d1 x d2 x d3 tiles and fan the tiles over
+//! worker threads — each tile's working set is what a thread block
+//! would have staged.
+
+use super::propagator::{inner_tile, pml_tile, run_tiled, Consts, Propagator, PropagatorInputs};
+use crate::gpusim::kernels::KernelVariant;
+use crate::grid::{decompose, Dim3, Field3};
+
+/// Cache-tiled 3D blocking over the 7-region decomposition.
+pub struct Blocked3D {
+    /// Tile extents in (z, y, x) order — the variant's (d3, d2, d1);
+    /// Table II names tiles `{Dx}x{Dy}x{Dz}`, x innermost.
+    pub tile: Dim3,
+}
+
+impl Blocked3D {
+    pub fn new(tile: Dim3) -> Blocked3D {
+        Blocked3D { tile }
+    }
+
+    pub fn from_variant(v: &KernelVariant) -> Blocked3D {
+        Blocked3D::new(Dim3::new(
+            (v.d3.max(1)) as usize,
+            (v.d2.max(1)) as usize,
+            (v.d1.max(1)) as usize,
+        ))
+    }
+}
+
+impl Propagator for Blocked3D {
+    fn name(&self) -> &'static str {
+        "blocked3d"
+    }
+
+    fn signature(&self) -> String {
+        format!("blocked3d:{}", self.tile)
+    }
+
+    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3 {
+        let k = Consts::of(inp.domain);
+        let tasks: Vec<_> = decompose(inp.domain)
+            .iter()
+            .flat_map(|r| r.split(self.tile))
+            .collect();
+        run_tiled(inp.domain, &tasks, inp.threads, |t| {
+            if t.class.is_pml() {
+                pml_tile(inp, t.offset, t.shape, k)
+            } else {
+                inner_tile(inp, t.offset, t.shape, k)
+            }
+        })
+    }
+}

@@ -1,14 +1,27 @@
-//! Pure-Rust golden stencils: the CPU reference implementation of the
-//! same numerics as `python/compile/common.py` / `kernels/ref.py`.
+//! Pure-Rust stencils: the CPU reference numerics plus the executable
+//! code-shape engine.
 //!
-//! Used (a) to validate PJRT executable outputs end-to-end, (b) as the
-//! `Backend::Golden` propagator when artifacts are unavailable, and
-//! (c) as the CPU baseline in benches. Arithmetic *ordering* mirrors the
-//! jnp reference so f32 results agree to a few ULP.
+//! * The free functions here (`lap8`, `step_inner`, `step_pml`, ...)
+//!   are the reference implementation of the same numerics as
+//!   `python/compile/common.py` / `kernels/ref.py`; arithmetic
+//!   *ordering* mirrors the jnp reference so f32 results agree to a
+//!   few ULP.
+//! * [`GoldenPropagator`] wraps them into the oracle the integration
+//!   tests compare PJRT output against.
+//! * [`propagator`] is the code-shape engine: a [`propagator::Propagator`]
+//!   trait with tiled, multithreaded CPU analogs of the paper's kernel
+//!   families (naive, 3D-blocked, 2.5D streaming, semi-stencil), so
+//!   "which shape is fastest at which tile size" is measurable on the
+//!   CPU path, not just predicted by gpusim.
 
+mod blocked;
 mod golden;
+pub mod propagator;
+mod semi;
+mod streaming;
 
 pub use golden::GoldenPropagator;
+pub use propagator::{Propagator, PropagatorInputs};
 
 use crate::grid::{Dim3, Field3};
 use crate::{R, R_ETA};

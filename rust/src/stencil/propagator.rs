@@ -1,0 +1,424 @@
+//! The executable code-shape engine: a [`Propagator`] trait with
+//! tiled, multithreaded CPU implementations of the paper's kernel
+//! families (§IV).
+//!
+//! The gpusim layer *predicts* how each of the 25 `KernelVariant`s
+//! would perform on real GPUs; this module makes the underlying code
+//! shapes *executable* on the CPU so shape choice has measurable cost:
+//!
+//! | paper family (§IV)                  | CPU analog          |
+//! |-------------------------------------|---------------------|
+//! | — (reference)                       | [`Naive`]           |
+//! | gmem / smem_u / smem_eta_* 3D blocks| `Blocked3D`         |
+//! | semi-stencil                        | `SemiStencil`       |
+//! | st_smem / st_reg_* 2.5D streaming   | `Streaming25D`      |
+//!
+//! Every propagator drives the same 7-region decomposition
+//! (`grid::decompose`), splits regions into tiles (its block grid),
+//! and fans the tiles over `std::thread` workers. All families except
+//! `SemiStencil` keep the golden arithmetic ordering per point, so
+//! they are bit-identical to [`super::GoldenPropagator`]; semi-stencil
+//! re-associates the x-axis chain by design and agrees to a few ULP
+//! (asserted by `rust/tests/propagator_equivalence.rs`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::{C2, C8};
+use crate::grid::{decompose, Dim3, Domain, Field3, Region};
+use crate::gpusim::kernels::{self, Family};
+use crate::R;
+
+pub use super::blocked::Blocked3D;
+pub use super::semi::SemiStencil;
+pub use super::streaming::Streaming25D;
+
+/// Borrowed per-step state handed to a propagator. All wavefields are
+/// `R`-ghost-padded with a zero ghost ring (the Dirichlet closure);
+/// `v` is interior-sized.
+pub struct PropagatorInputs<'a> {
+    pub domain: &'a Domain,
+    /// Wavefield at step n.
+    pub u_pad: &'a Field3,
+    /// Wavefield at step n-1.
+    pub um_pad: &'a Field3,
+    /// Velocity model, interior-sized.
+    pub v: &'a Field3,
+    /// Damping profile, R-ghost-padded (zero ghost).
+    pub eta_pad: &'a Field3,
+    /// Worker threads for the tile fan-out (0 = one per core).
+    pub threads: usize,
+}
+
+/// One executable CPU code shape. Implementations compute a full
+/// decomposed time step (inner 25-point + six PML faces) and return
+/// the next `R`-ghost-padded wavefield; source injection, receivers,
+/// and state rotation stay in the coordinator.
+pub trait Propagator: Send + Sync {
+    /// Stable display name (also used as the bench label prefix).
+    fn name(&self) -> &'static str;
+
+    /// Identifies physics-equivalent configurations (kind + tile
+    /// dims). Two kernel variants with the same signature produce the
+    /// same measured physics, so the campaign runs them once.
+    fn signature(&self) -> String;
+
+    /// Compute the next R-ghost-padded wavefield (no source injection;
+    /// the ghost ring stays zero).
+    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3;
+}
+
+/// Build the CPU propagator for a name: `naive`/`golden`, a family
+/// shorthand (`gmem`, `st_smem`, ...), or a full Table II variant id
+/// (`gmem_8x8x8`, `st_reg_shft_16x32`, ...). Families map to their
+/// CPU analogs per the module-level table.
+pub fn build(name: &str) -> anyhow::Result<Box<dyn Propagator>> {
+    if matches!(name, "naive" | "golden") {
+        return Ok(Box::new(Naive));
+    }
+    let v = kernels::resolve(name)?;
+    Ok(match v.family {
+        Family::Gmem | Family::SmemU | Family::SmemEta1 | Family::SmemEta3 => {
+            Box::new(Blocked3D::from_variant(&v))
+        }
+        Family::Semi => Box::new(SemiStencil::from_variant(&v)),
+        Family::StSmem | Family::StRegShft | Family::StRegFixed => {
+            Box::new(Streaming25D::from_variant(&v))
+        }
+    })
+}
+
+/// Physics signature of a variant name without keeping the propagator
+/// (campaign physics sharing keys on this).
+pub fn signature(name: &str) -> anyhow::Result<String> {
+    Ok(build(name)?.signature())
+}
+
+/// The `hostencil bench` matrix: representative propagator
+/// configurations with stable labels.
+pub fn bench_matrix() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("naive", "naive"),
+        ("blocked3d_8x8x8", "gmem_8x8x8"),
+        ("blocked3d_16x16x4", "gmem_16x16x4"),
+        ("semi_8x8x8", "semi"),
+        ("streaming25d_8x8", "st_smem_8x8"),
+        ("streaming25d_16x16", "st_smem_16x16"),
+    ]
+}
+
+/// Precomputed per-step scalar constants. Derivations mirror
+/// `stencil::lap8` / `step_inner` / `step_pml` exactly (f64 -> f32
+/// casts in the same places) so fused per-point updates stay
+/// bit-identical to the golden two-pass ones.
+#[derive(Copy, Clone)]
+pub(crate) struct Consts {
+    pub dt2: f32,
+    pub dt_f: f32,
+    pub inv_h2: f32,
+}
+
+impl Consts {
+    pub(crate) fn of(domain: &Domain) -> Consts {
+        Consts {
+            dt2: (domain.dt * domain.dt) as f32,
+            dt_f: domain.dt as f32,
+            inv_h2: (1.0 / (domain.h * domain.h)) as f32,
+        }
+    }
+}
+
+/// Fused inner (25-point, 8th-order) leapfrog update of the interior
+/// point `(iz, iy, ix)`. Arithmetic ordering mirrors `lap8` +
+/// `step_inner`: per-point results are bit-identical.
+#[inline(always)]
+pub(crate) fn inner_point(
+    inp: &PropagatorInputs<'_>,
+    iz: usize,
+    iy: usize,
+    ix: usize,
+    k: Consts,
+) -> f32 {
+    let u = inp.u_pad;
+    let (cz, cy, cx) = (iz + R, iy + R, ix + R);
+    let mut acc = 3.0 * C8[0] * u.get(cz, cy, cx);
+    for m in 1..=R {
+        acc += C8[m]
+            * (u.get(cz + m, cy, cx)
+                + u.get(cz - m, cy, cx)
+                + u.get(cz, cy + m, cx)
+                + u.get(cz, cy - m, cx)
+                + u.get(cz, cy, cx + m)
+                + u.get(cz, cy, cx - m));
+    }
+    let lap = acc * k.inv_h2;
+    let core = u.get(cz, cy, cx);
+    let vv = inp.v.get(iz, iy, ix);
+    2.0 * core - inp.um_pad.get(cz, cy, cx) + k.dt2 * vv * vv * lap
+}
+
+/// Fused PML (7-point, damped) update of the interior point
+/// `(iz, iy, ix)`. Mirrors `lap2` + `eta_bar` + `step_pml`.
+#[inline(always)]
+pub(crate) fn pml_point(
+    inp: &PropagatorInputs<'_>,
+    iz: usize,
+    iy: usize,
+    ix: usize,
+    k: Consts,
+) -> f32 {
+    let u = inp.u_pad;
+    let e = inp.eta_pad;
+    let (cz, cy, cx) = (iz + R, iy + R, ix + R);
+    let acc = 3.0 * C2[0] * u.get(cz, cy, cx)
+        + (u.get(cz + 1, cy, cx)
+            + u.get(cz - 1, cy, cx)
+            + u.get(cz, cy + 1, cx)
+            + u.get(cz, cy - 1, cx)
+            + u.get(cz, cy, cx + 1)
+            + u.get(cz, cy, cx - 1));
+    let lap = acc * k.inv_h2;
+    let eb = (e.get(cz, cy, cx)
+        + e.get(cz + 1, cy, cx)
+        + e.get(cz - 1, cy, cx)
+        + e.get(cz, cy + 1, cx)
+        + e.get(cz, cy - 1, cx)
+        + e.get(cz, cy, cx + 1)
+        + e.get(cz, cy, cx - 1))
+        / 7.0;
+    let ed = eb * k.dt_f;
+    let core = u.get(cz, cy, cx);
+    let vv = inp.v.get(iz, iy, ix);
+    let num = 2.0 * core - (1.0 - ed) * inp.um_pad.get(cz, cy, cx) + k.dt2 * vv * vv * lap;
+    num / (1.0 + ed)
+}
+
+/// Walk an inner tile point by point (the per-point gmem shape).
+pub(crate) fn inner_tile(inp: &PropagatorInputs<'_>, offset: Dim3, shape: Dim3, k: Consts) -> Field3 {
+    let mut out = Field3::zeros(shape);
+    for z in 0..shape.z {
+        for y in 0..shape.y {
+            for x in 0..shape.x {
+                out.set(z, y, x, inner_point(inp, offset.z + z, offset.y + y, offset.x + x, k));
+            }
+        }
+    }
+    out
+}
+
+/// Walk a PML tile point by point (shared by every family: the
+/// paper's PML kernels differ only in eta staging, which has no CPU
+/// cache analog beyond tiling).
+pub(crate) fn pml_tile(inp: &PropagatorInputs<'_>, offset: Dim3, shape: Dim3, k: Consts) -> Field3 {
+    let mut out = Field3::zeros(shape);
+    for z in 0..shape.z {
+        for y in 0..shape.y {
+            for x in 0..shape.x {
+                out.set(z, y, x, pml_point(inp, offset.z + z, offset.y + y, offset.x + x, k));
+            }
+        }
+    }
+    out
+}
+
+fn resolve_threads(requested: usize, tasks: usize) -> usize {
+    let n = if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    };
+    n.min(tasks).max(1)
+}
+
+/// Fan tile tasks over worker threads (shared atomic cursor, the same
+/// idiom as the campaign runner) and scatter each computed tile into a
+/// fresh R-ghost-padded output field. Tiles partition the interior, so
+/// the result is scheduling-independent.
+///
+/// Callers rebuild the task list each step; that is O(tiles) work and
+/// allocation against O(points x 45 FLOP) of stencil compute, so it
+/// stays out of the measured-rate noise floor. Cache the plan in the
+/// propagator if profiling ever says otherwise.
+pub(crate) fn run_tiled<F>(domain: &Domain, tasks: &[Region], threads: usize, f: F) -> Field3
+where
+    F: Fn(&Region) -> Field3 + Sync,
+{
+    let mut out = Field3::zeros(domain.padded());
+    let dst = |t: &Region| Dim3::new(R + t.offset.z, R + t.offset.y, R + t.offset.x);
+    let n = resolve_threads(threads, tasks.len());
+    if n == 1 {
+        for t in tasks {
+            out.scatter(dst(t), &f(t));
+        }
+        return out;
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Mutex<Vec<Option<Field3>>> = Mutex::new(vec![None; tasks.len()]);
+    std::thread::scope(|s| {
+        for _ in 0..n {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                let tile = f(&tasks[i]);
+                results.lock().unwrap()[i] = Some(tile);
+            });
+        }
+    });
+    for (t, tile) in tasks.iter().zip(results.into_inner().unwrap()) {
+        out.scatter(dst(t), &tile.expect("every tile task ran"));
+    }
+    out
+}
+
+/// The reference shape: one task per decomposition region, per-point
+/// global-memory walk — exactly the golden propagator's code shape,
+/// parallelized over the seven regions.
+pub struct Naive;
+
+impl Propagator for Naive {
+    fn name(&self) -> &'static str {
+        "naive"
+    }
+
+    fn signature(&self) -> String {
+        "naive".to_string()
+    }
+
+    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3 {
+        let k = Consts::of(inp.domain);
+        let tasks = decompose(inp.domain);
+        run_tiled(inp.domain, &tasks, inp.threads, |t| {
+            if t.class.is_pml() {
+                pml_tile(inp, t.offset, t.shape, k)
+            } else {
+                inner_tile(inp, t.offset, t.shape, k)
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::Rng;
+    use crate::wave;
+
+    struct State {
+        domain: Domain,
+        u_pad: Field3,
+        um_pad: Field3,
+        v: Field3,
+        eta_pad: Field3,
+    }
+
+    fn random_state(interior: Dim3, pml: usize, seed: u64) -> State {
+        let domain = Domain::new(interior, pml, 10.0, 1e-3).unwrap();
+        let mut rng = Rng::new(seed);
+        State {
+            domain,
+            u_pad: rng.field(interior).pad(R),
+            um_pad: rng.field(interior).pad(R),
+            v: rng.field_in(interior, 1500.0, 3500.0),
+            eta_pad: wave::eta_profile(&domain, 3500.0).pad(R),
+        }
+    }
+
+    fn step_with(st: &State, name: &str, threads: usize) -> Field3 {
+        build(name).unwrap().step(&PropagatorInputs {
+            domain: &st.domain,
+            u_pad: &st.u_pad,
+            um_pad: &st.um_pad,
+            v: &st.v,
+            eta_pad: &st.eta_pad,
+            threads,
+        })
+    }
+
+    #[test]
+    fn factory_resolves_names_families_and_ids() {
+        assert_eq!(build("naive").unwrap().name(), "naive");
+        assert_eq!(build("golden").unwrap().name(), "naive");
+        assert_eq!(build("gmem").unwrap().name(), "blocked3d");
+        assert_eq!(build("smem_u").unwrap().name(), "blocked3d");
+        assert_eq!(build("semi").unwrap().name(), "semi_stencil");
+        assert_eq!(build("st_smem_8x8").unwrap().name(), "streaming2.5d");
+        assert_eq!(build("st_reg_fixed").unwrap().name(), "streaming2.5d");
+        assert!(build("warp_specialized").is_err());
+    }
+
+    #[test]
+    fn signatures_group_physics_equivalent_variants() {
+        // same kind + tile dims -> same physics -> shared campaign run
+        assert_eq!(signature("gmem_8x8x8").unwrap(), signature("smem_u").unwrap());
+        assert_eq!(
+            signature("st_smem_16x16").unwrap(),
+            signature("st_reg_shft_16x16").unwrap()
+        );
+        assert_ne!(signature("gmem_8x8x8").unwrap(), signature("gmem_16x16x4").unwrap());
+        assert_ne!(signature("naive").unwrap(), signature("gmem_8x8x8").unwrap());
+        assert_ne!(signature("semi").unwrap(), signature("gmem_8x8x8").unwrap());
+    }
+
+    #[test]
+    fn bench_matrix_entries_all_build_with_unique_labels() {
+        let m = bench_matrix();
+        for (label, variant) in &m {
+            build(variant).unwrap_or_else(|e| panic!("{label}: {e}"));
+        }
+        let mut labels: Vec<_> = m.iter().map(|(l, _)| *l).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels.len(), m.len(), "bench labels must be unique");
+    }
+
+    #[test]
+    fn tiled_and_streaming_shapes_are_bit_identical_to_naive() {
+        // non-tile-aligned extents on purpose: 13x11x17 with 8^3 /
+        // 16x16x4 / 32x32x1 tiles exercises every clipping path
+        let st = random_state(Dim3::new(13, 11, 17), 3, 0xC0FFEE);
+        let base = step_with(&st, "naive", 1);
+        assert!(base.max_abs() > 0.0);
+        for name in [
+            "gmem_8x8x8",
+            "gmem_32x32x1",
+            "gmem_16x16x4",
+            "smem_u",
+            "st_smem_8x8",
+            "st_reg_fixed_32x32",
+        ] {
+            for threads in [1, 3] {
+                let got = step_with(&st, name, threads);
+                assert_eq!(
+                    got.max_abs_diff(&base),
+                    0.0,
+                    "{name} with {threads} threads deviated from naive"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn semi_stencil_matches_naive_to_ulp_level() {
+        let st = random_state(Dim3::new(12, 14, 13), 3, 0xBEEF);
+        let base = step_with(&st, "naive", 1);
+        for threads in [1, 2] {
+            let got = step_with(&st, "semi", threads);
+            let rel = got.max_abs_diff(&base) / base.max_abs().max(1e-30);
+            assert!(rel < 1e-5, "semi re-association drifted: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn ghost_ring_stays_zero() {
+        let st = random_state(Dim3::new(11, 9, 13), 2, 7);
+        for name in ["naive", "gmem_8x8x8", "st_smem_8x8", "semi"] {
+            let out = step_with(&st, name, 2);
+            let d = out.dims();
+            assert_eq!(out.get(0, 0, 0), 0.0, "{name}");
+            assert_eq!(out.get(d.z - 1, d.y - 1, d.x - 1), 0.0, "{name}");
+            assert_eq!(out.unpad(R).pad(R), out, "{name}: ghost must be zero");
+        }
+    }
+}

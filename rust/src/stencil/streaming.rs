@@ -1,0 +1,133 @@
+//! 2.5D streaming propagator: the CPU analog of the paper's `st_smem`
+//! family (§IV.5), which also stands in for `st_reg_shft` /
+//! `st_reg_fixed` (§IV.6-7 — register files have no CPU analog beyond
+//! the same plane-streaming traversal).
+//!
+//! The inner region's (z, y) plane is tiled a x b; each tile streams
+//! along x keeping a ring buffer of 2R+1 (z, y) planes — the
+//! shared-memory ring of the CUDA kernel, here a thread-local buffer
+//! that keeps the 25-point working set hot in L1/L2. PML faces use the
+//! same (z, y) tiling but walk the 7-point halo-1 update directly
+//! (streaming a 1-deep halo buys nothing).
+//!
+//! The ring holds exact copies of `u`, and per-point arithmetic keeps
+//! the `lap8` term ordering, so results are bit-identical to the
+//! golden propagator.
+
+use super::propagator::{pml_tile, run_tiled, Consts, Propagator, PropagatorInputs};
+use crate::gpusim::kernels::KernelVariant;
+use crate::grid::{decompose, Dim3, Field3};
+use crate::{stencil::C8, R};
+
+/// 2.5D plane streaming with a 2R+1 ring buffer of planes.
+pub struct Streaming25D {
+    /// Plane-tile extents: `tile_z` tiles z, `tile_y` tiles y (the
+    /// variant's (A, B) in `st_*_{A}x{B}`); the kernel streams along x.
+    pub tile_z: usize,
+    pub tile_y: usize,
+}
+
+impl Streaming25D {
+    pub fn new(tile_z: usize, tile_y: usize) -> Streaming25D {
+        Streaming25D { tile_z: tile_z.max(1), tile_y: tile_y.max(1) }
+    }
+
+    pub fn from_variant(v: &KernelVariant) -> Streaming25D {
+        Streaming25D::new(v.d1 as usize, v.d2 as usize)
+    }
+}
+
+impl Propagator for Streaming25D {
+    fn name(&self) -> &'static str {
+        "streaming2.5d"
+    }
+
+    fn signature(&self) -> String {
+        format!("streaming2.5d:{}x{}", self.tile_z, self.tile_y)
+    }
+
+    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3 {
+        let k = Consts::of(inp.domain);
+        // every region keeps its full x extent: the stream axis is
+        // never tiled (that is the point of the 2.5D shape)
+        let tasks: Vec<_> = decompose(inp.domain)
+            .iter()
+            .flat_map(|r| r.split(Dim3::new(self.tile_z, self.tile_y, r.shape.x)))
+            .collect();
+        run_tiled(inp.domain, &tasks, inp.threads, |t| {
+            if t.class.is_pml() {
+                pml_tile(inp, t.offset, t.shape, k)
+            } else {
+                streaming_inner_tile(inp, t.offset, t.shape, k)
+            }
+        })
+    }
+}
+
+/// Stream one inner (z, y) tile along x with a ring of 2R+1 planes.
+fn streaming_inner_tile(
+    inp: &PropagatorInputs<'_>,
+    offset: Dim3,
+    shape: Dim3,
+    k: Consts,
+) -> Field3 {
+    let u = inp.u_pad;
+    let np = 2 * R + 1; // ring depth
+    let pz = shape.z + 2 * R; // plane rows: z extent + halo
+    let py = shape.y + 2 * R; // plane cols: y extent + halo
+    let mut ring: Vec<Vec<f32>> = vec![vec![0.0f32; pz * py]; np];
+
+    // The plane at stream position q (local x, in -R..shape.x+R) lives
+    // in slot (q + R) % np. Plane row dz / col dy cover padded coords
+    // (offset.z + dz, offset.y + dy): the tile's z/y halo and the
+    // array's R-ghost padding cancel exactly.
+    let load = |ring: &mut Vec<Vec<f32>>, q: isize| {
+        let slot = ((q + R as isize) as usize) % np;
+        // padded x of stream position q; add R before the usize cast —
+        // offset.x + q alone can go negative when pml_width < R
+        let px = (offset.x as isize + q + R as isize) as usize;
+        let plane = &mut ring[slot];
+        for dz in 0..pz {
+            for dy in 0..py {
+                plane[dz * py + dy] = u.get(offset.z + dz, offset.y + dy, px);
+            }
+        }
+    };
+
+    // prime the ring with the R left-halo planes plus R-1 ahead
+    for q in -(R as isize)..(R as isize) {
+        load(&mut ring, q);
+    }
+
+    let mut out = Field3::zeros(shape);
+    for x in 0..shape.x {
+        // pull in the leading plane, then update column x from the ring
+        load(&mut ring, x as isize + R as isize);
+        let ctr = &ring[(x + R) % np];
+        for dz in 0..shape.z {
+            for dy in 0..shape.y {
+                let (rz, ry) = (dz + R, dy + R);
+                let mut acc = 3.0 * C8[0] * ctr[rz * py + ry];
+                for m in 1..=R {
+                    let xp = &ring[(x + R + m) % np];
+                    let xm = &ring[(x + R - m) % np];
+                    acc += C8[m]
+                        * (ctr[(rz + m) * py + ry]
+                            + ctr[(rz - m) * py + ry]
+                            + ctr[rz * py + (ry + m)]
+                            + ctr[rz * py + (ry - m)]
+                            + xp[rz * py + ry]
+                            + xm[rz * py + ry]);
+                }
+                let lap = acc * k.inv_h2;
+                let core = ctr[rz * py + ry];
+                let (iz, iy, ix) = (offset.z + dz, offset.y + dy, offset.x + x);
+                let vv = inp.v.get(iz, iy, ix);
+                let val =
+                    2.0 * core - inp.um_pad.get(iz + R, iy + R, ix + R) + k.dt2 * vv * vv * lap;
+                out.set(dz, dy, x, val);
+            }
+        }
+    }
+    out
+}

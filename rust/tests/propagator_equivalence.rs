@@ -1,0 +1,179 @@
+//! Integration: golden-equivalence of the executable CPU code shapes.
+//!
+//! Every propagator family must reproduce the golden physics across
+//! random velocity models, odd-shaped (non-tile-aligned) grids, and
+//! multi-source runs. The tiled and streaming shapes keep the golden
+//! per-point arithmetic ordering, so they are held to *bitwise*
+//! equality; semi-stencil re-associates the x-axis chain by design and
+//! is held to a few-ULP relative tolerance.
+
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::grid::{Dim3, Field3};
+use hostencil::stencil::{self, GoldenPropagator};
+use hostencil::testkit::check;
+use hostencil::wave::{self, Source, VelocityModel};
+
+/// Relative tolerance for the re-associated semi-stencil over a
+/// multi-step run (per-step deviation is ULP-level; the leapfrog
+/// recursion amplifies it mildly).
+const SEMI_RTOL: f32 = 5e-4;
+
+fn grid_domain(interior: Dim3, pml: usize, model: &VelocityModel) -> hostencil::grid::Domain {
+    let h = 10.0;
+    let v_max = model.v_max_on(interior) as f64;
+    hostencil::grid::Domain::new(interior, pml, h, stencil::cfl_dt(h, v_max)).unwrap()
+}
+
+/// Run `steps` of golden-mode physics with the given code shape.
+fn run_shape(
+    variant: &str,
+    interior: Dim3,
+    pml: usize,
+    model: &VelocityModel,
+    sources: &[Source],
+    steps: usize,
+    threads: usize,
+) -> Field3 {
+    let domain = grid_domain(interior, pml, model);
+    let v = model.build(interior);
+    let v_max = model.v_max_on(interior) as f64;
+    let eta = wave::eta_profile(&domain, v_max);
+    let mut c = Coordinator::new(
+        None,
+        domain,
+        Mode::Golden,
+        variant,
+        "gmem",
+        v,
+        eta,
+        sources[0],
+        vec![],
+    )
+    .unwrap();
+    c.set_cpu_threads(threads);
+    for s in &sources[1..] {
+        c.add_source(*s).unwrap();
+    }
+    c.run(steps).unwrap();
+    c.wavefield()
+}
+
+fn center_source(interior: Dim3) -> Source {
+    Source {
+        pos: Dim3::new(interior.z / 2, interior.y / 2, interior.x / 2),
+        f0: 18.0,
+        amplitude: 1.0,
+    }
+}
+
+const EXACT_SHAPES: [&str; 6] = [
+    "gmem_8x8x8",
+    "gmem_16x16x4",
+    "gmem_32x32x1",
+    "smem_u",
+    "st_smem_8x8",
+    "st_reg_fixed_32x32",
+];
+
+#[test]
+fn every_shape_matches_golden_on_non_tile_aligned_grids() {
+    // three odd grid shapes, none a multiple of any tile dimension
+    let cases = [
+        (Dim3::new(17, 13, 19), 4),
+        (Dim3::new(21, 15, 11), 3),
+        (Dim3::new(9, 7, 11), 2), // the degenerate tiny-grid shape
+    ];
+    for (interior, pml) in cases {
+        let model = VelocityModel::Constant(2400.0);
+        let src = [center_source(interior)];
+        let golden = run_shape("naive", interior, pml, &model, &src, 25, 1);
+        assert!(golden.max_abs() > 0.0, "{interior}: wave must have propagated");
+        for variant in EXACT_SHAPES {
+            let got = run_shape(variant, interior, pml, &model, &src, 25, 2);
+            assert_eq!(
+                got.max_abs_diff(&golden),
+                0.0,
+                "{variant} on {interior} deviated from golden"
+            );
+        }
+        let semi = run_shape("semi", interior, pml, &model, &src, 25, 2);
+        let rel = semi.max_abs_diff(&golden) / golden.max_abs().max(1e-30);
+        assert!(rel < SEMI_RTOL, "semi on {interior}: rel {rel}");
+    }
+}
+
+#[test]
+fn naive_coordinator_agrees_with_golden_propagator_exactly() {
+    // ties the engine to the pre-refactor oracle: same physics, same
+    // bits, including the source-injection path
+    let interior = Dim3::new(19, 17, 15);
+    let model = VelocityModel::Constant(2000.0);
+    let domain = grid_domain(interior, 4, &model);
+    let src = center_source(interior);
+    let mut oracle = GoldenPropagator::new(
+        domain,
+        model.build(interior),
+        wave::eta_profile(&domain, 2000.0),
+    );
+    for n in 0..30 {
+        oracle.advance(src.pos, src.amp_at(n, domain.dt, 2000.0));
+    }
+    for variant in ["naive", "gmem_8x8x8", "st_smem_16x16"] {
+        let got = run_shape(variant, interior, 4, &model, &[src], 30, 3);
+        assert_eq!(
+            got.max_abs_diff(&oracle.wavefield()),
+            0.0,
+            "{variant} vs GoldenPropagator"
+        );
+    }
+}
+
+#[test]
+fn prop_random_models_grids_and_sources_stay_equivalent() {
+    check("propagator equivalence", 4, |rng| {
+        let pml = rng.range(2, 4);
+        let interior = Dim3::new(
+            rng.range(2 * pml + 3, 21),
+            rng.range(2 * pml + 3, 21),
+            rng.range(2 * pml + 3, 21),
+        );
+        let model = match rng.range(0, 2) {
+            0 => VelocityModel::Constant(rng.range_f32(1800.0, 3200.0)),
+            1 => VelocityModel::GradientZ {
+                v0: rng.range_f32(1500.0, 2000.0),
+                k_per_m: rng.range_f32(0.2, 1.5),
+                h: 10.0,
+            },
+            _ => VelocityModel::Layered(vec![
+                (0.0, rng.range_f32(1500.0, 2000.0)),
+                (0.5, rng.range_f32(2500.0, 4000.0)),
+            ]),
+        };
+        // multi-source: 1-3 sources, one possibly antiphase
+        let mut sources = vec![center_source(interior)];
+        for _ in 0..rng.range(0, 2) {
+            sources.push(Source {
+                pos: Dim3::new(
+                    rng.range(pml, interior.z - pml - 1),
+                    rng.range(pml, interior.y - pml - 1),
+                    rng.range(pml, interior.x - pml - 1),
+                ),
+                f0: 22.0,
+                amplitude: if rng.range(0, 1) == 0 { 1.0 } else { -0.7 },
+            });
+        }
+        let steps = 12;
+        let golden = run_shape("naive", interior, pml, &model, &sources, steps, 1);
+        for variant in ["gmem_8x8x8", "st_smem_8x8"] {
+            let got = run_shape(variant, interior, pml, &model, &sources, steps, 2);
+            assert_eq!(
+                got.max_abs_diff(&golden),
+                0.0,
+                "{variant} on {interior} pml {pml}"
+            );
+        }
+        let semi = run_shape("semi", interior, pml, &model, &sources, steps, 2);
+        let rel = semi.max_abs_diff(&golden) / golden.max_abs().max(1e-30);
+        assert!(rel < SEMI_RTOL, "semi on {interior} pml {pml}: rel {rel}");
+    });
+}

@@ -90,7 +90,15 @@ fn campaign_matrix_runs_in_parallel_and_aggregates() {
             assert_ne!(c.verdict, Verdict::HardFail, "{c:?}");
         }
         assert!(c.predicted_steps_per_sec > 0.0, "{c:?}");
+        // the measured column comes from the CPU code shape that ran
+        // this cell's physics
+        assert!(c.measured_steps_per_sec > 0.0, "{c:?}");
+        assert!(!c.propagator.is_empty(), "{c:?}");
     }
+    // gmem_8x8x8 -> blocked3d, st_reg_fixed_32x32 -> streaming2.5d:
+    // two shapes x two scenarios = 4 physics runs for 4 cells here,
+    // but the machine axis never re-runs physics
+    assert_eq!(report.physics_runs, 4);
     assert_eq!(report.off_expectation_count(), 0);
 }
 
