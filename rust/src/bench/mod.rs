@@ -45,7 +45,11 @@ impl Stats {
 }
 
 /// Benchmark runner: time `f` for `samples` iterations after `warmup`
-/// throwaway iterations.
+/// throwaway iterations. Warm-up runs execute the closure but are
+/// never sampled, so first-touch page faults, lazy init, and cold
+/// caches stay out of the statistics; report `min` (also on every
+/// `line()` and in the bench JSON) for steady-state throughput and
+/// `median`/`mean` for whole-run behavior.
 pub struct Bencher {
     pub warmup: usize,
     pub samples: usize,
@@ -143,6 +147,23 @@ mod tests {
         let pair = Stats::from_samples("pair", vec![ns(10), ns(20)]);
         assert_eq!(pair.median, ns(15));
         assert!(even.min <= even.median && even.median <= even.max);
+    }
+
+    #[test]
+    fn warmup_iterations_run_but_are_never_sampled() {
+        // the steady-state guarantee: K warm-up runs execute the
+        // closure (touching pages, building plans) yet leave exactly
+        // `samples` timed samples behind
+        let mut calls = 0usize;
+        let mut b = Bencher::new(3, 4);
+        b.bench("warm", || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 3 + 4, "warmup must execute the closure");
+        let s = &b.results()[0];
+        assert_eq!(s.samples, 4, "warmup runs must not be sampled");
+        assert!(s.min <= s.median, "min is the steady-state floor");
     }
 
     #[test]

@@ -17,7 +17,9 @@
 //!   of the executable CPU analogs in `stencil::propagator` (naive,
 //!   3D-blocked, 2.5D streaming, semi-stencil), so CPU runs measure
 //!   real shape-dependent cost instead of always walking the golden
-//!   per-point loop.
+//!   per-point loop. The Golden time loop is zero-allocation: two
+//!   persistent padded buffers ping-pong via `Propagator::step_into`
+//!   (see `rust/tests/zero_alloc.rs`).
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -123,9 +125,11 @@ pub struct Coordinator<'e> {
     eta_pad: Field3,
     /// wavefield at step n, R-ghost-padded
     u_pad: Field3,
-    /// wavefield at step n-1, R-ghost-padded (ghost stays zero; regions
-    /// extract their interior tiles from it directly, and the buffers
-    /// rotate by move — no pad/unpad copies on the hot path)
+    /// wavefield at step n-1, R-ghost-padded (ghost stays zero). On the
+    /// PJRT paths regions extract their interior tiles from it and the
+    /// buffers rotate by move; in Golden mode the propagator overwrites
+    /// it in place (its center values are the leapfrog um term) and the
+    /// two persistent buffers swap — the zero-allocation time loop.
     um_pad: Field3,
     /// CPU code-shape engine, selected from the kernel-variant id
     /// (Golden mode only).
@@ -299,49 +303,55 @@ impl<'e> Coordinator<'e> {
         Ok(out.pad(R))
     }
 
-    /// One pure-Rust step through the selected CPU code shape. The
-    /// propagator owns the tile fan-out; launch bookkeeping stays one
-    /// logical launch per decomposition region, matching the PJRT
-    /// decomposed path.
-    fn step_propagated(&mut self) -> Field3 {
-        let out = {
-            let prop = self.propagator.as_ref().expect("built in new() for Golden mode");
-            prop.step(&PropagatorInputs {
-                domain: &self.domain,
-                u_pad: &self.u_pad,
-                um_pad: &self.um_pad,
-                v: &self.v,
-                eta_pad: &self.eta_pad,
-                threads: self.cpu_threads,
-            })
-        };
-        self.launches += self.regions.len() as u64;
-        out
-    }
-
     /// Advance one time step (stencil update + source injection +
     /// receiver/energy recording + state rotation).
     pub fn step(&mut self) -> anyhow::Result<()> {
-        // un is R-ghost-padded (ghost zeros preserved by construction)
-        let mut un = match self.mode {
-            Mode::Decomposed => self.step_decomposed()?,
-            Mode::Monolithic => self.step_full("monolithic")?,
-            Mode::Fused => self.step_full("fused")?,
-            Mode::Golden => self.step_propagated(),
-        };
+        match self.mode {
+            Mode::Golden => {
+                // Zero-allocation in-place path: the propagator
+                // overwrites um_pad (whose center values are the
+                // leapfrog um term) with the next wavefield, then the
+                // two persistent padded buffers swap. Launch
+                // bookkeeping stays one logical launch per
+                // decomposition region, matching the PJRT path.
+                let prop = self.propagator.as_mut().expect("built in new() for Golden mode");
+                prop.step_into(
+                    &PropagatorInputs {
+                        domain: &self.domain,
+                        u_pad: &self.u_pad,
+                        v: &self.v,
+                        eta_pad: &self.eta_pad,
+                        threads: self.cpu_threads,
+                    },
+                    &mut self.um_pad,
+                );
+                self.launches += self.regions.len() as u64;
+                std::mem::swap(&mut self.u_pad, &mut self.um_pad);
+            }
+            Mode::Decomposed | Mode::Monolithic | Mode::Fused => {
+                // PJRT paths produce a fresh device-computed field;
+                // rotate by move (no pad/unpad copies).
+                let un = match self.mode {
+                    Mode::Decomposed => self.step_decomposed()?,
+                    Mode::Monolithic => self.step_full("monolithic")?,
+                    Mode::Fused => self.step_full("fused")?,
+                    Mode::Golden => unreachable!(),
+                };
+                self.um_pad = std::mem::replace(&mut self.u_pad, un);
+            }
+        }
+        // u_pad now holds the new wavefield (ghost zeros preserved by
+        // construction); inject sources and record directly from it.
         for (src, v_at) in &self.sources {
             let amp = src.amp_at(self.steps_done, self.domain.dt, *v_at);
-            un.add(R + src.pos.z, R + src.pos.y, R + src.pos.x, amp);
+            self.u_pad.add(R + src.pos.z, R + src.pos.y, R + src.pos.x, amp);
         }
-
         for (i, r) in self.receivers.iter().enumerate() {
-            self.traces[i].push(un.get(R + r.z, R + r.y, R + r.x));
+            let sample = self.u_pad.get(R + r.z, R + r.y, R + r.x);
+            self.traces[i].push(sample);
         }
         // ghost ring is zero, so padded energy == interior energy
-        self.energy_log.push(un.energy());
-
-        // rotate by move: no pad/unpad copies on the hot path
-        self.um_pad = std::mem::replace(&mut self.u_pad, un);
+        self.energy_log.push(self.u_pad.energy());
         self.steps_done += 1;
         Ok(())
     }
@@ -378,6 +388,12 @@ impl<'e> Coordinator<'e> {
         opts: RunOptions,
         mut observer: Option<&mut dyn StepObserver>,
     ) -> anyhow::Result<RunSummary> {
+        // pre-reserve the per-step logs so steady-state pushes never
+        // reallocate inside the timed loop
+        self.energy_log.reserve(steps);
+        for t in &mut self.traces {
+            t.reserve(steps);
+        }
         let t0 = Instant::now();
         let mut done = 0;
         for _ in 0..steps {

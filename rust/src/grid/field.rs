@@ -170,6 +170,18 @@ impl Field3 {
         self.data.iter().any(|v| !v.is_finite())
     }
 
+    /// Borrowed read-only view (zero-copy kernel input).
+    #[inline(always)]
+    pub fn view(&self) -> FieldView<'_> {
+        FieldView { dims: self.dims, data: &self.data }
+    }
+
+    /// Borrowed mutable view (zero-copy in-place kernel output).
+    #[inline(always)]
+    pub fn view_mut(&mut self) -> FieldViewMut<'_> {
+        FieldViewMut { dims: self.dims, data: &mut self.data }
+    }
+
     /// Max |a - b| over two same-shaped fields.
     pub fn max_abs_diff(&self, other: &Field3) -> f32 {
         assert_eq!(self.dims, other.dims, "shape mismatch");
@@ -177,6 +189,100 @@ impl Field3 {
             .iter()
             .zip(&other.data)
             .fold(0.0f32, |a, (&x, &y)| a.max((x - y).abs()))
+    }
+}
+
+/// Borrowed, read-only view of a `(z, y, x)` row-major buffer. The
+/// zero-copy input type of the in-place stencil kernels: neighbors are
+/// read straight out of the persistent padded arrays, and contiguous
+/// x-runs come back as plain slices (`seg`/`row`) so inner loops index
+/// bounds-check-free and auto-vectorize.
+///
+/// `Copy`: pass it by value; it is two words plus an extent.
+#[derive(Copy, Clone)]
+pub struct FieldView<'a> {
+    dims: Dim3,
+    data: &'a [f32],
+}
+
+impl<'a> FieldView<'a> {
+    /// Wrap a raw buffer (must match `dims.volume()`).
+    pub fn new(dims: Dim3, data: &'a [f32]) -> FieldView<'a> {
+        assert_eq!(data.len(), dims.volume(), "view buffer length != {dims} volume");
+        FieldView { dims, data }
+    }
+
+    #[inline(always)]
+    pub fn dims(&self) -> Dim3 {
+        self.dims
+    }
+
+    #[inline(always)]
+    pub fn idx(&self, z: usize, y: usize, x: usize) -> usize {
+        debug_assert!(z < self.dims.z && y < self.dims.y && x < self.dims.x);
+        (z * self.dims.y + y) * self.dims.x + x
+    }
+
+    #[inline(always)]
+    pub fn get(&self, z: usize, y: usize, x: usize) -> f32 {
+        self.data[self.idx(z, y, x)]
+    }
+
+    /// Contiguous x-run of `len` points starting at `(z, y, x)`.
+    #[inline(always)]
+    pub fn seg(&self, z: usize, y: usize, x: usize, len: usize) -> &'a [f32] {
+        debug_assert!(x + len <= self.dims.x, "segment overruns the x row");
+        let b = (z * self.dims.y + y) * self.dims.x + x;
+        &self.data[b..b + len]
+    }
+
+    /// Full contiguous x-row at `(z, y)`.
+    #[inline(always)]
+    pub fn row(&self, z: usize, y: usize) -> &'a [f32] {
+        self.seg(z, y, 0, self.dims.x)
+    }
+}
+
+/// Borrowed mutable view: the zero-copy output type of the in-place
+/// kernels. Rows of the persistent padded output buffer are handed out
+/// as `&mut [f32]` segments and overwritten in place — no tile
+/// allocation, no scatter.
+pub struct FieldViewMut<'a> {
+    dims: Dim3,
+    data: &'a mut [f32],
+}
+
+impl<'a> FieldViewMut<'a> {
+    /// Wrap a raw buffer (must match `dims.volume()`).
+    pub fn new(dims: Dim3, data: &'a mut [f32]) -> FieldViewMut<'a> {
+        assert_eq!(data.len(), dims.volume(), "view buffer length != {dims} volume");
+        FieldViewMut { dims, data }
+    }
+
+    #[inline(always)]
+    pub fn dims(&self) -> Dim3 {
+        self.dims
+    }
+
+    /// Reborrow as a read-only view.
+    #[inline(always)]
+    pub fn as_view(&self) -> FieldView<'_> {
+        FieldView { dims: self.dims, data: self.data }
+    }
+
+    /// Mutable contiguous x-run of `len` points starting at `(z, y, x)`.
+    #[inline(always)]
+    pub fn seg_mut(&mut self, z: usize, y: usize, x: usize, len: usize) -> &mut [f32] {
+        debug_assert!(z < self.dims.z && y < self.dims.y);
+        debug_assert!(x + len <= self.dims.x, "segment overruns the x row");
+        let b = (z * self.dims.y + y) * self.dims.x + x;
+        &mut self.data[b..b + len]
+    }
+
+    /// Full mutable x-row at `(z, y)`.
+    #[inline(always)]
+    pub fn row_mut(&mut self, z: usize, y: usize) -> &mut [f32] {
+        self.seg_mut(z, y, 0, self.dims.x)
     }
 }
 
@@ -247,5 +353,37 @@ mod tests {
     fn extract_out_of_bounds_panics() {
         let f = Field3::zeros(Dim3::new(2, 2, 2));
         f.extract(Dim3::new(1, 1, 1), Dim3::new(2, 2, 2));
+    }
+
+    #[test]
+    fn views_expose_contiguous_rows_without_copying() {
+        let f = Field3::from_fn(Dim3::new(3, 4, 5), |z, y, x| (z * 100 + y * 10 + x) as f32);
+        let v = f.view();
+        assert_eq!(v.dims(), f.dims());
+        assert_eq!(v.get(2, 3, 4), f.get(2, 3, 4));
+        assert_eq!(v.row(1, 2), &f.as_slice()[f.idx(1, 2, 0)..f.idx(1, 2, 0) + 5]);
+        assert_eq!(v.seg(2, 1, 1, 3), &[211.0, 212.0, 213.0]);
+        // the same segment re-read through the view is the same memory
+        assert_eq!(v.seg(0, 0, 0, 5).as_ptr(), f.as_slice().as_ptr());
+    }
+
+    #[test]
+    fn mutable_view_writes_through_to_the_field() {
+        let mut f = Field3::zeros(Dim3::new(2, 3, 4));
+        {
+            let mut m = f.view_mut();
+            m.seg_mut(1, 2, 1, 2).copy_from_slice(&[7.0, 8.0]);
+            m.row_mut(0, 0)[3] = -1.0;
+            assert_eq!(m.as_view().get(1, 2, 2), 8.0);
+        }
+        assert_eq!(f.get(1, 2, 1), 7.0);
+        assert_eq!(f.get(1, 2, 2), 8.0);
+        assert_eq!(f.get(0, 0, 3), -1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn view_length_mismatch_panics() {
+        FieldView::new(Dim3::new(2, 2, 2), &[0.0; 7]);
     }
 }

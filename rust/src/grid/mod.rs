@@ -9,7 +9,7 @@ mod decompose;
 mod field;
 
 pub use decompose::{decompose, Region, RegionClass};
-pub use field::Field3;
+pub use field::{Field3, FieldView, FieldViewMut};
 
 use crate::R;
 

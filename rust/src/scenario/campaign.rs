@@ -30,8 +30,22 @@ pub struct CampaignSpec {
     pub machines: Vec<String>,
     /// Scale every scenario's step count (`--quick` smoke runs).
     pub steps_scale: Option<f64>,
-    /// Worker threads; 0 = one per available core, capped by cell count.
+    /// Global worker *budget*, shared between the physics-job fan-out
+    /// and each propagator's tile fan-out (see [`split_budget`]);
+    /// 0 = available parallelism.
     pub threads: usize,
+}
+
+/// Split one global worker budget between the outer physics-job
+/// fan-out and each job's propagator tile fan-out: `jobs` outer
+/// workers (capped by the budget), each granted `budget / outer` tile
+/// threads. The product never exceeds the budget, so big matrices on
+/// big hosts cannot oversubscribe cores — and small matrices still use
+/// the whole machine through the tile fan-out.
+pub fn split_budget(budget: usize, jobs: usize) -> (usize, usize) {
+    let budget = budget.max(1);
+    let outer = budget.min(jobs.max(1));
+    (outer, (budget / outer).max(1))
 }
 
 /// One representative variant per code-shape family (the six families
@@ -128,7 +142,11 @@ impl CampaignCell {
 pub struct CampaignReport {
     pub cells: Vec<CampaignCell>,
     pub wall: Duration,
+    /// Outer physics-job workers (the budget's first factor).
     pub threads: usize,
+    /// Tile-fan-out threads granted to each physics job (the budget's
+    /// second factor; `threads * tile_threads <= budget`).
+    pub tile_threads: usize,
     /// Unique physics runs executed (<= cells: the sharing win).
     pub physics_runs: usize,
 }
@@ -191,6 +209,7 @@ impl CampaignReport {
         );
         summary.insert("wall_ms".into(), num(self.wall.as_secs_f64() * 1e3));
         summary.insert("threads".into(), Json::Num(self.threads as f64));
+        summary.insert("tile_threads".into(), Json::Num(self.tile_threads as f64));
         summary.insert("physics_runs".into(), Json::Num(self.physics_runs as f64));
         let mut root = BTreeMap::new();
         root.insert("format_version".into(), Json::Num(1.0));
@@ -261,21 +280,22 @@ fn assemble_cell(
     }
 }
 
-fn physics_opts(spec: &CampaignSpec, variant: &str) -> RunnerOptions {
+fn physics_opts(spec: &CampaignSpec, variant: &str, tile_threads: usize) -> RunnerOptions {
     RunnerOptions {
         steps_scale: spec.steps_scale,
         variant: Some(variant.to_string()),
-        // worker threads own the cores; keep the tile fan-out serial
-        cpu_threads: 1,
+        // this job's share of the global worker budget
+        cpu_threads: tile_threads,
         ..RunnerOptions::default()
     }
 }
 
-/// Run one cell standalone (fresh physics). The campaign itself goes
-/// through the shared-physics path; this is the single-cell building
-/// block (and what tests poke directly).
+/// Run one cell standalone (fresh physics, whole budget to the tile
+/// fan-out). The campaign itself goes through the shared-physics path;
+/// this is the single-cell building block (and what tests poke
+/// directly).
 fn run_cell(spec: &CampaignSpec, sc: ScenarioId, variant: &str, machine: &str) -> CampaignCell {
-    let physics = run_scenario_physics(sc, &physics_opts(spec, variant));
+    let physics = run_scenario_physics(sc, &physics_opts(spec, variant, spec.threads));
     assemble_cell(sc, variant, machine, &physics)
 }
 
@@ -303,13 +323,15 @@ pub fn run_campaign(spec: &CampaignSpec) -> CampaignReport {
         job_of_cell.push(idx);
     }
 
-    let n_threads = if spec.threads > 0 {
+    // one global worker budget, shared between the job fan-out and
+    // each job's propagator tile fan-out (ROADMAP: no oversubscription
+    // on big hosts, full machine on small matrices)
+    let budget = if spec.threads > 0 {
         spec.threads
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-    }
-    .min(jobs.len())
-    .max(1);
+    };
+    let (n_threads, tile_threads) = split_budget(budget, jobs.len());
 
     let t0 = Instant::now();
     let cursor = AtomicUsize::new(0);
@@ -324,7 +346,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> CampaignReport {
                     break;
                 }
                 let (sc, variant) = &jobs[i];
-                let m = run_scenario_physics(*sc, &physics_opts(spec, variant));
+                let m = run_scenario_physics(*sc, &physics_opts(spec, variant, tile_threads));
                 physics.lock().unwrap()[i] = Some(m);
             });
         }
@@ -345,6 +367,7 @@ pub fn run_campaign(spec: &CampaignSpec) -> CampaignReport {
         cells: out,
         wall: t0.elapsed(),
         threads: n_threads,
+        tile_threads,
         physics_runs: jobs.len(),
     }
 }
@@ -361,6 +384,40 @@ mod tests {
             steps_scale: Some(0.5),
             threads: 2,
         }
+    }
+
+    #[test]
+    fn split_budget_shares_cores_between_layers() {
+        assert_eq!(split_budget(16, 4), (4, 4));
+        assert_eq!(split_budget(16, 32), (16, 1));
+        assert_eq!(split_budget(3, 8), (3, 1));
+        assert_eq!(split_budget(8, 3), (3, 2));
+        assert_eq!(split_budget(0, 5), (1, 1)); // degenerate budget
+        assert_eq!(split_budget(5, 0), (1, 5)); // no jobs yet: all tiles
+        for budget in 1..24 {
+            for jobs in 1..24 {
+                let (outer, inner) = split_budget(budget, jobs);
+                assert!(outer >= 1 && inner >= 1);
+                assert!(outer * inner <= budget, "({budget},{jobs}) oversubscribes");
+                assert!(outer <= jobs.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn tile_thread_budget_does_not_change_physics() {
+        // granting each job more tile threads must only change timing,
+        // never the physics the verdict is judged on
+        let mut spec = tiny_spec();
+        spec.threads = 1;
+        let serial = run_campaign(&spec);
+        spec.threads = 8;
+        let budgeted = run_campaign(&spec);
+        assert_eq!(budgeted.tile_threads, 8, "1 job must get the whole budget");
+        let (a, b) = (&serial.cells[0], &budgeted.cells[0]);
+        assert_eq!(a.peak_abs, b.peak_abs, "tile scheduling leaked into physics");
+        assert_eq!(a.final_energy, b.final_energy);
+        assert_eq!(a.verdict, b.verdict);
     }
 
     #[test]

@@ -394,7 +394,8 @@ pub struct RunnerOptions {
     /// predicted cell also *measures* the shape it predicts.
     pub propagator: Option<String>,
     /// Worker threads inside the propagator tile fan-out (0 = one per
-    /// core). The campaign sets 1: its cell fan-out owns the cores.
+    /// core). The campaign sets each job's share of the global worker
+    /// budget (`campaign::split_budget`).
     pub cpu_threads: usize,
 }
 

@@ -6,9 +6,14 @@
 //! staging, so they collapse onto one shape: split every decomposition
 //! region into the variant's d1 x d2 x d3 tiles and fan the tiles over
 //! worker threads — each tile's working set is what a thread block
-//! would have staged.
+//! would have staged. The tile task list is planned once per domain
+//! and tiles update the shared padded output in place (see
+//! `propagator` module docs on the zero-allocation steady state).
 
-use super::propagator::{inner_tile, pml_tile, run_tiled, Consts, Propagator, PropagatorInputs};
+use super::propagator::{
+    inner_tile_into, pml_tile_into, run_tiled_into, Plan, Propagator, PropagatorInputs,
+};
+use super::Consts;
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{decompose, Dim3, Field3};
 
@@ -17,11 +22,12 @@ pub struct Blocked3D {
     /// Tile extents in (z, y, x) order — the variant's (d3, d2, d1);
     /// Table II names tiles `{Dx}x{Dy}x{Dz}`, x innermost.
     pub tile: Dim3,
+    plan: Option<Plan<()>>,
 }
 
 impl Blocked3D {
     pub fn new(tile: Dim3) -> Blocked3D {
-        Blocked3D { tile }
+        Blocked3D { tile, plan: None }
     }
 
     pub fn from_variant(v: &KernelVariant) -> Blocked3D {
@@ -42,18 +48,23 @@ impl Propagator for Blocked3D {
         format!("blocked3d:{}", self.tile)
     }
 
-    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3 {
+    fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
+        debug_assert_eq!(out.dims(), inp.domain.padded());
         let k = Consts::of(inp.domain);
-        let tasks: Vec<_> = decompose(inp.domain)
-            .iter()
-            .flat_map(|r| r.split(self.tile))
-            .collect();
-        run_tiled(inp.domain, &tasks, inp.threads, |t| {
+        let tile = self.tile;
+        let plan = Plan::ensure(
+            &mut self.plan,
+            inp.domain,
+            inp.threads,
+            |d| decompose(d).iter().flat_map(|r| r.split(tile)).collect(),
+            |_| (),
+        );
+        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, _s, o| {
             if t.class.is_pml() {
-                pml_tile(inp, t.offset, t.shape, k)
+                pml_tile_into(inp, t, k, o);
             } else {
-                inner_tile(inp, t.offset, t.shape, k)
+                inner_tile_into(inp, t, k, o);
             }
-        })
+        });
     }
 }

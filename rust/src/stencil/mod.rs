@@ -1,13 +1,22 @@
 //! Pure-Rust stencils: the CPU reference numerics plus the executable
 //! code-shape engine.
 //!
-//! * The free functions here (`lap8`, `step_inner`, `step_pml`, ...)
-//!   are the reference implementation of the same numerics as
-//!   `python/compile/common.py` / `kernels/ref.py`; arithmetic
-//!   *ordering* mirrors the jnp reference so f32 results agree to a
-//!   few ULP.
-//! * [`GoldenPropagator`] wraps them into the oracle the integration
-//!   tests compare PJRT output against.
+//! * The two-pass free functions (`lap8`, `step_inner`, `step_pml`, ...)
+//!   are the *spec*: the same numerics as `python/compile/common.py` /
+//!   `kernels/ref.py`, with arithmetic ordering mirroring the jnp
+//!   reference so f32 results agree to a few ULP. They allocate per
+//!   call and stay off the hot path.
+//! * The fused row kernels (`inner_row`, `pml_row`) are the *hot path*:
+//!   they read neighbors directly from the persistent R-ghost-padded
+//!   wavefield through [`crate::grid::FieldView`] and update one
+//!   contiguous x-row **in place** (the output row holds `um` on entry
+//!   — the classic two-buffer leapfrog). Every neighbor run is pre-cut
+//!   to the row length, so the inner loop indexes bounds-check-free and
+//!   LLVM auto-vectorizes it. Per-point arithmetic ordering matches the
+//!   two-pass spec exactly: results are bit-identical (asserted below).
+//! * [`GoldenPropagator`] drives the row kernels over the 7-region
+//!   decomposition with two persistent padded buffers — the oracle the
+//!   integration tests compare PJRT output against.
 //! * [`propagator`] is the code-shape engine: a [`propagator::Propagator`]
 //!   trait with tiled, multithreaded CPU analogs of the paper's kernel
 //!   families (naive, 3D-blocked, 2.5D streaming, semi-stencil), so
@@ -23,7 +32,7 @@ mod streaming;
 pub use golden::GoldenPropagator;
 pub use propagator::{Propagator, PropagatorInputs};
 
-use crate::grid::{Dim3, Field3};
+use crate::grid::{Dim3, Domain, Field3, FieldView};
 use crate::{R, R_ETA};
 
 /// 8th-order per-axis second-derivative coefficients (center, +-1..+-4).
@@ -173,6 +182,125 @@ pub fn step_pml(
     out
 }
 
+/// Precomputed per-step scalar constants. Derivations mirror `lap8` /
+/// `step_inner` / `step_pml` exactly (f64 -> f32 casts in the same
+/// places) so the fused row kernels stay bit-identical to the two-pass
+/// spec.
+#[derive(Copy, Clone)]
+pub(crate) struct Consts {
+    pub dt2: f32,
+    pub dt_f: f32,
+    pub inv_h2: f32,
+}
+
+impl Consts {
+    pub(crate) fn of(domain: &Domain) -> Consts {
+        Consts {
+            dt2: (domain.dt * domain.dt) as f32,
+            dt_f: domain.dt as f32,
+            inv_h2: (1.0 / (domain.h * domain.h)) as f32,
+        }
+    }
+}
+
+/// Fused inner (25-point, 8th-order) leapfrog update of one contiguous
+/// x-row of interior points `(iz, iy, x0..x0+len)`, **in place**:
+/// `out` is the matching row segment of the R-ghost-padded output
+/// buffer, holding the `um` (step n-1) values on entry and the step
+/// n+1 values on exit. `u` is the padded step-n wavefield, `v` the
+/// interior-sized velocity model.
+///
+/// Every neighbor run is pre-cut to exactly `len`, so the loop body
+/// indexes bounds-check-free and auto-vectorizes. Arithmetic ordering
+/// mirrors `lap8` + `step_inner`: per-point results are bit-identical
+/// to the two-pass spec.
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI: fields + row coords + constants
+#[inline]
+pub(crate) fn inner_row(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), len, "output row length mismatch");
+    let (cz, cy) = (iz + R, iy + R);
+    let b = x0 + R; // padded x of the first point
+    let zp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz + m + 1, cy, b, len));
+    let zm: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz - m - 1, cy, b, len));
+    let yp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy + m + 1, b, len));
+    let ym: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy - m - 1, b, len));
+    let xp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy, b + m + 1, len));
+    let xm: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy, b - m - 1, len));
+    let ctr = u.seg(cz, cy, b, len);
+    let vs = v.seg(iz, iy, x0, len);
+    for i in 0..len {
+        // Mirror jnp ordering: 3*c0*core, then per-m (z+,z-,y+,y-,x+,x-).
+        let mut acc = 3.0 * C8[0] * ctr[i];
+        for m in 1..=R {
+            acc += C8[m]
+                * (zp[m - 1][i]
+                    + zm[m - 1][i]
+                    + yp[m - 1][i]
+                    + ym[m - 1][i]
+                    + xp[m - 1][i]
+                    + xm[m - 1][i]);
+        }
+        let lap = acc * k.inv_h2;
+        let vv = vs[i];
+        out[i] = 2.0 * ctr[i] - out[i] + k.dt2 * vv * vv * lap;
+    }
+}
+
+/// Fused PML (7-point, damped) update of one contiguous x-row, in
+/// place like [`inner_row`]. `eta` is the R-ghost-padded damping
+/// profile. Mirrors `lap2` + `eta_bar` + `step_pml` bit-for-bit.
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI: fields + row coords + constants
+#[inline]
+pub(crate) fn pml_row(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    eta: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), len, "output row length mismatch");
+    let (cz, cy) = (iz + R, iy + R);
+    let b = x0 + R;
+    let uc = u.seg(cz, cy, b, len);
+    let u_zp = u.seg(cz + 1, cy, b, len);
+    let u_zm = u.seg(cz - 1, cy, b, len);
+    let u_yp = u.seg(cz, cy + 1, b, len);
+    let u_ym = u.seg(cz, cy - 1, b, len);
+    let u_xp = u.seg(cz, cy, b + 1, len);
+    let u_xm = u.seg(cz, cy, b - 1, len);
+    let ec = eta.seg(cz, cy, b, len);
+    let e_zp = eta.seg(cz + 1, cy, b, len);
+    let e_zm = eta.seg(cz - 1, cy, b, len);
+    let e_yp = eta.seg(cz, cy + 1, b, len);
+    let e_ym = eta.seg(cz, cy - 1, b, len);
+    let e_xp = eta.seg(cz, cy, b + 1, len);
+    let e_xm = eta.seg(cz, cy, b - 1, len);
+    let vs = v.seg(iz, iy, x0, len);
+    for i in 0..len {
+        let acc = 3.0 * C2[0] * uc[i]
+            + (u_zp[i] + u_zm[i] + u_yp[i] + u_ym[i] + u_xp[i] + u_xm[i]);
+        let lap = acc * k.inv_h2;
+        let eb = (ec[i] + e_zp[i] + e_zm[i] + e_yp[i] + e_ym[i] + e_xp[i] + e_xm[i]) / 7.0;
+        let ed = eb * k.dt_f;
+        let vv = vs[i];
+        let num = 2.0 * uc[i] - (1.0 - ed) * out[i] + k.dt2 * vv * vv * lap;
+        out[i] = num / (1.0 + ed);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +381,96 @@ mod tests {
         for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
             assert!(y.abs() <= x.abs() + 1e-6);
         }
+    }
+
+    #[test]
+    fn fused_row_kernels_match_the_two_pass_spec_bitwise() {
+        // the in-place hot path must reproduce the allocating spec
+        // bit-for-bit, including the leapfrog um-in-out trick
+        use crate::testkit::Rng;
+        let s = Dim3::new(9, 7, 11);
+        let (h, dt) = (10.0, 1e-3);
+        let domain = Domain::new(s, 2, h, dt).unwrap();
+        let mut rng = Rng::new(0xFEED);
+        let u = rng.field(s);
+        let um = rng.field(s);
+        let v = rng.field_in(s, 1500.0, 3500.0);
+        let eta = rng.field_in(s, 0.0, 50.0);
+        let (u_pad, um_pad, eta_pad) = (u.pad(R), um.pad(R), eta.pad(R));
+        let k = Consts::of(&domain);
+
+        // inner family, whole interior in one sweep
+        let spec = step_inner(&u_pad, &um, &v, dt, h);
+        let mut got = um_pad.clone();
+        {
+            let uv = u_pad.view();
+            let vv = v.view();
+            let mut out = got.view_mut();
+            for iz in 0..s.z {
+                for iy in 0..s.y {
+                    let row = out.seg_mut(iz + R, iy + R, R, s.x);
+                    inner_row(uv, vv, iz, iy, 0, s.x, k, row);
+                }
+            }
+        }
+        assert_eq!(got.unpad(R).max_abs_diff(&spec), 0.0, "inner_row vs lap8+step_inner");
+        assert_eq!(got.unpad(R).pad(R), got, "ghost ring must stay zero");
+
+        // PML family, whole interior in one sweep
+        let u_t = u_pad.extract_padded_region(R, Dim3::new(0, 0, 0), s, 1);
+        let e_t = eta_pad.extract_padded_region(R, Dim3::new(0, 0, 0), s, 1);
+        let spec = step_pml(&u_t, &um, &v, &e_t, dt, h);
+        let mut got = um_pad.clone();
+        {
+            let uv = u_pad.view();
+            let vv = v.view();
+            let ev = eta_pad.view();
+            let mut out = got.view_mut();
+            for iz in 0..s.z {
+                for iy in 0..s.y {
+                    let row = out.seg_mut(iz + R, iy + R, R, s.x);
+                    pml_row(uv, vv, ev, iz, iy, 0, s.x, k, row);
+                }
+            }
+        }
+        assert_eq!(
+            got.unpad(R).max_abs_diff(&spec),
+            0.0,
+            "pml_row vs lap2+eta_bar+step_pml"
+        );
+    }
+
+    #[test]
+    fn row_kernels_handle_partial_rows() {
+        // a mid-row segment must equal the same points of a full sweep
+        use crate::testkit::Rng;
+        let s = Dim3::new(6, 6, 12);
+        let domain = Domain::new(s, 2, 10.0, 1e-3).unwrap();
+        let mut rng = Rng::new(0xACE);
+        let u_pad = rng.field(s).pad(R);
+        let um_pad = rng.field(s).pad(R);
+        let v = rng.field_in(s, 1500.0, 3500.0);
+        let k = Consts::of(&domain);
+        let uv = u_pad.view();
+        let vv = v.view();
+
+        let mut full = um_pad.clone();
+        let mut part = um_pad.clone();
+        let (iz, iy) = (3, 2);
+        inner_row(uv, vv, iz, iy, 0, s.x, k, full.view_mut().seg_mut(iz + R, iy + R, R, s.x));
+        // same row in two pieces: [0, 5) and [5, 12)
+        inner_row(uv, vv, iz, iy, 0, 5, k, part.view_mut().seg_mut(iz + R, iy + R, R, 5));
+        inner_row(
+            uv,
+            vv,
+            iz,
+            iy,
+            5,
+            s.x - 5,
+            k,
+            part.view_mut().seg_mut(iz + R, iy + R, R + 5, s.x - 5),
+        );
+        assert_eq!(full.max_abs_diff(&part), 0.0);
     }
 
     #[test]

@@ -15,18 +15,35 @@
 //!
 //! Every propagator drives the same 7-region decomposition
 //! (`grid::decompose`), splits regions into tiles (its block grid),
-//! and fans the tiles over `std::thread` workers. All families except
-//! `SemiStencil` keep the golden arithmetic ordering per point, so
-//! they are bit-identical to [`super::GoldenPropagator`]; semi-stencil
-//! re-associates the x-axis chain by design and agrees to a few ULP
-//! (asserted by `rust/tests/propagator_equivalence.rs`).
+//! and fans the tiles over `std::thread` workers.
+//!
+//! ## Zero-allocation steady state
+//!
+//! [`Propagator::step_into`] advances the wavefield **in place**: the
+//! output buffer holds u(n-1) on entry — read only at the center point,
+//! as the leapfrog `um` term — and u(n+1) on exit, so two persistent
+//! padded buffers ping-pong with a `swap` and the time loop never
+//! allocates. All per-domain scratch (tile task lists, streaming ring
+//! buffers, semi-stencil partial rows) lives in a [`Plan`] built on
+//! first use and reused while the (domain, threads) key is unchanged;
+//! `rust/tests/zero_alloc.rs` proves the steady-state loop performs
+//! zero heap allocations for every family. With `threads > 1` the tile
+//! fan-out spawns scoped workers per step — O(threads) bookkeeping,
+//! never O(points) — and tiles write disjoint rows of the shared
+//! output directly (no per-tile buffers, no scatter).
+//!
+//! All families except `SemiStencil` keep the golden arithmetic
+//! ordering per point, so they are bit-identical to
+//! [`super::GoldenPropagator`]; semi-stencil re-associates the x-axis
+//! chain by design and agrees to a few ULP (asserted by
+//! `rust/tests/propagator_equivalence.rs`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
-use super::{C2, C8};
+use super::{inner_row, pml_row, Consts};
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
-use crate::gpusim::kernels::{self, Family};
+use crate::gpusim::kernels::{self, Family, KernelVariant};
 use crate::R;
 
 pub use super::blocked::Blocked3D;
@@ -35,13 +52,12 @@ pub use super::streaming::Streaming25D;
 
 /// Borrowed per-step state handed to a propagator. All wavefields are
 /// `R`-ghost-padded with a zero ghost ring (the Dirichlet closure);
-/// `v` is interior-sized.
+/// `v` is interior-sized. The previous wavefield is **not** here: it
+/// lives in the output buffer passed to [`Propagator::step_into`].
 pub struct PropagatorInputs<'a> {
     pub domain: &'a Domain,
     /// Wavefield at step n.
     pub u_pad: &'a Field3,
-    /// Wavefield at step n-1.
-    pub um_pad: &'a Field3,
     /// Velocity model, interior-sized.
     pub v: &'a Field3,
     /// Damping profile, R-ghost-padded (zero ghost).
@@ -51,10 +67,10 @@ pub struct PropagatorInputs<'a> {
 }
 
 /// One executable CPU code shape. Implementations compute a full
-/// decomposed time step (inner 25-point + six PML faces) and return
-/// the next `R`-ghost-padded wavefield; source injection, receivers,
-/// and state rotation stay in the coordinator.
-pub trait Propagator: Send + Sync {
+/// decomposed time step (inner 25-point + six PML faces) **in place**;
+/// source injection, receivers, and buffer rotation stay in the
+/// coordinator.
+pub trait Propagator: Send {
     /// Stable display name (also used as the bench label prefix).
     fn name(&self) -> &'static str;
 
@@ -63,29 +79,37 @@ pub trait Propagator: Send + Sync {
     /// same measured physics, so the campaign runs them once.
     fn signature(&self) -> String;
 
-    /// Compute the next R-ghost-padded wavefield (no source injection;
-    /// the ghost ring stays zero).
-    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3;
+    /// Advance one step in place. On entry `out` holds the
+    /// R-ghost-padded wavefield at step n-1 (the leapfrog `um` term,
+    /// read only at the center point); on exit it holds step n+1. The
+    /// ghost ring is never written and stays zero. Steady-state calls
+    /// perform no heap allocations; per-domain scratch is (re)built
+    /// only when the (domain, threads) key changes.
+    fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3);
+}
+
+/// The executable CPU analog of a gpusim kernel variant (families map
+/// per the module-level table).
+pub fn from_variant(v: &KernelVariant) -> Box<dyn Propagator> {
+    match v.family {
+        Family::Gmem | Family::SmemU | Family::SmemEta1 | Family::SmemEta3 => {
+            Box::new(Blocked3D::from_variant(v))
+        }
+        Family::Semi => Box::new(SemiStencil::from_variant(v)),
+        Family::StSmem | Family::StRegShft | Family::StRegFixed => {
+            Box::new(Streaming25D::from_variant(v))
+        }
+    }
 }
 
 /// Build the CPU propagator for a name: `naive`/`golden`, a family
 /// shorthand (`gmem`, `st_smem`, ...), or a full Table II variant id
-/// (`gmem_8x8x8`, `st_reg_shft_16x32`, ...). Families map to their
-/// CPU analogs per the module-level table.
+/// (`gmem_8x8x8`, `st_reg_shft_16x32`, ...).
 pub fn build(name: &str) -> anyhow::Result<Box<dyn Propagator>> {
     if matches!(name, "naive" | "golden") {
-        return Ok(Box::new(Naive));
+        return Ok(Box::new(Naive::default()));
     }
-    let v = kernels::resolve(name)?;
-    Ok(match v.family {
-        Family::Gmem | Family::SmemU | Family::SmemEta1 | Family::SmemEta3 => {
-            Box::new(Blocked3D::from_variant(&v))
-        }
-        Family::Semi => Box::new(SemiStencil::from_variant(&v)),
-        Family::StSmem | Family::StRegShft | Family::StRegFixed => {
-            Box::new(Streaming25D::from_variant(&v))
-        }
-    })
+    Ok(from_variant(&kernels::resolve(name)?))
 }
 
 /// Physics signature of a variant name without keeping the propagator
@@ -107,118 +131,39 @@ pub fn bench_matrix() -> Vec<(&'static str, &'static str)> {
     ]
 }
 
-/// Precomputed per-step scalar constants. Derivations mirror
-/// `stencil::lap8` / `step_inner` / `step_pml` exactly (f64 -> f32
-/// casts in the same places) so fused per-point updates stay
-/// bit-identical to the golden two-pass ones.
-#[derive(Copy, Clone)]
-pub(crate) struct Consts {
-    pub dt2: f32,
-    pub dt_f: f32,
-    pub inv_h2: f32,
+/// Cached per-domain execution state: the tile task list plus one
+/// scratch slot per worker, keyed on (domain, requested threads).
+/// Built once on first step and reused for every subsequent step —
+/// this is what makes the steady-state loop allocation-free.
+pub(crate) struct Plan<S> {
+    domain: Domain,
+    threads: usize,
+    pub(crate) tasks: Vec<Region>,
+    /// One entry per resolved worker (always >= 1).
+    pub(crate) scratch: Vec<S>,
 }
 
-impl Consts {
-    pub(crate) fn of(domain: &Domain) -> Consts {
-        Consts {
-            dt2: (domain.dt * domain.dt) as f32,
-            dt_f: domain.dt as f32,
-            inv_h2: (1.0 / (domain.h * domain.h)) as f32,
+impl<S> Plan<S> {
+    /// Return the cached plan, rebuilding it if the key changed.
+    pub(crate) fn ensure<'a>(
+        slot: &'a mut Option<Plan<S>>,
+        domain: &Domain,
+        threads: usize,
+        tile: impl FnOnce(&Domain) -> Vec<Region>,
+        mk_scratch: impl Fn(&[Region]) -> S,
+    ) -> &'a mut Plan<S> {
+        let stale = match slot {
+            Some(p) => p.domain != *domain || p.threads != threads,
+            None => true,
+        };
+        if stale {
+            let tasks = tile(domain);
+            let workers = resolve_threads(threads, tasks.len());
+            let scratch = (0..workers).map(|_| mk_scratch(&tasks)).collect();
+            *slot = Some(Plan { domain: *domain, threads, tasks, scratch });
         }
+        slot.as_mut().expect("plan just ensured")
     }
-}
-
-/// Fused inner (25-point, 8th-order) leapfrog update of the interior
-/// point `(iz, iy, ix)`. Arithmetic ordering mirrors `lap8` +
-/// `step_inner`: per-point results are bit-identical.
-#[inline(always)]
-pub(crate) fn inner_point(
-    inp: &PropagatorInputs<'_>,
-    iz: usize,
-    iy: usize,
-    ix: usize,
-    k: Consts,
-) -> f32 {
-    let u = inp.u_pad;
-    let (cz, cy, cx) = (iz + R, iy + R, ix + R);
-    let mut acc = 3.0 * C8[0] * u.get(cz, cy, cx);
-    for m in 1..=R {
-        acc += C8[m]
-            * (u.get(cz + m, cy, cx)
-                + u.get(cz - m, cy, cx)
-                + u.get(cz, cy + m, cx)
-                + u.get(cz, cy - m, cx)
-                + u.get(cz, cy, cx + m)
-                + u.get(cz, cy, cx - m));
-    }
-    let lap = acc * k.inv_h2;
-    let core = u.get(cz, cy, cx);
-    let vv = inp.v.get(iz, iy, ix);
-    2.0 * core - inp.um_pad.get(cz, cy, cx) + k.dt2 * vv * vv * lap
-}
-
-/// Fused PML (7-point, damped) update of the interior point
-/// `(iz, iy, ix)`. Mirrors `lap2` + `eta_bar` + `step_pml`.
-#[inline(always)]
-pub(crate) fn pml_point(
-    inp: &PropagatorInputs<'_>,
-    iz: usize,
-    iy: usize,
-    ix: usize,
-    k: Consts,
-) -> f32 {
-    let u = inp.u_pad;
-    let e = inp.eta_pad;
-    let (cz, cy, cx) = (iz + R, iy + R, ix + R);
-    let acc = 3.0 * C2[0] * u.get(cz, cy, cx)
-        + (u.get(cz + 1, cy, cx)
-            + u.get(cz - 1, cy, cx)
-            + u.get(cz, cy + 1, cx)
-            + u.get(cz, cy - 1, cx)
-            + u.get(cz, cy, cx + 1)
-            + u.get(cz, cy, cx - 1));
-    let lap = acc * k.inv_h2;
-    let eb = (e.get(cz, cy, cx)
-        + e.get(cz + 1, cy, cx)
-        + e.get(cz - 1, cy, cx)
-        + e.get(cz, cy + 1, cx)
-        + e.get(cz, cy - 1, cx)
-        + e.get(cz, cy, cx + 1)
-        + e.get(cz, cy, cx - 1))
-        / 7.0;
-    let ed = eb * k.dt_f;
-    let core = u.get(cz, cy, cx);
-    let vv = inp.v.get(iz, iy, ix);
-    let num = 2.0 * core - (1.0 - ed) * inp.um_pad.get(cz, cy, cx) + k.dt2 * vv * vv * lap;
-    num / (1.0 + ed)
-}
-
-/// Walk an inner tile point by point (the per-point gmem shape).
-pub(crate) fn inner_tile(inp: &PropagatorInputs<'_>, offset: Dim3, shape: Dim3, k: Consts) -> Field3 {
-    let mut out = Field3::zeros(shape);
-    for z in 0..shape.z {
-        for y in 0..shape.y {
-            for x in 0..shape.x {
-                out.set(z, y, x, inner_point(inp, offset.z + z, offset.y + y, offset.x + x, k));
-            }
-        }
-    }
-    out
-}
-
-/// Walk a PML tile point by point (shared by every family: the
-/// paper's PML kernels differ only in eta staging, which has no CPU
-/// cache analog beyond tiling).
-pub(crate) fn pml_tile(inp: &PropagatorInputs<'_>, offset: Dim3, shape: Dim3, k: Consts) -> Field3 {
-    let mut out = Field3::zeros(shape);
-    for z in 0..shape.z {
-        for y in 0..shape.y {
-            for x in 0..shape.x {
-                out.set(z, y, x, pml_point(inp, offset.z + z, offset.y + y, offset.x + x, k));
-            }
-        }
-    }
-    out
 }
 
 fn resolve_threads(requested: usize, tasks: usize) -> usize {
@@ -230,52 +175,146 @@ fn resolve_threads(requested: usize, tasks: usize) -> usize {
     n.min(tasks).max(1)
 }
 
-/// Fan tile tasks over worker threads (shared atomic cursor, the same
-/// idiom as the campaign runner) and scatter each computed tile into a
-/// fresh R-ghost-padded output field. Tiles partition the interior, so
-/// the result is scheduling-independent.
+/// Raw shared handle to the padded output buffer, for disjoint in-place
+/// tile writes from the worker fan-out.
 ///
-/// Callers rebuild the task list each step; that is O(tiles) work and
-/// allocation against O(points x 45 FLOP) of stencil compute, so it
-/// stays out of the measured-rate noise floor. Cache the plan in the
-/// propagator if profiling ever says otherwise.
-pub(crate) fn run_tiled<F>(domain: &Domain, tasks: &[Region], threads: usize, f: F) -> Field3
-where
-    F: Fn(&Region) -> Field3 + Sync,
-{
-    let mut out = Field3::zeros(domain.padded());
-    let dst = |t: &Region| Dim3::new(R + t.offset.z, R + t.offset.y, R + t.offset.x);
-    let n = resolve_threads(threads, tasks.len());
-    if n == 1 {
+/// Safety contract: the tile task lists handed to [`run_tiled_into`]
+/// partition the interior (asserted by `grid::decompose`/`Region::split`
+/// tests), and every kernel touches only the rows of its own tile, so
+/// concurrently outstanding segments never alias.
+pub(crate) struct SharedOut {
+    ptr: *mut f32,
+    dims: Dim3,
+    len: usize,
+}
+
+unsafe impl Send for SharedOut {}
+unsafe impl Sync for SharedOut {}
+
+impl SharedOut {
+    pub(crate) fn new(f: &mut Field3) -> SharedOut {
+        let dims = f.dims();
+        let s = f.as_mut_slice();
+        SharedOut { ptr: s.as_mut_ptr(), dims, len: s.len() }
+    }
+
+    #[inline(always)]
+    fn base(&self, z: usize, y: usize, x: usize) -> usize {
+        debug_assert!(z < self.dims.z && y < self.dims.y && x < self.dims.x);
+        (z * self.dims.y + y) * self.dims.x + x
+    }
+
+    /// Mutable contiguous x-run of `len` points at padded `(z, y, x)`.
+    ///
+    /// SAFETY: the caller must guarantee no concurrently outstanding
+    /// segment overlaps this one (tiles partition the interior).
+    #[allow(clippy::mut_from_ref)] // the whole point: disjoint &mut rows across workers
+    #[inline(always)]
+    pub(crate) unsafe fn seg_mut(&self, z: usize, y: usize, x: usize, len: usize) -> &mut [f32] {
+        let b = self.base(z, y, x);
+        debug_assert!(x + len <= self.dims.x && b + len <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(b), len)
+    }
+
+    /// Read one value (the leapfrog um term of a point this task owns).
+    ///
+    /// SAFETY: only the owning task may touch this point.
+    #[inline(always)]
+    pub(crate) unsafe fn read(&self, z: usize, y: usize, x: usize) -> f32 {
+        *self.ptr.add(self.base(z, y, x))
+    }
+
+    /// Write one value of a point this task owns.
+    ///
+    /// SAFETY: only the owning task may touch this point.
+    #[inline(always)]
+    pub(crate) unsafe fn write(&self, z: usize, y: usize, x: usize, v: f32) {
+        *self.ptr.add(self.base(z, y, x)) = v;
+    }
+}
+
+/// Fan tile tasks over the plan's workers (shared atomic cursor, the
+/// same idiom as the campaign runner), each task writing its rows of
+/// `out` in place. `scratch` holds one per-worker slot; with a single
+/// worker the tasks run serially on the caller's thread — no spawn, no
+/// allocation. Tiles partition the interior, so the result is
+/// scheduling-independent.
+pub(crate) fn run_tiled_into<S: Send>(
+    out: &mut Field3,
+    tasks: &[Region],
+    scratch: &mut [S],
+    f: impl Fn(&Region, &mut S, &SharedOut) + Sync,
+) {
+    let shared = SharedOut::new(out);
+    if scratch.len() <= 1 {
+        let s = scratch.first_mut().expect("plan always has >= 1 worker slot");
         for t in tasks {
-            out.scatter(dst(t), &f(t));
+            f(t, &mut *s, &shared);
         }
-        return out;
+        return;
     }
     let cursor = AtomicUsize::new(0);
-    let results: Mutex<Vec<Option<Field3>>> = Mutex::new(vec![None; tasks.len()]);
-    std::thread::scope(|s| {
-        for _ in 0..n {
-            s.spawn(|| loop {
+    std::thread::scope(|sc| {
+        for s in scratch.iter_mut() {
+            let (f, shared, cursor) = (&f, &shared, &cursor);
+            sc.spawn(move || loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= tasks.len() {
                     break;
                 }
-                let tile = f(&tasks[i]);
-                results.lock().unwrap()[i] = Some(tile);
+                f(&tasks[i], &mut *s, shared);
             });
         }
     });
-    for (t, tile) in tasks.iter().zip(results.into_inner().unwrap()) {
-        out.scatter(dst(t), &tile.expect("every tile task ran"));
+}
+
+/// Walk an inner tile row by row through the vectorizable fused row
+/// kernel, updating the tile's rows of the padded output in place.
+pub(crate) fn inner_tile_into(inp: &PropagatorInputs<'_>, t: &Region, k: Consts, out: &SharedOut) {
+    let u = inp.u_pad.view();
+    let v = inp.v.view();
+    for dz in 0..t.shape.z {
+        for dy in 0..t.shape.y {
+            let (iz, iy) = (t.offset.z + dz, t.offset.y + dy);
+            // SAFETY: tiles partition the interior; this row segment
+            // belongs exclusively to the current task.
+            let row = unsafe { out.seg_mut(iz + R, iy + R, t.offset.x + R, t.shape.x) };
+            inner_row(u, v, iz, iy, t.offset.x, t.shape.x, k, row);
+        }
     }
-    out
+}
+
+/// Walk a PML tile row by row (shared by every family: the paper's PML
+/// kernels differ only in eta staging, which has no CPU cache analog
+/// beyond tiling).
+pub(crate) fn pml_tile_into(inp: &PropagatorInputs<'_>, t: &Region, k: Consts, out: &SharedOut) {
+    let u = inp.u_pad.view();
+    let v = inp.v.view();
+    let e = inp.eta_pad.view();
+    for dz in 0..t.shape.z {
+        for dy in 0..t.shape.y {
+            let (iz, iy) = (t.offset.z + dz, t.offset.y + dy);
+            // SAFETY: tiles partition the interior; this row segment
+            // belongs exclusively to the current task.
+            let row = unsafe { out.seg_mut(iz + R, iy + R, t.offset.x + R, t.shape.x) };
+            pml_row(u, v, e, iz, iy, t.offset.x, t.shape.x, k, row);
+        }
+    }
 }
 
 /// The reference shape: one task per decomposition region, per-point
 /// global-memory walk — exactly the golden propagator's code shape,
 /// parallelized over the seven regions.
-pub struct Naive;
+#[derive(Default)]
+pub struct Naive {
+    plan: Option<Plan<()>>,
+}
+
+impl Naive {
+    pub fn new() -> Naive {
+        Naive::default()
+    }
+}
 
 impl Propagator for Naive {
     fn name(&self) -> &'static str {
@@ -286,17 +325,59 @@ impl Propagator for Naive {
         "naive".to_string()
     }
 
-    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3 {
+    fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
+        debug_assert_eq!(out.dims(), inp.domain.padded());
         let k = Consts::of(inp.domain);
-        let tasks = decompose(inp.domain);
-        run_tiled(inp.domain, &tasks, inp.threads, |t| {
+        let plan = Plan::ensure(&mut self.plan, inp.domain, inp.threads, decompose, |_| ());
+        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, _s, o| {
             if t.class.is_pml() {
-                pml_tile(inp, t.offset, t.shape, k)
+                pml_tile_into(inp, t, k, o);
             } else {
-                inner_tile(inp, t.offset, t.shape, k)
+                inner_tile_into(inp, t, k, o);
             }
-        })
+        });
     }
+}
+
+/// Time `steps` in-place steps of `prop` on a synthetic point-source
+/// state over `domain`, returning the best-of-`samples` full-step rate
+/// after `warmup` throwaway runs (all-core tile fan-out). This is the
+/// measured cost the `autotune --measured` search ranks tile shapes
+/// by.
+pub fn measure_steps_per_sec(
+    prop: &mut dyn Propagator,
+    domain: &Domain,
+    steps: usize,
+    warmup: usize,
+    samples: usize,
+) -> f64 {
+    let interior = domain.interior;
+    let v = Field3::full(interior, 2500.0);
+    let eta_pad = crate::wave::eta_profile(domain, 2500.0).pad(R);
+    let mut u_pad = Field3::zeros(domain.padded());
+    u_pad.set(R + interior.z / 2, R + interior.y / 2, R + interior.x / 2, 1.0);
+    let mut um_pad = Field3::zeros(domain.padded());
+
+    let run = |u_pad: &mut Field3, um_pad: &mut Field3, prop: &mut dyn Propagator| {
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            prop.step_into(
+                &PropagatorInputs { domain, u_pad, v: &v, eta_pad: &eta_pad, threads: 0 },
+                um_pad,
+            );
+            std::mem::swap(u_pad, um_pad);
+        }
+        t0.elapsed()
+    };
+    for _ in 0..warmup {
+        run(&mut u_pad, &mut um_pad, &mut *prop);
+    }
+    let mut best = Duration::MAX;
+    for _ in 0..samples.max(1) {
+        best = best.min(run(&mut u_pad, &mut um_pad, &mut *prop));
+    }
+    std::hint::black_box(u_pad.as_slice().first().copied());
+    steps as f64 / best.as_secs_f64().max(1e-12)
 }
 
 #[cfg(test)]
@@ -326,14 +407,19 @@ mod tests {
     }
 
     fn step_with(st: &State, name: &str, threads: usize) -> Field3 {
-        build(name).unwrap().step(&PropagatorInputs {
-            domain: &st.domain,
-            u_pad: &st.u_pad,
-            um_pad: &st.um_pad,
-            v: &st.v,
-            eta_pad: &st.eta_pad,
-            threads,
-        })
+        let mut prop = build(name).unwrap();
+        let mut out = st.um_pad.clone();
+        prop.step_into(
+            &PropagatorInputs {
+                domain: &st.domain,
+                u_pad: &st.u_pad,
+                v: &st.v,
+                eta_pad: &st.eta_pad,
+                threads,
+            },
+            &mut out,
+        );
+        out
     }
 
     #[test]
@@ -420,5 +506,61 @@ mod tests {
             assert_eq!(out.get(d.z - 1, d.y - 1, d.x - 1), 0.0, "{name}");
             assert_eq!(out.unpad(R).pad(R), out, "{name}: ghost must be zero");
         }
+    }
+
+    #[test]
+    fn cached_plans_survive_repeated_steps_and_domain_changes() {
+        // a reused propagator must match fresh ones step for step, and
+        // re-prepare cleanly when the domain (or thread count) changes
+        for name in ["naive", "gmem_8x8x8", "st_smem_8x8", "semi"] {
+            let mut reused = build(name).unwrap();
+            let step_reused = |p: &mut Box<dyn Propagator>, st: &State, threads: usize| {
+                let mut out = st.um_pad.clone();
+                p.step_into(
+                    &PropagatorInputs {
+                        domain: &st.domain,
+                        u_pad: &st.u_pad,
+                        v: &st.v,
+                        eta_pad: &st.eta_pad,
+                        threads,
+                    },
+                    &mut out,
+                );
+                out
+            };
+            let a = random_state(Dim3::new(13, 11, 17), 3, 1);
+            let b = random_state(Dim3::new(9, 15, 12), 2, 2);
+            for st in [&a, &b, &a] {
+                for threads in [1, 2] {
+                    let got = step_reused(&mut reused, st, threads);
+                    let fresh = step_with(st, name, threads);
+                    assert_eq!(
+                        got.max_abs_diff(&fresh),
+                        0.0,
+                        "{name}: stale plan after domain/thread change"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn in_place_step_reads_um_from_the_output_buffer() {
+        // two different um buffers must give two different results —
+        // i.e. the kernel really consumes what `out` held on entry
+        let st = random_state(Dim3::new(10, 9, 11), 2, 42);
+        let a = step_with(&st, "naive", 1);
+        let padded = st.domain.padded();
+        let st2 = State { um_pad: Field3::zeros(padded), ..st };
+        let b = step_with(&st2, "naive", 1);
+        assert!(a.max_abs_diff(&b) > 0.0, "um term ignored");
+    }
+
+    #[test]
+    fn measured_rate_is_positive_and_finite() {
+        let domain = Domain::new(Dim3::new(12, 12, 12), 3, 10.0, 1e-3).unwrap();
+        let mut prop = build("gmem_8x8x8").unwrap();
+        let sps = measure_steps_per_sec(prop.as_mut(), &domain, 2, 0, 1);
+        assert!(sps > 0.0 && sps.is_finite());
     }
 }

@@ -6,27 +6,50 @@
 //! read once and scatters its C8[m] contributions into a partial-sum
 //! buffer — a FORWARD phase for the outputs to its right, a BACKWARD
 //! phase for the outputs to its left. A COMBINE pass then adds the
-//! center and z/y-axis terms. Halving reads per point is the GPU win;
-//! here the shape itself is the point.
+//! center and z/y-axis terms and applies the leapfrog update in place.
+//! Halving reads per point is the GPU win; here the shape itself is
+//! the point. The partial-sum row is per-worker scratch planned once
+//! and reused every step.
 //!
 //! Because the x-axis chain is re-associated, results agree with the
 //! golden propagator to a few ULP rather than bitwise (the equivalence
 //! suite asserts the tolerance).
 
-use super::propagator::{pml_tile, run_tiled, Consts, Propagator, PropagatorInputs};
+use super::propagator::{
+    pml_tile_into, run_tiled_into, Plan, Propagator, PropagatorInputs, SharedOut,
+};
+use super::Consts;
 use crate::gpusim::kernels::KernelVariant;
-use crate::grid::{decompose, Dim3, Field3};
+use crate::grid::{decompose, Dim3, Field3, Region};
 use crate::{stencil::C8, R};
+
+/// Per-worker partial-sum row, sized for the widest inner tile.
+pub(crate) struct PartialRow {
+    buf: Vec<f32>,
+}
+
+impl PartialRow {
+    fn for_tasks(tasks: &[Region]) -> PartialRow {
+        let widest = tasks
+            .iter()
+            .filter(|t| !t.class.is_pml())
+            .map(|t| t.shape.x)
+            .max()
+            .unwrap_or(0);
+        PartialRow { buf: vec![0.0; widest] }
+    }
+}
 
 /// Two-phase semi-stencil on x inside 3D blocks.
 pub struct SemiStencil {
     /// Block extents in (z, y, x) order — the variant's (d3, d2, d1).
     pub tile: Dim3,
+    plan: Option<Plan<PartialRow>>,
 }
 
 impl SemiStencil {
     pub fn new(tile: Dim3) -> SemiStencil {
-        SemiStencil { tile }
+        SemiStencil { tile, plan: None }
     }
 
     pub fn from_variant(v: &KernelVariant) -> SemiStencil {
@@ -47,77 +70,94 @@ impl Propagator for SemiStencil {
         format!("semi_stencil:{}", self.tile)
     }
 
-    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3 {
+    fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
+        debug_assert_eq!(out.dims(), inp.domain.padded());
         let k = Consts::of(inp.domain);
-        let tasks: Vec<_> = decompose(inp.domain)
-            .iter()
-            .flat_map(|r| r.split(self.tile))
-            .collect();
-        run_tiled(inp.domain, &tasks, inp.threads, |t| {
+        let tile = self.tile;
+        let plan = Plan::ensure(
+            &mut self.plan,
+            inp.domain,
+            inp.threads,
+            |d| decompose(d).iter().flat_map(|r| r.split(tile)).collect(),
+            PartialRow::for_tasks,
+        );
+        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, partial, o| {
             if t.class.is_pml() {
-                pml_tile(inp, t.offset, t.shape, k)
+                pml_tile_into(inp, t, k, o);
             } else {
-                semi_inner_tile(inp, t.offset, t.shape, k)
+                semi_inner_tile_into(inp, t, k, partial, o);
             }
-        })
+        });
     }
 }
 
-/// Forward/backward partial-sum update of one inner tile.
-fn semi_inner_tile(inp: &PropagatorInputs<'_>, offset: Dim3, shape: Dim3, k: Consts) -> Field3 {
-    let u = inp.u_pad;
-    let mut out = Field3::zeros(shape);
+/// Forward/backward partial-sum update of one inner tile, in place.
+fn semi_inner_tile_into(
+    inp: &PropagatorInputs<'_>,
+    t: &Region,
+    k: Consts,
+    partial: &mut PartialRow,
+    out: &SharedOut,
+) {
+    let u = inp.u_pad.view();
+    let (offset, shape) = (t.offset, t.shape);
     let ri = R as isize;
     let sx = shape.x as isize;
-    let mut partial = vec![0.0f32; shape.x];
+    debug_assert!(shape.x <= partial.buf.len(), "partial scratch undersized");
+    let p = &mut partial.buf[..shape.x];
     for dz in 0..shape.z {
         for dy in 0..shape.y {
             let (cz, cy) = (offset.z + dz + R, offset.y + dy + R);
-            partial.iter_mut().for_each(|p| *p = 0.0);
+            let urow = u.row(cz, cy); // contiguous along the x axis
+            p.iter_mut().for_each(|v| *v = 0.0);
             // FORWARD phase: walk inputs left -> right; each input
             // scatters C8[m] * u into the m outputs on its right.
             for q in -ri..sx {
-                let px = (offset.x as isize + q + R as isize) as usize;
-                let uq = u.get(cz, cy, px);
+                let px = (offset.x as isize + q + ri) as usize;
+                let uq = urow[px];
                 for m in 1..=R {
                     let tgt = q + m as isize;
                     if (0..sx).contains(&tgt) {
-                        partial[tgt as usize] += C8[m] * uq;
+                        p[tgt as usize] += C8[m] * uq;
                     }
                 }
             }
             // BACKWARD phase: right -> left; contributions to the m
             // outputs on the input's left complete the partial sums.
             for q in (1..sx + ri).rev() {
-                let px = (offset.x as isize + q + R as isize) as usize;
-                let uq = u.get(cz, cy, px);
+                let px = (offset.x as isize + q + ri) as usize;
+                let uq = urow[px];
                 for m in 1..=R {
                     let tgt = q - m as isize;
                     if (0..sx).contains(&tgt) {
-                        partial[tgt as usize] += C8[m] * uq;
+                        p[tgt as usize] += C8[m] * uq;
                     }
                 }
             }
-            // COMBINE: center + z/y-axis gather + completed x partials.
-            for dx in 0..shape.x {
-                let cx = offset.x + dx + R;
-                let mut acc = 3.0 * C8[0] * u.get(cz, cy, cx);
+            // COMBINE: center + z/y-axis gather + completed x partials,
+            // fused with the leapfrog update into the output row (which
+            // holds um on entry). Neighbor runs are pre-cut to the row
+            // length so this loop vectorizes like `inner_row`.
+            let b = offset.x + R;
+            let len = shape.x;
+            let zp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz + m + 1, cy, b, len));
+            let zm: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz - m - 1, cy, b, len));
+            let yp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy + m + 1, b, len));
+            let ym: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy - m - 1, b, len));
+            let ctr = u.seg(cz, cy, b, len);
+            let vs = inp.v.view().seg(offset.z + dz, offset.y + dy, offset.x, len);
+            // SAFETY: tiles partition the interior; this row segment
+            // belongs exclusively to the current task.
+            let orow = unsafe { out.seg_mut(cz, cy, b, len) };
+            for i in 0..len {
+                let mut acc = 3.0 * C8[0] * ctr[i];
                 for m in 1..=R {
-                    acc += C8[m]
-                        * (u.get(cz + m, cy, cx)
-                            + u.get(cz - m, cy, cx)
-                            + u.get(cz, cy + m, cx)
-                            + u.get(cz, cy - m, cx));
+                    acc += C8[m] * (zp[m - 1][i] + zm[m - 1][i] + yp[m - 1][i] + ym[m - 1][i]);
                 }
-                let lap = (acc + partial[dx]) * k.inv_h2;
-                let core = u.get(cz, cy, cx);
-                let (iz, iy, ix) = (offset.z + dz, offset.y + dy, offset.x + dx);
-                let vv = inp.v.get(iz, iy, ix);
-                let val =
-                    2.0 * core - inp.um_pad.get(iz + R, iy + R, ix + R) + k.dt2 * vv * vv * lap;
-                out.set(dz, dy, dx, val);
+                let lap = (acc + p[i]) * k.inv_h2;
+                let vv = vs[i];
+                orow[i] = 2.0 * ctr[i] - orow[i] + k.dt2 * vv * vv * lap;
             }
         }
     }
-    out
 }

@@ -5,19 +5,43 @@
 //!
 //! The inner region's (z, y) plane is tiled a x b; each tile streams
 //! along x keeping a ring buffer of 2R+1 (z, y) planes — the
-//! shared-memory ring of the CUDA kernel, here a thread-local buffer
-//! that keeps the 25-point working set hot in L1/L2. PML faces use the
-//! same (z, y) tiling but walk the 7-point halo-1 update directly
-//! (streaming a 1-deep halo buys nothing).
+//! shared-memory ring of the CUDA kernel, here a per-worker buffer
+//! (planned once, reused every step) that keeps the 25-point working
+//! set hot in L1/L2. PML faces use the same (z, y) tiling but walk the
+//! 7-point halo-1 update through the vectorized row kernel (streaming
+//! a 1-deep halo buys nothing).
 //!
 //! The ring holds exact copies of `u`, and per-point arithmetic keeps
 //! the `lap8` term ordering, so results are bit-identical to the
 //! golden propagator.
 
-use super::propagator::{pml_tile, run_tiled, Consts, Propagator, PropagatorInputs};
+use super::propagator::{
+    pml_tile_into, run_tiled_into, Plan, Propagator, PropagatorInputs, SharedOut,
+};
+use super::Consts;
 use crate::gpusim::kernels::KernelVariant;
-use crate::grid::{decompose, Dim3, Field3};
+use crate::grid::{decompose, Dim3, Field3, Region};
 use crate::{stencil::C8, R};
+
+/// Per-worker ring storage: 2R+1 plane slots, each sized for the
+/// largest inner tile's padded (z, y) plane. Allocated once in the
+/// plan; every step reuses it.
+pub(crate) struct Ring {
+    buf: Vec<f32>,
+    plane_cap: usize,
+}
+
+impl Ring {
+    fn for_tasks(tasks: &[Region]) -> Ring {
+        let plane_cap = tasks
+            .iter()
+            .filter(|t| !t.class.is_pml())
+            .map(|t| (t.shape.z + 2 * R) * (t.shape.y + 2 * R))
+            .max()
+            .unwrap_or(0);
+        Ring { buf: vec![0.0; (2 * R + 1) * plane_cap], plane_cap }
+    }
+}
 
 /// 2.5D plane streaming with a 2R+1 ring buffer of planes.
 pub struct Streaming25D {
@@ -25,11 +49,12 @@ pub struct Streaming25D {
     /// variant's (A, B) in `st_*_{A}x{B}`); the kernel streams along x.
     pub tile_z: usize,
     pub tile_y: usize,
+    plan: Option<Plan<Ring>>,
 }
 
 impl Streaming25D {
     pub fn new(tile_z: usize, tile_y: usize) -> Streaming25D {
-        Streaming25D { tile_z: tile_z.max(1), tile_y: tile_y.max(1) }
+        Streaming25D { tile_z: tile_z.max(1), tile_y: tile_y.max(1), plan: None }
     }
 
     pub fn from_variant(v: &KernelVariant) -> Streaming25D {
@@ -46,48 +71,65 @@ impl Propagator for Streaming25D {
         format!("streaming2.5d:{}x{}", self.tile_z, self.tile_y)
     }
 
-    fn step(&self, inp: &PropagatorInputs<'_>) -> Field3 {
+    fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
+        debug_assert_eq!(out.dims(), inp.domain.padded());
         let k = Consts::of(inp.domain);
-        // every region keeps its full x extent: the stream axis is
-        // never tiled (that is the point of the 2.5D shape)
-        let tasks: Vec<_> = decompose(inp.domain)
-            .iter()
-            .flat_map(|r| r.split(Dim3::new(self.tile_z, self.tile_y, r.shape.x)))
-            .collect();
-        run_tiled(inp.domain, &tasks, inp.threads, |t| {
+        let (tz, ty) = (self.tile_z, self.tile_y);
+        let plan = Plan::ensure(
+            &mut self.plan,
+            inp.domain,
+            inp.threads,
+            // every region keeps its full x extent: the stream axis is
+            // never tiled (that is the point of the 2.5D shape)
+            |d| {
+                decompose(d)
+                    .iter()
+                    .flat_map(|r| r.split(Dim3::new(tz, ty, r.shape.x)))
+                    .collect()
+            },
+            Ring::for_tasks,
+        );
+        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, ring, o| {
             if t.class.is_pml() {
-                pml_tile(inp, t.offset, t.shape, k)
+                pml_tile_into(inp, t, k, o);
             } else {
-                streaming_inner_tile(inp, t.offset, t.shape, k)
+                streaming_inner_tile_into(inp, t, k, ring, o);
             }
-        })
+        });
     }
 }
 
-/// Stream one inner (z, y) tile along x with a ring of 2R+1 planes.
-fn streaming_inner_tile(
+/// Stream one inner (z, y) tile along x with a ring of 2R+1 planes,
+/// updating the tile's points of the padded output in place.
+fn streaming_inner_tile_into(
     inp: &PropagatorInputs<'_>,
-    offset: Dim3,
-    shape: Dim3,
+    t: &Region,
     k: Consts,
-) -> Field3 {
-    let u = inp.u_pad;
+    ring: &mut Ring,
+    out: &SharedOut,
+) {
+    let u = inp.u_pad.view();
+    let (offset, shape) = (t.offset, t.shape);
     let np = 2 * R + 1; // ring depth
     let pz = shape.z + 2 * R; // plane rows: z extent + halo
     let py = shape.y + 2 * R; // plane cols: y extent + halo
-    let mut ring: Vec<Vec<f32>> = vec![vec![0.0f32; pz * py]; np];
+    let cap = ring.plane_cap;
+    debug_assert!(pz * py <= cap, "ring scratch undersized for this tile");
+    let buf = &mut ring.buf;
 
     // The plane at stream position q (local x, in -R..shape.x+R) lives
     // in slot (q + R) % np. Plane row dz / col dy cover padded coords
     // (offset.z + dz, offset.y + dy): the tile's z/y halo and the
     // array's R-ghost padding cancel exactly.
-    let load = |ring: &mut Vec<Vec<f32>>, q: isize| {
+    let load = |buf: &mut [f32], q: isize| {
         let slot = ((q + R as isize) as usize) % np;
         // padded x of stream position q; add R before the usize cast —
         // offset.x + q alone can go negative when pml_width < R
         let px = (offset.x as isize + q + R as isize) as usize;
-        let plane = &mut ring[slot];
+        let plane = &mut buf[slot * cap..slot * cap + pz * py];
         for dz in 0..pz {
+            // the (z, y) plane at fixed x is strided in u but
+            // contiguous in the ring slot
             for dy in 0..py {
                 plane[dz * py + dy] = u.get(offset.z + dz, offset.y + dy, px);
             }
@@ -96,21 +138,20 @@ fn streaming_inner_tile(
 
     // prime the ring with the R left-halo planes plus R-1 ahead
     for q in -(R as isize)..(R as isize) {
-        load(&mut ring, q);
+        load(buf, q);
     }
 
-    let mut out = Field3::zeros(shape);
     for x in 0..shape.x {
         // pull in the leading plane, then update column x from the ring
-        load(&mut ring, x as isize + R as isize);
-        let ctr = &ring[(x + R) % np];
+        load(buf, x as isize + R as isize);
+        let ctr = &buf[((x + R) % np) * cap..][..pz * py];
         for dz in 0..shape.z {
             for dy in 0..shape.y {
                 let (rz, ry) = (dz + R, dy + R);
                 let mut acc = 3.0 * C8[0] * ctr[rz * py + ry];
                 for m in 1..=R {
-                    let xp = &ring[(x + R + m) % np];
-                    let xm = &ring[(x + R - m) % np];
+                    let xp = &buf[((x + R + m) % np) * cap..][..pz * py];
+                    let xm = &buf[((x + R - m) % np) * cap..][..pz * py];
                     acc += C8[m]
                         * (ctr[(rz + m) * py + ry]
                             + ctr[(rz - m) * py + ry]
@@ -123,11 +164,13 @@ fn streaming_inner_tile(
                 let core = ctr[rz * py + ry];
                 let (iz, iy, ix) = (offset.z + dz, offset.y + dy, offset.x + x);
                 let vv = inp.v.get(iz, iy, ix);
-                let val =
-                    2.0 * core - inp.um_pad.get(iz + R, iy + R, ix + R) + k.dt2 * vv * vv * lap;
-                out.set(dz, dy, x, val);
+                // SAFETY: each interior point belongs to exactly one
+                // tile; this task owns (iz, iy, ix).
+                unsafe {
+                    let um = out.read(iz + R, iy + R, ix + R);
+                    out.write(iz + R, iy + R, ix + R, 2.0 * core - um + k.dt2 * vv * vv * lap);
+                }
             }
         }
     }
-    out
 }

@@ -1,0 +1,129 @@
+//! Proof of the zero-allocation steady state: a counting
+//! `#[global_allocator]` wraps the system allocator, and the test
+//! asserts that once a propagator's plan is warm, the in-place time
+//! loop (`Propagator::step_into` + buffer swap) performs **zero** heap
+//! allocations for every code-shape family, and likewise for
+//! `GoldenPropagator::advance`.
+//!
+//! This binary holds exactly one test: the counter is global, so
+//! concurrent tests would see each other's allocations.
+//!
+//! The loop runs with `threads: 1` (the serial in-place path). The
+//! multithreaded fan-out spawns scoped workers per step — O(threads)
+//! bookkeeping, deliberately outside this guarantee and never
+//! O(points).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use hostencil::grid::{Dim3, Domain, Field3};
+use hostencil::stencil::{self, propagator, GoldenPropagator, Propagator, PropagatorInputs};
+use hostencil::wave;
+use hostencil::R;
+
+struct CountingAllocator;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+impl CountingAllocator {
+    #[inline]
+    fn count() {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::count();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        Self::count();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAllocator = CountingAllocator;
+
+/// Run `steps` warm in-place steps and return how many heap
+/// allocations they performed.
+fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize) -> u64 {
+    let interior = domain.interior;
+    let v = Field3::full(interior, 2000.0);
+    let eta_pad = wave::eta_profile(domain, 2000.0).pad(R);
+    let mut u_pad = Field3::zeros(domain.padded());
+    u_pad.set(R + interior.z / 2, R + interior.y / 2, R + interior.x / 2, 1.0);
+    let mut um_pad = Field3::zeros(domain.padded());
+    let mut prop = propagator::build(variant).expect("known variant");
+
+    // warm-up: builds the tile plan and per-worker scratch
+    for _ in 0..2 {
+        prop.step_into(
+            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads: 1 },
+            &mut um_pad,
+        );
+        std::mem::swap(&mut u_pad, &mut um_pad);
+    }
+
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for _ in 0..steps {
+        prop.step_into(
+            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads: 1 },
+            &mut um_pad,
+        );
+        std::mem::swap(&mut u_pad, &mut um_pad);
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    assert!(
+        u_pad.max_abs() > 0.0 && !u_pad.has_non_finite(),
+        "{variant}: steady-state wave must stay finite and non-zero"
+    );
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_time_loop_performs_zero_heap_allocations() {
+    // non-tile-aligned grid so clipped tiles are in play too
+    let h = 10.0;
+    let domain =
+        Domain::new(Dim3::new(19, 17, 21), 3, h, stencil::cfl_dt(h, 2000.0)).expect("domain");
+
+    // all four code-shape families
+    for variant in ["naive", "gmem_8x8x8", "st_smem_8x8", "semi"] {
+        let n = allocs_in_steady_state(variant, &domain, 8);
+        assert_eq!(n, 0, "{variant}: {n} heap allocations in 8 steady-state steps");
+    }
+
+    // and the golden oracle's in-place advance
+    let interior = domain.interior;
+    let mut p = GoldenPropagator::new(
+        domain,
+        Field3::full(interior, 2000.0),
+        wave::eta_profile(&domain, 2000.0),
+    );
+    let src = Dim3::new(9, 8, 10);
+    p.advance(src, 1.0); // warm (nothing to build today, but stay honest)
+    ALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+    for n in 0..8 {
+        p.advance(src, 0.1 * (n as f32));
+    }
+    ARMED.store(false, Ordering::SeqCst);
+    let n = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(n, 0, "GoldenPropagator::advance: {n} heap allocations in 8 steps");
+}

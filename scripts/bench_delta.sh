@@ -1,0 +1,59 @@
+#!/usr/bin/env bash
+# Generate the repo's measured-perf trajectory files:
+#   BENCH_0.json — `hostencil bench --json` at a baseline commit
+#                  (default: the parent of HEAD)
+#   BENCH_1.json — the same bench on the current working tree
+# and print the per-shape speedup. Run from the repository root in a
+# cargo-capable environment, then commit both files:
+#
+#   ./scripts/bench_delta.sh [baseline-ref]
+#
+# Honors HOSTENCIL_BENCH_SAMPLES / HOSTENCIL_BENCH_WARMUP and
+# BENCH_SIZE / BENCH_STEPS.
+set -euo pipefail
+
+BASE_REF="${1:-HEAD~1}"
+SIZE="${BENCH_SIZE:-40}"
+STEPS="${BENCH_STEPS:-6}"
+OUT_DIR="$(pwd)"
+
+if ! git rev-parse --verify --quiet "$BASE_REF^{commit}" >/dev/null; then
+  echo "bench_delta: baseline ref $BASE_REF not found (shallow clone?)" >&2
+  exit 1
+fi
+
+TMP_ROOT="$(mktemp -d)"
+WORKTREE="$TMP_ROOT/hostencil-base"
+git worktree add --detach "$WORKTREE" "$BASE_REF" >/dev/null
+cleanup() {
+  git worktree remove --force "$WORKTREE" >/dev/null 2>&1 || true
+  rm -rf "$TMP_ROOT"
+}
+trap cleanup EXIT
+
+echo "== baseline $(git rev-parse --short "$BASE_REF") -> BENCH_0.json"
+(cd "$WORKTREE" && cargo run --release -p hostencil -- bench \
+  --size "$SIZE" --steps "$STEPS" --json "$OUT_DIR/BENCH_0.json")
+
+echo "== working tree -> BENCH_1.json"
+cargo run --release -p hostencil -- bench \
+  --size "$SIZE" --steps "$STEPS" --json "$OUT_DIR/BENCH_1.json"
+
+python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" <<'EOF'
+import json, sys
+
+def rates(path):
+    doc = json.load(open(path))
+    out = {}
+    for c in doc.get("cases", []):
+        # format v2 carries the steady-state (min) rate; v1 only median
+        out[c["name"]] = c.get("points_per_sec_best", c.get("points_per_sec", 0.0))
+    return out
+
+base, new = rates(sys.argv[1]), rates(sys.argv[2])
+print(f"{'shape':<24}{'BENCH_0 Mpts/s':>16}{'BENCH_1 Mpts/s':>16}{'speedup':>9}")
+for name in new:
+    b, n = base.get(name, 0.0), new[name]
+    s = f"{n / b:6.2f}x" if b > 0 else "   new"
+    print(f"{name:<24}{b / 1e6:>16.2f}{n / 1e6:>16.2f}{s:>9}")
+EOF
