@@ -17,9 +17,12 @@
 //!   of the executable CPU analogs in `stencil::propagator` (naive,
 //!   3D-blocked, 2.5D streaming, semi-stencil), so CPU runs measure
 //!   real shape-dependent cost instead of always walking the golden
-//!   per-point loop. The Golden time loop is zero-allocation: two
-//!   persistent padded buffers ping-pong via `Propagator::step_into`
-//!   (see `rust/tests/zero_alloc.rs`).
+//!   per-point loop. The Golden time loop is zero-allocation and
+//!   zero-spawn: two persistent padded buffers ping-pong via
+//!   `Propagator::step_into`, and multithreaded tile fan-out goes
+//!   through the persistent per-plan worker pool (`runtime::pool`)
+//!   instead of per-step scoped threads (see
+//!   `rust/tests/zero_alloc.rs`).
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};

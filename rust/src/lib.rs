@@ -45,21 +45,28 @@
 //! x-axis chain and agrees to a few ULP (`hostencil bench`,
 //! `rust/tests/propagator_equivalence.rs`).
 //!
-//! The engine's time loop is **zero-allocation**: kernels read
-//! neighbors straight out of the persistent R-ghost-padded wavefield
-//! through borrowed views ([`grid::FieldView`]/[`grid::FieldViewMut`])
-//! and update contiguous x-rows of the output buffer in place — the
-//! output holds u(n-1) on entry (the leapfrog `um` term), so two
-//! persistent padded buffers simply ping-pong each step
-//! (`Propagator::step_into` + swap). Tile task lists and per-worker
-//! scratch (streaming ring planes, semi partial rows) are planned once
-//! per domain; `rust/tests/zero_alloc.rs` proves the steady-state loop
-//! allocates nothing for all four families. On this clean signal,
-//! `hostencil autotune --measured` re-ranks the gpusim model's top
-//! tile shapes by *measured* CPU cost and reports model-vs-measured
-//! rank agreement, and `hostencil campaign --threads N` treats N as a
-//! global worker budget split between the job fan-out and each job's
-//! tile fan-out.
+//! The engine's time loop is **zero-allocation and zero-spawn**:
+//! kernels read neighbors straight out of the persistent
+//! R-ghost-padded wavefield through borrowed views
+//! ([`grid::FieldView`]/[`grid::FieldViewMut`]) and update contiguous
+//! x-rows of the output buffer in place — the output holds u(n-1) on
+//! entry (the leapfrog `um` term), so two persistent padded buffers
+//! simply ping-pong each step (`Propagator::step_into` + swap). Tile
+//! task lists, per-worker scratch (streaming ring planes, semi partial
+//! rows), and the persistent worker pool ([`runtime::pool`]) are all
+//! planned once per (domain, threads): parallel steps release parked
+//! condvar workers via a generation bump instead of spawning scoped
+//! threads, so steady-state cost is the kernel, not the harness, on
+//! every path. `rust/tests/zero_alloc.rs` proves the steady-state loop
+//! allocates nothing for all four families, serial and pooled, and
+//! `rust/tests/pool_lifecycle.rs` covers the pool's edge cases. On
+//! this clean signal, `hostencil autotune --measured` re-ranks the
+//! gpusim model's top tile shapes by *measured* CPU cost and reports
+//! model-vs-measured rank agreement, `hostencil campaign --threads N`
+//! treats N as a global worker budget split between the job fan-out
+//! and each job's tile fan-out, and `hostencil bench --thread-sweep
+//! 1,2,4,8` measures per-thread-count steady-state rates and parallel
+//! efficiency of the pool executor.
 
 pub mod bench;
 pub mod config;

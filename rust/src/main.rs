@@ -154,6 +154,7 @@ commands:
                                             non-zero exit when any cell deviates
                                             from its expected verdict
   bench      [--size N] [--steps N] [--json path] [--cpu-threads N] [--check]
+             [--thread-sweep 1,2,4,8]
                                             time the CPU propagator matrix
                                             (naive/blocked/streaming/semi) on a
                                             fixed grid; ranks by steady-state
@@ -161,7 +162,24 @@ commands:
                                             median/mean in the JSON); --check
                                             exits non-zero if the tiled shapes
                                             lose to naive (15% noise margin);
-                                            honors HOSTENCIL_BENCH_SAMPLES /
+                                            --thread-sweep re-times the matrix
+                                            at each worker count on the
+                                            persistent pool executor and
+                                            reports steady-state rates plus
+                                            parallel efficiency, defined as
+                                            rate_T / (T x rate_1) — 100% is
+                                            perfect scaling, and a flat rate
+                                            (eff ~ 100%/T) means the grid is
+                                            too small or the shape too serial
+                                            to feed T workers; sweep rows land
+                                            in the JSON as `thread_sweep`, and
+                                            with --check the two smallest
+                                            swept counts gate scaling: more
+                                            workers must not lose to fewer
+                                            (15% margin) — the zero-spawn pool
+                                            must never make parallelism a net
+                                            cost (needs >= 2 counts); honors
+                                            HOSTENCIL_BENCH_SAMPLES /
                                             HOSTENCIL_BENCH_WARMUP
 ";
 
@@ -676,11 +694,33 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Parse a `--thread-sweep` list (`1,2,4,8`): comma-separated worker
+/// counts, sorted and deduplicated so the 1-thread rate (when the
+/// list contains it) is measured before the larger counts that report
+/// efficiency against it, and so `--check` can gate the two smallest
+/// counts.
+fn parse_thread_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let t: usize = tok
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--thread-sweep: bad count {tok:?}: {e}"))?;
+        anyhow::ensure!(t >= 1, "--thread-sweep: worker counts must be >= 1");
+        out.push(t);
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
 /// Time the executable CPU propagator matrix on a fixed small grid and
 /// optionally emit a `BENCH_*.json`-compatible file, so the repo's perf
 /// trajectory tracks *measured* numbers (`hostencil bench --json
-/// BENCH_0.json`). Sample counts honor `HOSTENCIL_BENCH_SAMPLES` /
-/// `HOSTENCIL_BENCH_WARMUP` for CI smoke runs.
+/// BENCH_0.json`). `--thread-sweep` re-times the matrix per worker
+/// count on the persistent pool executor so parallel efficiency is
+/// directly measurable. Sample counts honor `HOSTENCIL_BENCH_SAMPLES`
+/// / `HOSTENCIL_BENCH_WARMUP` for CI smoke runs.
 fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     use hostencil::bench::Bencher;
     use hostencil::grid::{Dim3, Domain};
@@ -693,11 +733,18 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(n >= 12, "--size must be >= 12 (needs room for PML width 4)");
     let steps = args.usize_or("steps", 8)?;
     anyhow::ensure!(steps >= 1, "--steps must be >= 1");
+    // (parse_thread_list never returns an empty list: even "" fails
+    // the per-token parse, and a bare --thread-sweep errors in get())
+    let sweep: Option<Vec<usize>> = match args.get("thread-sweep")? {
+        None => None,
+        Some(list) => Some(parse_thread_list(list)?),
+    };
     let h = 10.0;
     let v0 = 2500.0f32;
     let dt = stencil::cfl_dt(h, v0 as f64);
     let domain = Domain::new(Dim3::new(n, n, n), 4, h, dt)?;
     let interior = domain.interior;
+    let rate = |ns: u128| (interior.volume() * steps) as f64 / (ns as f64 / 1e9).max(1e-12);
 
     struct Row {
         name: String,
@@ -727,7 +774,6 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             let s = b.bench(label, || coord.run(steps).expect("bench step").final_max_abs);
             (s.median.as_nanos(), s.mean.as_nanos(), s.min.as_nanos())
         };
-        let rate = |ns: u128| (interior.volume() * steps) as f64 / (ns as f64 / 1e9).max(1e-12);
         rows.push(Row {
             name: label.to_string(),
             median_ns,
@@ -749,6 +795,76 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             r.pps_best / 1e6,
             r.pps / 1e6
         );
+    }
+
+    // --thread-sweep: re-time the matrix per worker count on the
+    // persistent pool executor. Parallel efficiency is rate_T / (T x
+    // rate_1) — with a zero-spawn fan-out the only losses left are
+    // genuine ones (serial fraction, memory bandwidth, too-small
+    // grids), which is exactly what the sweep makes visible.
+    struct SweepRow {
+        name: &'static str,
+        threads: usize,
+        min_ns: u128,
+        pps_best: f64,
+        sps_best: f64,
+        efficiency: Option<f64>,
+    }
+    let mut sweep_rows: Vec<SweepRow> = Vec::new();
+    if let Some(counts) = &sweep {
+        println!("\nthread sweep (steady-state min; efficiency = rate_T / (T x rate_1)):");
+        for (label, variant) in propagator::bench_matrix() {
+            let mut rate1: Option<f64> = None;
+            for &t in counts {
+                let v = VelocityModel::Constant(v0).build(interior);
+                let eta = wave::eta_profile(&domain, v0 as f64);
+                let src =
+                    Source { pos: Dim3::new(n / 2, n / 2, n / 2), f0: 15.0, amplitude: 1.0 };
+                let mut coord = Coordinator::new(
+                    None,
+                    domain,
+                    Mode::Golden,
+                    variant,
+                    "gmem",
+                    v,
+                    eta,
+                    src,
+                    vec![],
+                )?;
+                coord.set_cpu_threads(t);
+                let min_ns = b
+                    .bench(&format!("{label} @{t}thr"), || {
+                        coord.run(steps).expect("bench step").final_max_abs
+                    })
+                    .min
+                    .as_nanos();
+                let pps_best = rate(min_ns);
+                if t == 1 {
+                    rate1 = Some(pps_best);
+                }
+                sweep_rows.push(SweepRow {
+                    name: label,
+                    threads: t,
+                    min_ns,
+                    pps_best,
+                    sps_best: steps as f64 / (min_ns as f64 / 1e9).max(1e-12),
+                    efficiency: rate1.map(|r1| pps_best / (t as f64 * r1)),
+                });
+            }
+        }
+        for r in &sweep_rows {
+            let eff = match r.efficiency {
+                Some(e) => format!("{:>5.0}%", 100.0 * e),
+                None => "    -".to_string(),
+            };
+            println!(
+                "  {:<22}{:>3} thr {:>10.2} Mpts/s  {:>8.1} steps/s  eff {eff}",
+                r.name,
+                r.threads,
+                r.pps_best / 1e6,
+                r.sps_best
+            );
+        }
     }
 
     if let Some(path) = args.get("json")? {
@@ -777,6 +893,26 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         root.insert("samples".to_string(), Json::Num(b.samples as f64));
         root.insert("warmup".to_string(), Json::Num(b.warmup as f64));
         root.insert("cases".to_string(), Json::Arr(cases));
+        if !sweep_rows.is_empty() {
+            // JSON v2 extension: per-thread-count steady-state rates of
+            // the pool executor (absent unless --thread-sweep was given)
+            let sweep_json: Vec<Json> = sweep_rows
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(r.name.to_string()));
+                    o.insert("threads".to_string(), Json::Num(r.threads as f64));
+                    o.insert("min_ns".to_string(), Json::Num(r.min_ns as f64));
+                    o.insert("points_per_sec_best".to_string(), Json::Num(r.pps_best));
+                    o.insert("steps_per_sec_best".to_string(), Json::Num(r.sps_best));
+                    if let Some(e) = r.efficiency {
+                        o.insert("efficiency".to_string(), Json::Num(e));
+                    }
+                    Json::Obj(o)
+                })
+                .collect();
+            root.insert("thread_sweep".to_string(), Json::Arr(sweep_json));
+        }
         std::fs::write(path, Json::Obj(root).emit())?;
         println!("wrote {path}");
     }
@@ -806,6 +942,43 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             );
         }
         println!("bench --check OK: blocked3d and streaming25d hold >= naive (steady-state)");
+
+        // Thread-scaling canary: with the persistent pool (zero spawn,
+        // zero alloc per step) extra workers must never make a step
+        // materially slower — if they do, per-step executor overhead
+        // has crept back in. Gates the two smallest swept counts (the
+        // list is sorted; for the CI sweep `1,2` that is 2-vs-1
+        // thread) with the same 15% noise margin as the shape gate.
+        if let Some(counts) = &sweep {
+            anyhow::ensure!(
+                counts.len() >= 2,
+                "bench --check: --thread-sweep needs at least two worker counts to gate \
+                 scaling (got {counts:?})"
+            );
+            let (lo, hi) = (counts[0], counts[1]);
+            let sweep_min = |name: &str, t: usize| -> anyhow::Result<u128> {
+                sweep_rows
+                    .iter()
+                    .find(|r| r.name == name && r.threads == t)
+                    .map(|r| r.min_ns)
+                    .ok_or_else(|| anyhow::anyhow!("bench --check: no sweep entry {name} @{t}thr"))
+            };
+            for (label, _) in propagator::bench_matrix() {
+                let (t_lo, t_hi) = (sweep_min(label, lo)?, sweep_min(label, hi)?);
+                anyhow::ensure!(
+                    t_hi as f64 <= 1.15 * t_lo as f64,
+                    "bench --check: {label} {hi}-thread steady-state ({:.2} ms) lost to \
+                     {lo}-thread ({:.2} ms) beyond the 15% noise margin; the pool fan-out \
+                     must not cost more than it buys",
+                    t_hi as f64 / 1e6,
+                    t_lo as f64 / 1e6
+                );
+            }
+            println!(
+                "bench --check OK: {hi}-thread steady-state holds >= {lo}-thread across \
+                 the matrix"
+            );
+        }
     }
     Ok(())
 }
@@ -893,5 +1066,15 @@ mod tests {
         let a = parse(&["run", "--steps", "-5"]);
         let err = a.usize_or("steps", 0).unwrap_err().to_string();
         assert!(err.contains("--steps"), "{err}");
+    }
+
+    #[test]
+    fn thread_sweep_list_parses_sorts_and_dedups() {
+        assert_eq!(parse_thread_list("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_thread_list("4, 2,1,2").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_thread_list("8").unwrap(), vec![8]);
+        assert!(parse_thread_list("").is_err());
+        assert!(parse_thread_list("0,2").is_err(), "zero workers is meaningless");
+        assert!(parse_thread_list("two").is_err());
     }
 }

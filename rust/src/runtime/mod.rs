@@ -1,12 +1,17 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
-//! client. This is the only module that touches the `xla` crate.
+//! Execution runtimes: the PJRT engine for AOT HLO artifacts and the
+//! persistent CPU worker pool ([`pool`]) the stencil propagators fan
+//! tile work over.
 //!
+//! The engine below loads AOT HLO-text artifacts and executes them on
+//! the CPU client; it is the only code that touches the `xla` crate.
 //! Pattern (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
 //! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
 //! The Python side lowers with `return_tuple=False` (each step function
 //! returns exactly one array), so outputs come back as a single buffer
 //! with no tuple unwrap; inputs go host->device directly as PjRtBuffers
 //! with no Literal intermediate (see EXPERIMENTS.md §Perf).
+
+pub mod pool;
 
 use std::cell::RefCell;
 use std::collections::HashMap;

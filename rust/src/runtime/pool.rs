@@ -1,0 +1,336 @@
+//! Persistent worker-pool executor: zero-spawn, zero-alloc parallel
+//! stepping.
+//!
+//! The paper's core measurement lesson is that steady-state kernel
+//! cost — not setup — must dominate the time loop. Spawning scoped
+//! threads on every step (the pre-pool fan-out) charged O(threads) of
+//! spawn/join bookkeeping to every measured step, so small and medium
+//! grids benchmarked the harness instead of the code shape. This
+//! module removes that cost structurally:
+//!
+//! * [`WorkerPool::new`] spawns `workers - 1` OS threads **once**; the
+//!   caller's thread is always slot 0, so a one-worker pool never
+//!   spawns anything.
+//! * Between steps the workers park on a condvar. [`WorkerPool::run`]
+//!   publishes one borrowed, type-erased job and bumps a per-step
+//!   generation counter (the *epoch*) to release them; every slot runs
+//!   the job exactly once per epoch.
+//! * The caller joins by draining a completed-count under the same
+//!   mutex — no `thread::scope`, no `thread::spawn`, and no
+//!   steady-state heap allocation anywhere on the path (the job is a
+//!   borrowed trait object; `std`'s mutex/condvar pair is
+//!   allocation-free after construction).
+//! * A job that panics on any slot is caught, counted, and re-raised
+//!   on the caller's thread **after** the pool has quiesced: a
+//!   panicking step surfaces as a clean unwind, never a hang, and the
+//!   pool stays usable for the next step.
+//!
+//! The stencil propagators build one pool per cached execution plan
+//! (keyed on `(domain, threads)`, next to the tile task list and the
+//! per-worker scratch), so per-worker state like streaming ring planes
+//! stays pinned to a stable slot index across steps. The campaign
+//! runner keeps its own scoped fan-out — that one spawns once per
+//! *campaign*, not per step — while each physics job's tile execution
+//! goes through a pool sized by its share of the global worker budget.
+
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+/// Process-wide gauge of live parked pool threads. Lifecycle tests
+/// assert the serial fast path spawns nothing, steady-state steps
+/// never grow it, and dropped pools join their workers.
+static LIVE_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Current number of live pool worker threads across the whole
+/// process (parked or running a step).
+pub fn live_worker_threads() -> usize {
+    LIVE_WORKERS.load(Ordering::SeqCst)
+}
+
+/// A published job: a borrow of the caller's closure with the lifetime
+/// transmuted away so the parked workers can hold it. Sound because
+/// [`WorkerPool::run`] never returns (or unwinds) before every worker
+/// has finished its call for the current epoch.
+#[derive(Copy, Clone)]
+struct JobRef(&'static (dyn Fn(usize) + Sync));
+
+struct State {
+    /// Per-step generation counter; a bump releases the parked workers
+    /// for exactly one run of the published job each.
+    epoch: u64,
+    job: Option<JobRef>,
+    /// Spawned workers that have not yet finished the current epoch.
+    active: usize,
+    /// First panic payload caught on a worker slot during the current
+    /// epoch, kept so the caller re-raises the *original* panic (with
+    /// its message) instead of a generic "a worker panicked".
+    panic_payload: Option<Box<dyn Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between steps.
+    go: Condvar,
+    /// The caller joins here until `active` drains to zero.
+    done: Condvar,
+}
+
+impl Shared {
+    /// Poison-proof lock: a panic can only originate inside a job,
+    /// which runs outside the mutex, so a poisoned guard still holds a
+    /// consistent `State`.
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// A pool of parked worker threads that execute one job per step
+/// across `workers` slots (slot 0 is the calling thread).
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool presenting `workers` total slots: the caller's
+    /// thread is slot 0 and `workers - 1` threads are spawned now,
+    /// park between steps, and live until the pool is dropped.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                panic_payload: None,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..workers.max(1))
+            .map(|slot| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("hostencil-pool-{slot}"))
+                    .spawn(move || worker_loop(&shared, slot))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    /// Total worker slots (spawned threads + the caller's slot 0).
+    pub fn workers(&self) -> usize {
+        self.handles.len() + 1
+    }
+
+    /// Execute `job(slot)` once on every slot and block until all
+    /// slots finished. The caller's thread runs slot 0 itself instead
+    /// of idling on the join. Steady-state calls perform no heap
+    /// allocation and spawn no threads.
+    ///
+    /// If the job panicked on any slot, the original panic payload is
+    /// re-raised here after every worker has quiesced — the step fails
+    /// as a clean unwind with the real message (never a hang) and the
+    /// pool remains usable.
+    pub fn run(&mut self, job: &(dyn Fn(usize) + Sync)) {
+        if self.handles.is_empty() {
+            job(0);
+            return;
+        }
+        // SAFETY: the erased borrow only escapes to this pool's own
+        // workers, and this function does not return (or unwind) until
+        // every worker has reported back in — the borrow outlives
+        // every use.
+        let jref = JobRef(unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(job)
+        });
+        {
+            let mut st = self.shared.lock();
+            debug_assert_eq!(st.active, 0, "a previous step is still draining");
+            st.job = Some(jref);
+            st.epoch = st.epoch.wrapping_add(1);
+            st.active = self.handles.len();
+            st.panic_payload = None;
+            self.shared.go.notify_all();
+        }
+        let caller = catch_unwind(AssertUnwindSafe(|| job(0)));
+        let worker_panic = {
+            let mut st = self.shared.lock();
+            while st.active > 0 {
+                st = self
+                    .shared
+                    .done
+                    .wait(st)
+                    .unwrap_or_else(PoisonError::into_inner);
+            }
+            st.job = None;
+            st.panic_payload.take()
+        };
+        if let Err(payload) = caller {
+            resume_unwind(payload);
+        }
+        if let Some(payload) = worker_panic {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+            self.shared.go.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, slot: usize) {
+    LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.lock();
+            loop {
+                if st.shutdown {
+                    drop(st);
+                    LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+                    return;
+                }
+                match st.job {
+                    // a fresh epoch releases each worker exactly once;
+                    // the job is never cleared before the whole epoch
+                    // completed, so a new epoch always carries one
+                    Some(job) if st.epoch != seen => {
+                        seen = st.epoch;
+                        break job;
+                    }
+                    _ => st = shared.go.wait(st).unwrap_or_else(PoisonError::into_inner),
+                }
+            }
+        };
+        // A panicking job must not take the worker down: stash the
+        // payload (first one wins), keep the completed-count honest so
+        // the caller never hangs, and let `run` re-raise it after the
+        // join.
+        let result = catch_unwind(AssertUnwindSafe(|| (job.0)(slot)));
+        let mut st = shared.lock();
+        if let Err(payload) = result {
+            st.panic_payload.get_or_insert(payload);
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done.notify_one();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_slot_runs_the_job_exactly_once_per_epoch() {
+        let mut pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 4);
+        let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..50 {
+            pool.run(&|slot| {
+                hits[slot].fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        for (slot, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 50, "slot {slot}");
+        }
+    }
+
+    #[test]
+    fn single_worker_pool_runs_inline_on_the_caller() {
+        let mut pool = WorkerPool::new(1);
+        assert_eq!(pool.workers(), 1);
+        let calls = AtomicUsize::new(0);
+        pool.run(&|slot| {
+            assert_eq!(slot, 0);
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let mut pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+        let calls = AtomicUsize::new(0);
+        pool.run(&|_| {
+            calls.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn shared_cursor_fanout_covers_every_task_exactly_once() {
+        // the propagators' claim pattern: slots race on an atomic
+        // cursor; every task must be executed exactly once
+        let mut pool = WorkerPool::new(3);
+        let n = 1000;
+        let done: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let cursor = AtomicUsize::new(0);
+        pool.run(&|_slot| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            done[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(done.iter().all(|d| d.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_panic_reraises_on_the_caller_and_pool_survives() {
+        let mut pool = WorkerPool::new(3);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|slot| {
+                if slot != 0 {
+                    panic!("injected worker fault");
+                }
+            });
+        }));
+        let payload = r.expect_err("a worker panic must unwind out of run()");
+        assert_eq!(
+            payload.downcast_ref::<&str>(),
+            Some(&"injected worker fault"),
+            "the original panic payload must survive the hand-off"
+        );
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "the pool must stay usable");
+    }
+
+    #[test]
+    fn caller_slot_panic_still_joins_the_workers() {
+        let mut pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(&|slot| {
+                if slot == 0 {
+                    panic!("injected caller fault");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 2);
+    }
+}

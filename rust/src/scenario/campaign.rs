@@ -5,8 +5,16 @@
 //! Physics is shared: cells whose variants resolve to the same CPU
 //! propagator signature (and machine cells, which only differ in
 //! predicted perf) reuse one measured physics run per scenario. Only
-//! the unique (scenario, signature) jobs fan out over the worker pool;
+//! the unique (scenario, signature) jobs fan out over the job workers;
 //! per-cell prediction + verdict assembly is cheap and serial.
+//!
+//! Two fan-out layers, two mechanisms: the *job* workers below are
+//! scoped threads spawned once per campaign (setup cost, not measured
+//! cost). Each job's propagator then fans its *tiles* over the
+//! persistent worker-pool executor (`runtime::pool`) sized by that
+//! job's [`split_budget`] share — so the measured steps/sec each cell
+//! reports is steady-state kernel cost, with no per-step spawn in it,
+//! and the global `--threads` budget still bounds total parallelism.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicUsize, Ordering};

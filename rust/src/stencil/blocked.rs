@@ -11,7 +11,7 @@
 //! `propagator` module docs on the zero-allocation steady state).
 
 use super::propagator::{
-    inner_tile_into, pml_tile_into, run_tiled_into, Plan, Propagator, PropagatorInputs,
+    inner_tile_into, pml_tile_into, Plan, Propagator, PropagatorInputs,
 };
 use super::Consts;
 use crate::gpusim::kernels::KernelVariant;
@@ -59,7 +59,7 @@ impl Propagator for Blocked3D {
             |d| decompose(d).iter().flat_map(|r| r.split(tile)).collect(),
             |_| (),
         );
-        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, _s, o| {
+        plan.run_into(out, |t, _s, o| {
             if t.class.is_pml() {
                 pml_tile_into(inp, t, k, o);
             } else {

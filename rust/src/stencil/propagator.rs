@@ -15,22 +15,29 @@
 //!
 //! Every propagator drives the same 7-region decomposition
 //! (`grid::decompose`), splits regions into tiles (its block grid),
-//! and fans the tiles over `std::thread` workers.
+//! and fans the tiles over the persistent worker-pool executor
+//! (`crate::runtime::pool`).
 //!
-//! ## Zero-allocation steady state
+//! ## Zero-allocation, zero-spawn steady state
 //!
 //! [`Propagator::step_into`] advances the wavefield **in place**: the
 //! output buffer holds u(n-1) on entry — read only at the center point,
 //! as the leapfrog `um` term — and u(n+1) on exit, so two persistent
 //! padded buffers ping-pong with a `swap` and the time loop never
-//! allocates. All per-domain scratch (tile task lists, streaming ring
-//! buffers, semi-stencil partial rows) lives in a [`Plan`] built on
-//! first use and reused while the (domain, threads) key is unchanged;
+//! allocates. All per-domain state (tile task lists, per-worker
+//! scratch like streaming ring buffers and semi-stencil partial rows,
+//! and the worker pool itself) lives in a [`Plan`] built on first use
+//! and reused while the (domain, threads) key is unchanged;
 //! `rust/tests/zero_alloc.rs` proves the steady-state loop performs
-//! zero heap allocations for every family. With `threads > 1` the tile
-//! fan-out spawns scoped workers per step — O(threads) bookkeeping,
-//! never O(points) — and tiles write disjoint rows of the shared
-//! output directly (no per-tile buffers, no scatter).
+//! zero heap allocations for every family on the serial *and* the
+//! pooled parallel path. With one worker the tasks run inline on the
+//! caller's thread (no pool is ever built); with more, the plan's
+//! [`crate::runtime::pool::WorkerPool`] releases its parked workers
+//! via a per-step generation bump — no `thread::scope`, no per-step
+//! spawn, O(threads) condvar bookkeeping, never O(points) — each slot
+//! owning its scratch entry across steps, and tiles write disjoint
+//! rows of the shared output directly (no per-tile buffers, no
+//! scatter).
 //!
 //! All families except `SemiStencil` keep the golden arithmetic
 //! ordering per point, so they are bit-identical to
@@ -44,6 +51,7 @@ use std::time::{Duration, Instant};
 use super::{inner_row, pml_row, Consts};
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
 use crate::gpusim::kernels::{self, Family, KernelVariant};
+use crate::runtime::pool::WorkerPool;
 use crate::R;
 
 pub use super::blocked::Blocked3D;
@@ -131,20 +139,29 @@ pub fn bench_matrix() -> Vec<(&'static str, &'static str)> {
     ]
 }
 
-/// Cached per-domain execution state: the tile task list plus one
-/// scratch slot per worker, keyed on (domain, requested threads).
-/// Built once on first step and reused for every subsequent step —
-/// this is what makes the steady-state loop allocation-free.
+/// Cached per-domain execution state: the tile task list, one scratch
+/// slot per worker, and the persistent worker pool, keyed on (domain,
+/// requested threads). Built once on first step and reused for every
+/// subsequent step — this is what makes the steady-state loop
+/// allocation-free *and* spawn-free.
 pub(crate) struct Plan<S> {
     domain: Domain,
     threads: usize,
     pub(crate) tasks: Vec<Region>,
-    /// One entry per resolved worker (always >= 1).
+    /// One entry per worker slot (always >= 1); slot i of the pool
+    /// owns entry i, so per-worker scratch stays pinned across steps.
     pub(crate) scratch: Vec<S>,
+    /// Persistent executor for multi-worker plans. `None` on the
+    /// serial fast path: one worker slot never touches a pool or
+    /// spawns a thread.
+    pool: Option<WorkerPool>,
 }
 
 impl<S> Plan<S> {
-    /// Return the cached plan, rebuilding it if the key changed.
+    /// Return the cached plan, rebuilding it if the key changed. A
+    /// rebuild re-tiles and re-sizes scratch, but the old pool's
+    /// parked threads are recycled whenever the resolved worker count
+    /// is unchanged — a domain switch must not pay a respawn.
     pub(crate) fn ensure<'a>(
         slot: &'a mut Option<Plan<S>>,
         domain: &Domain,
@@ -160,9 +177,92 @@ impl<S> Plan<S> {
             let tasks = tile(domain);
             let workers = resolve_threads(threads, tasks.len());
             let scratch = (0..workers).map(|_| mk_scratch(&tasks)).collect();
-            *slot = Some(Plan { domain: *domain, threads, tasks, scratch });
+            let pool = match slot.take().and_then(|old| old.pool) {
+                Some(old) if workers > 1 && old.workers() == workers => Some(old),
+                _ if workers > 1 => Some(WorkerPool::new(workers)),
+                _ => None,
+            };
+            *slot = Some(Plan { domain: *domain, threads, tasks, scratch, pool });
         }
         slot.as_mut().expect("plan just ensured")
+    }
+
+    /// Fan the plan's tile tasks over its worker slots, each task
+    /// writing its rows of `out` in place through `f`. With a single
+    /// worker slot the tasks run serially on the caller's thread — no
+    /// pool, no synchronization. With more, the persistent pool
+    /// executes the step: the caller's thread is slot 0, the parked
+    /// workers take slots 1.., every slot claims tiles off a shared
+    /// atomic cursor (the same idiom as the campaign runner) and owns
+    /// its scratch entry. Tiles partition the interior, so the result
+    /// is scheduling-independent, and steady-state calls allocate
+    /// nothing and spawn nothing on either path.
+    pub(crate) fn run_into(
+        &mut self,
+        out: &mut Field3,
+        f: impl Fn(&Region, &mut S, &SharedOut) + Sync,
+    ) where
+        S: Send,
+    {
+        let shared = SharedOut::new(out);
+        if self.scratch.len() <= 1 {
+            let s = self.scratch.first_mut().expect("plan always has >= 1 worker slot");
+            for t in &self.tasks {
+                f(t, &mut *s, &shared);
+            }
+            return;
+        }
+        let tasks = &self.tasks;
+        let cursor = AtomicUsize::new(0);
+        let scratch = SharedScratch::new(&mut self.scratch);
+        let pool = self.pool.as_mut().expect("multi-worker plans always carry a pool");
+        // Release-mode check of the invariant the unsafe slot access
+        // below rides on: every pool slot index (0..workers) must map
+        // to exactly one scratch entry. `Plan::ensure` maintains this
+        // through every rebuild/recycle path; verify it locally so a
+        // future drift becomes a panic, not out-of-bounds UB.
+        assert_eq!(
+            pool.workers(),
+            scratch.len,
+            "pool worker slots and scratch slots diverged"
+        );
+        pool.run(&|slot| {
+            // SAFETY: every slot index is claimed by exactly one
+            // thread per step (the caller is 0, parked workers 1..),
+            // so slots never alias.
+            let s = unsafe { scratch.slot(slot) };
+            loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= tasks.len() {
+                    break;
+                }
+                f(&tasks[i], &mut *s, &shared);
+            }
+        });
+    }
+}
+
+/// Raw shared handle to the plan's per-worker scratch slots, for the
+/// pooled fan-out: each pool slot index owns exactly one entry, so
+/// workers take disjoint `&mut S` without locking.
+struct SharedScratch<S> {
+    ptr: *mut S,
+    len: usize,
+}
+
+unsafe impl<S: Send> Sync for SharedScratch<S> {}
+
+impl<S> SharedScratch<S> {
+    fn new(slots: &mut [S]) -> SharedScratch<S> {
+        SharedScratch { ptr: slots.as_mut_ptr(), len: slots.len() }
+    }
+
+    /// SAFETY: the caller must guarantee no two threads use the same
+    /// slot index concurrently.
+    #[allow(clippy::mut_from_ref)] // the whole point: disjoint &mut slots across workers
+    unsafe fn slot(&self, i: usize) -> &mut S {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
     }
 }
 
@@ -178,7 +278,7 @@ fn resolve_threads(requested: usize, tasks: usize) -> usize {
 /// Raw shared handle to the padded output buffer, for disjoint in-place
 /// tile writes from the worker fan-out.
 ///
-/// Safety contract: the tile task lists handed to [`run_tiled_into`]
+/// Safety contract: the tile task lists handed to [`Plan::run_into`]
 /// partition the interior (asserted by `grid::decompose`/`Region::split`
 /// tests), and every kernel touches only the rows of its own tile, so
 /// concurrently outstanding segments never alias.
@@ -231,41 +331,6 @@ impl SharedOut {
     pub(crate) unsafe fn write(&self, z: usize, y: usize, x: usize, v: f32) {
         *self.ptr.add(self.base(z, y, x)) = v;
     }
-}
-
-/// Fan tile tasks over the plan's workers (shared atomic cursor, the
-/// same idiom as the campaign runner), each task writing its rows of
-/// `out` in place. `scratch` holds one per-worker slot; with a single
-/// worker the tasks run serially on the caller's thread — no spawn, no
-/// allocation. Tiles partition the interior, so the result is
-/// scheduling-independent.
-pub(crate) fn run_tiled_into<S: Send>(
-    out: &mut Field3,
-    tasks: &[Region],
-    scratch: &mut [S],
-    f: impl Fn(&Region, &mut S, &SharedOut) + Sync,
-) {
-    let shared = SharedOut::new(out);
-    if scratch.len() <= 1 {
-        let s = scratch.first_mut().expect("plan always has >= 1 worker slot");
-        for t in tasks {
-            f(t, &mut *s, &shared);
-        }
-        return;
-    }
-    let cursor = AtomicUsize::new(0);
-    std::thread::scope(|sc| {
-        for s in scratch.iter_mut() {
-            let (f, shared, cursor) = (&f, &shared, &cursor);
-            sc.spawn(move || loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= tasks.len() {
-                    break;
-                }
-                f(&tasks[i], &mut *s, shared);
-            });
-        }
-    });
 }
 
 /// Walk an inner tile row by row through the vectorizable fused row
@@ -329,7 +394,7 @@ impl Propagator for Naive {
         debug_assert_eq!(out.dims(), inp.domain.padded());
         let k = Consts::of(inp.domain);
         let plan = Plan::ensure(&mut self.plan, inp.domain, inp.threads, decompose, |_| ());
-        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, _s, o| {
+        plan.run_into(out, |t, _s, o| {
             if t.class.is_pml() {
                 pml_tile_into(inp, t, k, o);
             } else {

@@ -15,9 +15,7 @@
 //! golden propagator to a few ULP rather than bitwise (the equivalence
 //! suite asserts the tolerance).
 
-use super::propagator::{
-    pml_tile_into, run_tiled_into, Plan, Propagator, PropagatorInputs, SharedOut,
-};
+use super::propagator::{pml_tile_into, Plan, Propagator, PropagatorInputs, SharedOut};
 use super::Consts;
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{decompose, Dim3, Field3, Region};
@@ -81,7 +79,7 @@ impl Propagator for SemiStencil {
             |d| decompose(d).iter().flat_map(|r| r.split(tile)).collect(),
             PartialRow::for_tasks,
         );
-        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, partial, o| {
+        plan.run_into(out, |t, partial, o| {
             if t.class.is_pml() {
                 pml_tile_into(inp, t, k, o);
             } else {

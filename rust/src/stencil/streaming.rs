@@ -15,9 +15,7 @@
 //! the `lap8` term ordering, so results are bit-identical to the
 //! golden propagator.
 
-use super::propagator::{
-    pml_tile_into, run_tiled_into, Plan, Propagator, PropagatorInputs, SharedOut,
-};
+use super::propagator::{pml_tile_into, Plan, Propagator, PropagatorInputs, SharedOut};
 use super::Consts;
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{decompose, Dim3, Field3, Region};
@@ -89,7 +87,7 @@ impl Propagator for Streaming25D {
             },
             Ring::for_tasks,
         );
-        run_tiled_into(out, &plan.tasks, &mut plan.scratch, |t, ring, o| {
+        plan.run_into(out, |t, ring, o| {
             if t.class.is_pml() {
                 pml_tile_into(inp, t, k, o);
             } else {

@@ -1,0 +1,157 @@
+//! Lifecycle edge cases of the persistent worker-pool executor, at
+//! the propagator level:
+//!
+//! * `threads = 1` bypasses the pool entirely (serial fast path, no
+//!   thread is ever spawned),
+//! * steady-state steps never spawn (the zero-spawn guarantee),
+//! * plan rebuilds on a domain change recycle the parked workers while
+//!   a worker-count change resizes the pool — and physics never
+//!   notices either.
+//!
+//! Panic propagation (a panicking job re-raises cleanly on the caller
+//! and the pool stays usable) is covered by the `WorkerPool` unit
+//! tests in `rust/src/runtime/pool.rs` — not duplicated here.
+//!
+//! Thread-count assertions read a process-wide gauge
+//! (`pool::live_worker_threads`), and the cargo test harness runs
+//! `#[test]`s of one binary concurrently — so every test here
+//! serializes on one lock.
+
+use std::sync::Mutex;
+
+use hostencil::grid::{Dim3, Domain, Field3};
+use hostencil::runtime::pool;
+use hostencil::stencil::{self, propagator, Propagator, PropagatorInputs};
+use hostencil::wave;
+use hostencil::R;
+
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn serialize() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct State {
+    domain: Domain,
+    u_pad: Field3,
+    v: Field3,
+    eta_pad: Field3,
+}
+
+fn state(interior: Dim3, pml: usize) -> State {
+    let h = 10.0;
+    let domain = Domain::new(interior, pml, h, stencil::cfl_dt(h, 2000.0)).expect("domain");
+    let mut u_pad = Field3::zeros(domain.padded());
+    u_pad.set(R + interior.z / 2, R + interior.y / 2, R + interior.x / 2, 1.0);
+    State {
+        domain,
+        u_pad,
+        v: Field3::full(interior, 2000.0),
+        eta_pad: wave::eta_profile(&domain, 2000.0).pad(R),
+    }
+}
+
+fn step(prop: &mut Box<dyn Propagator>, st: &State, threads: usize) -> Field3 {
+    let mut out = Field3::zeros(st.domain.padded());
+    prop.step_into(
+        &PropagatorInputs {
+            domain: &st.domain,
+            u_pad: &st.u_pad,
+            v: &st.v,
+            eta_pad: &st.eta_pad,
+            threads,
+        },
+        &mut out,
+    );
+    out
+}
+
+#[test]
+fn serial_path_never_creates_pool_threads() {
+    let _guard = serialize();
+    let before = pool::live_worker_threads();
+    let st = state(Dim3::new(14, 13, 15), 3);
+    for variant in ["naive", "gmem_8x8x8", "st_smem_8x8", "semi"] {
+        let mut prop = propagator::build(variant).unwrap();
+        for _ in 0..3 {
+            step(&mut prop, &st, 1);
+        }
+    }
+    assert_eq!(
+        pool::live_worker_threads(),
+        before,
+        "threads=1 must bypass the pool entirely"
+    );
+}
+
+#[test]
+fn pool_spawns_once_and_joins_on_drop() {
+    let _guard = serialize();
+    let before = pool::live_worker_threads();
+    let st = state(Dim3::new(16, 14, 15), 3);
+    let mut prop = propagator::build("gmem_8x8x8").unwrap();
+    step(&mut prop, &st, 4);
+    assert_eq!(
+        pool::live_worker_threads(),
+        before + 3,
+        "4 worker slots = the caller + 3 parked threads"
+    );
+    for _ in 0..5 {
+        step(&mut prop, &st, 4);
+    }
+    assert_eq!(
+        pool::live_worker_threads(),
+        before + 3,
+        "steady-state steps must never spawn"
+    );
+    drop(prop);
+    assert_eq!(
+        pool::live_worker_threads(),
+        before,
+        "dropping the propagator must join the pool workers"
+    );
+}
+
+#[test]
+fn plan_rebuild_recycles_or_resizes_the_pool_and_physics_never_notices() {
+    let _guard = serialize();
+    let before = pool::live_worker_threads();
+    let a = state(Dim3::new(16, 14, 15), 3);
+    let b = state(Dim3::new(12, 15, 13), 2);
+    let mut prop = propagator::build("gmem_8x8x8").unwrap();
+    let got_a = step(&mut prop, &a, 3);
+    assert_eq!(pool::live_worker_threads(), before + 2);
+    // domain change, same worker count: the plan re-tiles but the
+    // parked workers are recycled (no respawn)
+    let got_b = step(&mut prop, &b, 3);
+    assert_eq!(
+        pool::live_worker_threads(),
+        before + 2,
+        "a domain change must recycle the parked workers"
+    );
+    // worker-count change: the pool resizes
+    let got_b2 = step(&mut prop, &b, 2);
+    assert_eq!(
+        pool::live_worker_threads(),
+        before + 1,
+        "a thread-count change must resize the pool"
+    );
+    // and back up again, still on the reused propagator
+    let got_a2 = step(&mut prop, &a, 3);
+    assert_eq!(pool::live_worker_threads(), before + 2);
+    drop(prop);
+    assert_eq!(pool::live_worker_threads(), before);
+
+    // none of that lifecycle churn may leak into the physics
+    for (got, st, threads) in
+        [(&got_a, &a, 3), (&got_b, &b, 3), (&got_b2, &b, 2), (&got_a2, &a, 3)]
+    {
+        let mut fresh = propagator::build("gmem_8x8x8").unwrap();
+        let want = step(&mut fresh, st, threads);
+        assert_eq!(
+            got.max_abs_diff(&want),
+            0.0,
+            "stale pool/plan after a rebuild changed the physics"
+        );
+    }
+}

@@ -8,10 +8,13 @@
 //! This binary holds exactly one test: the counter is global, so
 //! concurrent tests would see each other's allocations.
 //!
-//! The loop runs with `threads: 1` (the serial in-place path). The
-//! multithreaded fan-out spawns scoped workers per step — O(threads)
-//! bookkeeping, deliberately outside this guarantee and never
-//! O(points).
+//! The guarantee covers **both** execution paths: `threads: 1` (the
+//! serial in-place path, no pool ever built) and `threads >= 2` (the
+//! persistent worker-pool executor — parked workers are released by a
+//! per-step generation bump and claim tiles off an atomic cursor, so
+//! a parallel step costs condvar bookkeeping only: no `thread::scope`,
+//! no spawn, no allocation). The counter is process-global, so pool
+//! worker threads are under the same microscope as the caller.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -59,9 +62,9 @@ unsafe impl GlobalAlloc for CountingAllocator {
 #[global_allocator]
 static COUNTER: CountingAllocator = CountingAllocator;
 
-/// Run `steps` warm in-place steps and return how many heap
-/// allocations they performed.
-fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize) -> u64 {
+/// Run `steps` warm in-place steps on `threads` worker slots and
+/// return how many heap allocations they performed (on any thread).
+fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize, threads: usize) -> u64 {
     let interior = domain.interior;
     let v = Field3::full(interior, 2000.0);
     let eta_pad = wave::eta_profile(domain, 2000.0).pad(R);
@@ -70,10 +73,11 @@ fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize) -> u64 {
     let mut um_pad = Field3::zeros(domain.padded());
     let mut prop = propagator::build(variant).expect("known variant");
 
-    // warm-up: builds the tile plan and per-worker scratch
+    // warm-up: builds the tile plan, per-worker scratch, and (for
+    // threads >= 2) spawns the persistent worker pool
     for _ in 0..2 {
         prop.step_into(
-            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads: 1 },
+            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads },
             &mut um_pad,
         );
         std::mem::swap(&mut u_pad, &mut um_pad);
@@ -83,7 +87,7 @@ fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize) -> u64 {
     ARMED.store(true, Ordering::SeqCst);
     for _ in 0..steps {
         prop.step_into(
-            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads: 1 },
+            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads },
             &mut um_pad,
         );
         std::mem::swap(&mut u_pad, &mut um_pad);
@@ -103,10 +107,15 @@ fn steady_state_time_loop_performs_zero_heap_allocations() {
     let domain =
         Domain::new(Dim3::new(19, 17, 21), 3, h, stencil::cfl_dt(h, 2000.0)).expect("domain");
 
-    // all four code-shape families
+    // all four code-shape families, serial and pooled-parallel
     for variant in ["naive", "gmem_8x8x8", "st_smem_8x8", "semi"] {
-        let n = allocs_in_steady_state(variant, &domain, 8);
-        assert_eq!(n, 0, "{variant}: {n} heap allocations in 8 steady-state steps");
+        for threads in [1, 3] {
+            let n = allocs_in_steady_state(variant, &domain, 8, threads);
+            assert_eq!(
+                n, 0,
+                "{variant} with {threads} thread(s): {n} heap allocations in 8 steady-state steps"
+            );
+        }
     }
 
     // and the golden oracle's in-place advance

@@ -3,18 +3,23 @@
 #   BENCH_0.json — `hostencil bench --json` at a baseline commit
 #                  (default: the parent of HEAD)
 #   BENCH_1.json — the same bench on the current working tree
-# and print the per-shape speedup. Run from the repository root in a
-# cargo-capable environment, then commit both files:
+#   BENCH_2.json — the working tree's persistent-pool thread sweep
+#                  (`bench --thread-sweep`): per-worker-count
+#                  steady-state rates + parallel efficiency
+# and print the per-shape speedup plus the pool's thread scaling. Run
+# from the repository root in a cargo-capable environment, then commit
+# the files:
 #
 #   ./scripts/bench_delta.sh [baseline-ref]
 #
 # Honors HOSTENCIL_BENCH_SAMPLES / HOSTENCIL_BENCH_WARMUP and
-# BENCH_SIZE / BENCH_STEPS.
+# BENCH_SIZE / BENCH_STEPS / BENCH_SWEEP.
 set -euo pipefail
 
 BASE_REF="${1:-HEAD~1}"
 SIZE="${BENCH_SIZE:-40}"
 STEPS="${BENCH_STEPS:-6}"
+SWEEP="${BENCH_SWEEP:-1,2,4,8}"
 OUT_DIR="$(pwd)"
 
 if ! git rev-parse --verify --quiet "$BASE_REF^{commit}" >/dev/null; then
@@ -35,11 +40,15 @@ echo "== baseline $(git rev-parse --short "$BASE_REF") -> BENCH_0.json"
 (cd "$WORKTREE" && cargo run --release -p hostencil -- bench \
   --size "$SIZE" --steps "$STEPS" --json "$OUT_DIR/BENCH_0.json")
 
-echo "== working tree -> BENCH_1.json"
+# One head-side run yields both the matrix (cases) and the pool sweep
+# (thread_sweep); BENCH_2 is split out of BENCH_1's JSON below instead
+# of re-benching the whole matrix a second time.
+echo "== working tree (+ pool thread sweep $SWEEP) -> BENCH_1.json / BENCH_2.json"
 cargo run --release -p hostencil -- bench \
-  --size "$SIZE" --steps "$STEPS" --json "$OUT_DIR/BENCH_1.json"
+  --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" \
+  --json "$OUT_DIR/BENCH_1.json"
 
-python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" <<'EOF'
+python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" <<'EOF'
 import json, sys
 
 def rates(path):
@@ -50,10 +59,28 @@ def rates(path):
         out[c["name"]] = c.get("points_per_sec_best", c.get("points_per_sec", 0.0))
     return out
 
+head = json.load(open(sys.argv[2]))
+
+# BENCH_2: the pool's thread sweep, split out of the head run so the
+# scaling trajectory is a standalone committable artifact
+sweep = head.pop("thread_sweep", [])
+bench2 = {k: head[k] for k in ("format_version", "grid", "steps_per_sample", "samples", "warmup") if k in head}
+bench2["kind"] = "hostencil-bench-thread-sweep"
+bench2["thread_sweep"] = sweep
+with open(sys.argv[3], "w") as f:
+    json.dump(bench2, f, indent=1)
+
 base, new = rates(sys.argv[1]), rates(sys.argv[2])
 print(f"{'shape':<24}{'BENCH_0 Mpts/s':>16}{'BENCH_1 Mpts/s':>16}{'speedup':>9}")
 for name in new:
     b, n = base.get(name, 0.0), new[name]
     s = f"{n / b:6.2f}x" if b > 0 else "   new"
     print(f"{name:<24}{b / 1e6:>16.2f}{n / 1e6:>16.2f}{s:>9}")
+
+if sweep:
+    print(f"\npool thread scaling (steady-state min; eff = rate_T / (T x rate_1)):")
+    print(f"{'shape':<24}{'threads':>8}{'Mpts/s':>12}{'efficiency':>12}")
+    for r in sweep:
+        eff = f"{100.0 * r['efficiency']:9.0f}%" if "efficiency" in r else "        -"
+        print(f"{r['name']:<24}{int(r['threads']):>8}{r['points_per_sec_best'] / 1e6:>12.2f}{eff:>12}")
 EOF
