@@ -5,9 +5,15 @@
 //! ("which code shape wins?") asked of the CPU engine instead of the
 //! model.
 //!
+//! The matrix includes the temporally fused `tf_s2`/`tf_s4` rows:
+//! those advance `s` leapfrog steps per memory sweep (`--fuse` on the
+//! `run`/`bench` subcommands selects the same shapes), so the ranking
+//! shows where temporal blocking pays against single-step tiling on
+//! your machine. Each shape runs through `Coordinator::run`, which
+//! batches fused families automatically — what you measure here is
+//! the same path `hostencil run --fuse 2` takes.
+//!
 //!     cargo run --release --example propagator_shootout [steps] [machine]
-
-use std::time::Instant;
 
 use hostencil::coordinator::{Coordinator, Mode};
 use hostencil::grid::{Dim3, Domain};
@@ -36,12 +42,9 @@ fn main() -> anyhow::Result<()> {
         let src = Source { pos: Dim3::new(n / 2, n / 2, n / 2), f0: 15.0, amplitude: 1.0 };
         let mut coord =
             Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, vec![])?;
-        coord.step()?; // warm caches before timing
-        let t0 = Instant::now();
-        for _ in 0..steps {
-            coord.step()?;
-        }
-        let wall = t0.elapsed().as_secs_f64();
+        coord.run(coord.fuse())?; // warm caches + plans before timing
+        let summary = coord.run(steps)?; // fused families advance in batches here
+        let wall = summary.wall.as_secs_f64();
         let mpts = (interior.volume() * steps) as f64 / wall / 1e6;
         // the naive reference has no Table II row to predict
         let predicted = if variant == "naive" {

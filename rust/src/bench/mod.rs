@@ -115,6 +115,41 @@ impl Bencher {
     }
 }
 
+/// Least-squares Amdahl fit over a thread sweep: given measured
+/// `(threads, rate)` samples including a 1-thread baseline, estimate
+/// the serial fraction `f` of `rate(T) = rate(1) / (f + (1 - f) / T)`.
+///
+/// With `x = 1/T` and `y = rate(1)/rate(T)` (the inverse speedup), the
+/// model is linear in `f`: `y = f + (1 - f) x`, so the residual
+/// `y - x = f (1 - x)` fits by one-parameter regression through the
+/// origin: `f = sum((y - x)(1 - x)) / sum((1 - x)^2)`, clamped to
+/// [0, 1]. Perfect scaling fits f = 0; a flat rate fits f = 1.
+///
+/// Returns `None` without a 1-thread sample, a second distinct thread
+/// count, or positive rates — the fit needs a baseline and at least
+/// one real scaling observation.
+pub fn amdahl_serial_fraction(samples: &[(usize, f64)]) -> Option<f64> {
+    let rate1 = samples
+        .iter()
+        .find(|&&(t, r)| t == 1 && r > 0.0)
+        .map(|&(_, r)| r)?;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for &(t, r) in samples {
+        if t <= 1 || r <= 0.0 {
+            continue; // T = 1 contributes nothing (1 - x = 0)
+        }
+        let x = 1.0 / t as f64;
+        let y = rate1 / r;
+        num += (y - x) * (1.0 - x);
+        den += (1.0 - x) * (1.0 - x);
+    }
+    if den == 0.0 {
+        return None;
+    }
+    Some((num / den).clamp(0.0, 1.0))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -164,6 +199,37 @@ mod tests {
         let s = &b.results()[0];
         assert_eq!(s.samples, 4, "warmup runs must not be sampled");
         assert!(s.min <= s.median, "min is the steady-state floor");
+    }
+
+    #[test]
+    fn amdahl_fit_recovers_known_serial_fractions() {
+        let rate = |f: f64, t: usize| 1000.0 / (f + (1.0 - f) / t as f64);
+        let sweep = |f: f64| -> Vec<(usize, f64)> {
+            [1, 2, 4, 8].iter().map(|&t| (t, rate(f, t))).collect()
+        };
+        // perfect scaling -> fully parallel; flat -> fully serial
+        assert!(amdahl_serial_fraction(&sweep(0.0)).unwrap() < 1e-9);
+        assert!((amdahl_serial_fraction(&sweep(1.0)).unwrap() - 1.0).abs() < 1e-9);
+        // exact synthetic fractions recover to rounding error
+        for f in [0.1, 0.35, 0.5, 0.8] {
+            let got = amdahl_serial_fraction(&sweep(f)).unwrap();
+            assert!((got - f).abs() < 1e-9, "f={f} got {got}");
+        }
+        // noisy data still lands in the right neighborhood
+        let noisy: Vec<(usize, f64)> =
+            sweep(0.3).iter().map(|&(t, r)| (t, r * (1.0 + 0.01 * t as f64))).collect();
+        let got = amdahl_serial_fraction(&noisy).unwrap();
+        assert!((got - 0.3).abs() < 0.1, "{got}");
+    }
+
+    #[test]
+    fn amdahl_fit_rejects_degenerate_sweeps() {
+        assert!(amdahl_serial_fraction(&[]).is_none());
+        assert!(amdahl_serial_fraction(&[(2, 5.0), (4, 9.0)]).is_none(), "needs T=1");
+        assert!(amdahl_serial_fraction(&[(1, 5.0)]).is_none(), "needs T>1");
+        assert!(amdahl_serial_fraction(&[(1, 0.0), (2, 0.0)]).is_none(), "needs real rates");
+        // a super-linear sweep clamps to 0 rather than going negative
+        assert_eq!(amdahl_serial_fraction(&[(1, 100.0), (2, 300.0)]), Some(0.0));
     }
 
     #[test]

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
 use crate::runtime::{Engine, ExecArg};
-use crate::stencil::propagator::{self, Propagator, PropagatorInputs};
+use crate::stencil::propagator::{self, FusedInputs, Propagator, PropagatorInputs, SourceBatch};
 use crate::wave::Source;
 use crate::R;
 
@@ -99,8 +99,12 @@ pub struct RunSummary {
     pub final_energy: f64,
     /// interior-points x steps / wall seconds
     pub points_per_sec: f64,
+    /// Interior energy per recorded state: one entry per step for
+    /// unfused backends, one per fused batch (batch-boundary states
+    /// are the only global states a fused sweep materializes).
     pub energy_log: Vec<f64>,
-    /// per-receiver time series
+    /// Per-receiver time series, sampled at the same cadence as
+    /// `energy_log`.
     pub traces: Vec<Vec<f32>>,
 }
 
@@ -140,6 +144,17 @@ pub struct Coordinator<'e> {
     /// Worker threads for the propagator tile fan-out (0 = one per
     /// core). The campaign sets 1: its cell fan-out owns the cores.
     cpu_threads: usize,
+    /// The propagator's natural fusion degree (1 for every family but
+    /// `TimeFused`): observed runs advance in batches of this many
+    /// steps, recording energy/traces and firing the observer once per
+    /// batch — the whole point of temporal fusion is that intermediate
+    /// global states never materialize.
+    fuse: usize,
+    /// Reusable per-batch injection schedule (positions + row-major
+    /// `[sub-step x source]` amplitudes); capacity reserved once so
+    /// steady-state batches never allocate.
+    fused_pos: Vec<Dim3>,
+    fused_amps: Vec<f32>,
     /// Injection sources with the velocity sampled at each position
     /// (primary source from the constructor + any `add_source` extras).
     sources: Vec<(Source, f32)>,
@@ -233,6 +248,7 @@ impl<'e> Coordinator<'e> {
                 .collect::<anyhow::Result<Vec<_>>>()?,
             _ => Vec::new(),
         };
+        let fuse = cpu_propagator.as_ref().map(|p| p.max_fuse()).unwrap_or(1).max(1);
         Ok(Coordinator {
             domain,
             mode,
@@ -248,6 +264,9 @@ impl<'e> Coordinator<'e> {
             um_pad: Field3::zeros(domain.padded()),
             propagator: cpu_propagator,
             cpu_threads: 0,
+            fuse,
+            fused_pos: Vec::new(),
+            fused_amps: Vec::new(),
             sources,
             receivers,
             traces: vec![Vec::new(); n_recv],
@@ -359,6 +378,58 @@ impl<'e> Coordinator<'e> {
         Ok(())
     }
 
+    /// Advance `b` steps through the propagator's fused batch path
+    /// (Golden mode only). The per-sub-step source amplitudes ride
+    /// down in a [`SourceBatch`] so injection lands between virtual
+    /// sub-steps, bit-identical to `b` calls of [`Coordinator::step`];
+    /// receivers and the energy log record once, at the batch
+    /// boundary. Steady-state batches allocate nothing (the schedule
+    /// buffers are reserved on first use and reused).
+    fn step_fused(&mut self, b: usize) -> anyhow::Result<()> {
+        debug_assert!(b >= 1);
+        self.fused_pos.clear();
+        self.fused_amps.clear();
+        self.fused_pos.reserve(self.sources.len());
+        self.fused_amps.reserve(self.sources.len() * b);
+        for (src, _) in &self.sources {
+            self.fused_pos.push(src.pos);
+        }
+        for j in 0..b {
+            for (src, v_at) in &self.sources {
+                self.fused_amps.push(src.amp_at(self.steps_done + j, self.domain.dt, *v_at));
+            }
+        }
+        let prop = self.propagator.as_mut().expect("fused stepping is Golden-mode only");
+        prop.advance_fused(
+            &FusedInputs {
+                domain: &self.domain,
+                v: &self.v,
+                eta_pad: &self.eta_pad,
+                threads: self.cpu_threads,
+            },
+            &mut self.u_pad,
+            &mut self.um_pad,
+            &SourceBatch { positions: &self.fused_pos, amps: &self.fused_amps, n_steps: b },
+        );
+        // launch bookkeeping stays one logical launch per region per
+        // (virtual) step, matching the unfused paths
+        self.launches += (self.regions.len() * b) as u64;
+        self.steps_done += b;
+        for (i, r) in self.receivers.iter().enumerate() {
+            self.traces[i].push(self.u_pad.get(R + r.z, R + r.y, R + r.x));
+        }
+        self.energy_log.push(self.u_pad.energy());
+        Ok(())
+    }
+
+    /// Natural step-batch size of this coordinator's backend: the
+    /// propagator's fusion degree in Golden mode, 1 otherwise.
+    /// Observed runs record energy/traces and fire the observer once
+    /// per batch.
+    pub fn fuse(&self) -> usize {
+        self.fuse
+    }
+
     /// Register an additional injection source (multi-source scenarios:
     /// interference patterns, simultaneous-shot stress). The primary
     /// source from the constructor is always present.
@@ -380,11 +451,19 @@ impl<'e> Coordinator<'e> {
         self.run_observed(steps, RunOptions::default(), None)
     }
 
-    /// Run `steps` more steps with an optional per-step observer. With
+    /// Run `steps` more steps with an optional observer. With
     /// `halt_on_non_finite` cleared, a blown-up wavefield ends the loop
     /// early (the summary's `steps` reports how far it got) instead of
     /// erroring — scenario stress runs rely on this to collect metrics
     /// from deliberately unstable configurations.
+    ///
+    /// Stepping happens in batches of the backend's fusion degree
+    /// ([`Coordinator::fuse`], 1 for every family but `TimeFused`):
+    /// a fused batch advances multiple leapfrog steps in one memory
+    /// sweep, so energy/receiver recording and the observer callback
+    /// happen once per batch — intermediate global states do not exist
+    /// by design. For unfused backends nothing changes: batch size 1
+    /// is exactly the old per-step loop.
     pub fn run_observed(
         &mut self,
         steps: usize,
@@ -398,11 +477,17 @@ impl<'e> Coordinator<'e> {
             t.reserve(steps);
         }
         let t0 = Instant::now();
+        let fuse = self.fuse.max(1);
         let mut done = 0;
-        for _ in 0..steps {
-            self.step()?;
-            done += 1;
-            // step() just logged this step's energy; a finite f32 field
+        while done < steps {
+            let b = fuse.min(steps - done);
+            if b <= 1 {
+                self.step()?;
+            } else {
+                self.step_fused(b)?;
+            }
+            done += b;
+            // the step/batch just logged its energy; a finite f32 field
             // always sums to a finite f64, so a non-finite energy is an
             // exact (and O(1)-here) proxy for a non-finite wavefield.
             let energy = self.energy_log.last().copied().unwrap_or(0.0);
@@ -702,6 +787,87 @@ mod tests {
         let s = c.run_observed(400, opts, Some(&mut obs)).unwrap();
         assert!(s.steps < 400, "blow-up should end the run early, got {}", s.steps);
         assert!(obs.saw_non_finite, "observer must witness the blow-up");
+    }
+
+    fn mk_variant_coord(variant: &str, threads: usize) -> Coordinator<'static> {
+        let interior = Dim3::new(24, 24, 24);
+        let h = 10.0;
+        let dt = stencil::cfl_dt(h, 2000.0);
+        let domain = Domain::new(interior, 4, h, dt).unwrap();
+        let v = VelocityModel::Constant(2000.0).build(interior);
+        let eta = wave::eta_profile(&domain, 2000.0);
+        let src = Source { pos: Dim3::new(12, 12, 12), f0: 15.0, amplitude: 1.0 };
+        let mut c = Coordinator::new(
+            None,
+            domain,
+            Mode::Golden,
+            variant,
+            "gmem",
+            v,
+            eta,
+            src,
+            vec![Dim3::new(4, 12, 12)],
+        )
+        .unwrap();
+        c.set_cpu_threads(threads);
+        c.add_source(Source { pos: Dim3::new(6, 18, 9), f0: 20.0, amplitude: -0.5 }).unwrap();
+        c
+    }
+
+    #[test]
+    fn fused_runs_are_bit_identical_at_batch_boundaries() {
+        // 25 steps at fuse 2 = 12 full batches + a tail step; the
+        // final state (and everything derived from it) must equal the
+        // per-step golden run exactly
+        let mut base = mk_variant_coord("naive", 1);
+        let base_summary = base.run(25).unwrap();
+        for (variant, fuse) in [("tf_s2", 2usize), ("tf_s4", 4)] {
+            for threads in [1usize, 3] {
+                let mut c = mk_variant_coord(variant, threads);
+                assert_eq!(c.fuse(), fuse, "{variant}");
+                assert_eq!(c.propagator_name(), Some("time_fused"));
+                let s = c.run(25).unwrap();
+                assert_eq!(s.steps, 25);
+                assert_eq!(s.launches, 7 * 25, "one logical launch per region per step");
+                assert_eq!(
+                    c.wavefield().max_abs_diff(&base.wavefield()),
+                    0.0,
+                    "{variant} with {threads} threads deviated from golden"
+                );
+                assert_eq!(s.final_energy, base_summary.final_energy, "{variant}");
+                assert_eq!(s.final_max_abs, base_summary.final_max_abs, "{variant}");
+                // observation happens per batch: ceil(25 / fuse) entries
+                let batches = 25usize.div_ceil(fuse);
+                assert_eq!(s.energy_log.len(), batches, "{variant}");
+                assert_eq!(s.traces[0].len(), batches, "{variant}");
+                // every recorded batch boundary matches the golden
+                // per-step log at the same absolute step
+                for (i, e) in s.energy_log.iter().enumerate() {
+                    let step = ((i + 1) * fuse).min(25);
+                    assert_eq!(
+                        *e,
+                        base_summary.energy_log[step - 1],
+                        "{variant}: energy at batch {i} (step {step})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_observer_fires_once_per_batch() {
+        let mut c = mk_variant_coord("tf_s2", 1);
+        let mut obs = Counter { calls: 0, saw_non_finite: false };
+        let s = c.run_observed(10, RunOptions::default(), Some(&mut obs)).unwrap();
+        assert_eq!(s.steps, 10);
+        assert_eq!(obs.calls, 5, "fuse 2 observes at batch boundaries");
+        assert!(!obs.saw_non_finite);
+        // unfused backends keep the old per-step cadence
+        let mut c = mk_variant_coord("gmem", 1);
+        assert_eq!(c.fuse(), 1);
+        let mut obs = Counter { calls: 0, saw_non_finite: false };
+        c.run_observed(10, RunOptions::default(), Some(&mut obs)).unwrap();
+        assert_eq!(obs.calls, 10);
     }
 
     #[test]

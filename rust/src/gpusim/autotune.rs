@@ -58,9 +58,29 @@ fn regs_for(family: Family, threads: u32) -> (Option<u32>, u32, u32, u32, u32) {
 
 /// Enumerate legal tile shapes for `family` on `arch`.
 pub fn candidates(arch: &GpuArch, family: Family) -> Vec<KernelVariant> {
+    candidates_with(arch, family, &[1])
+}
+
+/// Enumerate legal (tile shape x fusion degree) candidates. Degrees
+/// beyond 1 only make sense for the streaming families (temporal
+/// fusion rides the plane ring); 3D families silently keep degree 1.
+/// Infeasible combinations — a fused ring whose `(2R+1)+s` planes with
+/// `s*R` skirts outgrow shared memory — are filtered like any other
+/// over-budget shape, which is how the search space prunes deep fusion
+/// on small-smem parts.
+pub fn candidates_with(arch: &GpuArch, family: Family, fuse_degrees: &[u32]) -> Vec<KernelVariant> {
     let dims: &[u32] = &[4, 8, 16, 32, 64];
     let mut out = Vec::new();
     let streaming = family.is_streaming();
+    let degrees: Vec<u32> = if streaming {
+        let mut d: Vec<u32> = fuse_degrees.iter().copied().filter(|&s| s >= 1).collect();
+        if d.is_empty() {
+            d.push(1);
+        }
+        d
+    } else {
+        vec![1]
+    };
     let shapes: Vec<(u32, u32, u32)> = if streaming {
         dims.iter()
             .flat_map(|&a| dims.iter().map(move |&b| (a, b, 0)))
@@ -78,24 +98,27 @@ pub fn candidates(arch: &GpuArch, family: Family) -> Vec<KernelVariant> {
             continue;
         }
         let (nr, ri, rp, rni, rnp) = regs_for(family, threads);
-        let v = KernelVariant {
-            id: "autotune",
-            family,
-            d1,
-            d2,
-            d3,
-            maxrregcount: nr,
-            regs_inner: ri,
-            regs_pml: rp,
-            regs_needed_inner: rni,
-            regs_needed_pml: rnp,
-        };
-        // shared-memory feasibility (the paper: "otherwise, crash the
-        // program execution")
-        if v.smem_inner().max(v.smem_pml()) > arch.smem_per_block {
-            continue;
+        for &fuse in &degrees {
+            let v = KernelVariant {
+                id: "autotune",
+                family,
+                d1,
+                d2,
+                d3,
+                fuse,
+                maxrregcount: nr,
+                regs_inner: ri,
+                regs_pml: rp,
+                regs_needed_inner: rni,
+                regs_needed_pml: rnp,
+            };
+            // shared-memory feasibility (the paper: "otherwise, crash
+            // the program execution")
+            if v.smem_inner().max(v.smem_pml()) > arch.smem_per_block {
+                continue;
+            }
+            out.push(v);
         }
-        out.push(v);
     }
     out
 }
@@ -103,7 +126,17 @@ pub fn candidates(arch: &GpuArch, family: Family) -> Vec<KernelVariant> {
 /// Score every candidate of `family` on `arch`; best (lowest predicted
 /// time) first.
 pub fn tune(arch: &GpuArch, family: Family, steps: usize) -> Vec<Candidate> {
-    let mut scored: Vec<Candidate> = candidates(arch, family)
+    tune_with(arch, family, steps, &[1])
+}
+
+/// [`tune`] over an explicit (shape x fusion degree) search space.
+pub fn tune_with(
+    arch: &GpuArch,
+    family: Family,
+    steps: usize,
+    fuse_degrees: &[u32],
+) -> Vec<Candidate> {
+    let mut scored: Vec<Candidate> = candidates_with(arch, family, fuse_degrees)
         .into_iter()
         .map(|v| {
             let run = simulate(arch, &v, steps);
@@ -116,6 +149,12 @@ pub fn tune(arch: &GpuArch, family: Family, steps: usize) -> Vec<Candidate> {
 
 /// Tune every family on `arch` and return the overall champion.
 pub fn tune_all(arch: &GpuArch, steps: usize) -> Vec<Candidate> {
+    tune_all_with(arch, steps, &[1])
+}
+
+/// [`tune_all`] over an explicit fusion-degree search space (degrees
+/// only widen the streaming families; see [`candidates_with`]).
+pub fn tune_all_with(arch: &GpuArch, steps: usize, fuse_degrees: &[u32]) -> Vec<Candidate> {
     let mut best: Vec<Candidate> = [
         Family::Gmem,
         Family::SmemU,
@@ -125,7 +164,7 @@ pub fn tune_all(arch: &GpuArch, steps: usize) -> Vec<Candidate> {
         Family::StRegFixed,
     ]
     .into_iter()
-    .filter_map(|f| tune(arch, f, steps).into_iter().next())
+    .filter_map(|f| tune_with(arch, f, steps, fuse_degrees).into_iter().next())
     .collect();
     best.sort_by(|a, b| a.run.time_s.total_cmp(&b.run.time_s));
     best
@@ -183,7 +222,11 @@ pub fn measured_domain(n: usize) -> anyhow::Result<Domain> {
 /// the model's `top` best candidates, run each one's executable CPU
 /// analog for `steps` in-place steps on `domain` (best of `samples`
 /// after `warmup` throwaway runs), and report model-vs-measured rank
-/// agreement over all candidate pairs.
+/// agreement over all candidate pairs. `fuse_degrees` widens the
+/// search to (shape x fusion degree) for streaming families — the
+/// fused candidates execute through the `TimeFused` CPU analog, so
+/// `s` in {1, 2, 4} is ranked by the same measured signal as the tile
+/// shapes (`&[1]` reproduces the unfused search exactly).
 #[allow(clippy::too_many_arguments)] // mirrors the bench knobs: search scope + measurement budget
 pub fn tune_measured(
     arch: &GpuArch,
@@ -193,10 +236,11 @@ pub fn tune_measured(
     steps: usize,
     warmup: usize,
     samples: usize,
+    fuse_degrees: &[u32],
 ) -> anyhow::Result<MeasuredReport> {
     anyhow::ensure!(top >= 2, "--measured needs at least 2 candidates to rank");
     anyhow::ensure!(steps >= 1, "--measured needs at least 1 step per sample");
-    let ranked = tune(arch, family, 1000);
+    let ranked = tune_with(arch, family, 1000, fuse_degrees);
     anyhow::ensure!(
         ranked.len() >= 2,
         "family {family:?} has fewer than 2 feasible candidates on {}",
@@ -298,7 +342,7 @@ mod tests {
     #[test]
     fn measured_mode_times_candidates_and_reports_rank_agreement() {
         let domain = measured_domain(14).unwrap();
-        let r = tune_measured(&v100(), Family::Gmem, 3, &domain, 2, 0, 1).unwrap();
+        let r = tune_measured(&v100(), Family::Gmem, 3, &domain, 2, 0, 1, &[1]).unwrap();
         assert_eq!(r.rows.len(), 3);
         assert_eq!(r.total_pairs, 3);
         assert!(r.concordant_pairs <= r.total_pairs);
@@ -319,7 +363,44 @@ mod tests {
     #[test]
     fn measured_mode_rejects_degenerate_searches() {
         let domain = measured_domain(14).unwrap();
-        assert!(tune_measured(&v100(), Family::Gmem, 1, &domain, 2, 0, 1).is_err());
-        assert!(tune_measured(&v100(), Family::Gmem, 3, &domain, 0, 0, 1).is_err());
+        assert!(tune_measured(&v100(), Family::Gmem, 1, &domain, 2, 0, 1, &[1]).is_err());
+        assert!(tune_measured(&v100(), Family::Gmem, 3, &domain, 0, 0, 1, &[1]).is_err());
+    }
+
+    #[test]
+    fn fusion_degrees_enter_the_streaming_search_space() {
+        let a = v100();
+        // degree axis only exists for streaming families...
+        let st = candidates_with(&a, Family::StSmem, &[1, 2, 4]);
+        let degrees: std::collections::HashSet<u32> = st.iter().map(|v| v.fuse).collect();
+        assert!(degrees.contains(&1) && degrees.contains(&2), "{degrees:?}");
+        // ...every candidate still respects shared memory (deep fused
+        // rings on big tiles must have been pruned)
+        for c in &st {
+            assert!(c.smem_inner() <= a.smem_per_block, "{}x{} s{}", c.d1, c.d2, c.fuse);
+        }
+        assert!(st.len() > candidates(&a, Family::StSmem).len());
+        // ...and 3D families ignore it entirely
+        let g = candidates_with(&a, Family::Gmem, &[1, 2, 4]);
+        assert!(g.iter().all(|v| v.fuse == 1));
+        assert_eq!(g.len(), candidates(&a, Family::Gmem).len());
+    }
+
+    #[test]
+    fn measured_mode_ranks_fusion_degrees_through_the_fused_analog() {
+        // the fused candidates execute via TimeFused; the report must
+        // carry their degrees and finite measured rates
+        let domain = measured_domain(16).unwrap();
+        let r = tune_measured(&v100(), Family::StSmem, 4, &domain, 2, 0, 1, &[1, 2, 4]).unwrap();
+        assert_eq!(r.rows.len(), 4);
+        for m in &r.rows {
+            assert!(m.steps_per_sec > 0.0 && m.steps_per_sec.is_finite());
+        }
+        assert!(
+            r.rows.iter().any(|m| m.candidate.variant.fuse > 1),
+            "the model's top streaming candidates should include a fused degree \
+             (DRAM amortization dominates the model): {:?}",
+            r.rows.iter().map(|m| m.candidate.variant.fuse).collect::<Vec<_>>()
+        );
     }
 }

@@ -54,7 +54,8 @@ impl Family {
     }
 }
 
-/// One kernel variant = one Table II row.
+/// One kernel variant = one Table II row (plus, beyond the paper, the
+/// temporally fused `tf_*` descriptors — see [`fused_variants`]).
 #[derive(Clone, Debug)]
 pub struct KernelVariant {
     pub id: &'static str,
@@ -63,6 +64,13 @@ pub struct KernelVariant {
     pub d1: u32,
     pub d2: u32,
     pub d3: u32,
+    /// Temporal fusion degree: leapfrog steps advanced per memory
+    /// sweep. 1 for every Table II variant; the `tf_s{S}` descriptors
+    /// carry 2 or 4. Fused streaming kernels deepen the plane ring to
+    /// `(2R+1) + s` and widen the tile skirt to `s*R` (redundant-halo
+    /// overlapped tiling), which [`KernelVariant::smem_inner`] and the
+    /// traffic model (`gpusim::memory`) both account for.
+    pub fuse: u32,
     /// Explicit -maxrregcount cap (Table II "Nr" column).
     pub maxrregcount: Option<u32>,
     /// nvcc register allocation, inner kernel (Table III top).
@@ -101,7 +109,16 @@ impl KernelVariant {
             Family::Gmem | Family::SmemEta1 | Family::SmemEta3 => 0,
             Family::SmemU => (self.d1 + 2 * R) * (self.d2 + 2 * R) * (self.d3 + 2 * R) * 4,
             Family::Semi => self.d1 * self.d2 * self.d3 * 4, // partial buffer
-            Family::StSmem => (2 * R + 1) * (self.d1 + 2 * R) * (self.d2 + 2 * R) * 4,
+            Family::StSmem => {
+                if self.fuse > 1 {
+                    // temporally fused ring: (2R+1) + s planes, each
+                    // widened by the s*R redundant-halo skirt
+                    let s = self.fuse;
+                    (2 * R + 1 + s) * (self.d1 + 2 * s * R) * (self.d2 + 2 * s * R) * 4
+                } else {
+                    (2 * R + 1) * (self.d1 + 2 * R) * (self.d2 + 2 * R) * 4
+                }
+            }
             Family::StRegShft | Family::StRegFixed => {
                 (self.d1 + 2 * R) * (self.d2 + 2 * R) * 4 // current plane only
             }
@@ -182,6 +199,7 @@ pub fn paper_variants() -> Vec<KernelVariant> {
         d1,
         d2,
         d3,
+        fuse: 1,
         maxrregcount: nr,
         regs_inner: ri,
         regs_pml: rp,
@@ -217,9 +235,37 @@ pub fn paper_variants() -> Vec<KernelVariant> {
     ]
 }
 
+/// The temporally fused descriptors (beyond the paper's Table II):
+/// 2.5D plane streaming advancing `s` leapfrog steps per memory sweep
+/// with overlapped `s*R` halo skirts. `tf_s1` is the degenerate
+/// degree-1 control (identical resources to `st_smem_16x16`, and the
+/// CPU factory maps it onto the plain `Streaming25D` shape), so fusion
+/// sweeps have an in-family unfused baseline.
+pub fn fused_variants() -> Vec<KernelVariant> {
+    let tf = |id, d1, d2, fuse| KernelVariant {
+        id,
+        family: Family::StSmem,
+        d1,
+        d2,
+        d3: 0,
+        fuse,
+        maxrregcount: None,
+        regs_inner: 56,
+        regs_pml: 72,
+        regs_needed_inner: 56,
+        regs_needed_pml: 72,
+    };
+    vec![
+        tf("tf_s1", 16, 16, 1),
+        tf("tf_s2", 16, 16, 2),
+        tf("tf_s4", 16, 16, 4),
+    ]
+}
+
 pub fn by_id(id: &str) -> anyhow::Result<KernelVariant> {
     paper_variants()
         .into_iter()
+        .chain(fused_variants())
         .find(|v| v.id == id)
         .ok_or_else(|| anyhow::anyhow!("unknown kernel variant {id:?}"))
 }
@@ -234,6 +280,7 @@ pub fn family_representative(name: &str) -> Option<&'static str> {
         "st_smem" => Some("st_smem_16x16"),
         "st_reg_shft" => Some("st_reg_shft_16x16"),
         "st_reg_fixed" => Some("st_reg_fixed_32x32"),
+        "tf" => Some("tf_s2"),
         _ => None,
     }
 }
@@ -361,5 +408,29 @@ mod tests {
         assert_eq!(resolve("st_reg_fixed").unwrap().id, "st_reg_fixed_32x32");
         assert_eq!(resolve("gmem_4x4x4").unwrap().id, "gmem_4x4x4");
         assert!(resolve("warp_specialized").is_err());
+    }
+
+    #[test]
+    fn fused_descriptors_resolve_with_degrees_and_deep_rings() {
+        // paper_variants stays exactly Table II; tf_* live next to it
+        assert!(paper_variants().iter().all(|v| v.fuse == 1));
+        let degrees: Vec<u32> = fused_variants().iter().map(|v| v.fuse).collect();
+        assert_eq!(degrees, vec![1, 2, 4]);
+        assert_eq!(resolve("tf").unwrap().id, "tf_s2");
+        assert_eq!(by_id("tf_s4").unwrap().fuse, 4);
+        assert_eq!(by_id("tf_s2").unwrap().threads_per_block(), 256);
+
+        // the s=1 control matches the plain streaming ring exactly
+        assert_eq!(
+            by_id("tf_s1").unwrap().smem_inner(),
+            by_id("st_smem_16x16").unwrap().smem_inner()
+        );
+        // fused rings: (2R+1)+s planes of (d+2sR)^2
+        assert_eq!(by_id("tf_s2").unwrap().smem_inner(), 11 * 32 * 32 * 4);
+        assert_eq!(by_id("tf_s4").unwrap().smem_inner(), 13 * 48 * 48 * 4);
+        // the deep s=4 skirt is a real cost: it outgrows even a V100
+        // thread block's shared memory (the measured CPU analog is how
+        // that degree stays explorable)
+        assert!(by_id("tf_s4").unwrap().smem_inner() > v100().smem_per_block);
     }
 }

@@ -118,16 +118,30 @@ fn inner_u_read(arch: &GpuArch, v: &KernelVariant) -> PointTraffic {
             // and "one should cut the plane such that the x-dimension ...
             // is assigned to the innermost dimension with a relatively
             // larger size").
-            let streaming_coalesce = sector_factor(v.d1 as f64 + 2.0 * R).max(1.1);
+            //
+            // Temporal fusion (v.fuse = s > 1) changes both levels:
+            // * the overlapped tile carries an s*R redundant-halo skirt,
+            //   so the per-sweep halo ratio uses the widened halo and
+            //   the redundant re-reads land at L2 (the skirt is
+            //   recomputed from staged data every sub-step);
+            // * the wavefield streams through DRAM once per s steps, so
+            //   the per-step compulsory+halo DRAM traffic divides by s.
+            // The tension between those two terms is exactly what the
+            // autotuner ranks when it searches fusion degrees.
+            let s = v.fuse.max(1) as f64;
+            let halo = s * R; // s*R skirt; s = 1 is the plain 2.5D ring
+            let streaming_coalesce = sector_factor(v.d1 as f64 + 2.0 * halo).max(1.1);
             let extra_core_read = if v.family == Family::StSmem { 0.0 } else { 1.0 };
-            let l2 = 4.0 * (v.ratio2(R) + extra_core_read) * streaming_coalesce;
-            let tile_bytes = (v.d1 as f64 + 2.0 * R) * (v.d2 as f64 + 2.0 * R) * 4.0;
+            let l2 = 4.0 * (v.ratio2(halo) + extra_core_read) * streaming_coalesce;
+            let tile_bytes = (v.d1 as f64 + 2.0 * halo) * (v.d2 as f64 + 2.0 * halo) * 4.0;
             let row_blocks = (arch.eval_grid as f64 / v.d1 as f64).ceil();
             // 0.4 floor: plane-by-plane streaming re-touches halo columns
             // every iteration, evicting neighbors' rows (calibrated to the
             // paper's near-identical DRAM traffic of st_* and gmem_8x8x8).
             let miss_xy = clamp01(row_blocks * tile_bytes / arch.l2_bytes as f64).max(0.4);
-            let dram = 4.0 * (1.0 + (v.ratio2(R) - 1.0) * miss_xy) * streaming_coalesce.min(1.25);
+            let dram = 4.0 * (1.0 + (v.ratio2(halo) - 1.0) * miss_xy)
+                * streaming_coalesce.min(1.25)
+                / s;
             PointTraffic { l2_bytes: l2, dram_bytes: dram }
         }
     }
@@ -166,14 +180,20 @@ fn spill_bytes(arch: &GpuArch, v: &KernelVariant, pml: bool) -> f64 {
 }
 
 /// Total per-point traffic for one kernel flavor (inner or PML):
-/// u reads + um/v/u+ stream + spills.
+/// u reads + um/v/u+ stream + spills. For temporally fused inner
+/// kernels the um/v/u+ stream amortizes at DRAM — one sweep serves
+/// `fuse` steps — while the L2 stream term stays per sub-step (every
+/// virtual step still touches the staged values). PML kernels run
+/// unfused (the boundary skirt is stepped per virtual sub-step), so
+/// their traffic never sees the fusion degree.
 pub fn point_traffic(arch: &GpuArch, v: &KernelVariant, pml: bool) -> PointTraffic {
     let stream = 12.0; // um read + v read + u+ write
     let base = if pml { pml_u_eta_read(arch, v) } else { inner_u_read(arch, v) };
     let spill = spill_bytes(arch, v, pml);
+    let stream_dram = if pml { stream } else { stream / v.fuse.max(1) as f64 };
     PointTraffic {
         l2_bytes: base.l2_bytes + stream + 2.0 * spill,
-        dram_bytes: base.dram_bytes + stream + spill,
+        dram_bytes: base.dram_bytes + stream_dram + spill,
     }
 }
 
@@ -264,5 +284,35 @@ mod tests {
     fn sector_factor_sane() {
         assert!(sector_factor(16.0) > 1.0);
         assert!(sector_factor(40.0) < sector_factor(12.0)); // wide rows coalesce better
+    }
+
+    #[test]
+    fn temporal_fusion_trades_l2_for_dram() {
+        // fusing s steps per sweep amortizes DRAM traffic but pays for
+        // the redundant s*R halo skirt at L2 — the model must show both
+        let a = v100();
+        let base = point_traffic(&a, &by_id("tf_s1").unwrap(), false);
+        let s2 = point_traffic(&a, &by_id("tf_s2").unwrap(), false);
+        assert!(
+            s2.dram_bytes < base.dram_bytes,
+            "tf_s2 DRAM {} must undercut unfused {}",
+            s2.dram_bytes,
+            base.dram_bytes
+        );
+        assert!(
+            s2.l2_bytes > base.l2_bytes,
+            "the s*R skirt must cost L2: {} vs {}",
+            s2.l2_bytes,
+            base.l2_bytes
+        );
+        // s = 1 control is exactly the plain 16x16 streaming ring
+        let st = point_traffic(&a, &by_id("st_smem_16x16").unwrap(), false);
+        assert_eq!(base.l2_bytes, st.l2_bytes);
+        assert_eq!(base.dram_bytes, st.dram_bytes);
+        // PML kernels run unfused: no fusion term anywhere
+        let p_base = point_traffic(&a, &by_id("tf_s1").unwrap(), true);
+        let p_s2 = point_traffic(&a, &by_id("tf_s2").unwrap(), true);
+        assert_eq!(p_base.dram_bytes, p_s2.dram_bytes);
+        assert_eq!(p_base.l2_bytes, p_s2.l2_bytes);
     }
 }

@@ -73,17 +73,16 @@ pub fn occupancy(arch: &GpuArch, res: &KernelResources) -> Occupancy {
         warps_by_regs / warps_per_block
     };
 
-    // 4. shared-memory limit
+    // 4. shared-memory limit. A footprint past the per-block cap means
+    //    the kernel cannot launch at all: report 0 blocks (limiter
+    //    SharedMem) instead of panicking, so prediction layers can
+    //    surface "cannot launch" as a verdict rather than a crash
+    //    (e.g. the deep tf_s4 fused ring on pre-Ampere parts).
     let blocks_by_smem = if res.smem_per_block == 0 {
         u32::MAX
+    } else if res.smem_per_block > arch.smem_per_block {
+        0
     } else {
-        assert!(
-            res.smem_per_block <= arch.smem_per_block,
-            "block smem {} exceeds {} limit {}",
-            res.smem_per_block,
-            arch.name,
-            arch.smem_per_block
-        );
         arch.smem_per_sm / round_up_to(res.smem_per_block, arch.smem_granularity)
     };
 
@@ -227,5 +226,16 @@ mod tests {
     #[should_panic]
     fn oversized_block_panics() {
         occ(2048, 32, 0);
+    }
+
+    #[test]
+    fn infeasible_smem_reports_zero_blocks_instead_of_panicking() {
+        // a footprint past the per-block cap cannot launch: 0 blocks,
+        // limited by shared memory (the tf_s4 ring on V100 hits this)
+        let o = occ(256, 56, 120_000);
+        assert_eq!(o.blocks_per_sm, 0);
+        assert_eq!(o.active_warps, 0);
+        assert_eq!(o.limiter, Limiter::SharedMem);
+        assert_eq!(o.occupancy_pct, 0.0);
     }
 }

@@ -36,6 +36,7 @@
 //! | `gmem_*`, `smem_u`, `smem_eta_*` | 3D blocking | `Blocked3D`     |
 //! | `semi`                     | semi-stencil      | `SemiStencil`   |
 //! | `st_smem_*`, `st_reg_*`    | 2.5D streaming    | `Streaming25D`  |
+//! | `tf_s2`, `tf_s4`           | temporal blocking | `TimeFused`     |
 //!
 //! — so a kernel-variant id picks real executable code on the CPU path
 //! (`Mode::Golden`), and campaign cells report *measured* steps/sec
@@ -66,7 +67,21 @@
 //! treats N as a global worker budget split between the job fan-out
 //! and each job's tile fan-out, and `hostencil bench --thread-sweep
 //! 1,2,4,8` measures per-thread-count steady-state rates and parallel
-//! efficiency of the pool executor.
+//! efficiency of the pool executor (plus a least-squares Amdahl fit of
+//! each shape's serial fraction, printed next to gpusim's occupancy
+//! prediction).
+//!
+//! The **temporally fused family** (`stencil::fused::TimeFused`,
+//! variants `tf_s2`/`tf_s4`) goes one step further: it advances `s`
+//! leapfrog steps per memory sweep with overlapped (redundant-halo)
+//! (z, y) tiles, staying bit-identical to golden — skirt points apply
+//! their own region's update and sources inject between virtual
+//! sub-steps via the `Propagator::advance_fused` batch path, which the
+//! coordinator drives between observer callbacks. `hostencil run
+//! --fuse 2`, `hostencil bench --fuse 1,2,4`, and `hostencil autotune
+//! --measured --fuse` select, sweep, and rank fusion degrees; the
+//! gpusim traffic model amortizes DRAM by `s` and charges the `s*R`
+//! skirt at L2, so the model ranks fusion alongside tile shapes.
 
 pub mod bench;
 pub mod config;

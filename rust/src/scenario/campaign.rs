@@ -56,13 +56,26 @@ pub fn split_budget(budget: usize, jobs: usize) -> (usize, usize) {
     (outer, (budget / outer).max(1))
 }
 
-/// One representative variant per code-shape family (the six families
-/// the AOT artifact set ships as inner kernels).
+/// One representative variant per code-shape family: the six families
+/// the AOT artifact set ships as inner kernels, plus the temporally
+/// fused `tf_s2` column (measured through the `TimeFused` CPU analog;
+/// its physics run advances in fused batches, so its metrics sample at
+/// batch boundaries). `tf_s4` stays opt-in via `--variant tf_s4`: its
+/// deep ring cannot launch on the pre-Ampere machines, which would
+/// make "cannot launch" the expected-but-noisy default verdict.
 pub fn default_variants() -> Vec<String> {
-    ["gmem_8x8x8", "smem_u", "semi", "st_smem_16x16", "st_reg_shft_16x16", "st_reg_fixed_32x32"]
-        .iter()
-        .map(|s| s.to_string())
-        .collect()
+    [
+        "gmem_8x8x8",
+        "smem_u",
+        "semi",
+        "st_smem_16x16",
+        "st_reg_shft_16x16",
+        "st_reg_fixed_32x32",
+        "tf_s2",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
 }
 
 /// Map a family shorthand (the `run --variant` names) to its
@@ -453,6 +466,30 @@ mod tests {
         for v in default_variants() {
             assert!(crate::gpusim::kernels::by_id(&v).is_ok(), "{v}");
         }
+        assert!(
+            default_variants().iter().any(|v| v == "tf_s2"),
+            "the fused family must be a campaign column"
+        );
+    }
+
+    #[test]
+    fn fused_campaign_cells_run_and_match_expectations() {
+        // the fused column's physics advances in batches; verdicts and
+        // both perf columns must still come out healthy
+        let spec = CampaignSpec {
+            scenarios: vec![ScenarioId::TinyGrid, ScenarioId::CflMarginStress],
+            variants: vec!["tf_s2".to_string()],
+            machines: vec!["v100".to_string()],
+            steps_scale: Some(0.5),
+            threads: 2,
+        };
+        let report = run_campaign(&spec);
+        assert_eq!(report.cells.len(), 2);
+        assert_eq!(report.off_expectation_count(), 0, "{:?}", report.cells);
+        let tiny = &report.cells[0];
+        assert_eq!(tiny.propagator, "time_fused:s2:16x16");
+        assert!(tiny.measured_steps_per_sec > 0.0);
+        assert!(tiny.predicted_steps_per_sec > 0.0, "tf_s2 launches on V100");
     }
 
     #[test]

@@ -1,0 +1,650 @@
+//! Temporally fused propagator: the fifth code-shape family.
+//!
+//! PRs 3–4 made every step zero-alloc and spawn-free, which left the
+//! 25-point kernel memory-bandwidth-bound: each leapfrog step still
+//! streams the full wavefield through the memory hierarchy once.
+//! [`TimeFused`] breaks that ceiling with *temporal blocking* — the
+//! deep-pipeline idea of Zohouri et al. (FPGA OpenCL stencils) and the
+//! skewed wavefronts of Jacquelin et al., expressed as overlapped
+//! (redundant-halo) tiles: one sweep advances the interior `s`
+//! leapfrog steps, so u/um/v/eta stream through memory once per `s`
+//! steps instead of once per step.
+//!
+//! ## The overlapped-tile trapezoid
+//!
+//! The interior's (z, y) plane is tiled `tile_z x tile_y` with full x
+//! rows (x is the contiguous axis and is never tiled — same convention
+//! as [`super::streaming::Streaming25D`]). To advance a tile `T` by
+//! `n` steps in one visit, sub-step `j` (1-based) computes `T` plus an
+//! `(n-j)*R` skirt: the skirt values are *redundantly recomputed* —
+//! every tile derives its own copy of the halo its later sub-steps
+//! need, so tiles stay fully independent within a batch and the
+//! parallel fan-out needs no cross-tile synchronization. Each worker
+//! stages its tile's working set — `u(n0)` and `u(n0-1)` plus the
+//! static `v`/`eta` — in per-worker scratch planned once per (domain,
+//! threads): the CPU materialization of the `(2R+1) + s`-deep plane
+//! ring a fused GPU kernel would stream through shared memory (on the
+//! CPU the x-stream is already register/L1-resident, so the ring is
+//! kept resident as one brick and the two time levels ping-pong in
+//! place through the same fused row kernels as every other family).
+//!
+//! ## Bit-identical physics
+//!
+//! Golden equivalence survives fusion because nothing about the
+//! per-point arithmetic changes:
+//! * every computed point applies its *own* region's update —
+//!   [`row_segments`] splits each x-row into PML / inner / PML exactly
+//!   along the 7-region decomposition's boundaries, so skirt points in
+//!   the PML sponge step through [`super::pml_row`] and inner points
+//!   through [`super::inner_row`], in the golden arithmetic order;
+//! * per-step source injection lands *between* virtual sub-steps: the
+//!   coordinator hands the whole batch's amplitude schedule down via
+//!   [`SourceBatch`], and each tile injects into any computed point
+//!   that matches a source position, in coordinator order;
+//! * out-of-interior neighbors read the local zero frame — the same
+//!   Dirichlet ghost the padded global arrays carry.
+//! The equivalence suite asserts `tf_s2`/`tf_s4` are bit-identical to
+//! the golden oracle on odd grids with multi-source injection.
+//!
+//! ## Buffer protocol
+//!
+//! A fused batch cannot write into the buffers it reads: a tile's
+//! skirt overlaps its neighbors' cores, so in-place output would
+//! clobber inputs of concurrently (or later) executed tiles. The
+//! family therefore owns a second persistent padded buffer pair:
+//! tiles write `u(n0+n)` / `u(n0+n-1)` of their core into it, and the
+//! pairs O(1)-swap with the caller's buffers after the sweep — the
+//! steady state allocates nothing (`rust/tests/zero_alloc.rs` covers
+//! `tf_*` at threads 1 and 3). This is why temporal fusion changes the
+//! `Propagator` contract itself: `advance_fused` takes both wavefield
+//! buffers `&mut` and a per-batch injection schedule, and the
+//! coordinator hands the family whole step batches between observer
+//! callbacks.
+
+use super::propagator::{FusedInputs, Plan, Propagator, PropagatorInputs, SharedOut, SourceBatch};
+use super::{inner_row, pml_row, Consts};
+use crate::gpusim::kernels::KernelVariant;
+use crate::grid::{Dim3, Domain, Field3, FieldView, Region, RegionClass};
+use crate::R;
+
+/// Per-worker staging for one tile's fused batch: two time-level
+/// bricks (`ua`/`ub`, R-framed like the global padded arrays), the
+/// damping profile (`ee`, R-framed) and the velocity model (`vv`,
+/// frameless) over the tile-plus-skirt extent. Allocated once in the
+/// plan at the worst-case (tile + 2sR, clipped) extent; every batch
+/// re-slices it.
+pub(crate) struct FusedScratch {
+    ua: Vec<f32>,
+    ub: Vec<f32>,
+    ee: Vec<f32>,
+    vv: Vec<f32>,
+}
+
+impl FusedScratch {
+    fn for_domain(d: &Domain, s: usize, tile_z: usize, tile_y: usize) -> FusedScratch {
+        let ni = d.interior;
+        let skirt = s.max(1) * R;
+        let ez = (tile_z + 2 * skirt).min(ni.z);
+        let ey = (tile_y + 2 * skirt).min(ni.y);
+        let dp = Dim3::new(ez, ey, ni.x).padded(R).volume();
+        let de = ez * ey * ni.x;
+        FusedScratch { ua: vec![0.0; dp], ub: vec![0.0; dp], ee: vec![0.0; dp], vv: vec![0.0; de] }
+    }
+}
+
+/// Temporal blocking: advance the interior `s` leapfrog steps per
+/// memory sweep with overlapped (z, y) tiles.
+pub struct TimeFused {
+    /// Fusion degree: leapfrog steps per sweep (>= 1; the factory only
+    /// builds degrees >= 2 — degree 1 belongs to `Streaming25D`).
+    pub s: usize,
+    /// Plane-tile extents: `tile_z` tiles z, `tile_y` tiles y; x rows
+    /// stay whole.
+    pub tile_z: usize,
+    pub tile_y: usize,
+    plan: Option<Plan<FusedScratch>>,
+    /// Persistent output pair for the fused sweep (swapped with the
+    /// caller's buffers after each batch); rebuilt only on a domain
+    /// change.
+    next: Option<(Field3, Field3)>,
+}
+
+impl TimeFused {
+    pub fn new(s: usize, tile_z: usize, tile_y: usize) -> TimeFused {
+        TimeFused {
+            s: s.max(1),
+            tile_z: tile_z.max(1),
+            tile_y: tile_y.max(1),
+            plan: None,
+            next: None,
+        }
+    }
+
+    pub fn from_variant(v: &KernelVariant) -> TimeFused {
+        TimeFused::new(v.fuse as usize, v.d1 as usize, v.d2 as usize)
+    }
+}
+
+/// Build (or fetch) the cached fused plan for `slot`: (z, y) tiles
+/// over the whole interior with full x rows — the fused family
+/// classifies per point instead of tiling the 7 regions separately,
+/// because its skirts cross region boundaries anyway. A free function
+/// over the plan slot (not `&mut self`) so `advance_fused` can hold
+/// the plan and the output-pair field at the same time.
+fn ensure_plan<'a>(
+    slot: &'a mut Option<Plan<FusedScratch>>,
+    domain: &Domain,
+    threads: usize,
+    s: usize,
+    tz: usize,
+    ty: usize,
+) -> &'a mut Plan<FusedScratch> {
+    let d = *domain;
+    Plan::ensure(
+        slot,
+        domain,
+        threads,
+        |d| {
+            let whole = Region {
+                name: "interior",
+                class: RegionClass::Inner,
+                offset: Dim3::new(0, 0, 0),
+                shape: d.interior,
+            };
+            whole.split(Dim3::new(tz, ty, d.interior.x))
+        },
+        move |_| FusedScratch::for_domain(&d, s, tz, ty),
+    )
+}
+
+impl Propagator for TimeFused {
+    fn name(&self) -> &'static str {
+        "time_fused"
+    }
+
+    fn signature(&self) -> String {
+        format!("time_fused:s{}:{}x{}", self.s, self.tile_z, self.tile_y)
+    }
+
+    /// Single-step path: the classification-split row walk over the
+    /// global buffers, in place — no skirt, no staging. Used by plain
+    /// `Coordinator::step()` and as the tail of odd-length runs; bit-
+    /// identical to the golden walk.
+    fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
+        debug_assert_eq!(out.dims(), inp.domain.padded());
+        let k = Consts::of(inp.domain);
+        let plan =
+            ensure_plan(&mut self.plan, inp.domain, inp.threads, self.s, self.tile_z, self.tile_y);
+        plan.run_into(out, |t, _scr, o| direct_tile_into(inp, t, k, o));
+    }
+
+    fn max_fuse(&self) -> usize {
+        self.s
+    }
+
+    /// The fused sweep: every tile advances `batch.n_steps` virtual
+    /// sub-steps locally (trapezoid skirts, per-sub-step injection)
+    /// and writes its core's two newest time levels into the
+    /// persistent output pair, which then O(1)-swaps with the caller's
+    /// buffers.
+    fn advance_fused(
+        &mut self,
+        inp: &FusedInputs<'_>,
+        u_pad: &mut Field3,
+        um_pad: &mut Field3,
+        batch: &SourceBatch<'_>,
+    ) {
+        let n = batch.n_steps;
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            // tail batch: direct in-place step + rotate + inject,
+            // exactly the trait's default path
+            self.step_into(
+                &PropagatorInputs {
+                    domain: inp.domain,
+                    u_pad,
+                    v: inp.v,
+                    eta_pad: inp.eta_pad,
+                    threads: inp.threads,
+                },
+                um_pad,
+            );
+            std::mem::swap(u_pad, um_pad);
+            for (i, p) in batch.positions.iter().enumerate() {
+                u_pad.add(R + p.z, R + p.y, R + p.x, batch.amp(0, i));
+            }
+            return;
+        }
+        assert!(n <= self.s, "batch of {n} steps exceeds this family's fusion degree {}", self.s);
+        debug_assert_eq!(u_pad.dims(), inp.domain.padded());
+        debug_assert_eq!(um_pad.dims(), inp.domain.padded());
+        let k = Consts::of(inp.domain);
+        let domain = *inp.domain;
+        let padded = inp.domain.padded();
+        if self.next.as_ref().map(|(a, _)| a.dims()) != Some(padded) {
+            self.next = Some((Field3::zeros(padded), Field3::zeros(padded)));
+        }
+        let plan =
+            ensure_plan(&mut self.plan, inp.domain, inp.threads, self.s, self.tile_z, self.tile_y);
+        let (next_u, next_um) = self.next.as_mut().expect("just ensured");
+        {
+            let out_u = SharedOut::new(next_u);
+            let out_um = SharedOut::new(next_um);
+            let u = u_pad.view();
+            let um = um_pad.view();
+            let v = inp.v.view();
+            let eta = inp.eta_pad.view();
+            plan.run_tasks(|t, scr| {
+                fused_tile_batch(&domain, u, um, v, eta, t, n, k, batch, scr, &out_u, &out_um);
+            });
+        }
+        std::mem::swap(u_pad, next_u);
+        std::mem::swap(um_pad, next_um);
+    }
+}
+
+/// The up-to-three x-segments of interior row `(gz, gy)` with their
+/// region class: `(x0, len, inner)`. Rows inside the inner z/y band
+/// split into PML cap, inner core, PML cap along the exact 7-region
+/// decomposition boundaries; every other row is one whole-row PML
+/// segment (the two tail entries come back zero-length). Keeping this
+/// split exact is what makes per-point classification bit-identical to
+/// the golden region walk.
+fn row_segments(d: &Domain, gz: usize, gy: usize) -> [(usize, usize, bool); 3] {
+    let n = d.interior;
+    let w = d.pml_width;
+    let inner_zy = gz >= w && gz < n.z - w && gy >= w && gy < n.y - w;
+    if inner_zy {
+        [(0, w, false), (w, n.x - 2 * w, true), (n.x - w, w, false)]
+    } else {
+        [(0, n.x, false), (0, 0, false), (0, 0, false)]
+    }
+}
+
+/// One tile of the single-step path: walk the tile's rows through the
+/// class-split fused row kernels, updating the padded output in place.
+fn direct_tile_into(inp: &PropagatorInputs<'_>, t: &Region, k: Consts, out: &SharedOut) {
+    debug_assert_eq!(t.shape.x, inp.domain.interior.x, "fused tiles keep whole x rows");
+    let u = inp.u_pad.view();
+    let v = inp.v.view();
+    let e = inp.eta_pad.view();
+    for dz in 0..t.shape.z {
+        for dy in 0..t.shape.y {
+            let (gz, gy) = (t.offset.z + dz, t.offset.y + dy);
+            for (x0, len, inner) in row_segments(inp.domain, gz, gy) {
+                if len == 0 {
+                    continue;
+                }
+                // SAFETY: tiles partition the interior; this row
+                // segment belongs exclusively to the current task.
+                let row = unsafe { out.seg_mut(gz + R, gy + R, x0 + R, len) };
+                if inner {
+                    inner_row(u, v, gz, gy, x0, len, k, row);
+                } else {
+                    pml_row(u, v, e, gz, gy, x0, len, k, row);
+                }
+            }
+        }
+    }
+}
+
+/// Zero the R-wide frame of a `dp`-shaped local brick (the local image
+/// of the global arrays' Dirichlet ghost ring). Interior cells are the
+/// loader's/kernels' responsibility — every cell a sub-step reads is
+/// either framed here, loaded, or written by an earlier sub-step.
+fn zero_frame(buf: &mut [f32], dp: Dim3) {
+    let plane = dp.y * dp.x;
+    buf[..R * plane].fill(0.0);
+    buf[(dp.z - R) * plane..dp.z * plane].fill(0.0);
+    for pz in R..dp.z - R {
+        let base = pz * plane;
+        buf[base..base + R * dp.x].fill(0.0);
+        buf[base + (dp.y - R) * dp.x..base + dp.y * dp.x].fill(0.0);
+        for py in R..dp.y - R {
+            let rb = base + py * dp.x;
+            buf[rb..rb + R].fill(0.0);
+            buf[rb + dp.x - R..rb + dp.x].fill(0.0);
+        }
+    }
+}
+
+/// Advance one tile `batch.n_steps` virtual sub-steps in per-worker
+/// scratch and write its core's two newest time levels into the
+/// output pair. See the module docs for the trapezoid geometry; the
+/// invariants the loops below maintain are:
+///
+/// * `E_j` (the sub-step-`j` computed box) is the tile plus an
+///   `(n-j)*R` skirt, clipped to the interior;
+/// * dilating `E_{j+1}` by the stencil halo `R` stays inside
+///   `E_j ∪ frame`, so every neighbor a sub-step reads was computed
+///   one sub-step earlier (or is ghost zero);
+/// * the leapfrog `um` term of sub-step `j+2` is the center value
+///   written at sub-step `j`, which `E_{j+2} ⊆ E_j` guarantees.
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI: fields + tile + batch + outputs
+fn fused_tile_batch(
+    d: &Domain,
+    u: FieldView<'_>,
+    um: FieldView<'_>,
+    v: FieldView<'_>,
+    eta: FieldView<'_>,
+    t: &Region,
+    n: usize,
+    k: Consts,
+    batch: &SourceBatch<'_>,
+    scr: &mut FusedScratch,
+    out_u: &SharedOut,
+    out_um: &SharedOut,
+) {
+    let ni = d.interior;
+    let nx = ni.x;
+    debug_assert_eq!(t.shape.x, nx, "fused tiles keep whole x rows");
+    let skirt = n * R;
+    // E_c: the loaded extent — tile plus the full n*R skirt, clipped.
+    let z0e = t.offset.z.saturating_sub(skirt);
+    let z1e = (t.offset.z + t.shape.z + skirt).min(ni.z);
+    let y0e = t.offset.y.saturating_sub(skirt);
+    let y1e = (t.offset.y + t.shape.y + skirt).min(ni.y);
+    let de = Dim3::new(z1e - z0e, y1e - y0e, nx);
+    let dp = de.padded(R);
+
+    // take the two time-level bricks out of the scratch so they can
+    // ping-pong by O(1) Vec swap (no allocation: take leaves an empty
+    // Vec, and both are restored below)
+    let mut ua = std::mem::take(&mut scr.ua);
+    let mut ub = std::mem::take(&mut scr.ub);
+    let ee = &mut scr.ee[..dp.volume()];
+    let vv = &mut scr.vv[..de.volume()];
+    zero_frame(&mut ua[..dp.volume()], dp);
+    zero_frame(&mut ub[..dp.volume()], dp);
+    zero_frame(ee, dp);
+
+    let lrow = |lz: usize, ly: usize, x: usize| (lz * dp.y + ly) * dp.x + x;
+    // load u + eta over all of E_c (sub-step 1 reads the full skirt)
+    for lz in 0..de.z {
+        let gz = z0e + lz;
+        for ly in 0..de.y {
+            let gy = y0e + ly;
+            let dst = lrow(R + lz, R + ly, R);
+            ua[dst..dst + nx].copy_from_slice(u.seg(gz + R, gy + R, R, nx));
+            ee[dst..dst + nx].copy_from_slice(eta.seg(gz + R, gy + R, R, nx));
+        }
+    }
+    // um + v only feed computed points, so their load stops at E_1
+    // (the (n-1)*R skirt)
+    let s1 = skirt - R;
+    let z0a = t.offset.z.saturating_sub(s1);
+    let z1a = (t.offset.z + t.shape.z + s1).min(ni.z);
+    let y0a = t.offset.y.saturating_sub(s1);
+    let y1a = (t.offset.y + t.shape.y + s1).min(ni.y);
+    for gz in z0a..z1a {
+        let lz = gz - z0e;
+        for gy in y0a..y1a {
+            let ly = gy - y0e;
+            let dst = lrow(R + lz, R + ly, R);
+            ub[dst..dst + nx].copy_from_slice(um.seg(gz + R, gy + R, R, nx));
+            let vdst = (lz * de.y + ly) * de.x;
+            vv[vdst..vdst + nx].copy_from_slice(v.seg(gz, gy, 0, nx));
+        }
+    }
+
+    // the trapezoid: ua holds the newest computed level, ub the one
+    // before it (and, on entry to each sub-step, the row kernels'
+    // in-place um term)
+    for j in 1..=n {
+        let sk = (n - j) * R;
+        let z0j = t.offset.z.saturating_sub(sk);
+        let z1j = (t.offset.z + t.shape.z + sk).min(ni.z);
+        let y0j = t.offset.y.saturating_sub(sk);
+        let y1j = (t.offset.y + t.shape.y + sk).min(ni.y);
+        {
+            let uav = FieldView::new(dp, &ua[..dp.volume()]);
+            let vvv = FieldView::new(de, vv);
+            let eev = FieldView::new(dp, ee);
+            for gz in z0j..z1j {
+                let lz = gz - z0e;
+                for gy in y0j..y1j {
+                    let ly = gy - y0e;
+                    for (x0, len, inner) in row_segments(d, gz, gy) {
+                        if len == 0 {
+                            continue;
+                        }
+                        let b = lrow(R + lz, R + ly, R + x0);
+                        let row = &mut ub[b..b + len];
+                        if inner {
+                            inner_row(uav, vvv, lz, ly, x0, len, k, row);
+                        } else {
+                            pml_row(uav, vvv, eev, lz, ly, x0, len, k, row);
+                        }
+                    }
+                }
+            }
+        }
+        // per-sub-step source injection, in coordinator order; x is
+        // always inside the (whole-row) computed extent
+        for (i, p) in batch.positions.iter().enumerate() {
+            if p.z >= z0j && p.z < z1j && p.y >= y0j && p.y < y1j {
+                ub[lrow(R + p.z - z0e, R + p.y - y0e, R + p.x)] += batch.amp(j - 1, i);
+            }
+        }
+        std::mem::swap(&mut ua, &mut ub);
+    }
+
+    // ua = u(n0+n) on E_n = T, ub = u(n0+n-1) on E_{n-1} ⊇ T: write
+    // the core out. SAFETY: tiles partition the interior and each
+    // (gz, gy) row belongs to exactly one tile, for both buffers.
+    for dz in 0..t.shape.z {
+        let gz = t.offset.z + dz;
+        let lz = gz - z0e;
+        for dy in 0..t.shape.y {
+            let gy = t.offset.y + dy;
+            let ly = gy - y0e;
+            let src = lrow(R + lz, R + ly, R);
+            unsafe {
+                out_u.seg_mut(gz + R, gy + R, R, nx).copy_from_slice(&ua[src..src + nx]);
+                out_um.seg_mut(gz + R, gy + R, R, nx).copy_from_slice(&ub[src..src + nx]);
+            }
+        }
+    }
+    scr.ua = ua;
+    scr.ub = ub;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::propagator::build;
+    use crate::testkit::Rng;
+    use crate::wave;
+
+    struct State {
+        domain: Domain,
+        u_pad: Field3,
+        um_pad: Field3,
+        v: Field3,
+        eta_pad: Field3,
+    }
+
+    fn random_state(interior: Dim3, pml: usize, seed: u64) -> State {
+        let domain = Domain::new(interior, pml, 10.0, 1e-3).unwrap();
+        let mut rng = Rng::new(seed);
+        State {
+            domain,
+            u_pad: rng.field(interior).pad(R),
+            um_pad: rng.field(interior).pad(R),
+            v: rng.field_in(interior, 1500.0, 3500.0),
+            eta_pad: wave::eta_profile(&domain, 3500.0).pad(R),
+        }
+    }
+
+    fn inputs(st: &State, threads: usize) -> FusedInputs<'_> {
+        FusedInputs { domain: &st.domain, v: &st.v, eta_pad: &st.eta_pad, threads }
+    }
+
+    /// Sources that straddle region classes: inner center, PML corner
+    /// strip, near-edge inner point.
+    fn sources(interior: Dim3) -> Vec<Dim3> {
+        vec![
+            Dim3::new(interior.z / 2, interior.y / 2, interior.x / 2),
+            Dim3::new(1, 1, 2),
+            Dim3::new(interior.z - 2, interior.y - 2, interior.x - 3),
+        ]
+    }
+
+    fn amps_for(n: usize, n_src: usize) -> Vec<f32> {
+        (0..n * n_src)
+            .map(|i| 0.01 * (i as f32 + 1.0) * if i % 2 == 0 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    /// Run `batches` through a propagator, returning (u, um).
+    fn run_batches(
+        prop: &mut dyn Propagator,
+        st: &State,
+        threads: usize,
+        batches: &[usize],
+        positions: &[Dim3],
+    ) -> (Field3, Field3) {
+        let mut u = st.u_pad.clone();
+        let mut um = st.um_pad.clone();
+        for &n in batches {
+            let amps = amps_for(n, positions.len());
+            let batch = SourceBatch { positions, amps: &amps, n_steps: n };
+            prop.advance_fused(&inputs(st, threads), &mut u, &mut um, &batch);
+        }
+        (u, um)
+    }
+
+    #[test]
+    fn fused_batches_are_bit_identical_to_stepped_golden() {
+        // odd grid + degenerate tiny grid; multi-source with PML-strip
+        // injection; full batches, tail batches, threads 1 and 3
+        for (interior, pml, seed) in
+            [(Dim3::new(13, 11, 17), 3, 0xF00D), (Dim3::new(9, 7, 11), 2, 0xBEEF)]
+        {
+            let st = random_state(interior, pml, seed);
+            let positions = sources(interior);
+            for s in [2usize, 4] {
+                for threads in [1usize, 3] {
+                    // 3 batches: full, full, tail — 2s+1 steps total
+                    let batches = [s, s, 1];
+                    let mut tf = TimeFused::new(s, 16, 16);
+                    let (u_f, um_f) = run_batches(&mut tf, &st, threads, &batches, &positions);
+
+                    // golden: the default (step + swap + inject) path
+                    let mut gold = build("naive").unwrap();
+                    let (u_g, um_g) = run_batches(gold.as_mut(), &st, 1, &batches, &positions);
+
+                    assert_eq!(
+                        u_f.max_abs_diff(&u_g),
+                        0.0,
+                        "{interior} s={s} threads={threads}: u diverged from golden"
+                    );
+                    assert_eq!(
+                        um_f.max_abs_diff(&um_g),
+                        0.0,
+                        "{interior} s={s} threads={threads}: um diverged from golden"
+                    );
+                    assert!(u_f.max_abs() > 0.0, "wave must have propagated");
+                    assert_eq!(u_f.unpad(R).pad(R), u_f, "ghost ring must stay zero");
+                    assert_eq!(um_f.unpad(R).pad(R), um_f, "um ghost ring must stay zero");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn small_tiles_recompute_skirts_identically() {
+        // deliberately tiny 4x4 plane tiles: deep overlapped skirts
+        // cross region boundaries everywhere and must still agree
+        let st = random_state(Dim3::new(15, 12, 14), 3, 0xACE5);
+        let positions = sources(st.domain.interior);
+        let mut tf = TimeFused::new(2, 4, 4);
+        let (u_f, _) = run_batches(&mut tf, &st, 2, &[2, 2], &positions);
+        let mut gold = build("naive").unwrap();
+        let (u_g, _) = run_batches(gold.as_mut(), &st, 1, &[2, 2], &positions);
+        assert_eq!(u_f.max_abs_diff(&u_g), 0.0, "4x4 tiles diverged");
+    }
+
+    #[test]
+    fn direct_single_step_matches_naive() {
+        let st = random_state(Dim3::new(13, 11, 17), 3, 0xC0DE);
+        let step = |prop: &mut dyn Propagator, threads: usize| -> Field3 {
+            let mut out = st.um_pad.clone();
+            prop.step_into(
+                &PropagatorInputs {
+                    domain: &st.domain,
+                    u_pad: &st.u_pad,
+                    v: &st.v,
+                    eta_pad: &st.eta_pad,
+                    threads,
+                },
+                &mut out,
+            );
+            out
+        };
+        let mut naive = build("naive").unwrap();
+        let base = step(naive.as_mut(), 1);
+        for threads in [1, 2] {
+            let mut tf = TimeFused::new(2, 16, 16);
+            let got = step(&mut tf, threads);
+            assert_eq!(got.max_abs_diff(&base), 0.0, "direct path deviated ({threads} thr)");
+        }
+    }
+
+    #[test]
+    fn factory_maps_degrees_onto_the_right_shapes() {
+        assert_eq!(build("tf_s2").unwrap().name(), "time_fused");
+        assert_eq!(build("tf_s2").unwrap().max_fuse(), 2);
+        assert_eq!(build("tf_s4").unwrap().max_fuse(), 4);
+        assert_eq!(build("tf").unwrap().max_fuse(), 2, "tf shorthand is tf_s2");
+        // the degree-1 control is the plain streaming shape
+        assert_eq!(build("tf_s1").unwrap().name(), "streaming2.5d");
+        assert_eq!(build("tf_s1").unwrap().max_fuse(), 1);
+        // signatures separate degrees (different physics *schedule*,
+        // same physics — but fused runs observe per batch, so campaign
+        // cells must not share a physics run across degrees)
+        assert_ne!(build("tf_s2").unwrap().signature(), build("tf_s4").unwrap().signature());
+    }
+
+    #[test]
+    fn reused_plans_survive_domain_changes_and_batch_sizes() {
+        let a = random_state(Dim3::new(13, 11, 17), 3, 1);
+        let b = random_state(Dim3::new(9, 15, 12), 2, 2);
+        let positions_a = sources(a.domain.interior);
+        let positions_b = sources(b.domain.interior);
+        let mut reused = TimeFused::new(4, 16, 16);
+        for (st, positions) in [(&a, &positions_a), (&b, &positions_b), (&a, &positions_a)] {
+            for threads in [1usize, 2] {
+                let (u_got, um_got) = run_batches(&mut reused, st, threads, &[4, 3], positions);
+                let mut fresh = TimeFused::new(4, 16, 16);
+                let (u_want, um_want) = run_batches(&mut fresh, st, 1, &[4, 3], positions);
+                assert_eq!(u_got.max_abs_diff(&u_want), 0.0, "stale fused plan (u)");
+                assert_eq!(um_got.max_abs_diff(&um_want), 0.0, "stale fused plan (um)");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_batch_is_rejected() {
+        let st = random_state(Dim3::new(11, 9, 11), 2, 3);
+        let mut tf = TimeFused::new(2, 16, 16);
+        let mut u = st.u_pad.clone();
+        let mut um = st.um_pad.clone();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            tf.advance_fused(&inputs(&st, 1), &mut u, &mut um, &SourceBatch::silent(3));
+        }));
+        assert!(r.is_err(), "a batch deeper than the fusion degree must panic loudly");
+    }
+
+    #[test]
+    fn row_segments_follow_the_decomposition() {
+        let d = Domain::new(Dim3::new(16, 14, 12), 3, 10.0, 1e-3).unwrap();
+        // PML row (outside the inner z band): one whole-row segment
+        assert_eq!(row_segments(&d, 0, 7), [(0, 12, false), (0, 0, false), (0, 0, false)]);
+        assert_eq!(row_segments(&d, 7, 13), [(0, 12, false), (0, 0, false), (0, 0, false)]);
+        // inner row: PML cap, inner core, PML cap
+        assert_eq!(row_segments(&d, 7, 7), [(0, 3, false), (3, 6, true), (9, 3, false)]);
+    }
+}

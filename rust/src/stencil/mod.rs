@@ -19,18 +19,21 @@
 //!   integration tests compare PJRT output against.
 //! * [`propagator`] is the code-shape engine: a [`propagator::Propagator`]
 //!   trait with tiled, multithreaded CPU analogs of the paper's kernel
-//!   families (naive, 3D-blocked, 2.5D streaming, semi-stencil), so
-//!   "which shape is fastest at which tile size" is measurable on the
-//!   CPU path, not just predicted by gpusim.
+//!   families (naive, 3D-blocked, 2.5D streaming, semi-stencil, and
+//!   the temporally fused `tf_*` family that advances `s` leapfrog
+//!   steps per memory sweep), so "which shape is fastest at which tile
+//!   size — and at which fusion degree" is measurable on the CPU path,
+//!   not just predicted by gpusim.
 
 mod blocked;
+mod fused;
 mod golden;
 pub mod propagator;
 mod semi;
 mod streaming;
 
 pub use golden::GoldenPropagator;
-pub use propagator::{Propagator, PropagatorInputs};
+pub use propagator::{FusedInputs, Propagator, PropagatorInputs, SourceBatch};
 
 use crate::grid::{Dim3, Domain, Field3, FieldView};
 use crate::{R, R_ETA};

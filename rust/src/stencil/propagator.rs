@@ -55,6 +55,7 @@ use crate::runtime::pool::WorkerPool;
 use crate::R;
 
 pub use super::blocked::Blocked3D;
+pub use super::fused::TimeFused;
 pub use super::semi::SemiStencil;
 pub use super::streaming::Streaming25D;
 
@@ -74,10 +75,52 @@ pub struct PropagatorInputs<'a> {
     pub threads: usize,
 }
 
+/// Borrowed per-batch state for [`Propagator::advance_fused`]: the
+/// static fields of [`PropagatorInputs`] without the wavefield — both
+/// wavefield buffers are passed `&mut` because a multi-step batch
+/// rotates them internally.
+pub struct FusedInputs<'a> {
+    pub domain: &'a Domain,
+    /// Velocity model, interior-sized.
+    pub v: &'a Field3,
+    /// Damping profile, R-ghost-padded (zero ghost).
+    pub eta_pad: &'a Field3,
+    /// Worker threads for the tile fan-out (0 = one per core).
+    pub threads: usize,
+}
+
+/// Per-batch source-injection schedule: after every virtual sub-step
+/// `j`, `amp(j, i)` is added to the wavefield at `positions[i]`
+/// (interior coordinates) — the same order the coordinator injects
+/// after an unfused step, so fused batches stay bit-identical.
+pub struct SourceBatch<'a> {
+    /// Interior positions, one per source.
+    pub positions: &'a [Dim3],
+    /// Row-major `[n_steps x positions.len()]` amplitudes.
+    pub amps: &'a [f32],
+    /// Leapfrog steps this batch advances.
+    pub n_steps: usize,
+}
+
+impl SourceBatch<'_> {
+    /// Amplitude of source `i` after virtual sub-step `j` (0-based).
+    #[inline]
+    pub fn amp(&self, j: usize, i: usize) -> f32 {
+        self.amps[j * self.positions.len() + i]
+    }
+
+    /// A batch of `n_steps` with no sources.
+    pub fn silent(n_steps: usize) -> SourceBatch<'static> {
+        SourceBatch { positions: &[], amps: &[], n_steps }
+    }
+}
+
 /// One executable CPU code shape. Implementations compute a full
 /// decomposed time step (inner 25-point + six PML faces) **in place**;
 /// source injection, receivers, and buffer rotation stay in the
-/// coordinator.
+/// coordinator — except inside a fused batch, where injection must
+/// land between virtual sub-steps and therefore rides along in the
+/// [`SourceBatch`].
 pub trait Propagator: Send {
     /// Stable display name (also used as the bench label prefix).
     fn name(&self) -> &'static str;
@@ -94,10 +137,57 @@ pub trait Propagator: Send {
     /// perform no heap allocations; per-domain scratch is (re)built
     /// only when the (domain, threads) key changes.
     fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3);
+
+    /// Natural fusion degree: how many leapfrog steps one memory sweep
+    /// advances. 1 for every family except [`TimeFused`]; the
+    /// coordinator hands `advance_fused` batches of (at most) this
+    /// size between observer callbacks.
+    fn max_fuse(&self) -> usize {
+        1
+    }
+
+    /// Advance `batch.n_steps` steps, rotating the two persistent
+    /// padded buffers and injecting `batch` sources after every
+    /// virtual sub-step. On return `u_pad` holds the newest wavefield
+    /// and `um_pad` the one before it, exactly as if the coordinator
+    /// had stepped + swapped + injected `n_steps` times — the default
+    /// implementation does literally that, so unfused families get the
+    /// batch API for free. [`TimeFused`] overrides it with the
+    /// overlapped-tile sweep that touches memory once per batch.
+    /// Steady-state calls perform no heap allocations on any
+    /// implementation.
+    fn advance_fused(
+        &mut self,
+        inp: &FusedInputs<'_>,
+        u_pad: &mut Field3,
+        um_pad: &mut Field3,
+        batch: &SourceBatch<'_>,
+    ) {
+        for j in 0..batch.n_steps {
+            self.step_into(
+                &PropagatorInputs {
+                    domain: inp.domain,
+                    u_pad,
+                    v: inp.v,
+                    eta_pad: inp.eta_pad,
+                    threads: inp.threads,
+                },
+                um_pad,
+            );
+            std::mem::swap(u_pad, um_pad);
+            for (i, p) in batch.positions.iter().enumerate() {
+                u_pad.add(R + p.z, R + p.y, R + p.x, batch.amp(j, i));
+            }
+        }
+    }
 }
 
 /// The executable CPU analog of a gpusim kernel variant (families map
-/// per the module-level table).
+/// per the module-level table). A streaming variant with a fusion
+/// degree above 1 (the `tf_s*` descriptors, or fused autotune
+/// candidates) maps onto [`TimeFused`]; `tf_s1` deliberately collapses
+/// onto the plain [`Streaming25D`] shape so degree-1 rows of a fusion
+/// sweep measure the real unfused baseline.
 pub fn from_variant(v: &KernelVariant) -> Box<dyn Propagator> {
     match v.family {
         Family::Gmem | Family::SmemU | Family::SmemEta1 | Family::SmemEta3 => {
@@ -105,7 +195,11 @@ pub fn from_variant(v: &KernelVariant) -> Box<dyn Propagator> {
         }
         Family::Semi => Box::new(SemiStencil::from_variant(v)),
         Family::StSmem | Family::StRegShft | Family::StRegFixed => {
-            Box::new(Streaming25D::from_variant(v))
+            if v.fuse > 1 {
+                Box::new(TimeFused::from_variant(v))
+            } else {
+                Box::new(Streaming25D::from_variant(v))
+            }
         }
     }
 }
@@ -136,6 +230,8 @@ pub fn bench_matrix() -> Vec<(&'static str, &'static str)> {
         ("semi_8x8x8", "semi"),
         ("streaming25d_8x8", "st_smem_8x8"),
         ("streaming25d_16x16", "st_smem_16x16"),
+        ("tf_s2", "tf_s2"),
+        ("tf_s4", "tf_s4"),
     ]
 }
 
@@ -174,14 +270,26 @@ impl<S> Plan<S> {
             None => true,
         };
         if stale {
+            // retire the old plan *first*: its task list and per-worker
+            // scratch (which the fused family sizes in whole wavefield
+            // bricks) must not coexist with the replacement, and a
+            // wrong-sized pool should join its threads before the new
+            // one spawns
+            let old_pool = slot.take().and_then(|old| old.pool);
             let tasks = tile(domain);
             let workers = resolve_threads(threads, tasks.len());
-            let scratch = (0..workers).map(|_| mk_scratch(&tasks)).collect();
-            let pool = match slot.take().and_then(|old| old.pool) {
+            let pool = match old_pool {
                 Some(old) if workers > 1 && old.workers() == workers => Some(old),
-                _ if workers > 1 => Some(WorkerPool::new(workers)),
-                _ => None,
+                other => {
+                    drop(other);
+                    if workers > 1 {
+                        Some(WorkerPool::new(workers))
+                    } else {
+                        None
+                    }
+                }
             };
+            let scratch = (0..workers).map(|_| mk_scratch(&tasks)).collect();
             *slot = Some(Plan { domain: *domain, threads, tasks, scratch, pool });
         }
         slot.as_mut().expect("plan just ensured")
@@ -205,10 +313,22 @@ impl<S> Plan<S> {
         S: Send,
     {
         let shared = SharedOut::new(out);
+        self.run_tasks(|t, s| f(t, s, &shared));
+    }
+
+    /// [`Plan::run_into`] without the single-output plumbing: fan the
+    /// tile tasks over the worker slots with each task borrowing its
+    /// scratch entry. The fused family uses this directly because its
+    /// tasks write *two* output buffers (next u and next um) through
+    /// their own [`SharedOut`] handles.
+    pub(crate) fn run_tasks(&mut self, f: impl Fn(&Region, &mut S) + Sync)
+    where
+        S: Send,
+    {
         if self.scratch.len() <= 1 {
             let s = self.scratch.first_mut().expect("plan always has >= 1 worker slot");
             for t in &self.tasks {
-                f(t, &mut *s, &shared);
+                f(t, &mut *s);
             }
             return;
         }
@@ -236,7 +356,7 @@ impl<S> Plan<S> {
                 if i >= tasks.len() {
                     break;
                 }
-                f(&tasks[i], &mut *s, &shared);
+                f(&tasks[i], &mut *s);
             }
         });
     }
@@ -408,7 +528,10 @@ impl Propagator for Naive {
 /// state over `domain`, returning the best-of-`samples` full-step rate
 /// after `warmup` throwaway runs (all-core tile fan-out). This is the
 /// measured cost the `autotune --measured` search ranks tile shapes
-/// by.
+/// (and fusion degrees) by: steps advance through `advance_fused` in
+/// batches of the propagator's natural degree, so a fused family is
+/// measured on its whole-batch sweep while unfused families take the
+/// identical step-and-swap path as before (the default batch impl).
 pub fn measure_steps_per_sec(
     prop: &mut dyn Propagator,
     domain: &Domain,
@@ -424,13 +547,14 @@ pub fn measure_steps_per_sec(
     let mut um_pad = Field3::zeros(domain.padded());
 
     let run = |u_pad: &mut Field3, um_pad: &mut Field3, prop: &mut dyn Propagator| {
+        let fuse = prop.max_fuse().max(1);
+        let inp = FusedInputs { domain, v: &v, eta_pad: &eta_pad, threads: 0 };
         let t0 = Instant::now();
-        for _ in 0..steps {
-            prop.step_into(
-                &PropagatorInputs { domain, u_pad, v: &v, eta_pad: &eta_pad, threads: 0 },
-                um_pad,
-            );
-            std::mem::swap(u_pad, um_pad);
+        let mut done = 0;
+        while done < steps {
+            let b = fuse.min(steps - done);
+            prop.advance_fused(&inp, u_pad, um_pad, &SourceBatch::silent(b));
+            done += b;
         }
         t0.elapsed()
     };

@@ -103,6 +103,46 @@ fn every_shape_matches_golden_on_non_tile_aligned_grids() {
 }
 
 #[test]
+fn fused_family_matches_golden_bitwise_at_every_degree() {
+    // temporal fusion sweeps memory once per s steps, but every point
+    // still takes its own region's update in golden arithmetic order
+    // and sources inject between virtual sub-steps — so the final
+    // wavefield must be *bit-identical* to the per-step golden run,
+    // on odd (non-tile-aligned) grids, with multi-source injection,
+    // at 25 steps (which no supported degree divides: the tail-batch
+    // path is always exercised).
+    let cases = [
+        (Dim3::new(17, 13, 19), 4),
+        (Dim3::new(21, 15, 11), 3),
+        (Dim3::new(9, 7, 11), 2), // the degenerate tiny-grid shape
+    ];
+    for (interior, pml) in cases {
+        let model = VelocityModel::Constant(2400.0);
+        // multi-source: center plus an antiphase source in the PML band
+        let sources = [
+            center_source(interior),
+            Source { pos: Dim3::new(1, 1, 2), f0: 22.0, amplitude: -0.7 },
+        ];
+        let golden = run_shape("naive", interior, pml, &model, &sources, 25, 1);
+        assert!(golden.max_abs() > 0.0, "{interior}: wave must have propagated");
+        for variant in ["tf_s2", "tf_s4"] {
+            for threads in [1, 3] {
+                let got = run_shape(variant, interior, pml, &model, &sources, 25, threads);
+                assert_eq!(
+                    got.max_abs_diff(&golden),
+                    0.0,
+                    "{variant} on {interior} ({threads} threads) deviated from golden"
+                );
+            }
+        }
+        // the degree-1 control rides the plain streaming shape and
+        // must agree too
+        let ctl = run_shape("tf_s1", interior, pml, &model, &sources, 25, 2);
+        assert_eq!(ctl.max_abs_diff(&golden), 0.0, "tf_s1 control on {interior}");
+    }
+}
+
+#[test]
 fn naive_coordinator_agrees_with_golden_propagator_exactly() {
     // ties the engine to the pre-refactor oracle: same physics, same
     // bits, including the source-injection path

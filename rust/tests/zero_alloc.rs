@@ -1,9 +1,10 @@
 //! Proof of the zero-allocation steady state: a counting
 //! `#[global_allocator]` wraps the system allocator, and the test
-//! asserts that once a propagator's plan is warm, the in-place time
-//! loop (`Propagator::step_into` + buffer swap) performs **zero** heap
-//! allocations for every code-shape family, and likewise for
-//! `GoldenPropagator::advance`.
+//! asserts that once a propagator's plan is warm, the batch time loop
+//! (`Propagator::advance_fused` — the default step-and-swap path for
+//! the unfused families, the whole overlapped-tile sweep for `tf_*`)
+//! performs **zero** heap allocations for every code-shape family,
+//! and likewise for `GoldenPropagator::advance`.
 //!
 //! This binary holds exactly one test: the counter is global, so
 //! concurrent tests would see each other's allocations.
@@ -20,7 +21,7 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use hostencil::grid::{Dim3, Domain, Field3};
-use hostencil::stencil::{self, propagator, GoldenPropagator, Propagator, PropagatorInputs};
+use hostencil::stencil::{self, propagator, FusedInputs, GoldenPropagator, Propagator, SourceBatch};
 use hostencil::wave;
 use hostencil::R;
 
@@ -64,6 +65,13 @@ static COUNTER: CountingAllocator = CountingAllocator;
 
 /// Run `steps` warm in-place steps on `threads` worker slots and
 /// return how many heap allocations they performed (on any thread).
+///
+/// Steps advance through the batch path (`advance_fused`, in batches
+/// of the family's natural fusion degree) with a one-source injection
+/// schedule: for the unfused families the default batch impl is
+/// exactly the old step-and-swap loop, and for `tf_*` this covers the
+/// whole fused machinery — staging loads, trapezoid sub-steps, skirt
+/// injection, and the output-pair swap.
 fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize, threads: usize) -> u64 {
     let interior = domain.interior;
     let v = Field3::full(interior, 2000.0);
@@ -72,26 +80,31 @@ fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize, threads:
     u_pad.set(R + interior.z / 2, R + interior.y / 2, R + interior.x / 2, 1.0);
     let mut um_pad = Field3::zeros(domain.padded());
     let mut prop = propagator::build(variant).expect("known variant");
+    let fuse = prop.max_fuse().max(1);
+    let positions = [Dim3::new(interior.z / 2, interior.y / 2, interior.x / 2)];
+    // amplitude schedule sized for the largest batch, built before the
+    // counter is armed (the coordinator reuses its schedule buffers
+    // the same way)
+    let amps = vec![1e-3f32; fuse];
+    let inp = FusedInputs { domain, v: &v, eta_pad: &eta_pad, threads };
+    let advance = |u: &mut Field3, um: &mut Field3, prop: &mut dyn Propagator, n: usize| {
+        let mut done = 0;
+        while done < n {
+            let b = fuse.min(n - done);
+            let batch = SourceBatch { positions: &positions, amps: &amps[..b], n_steps: b };
+            prop.advance_fused(&inp, u, um, &batch);
+            done += b;
+        }
+    };
 
-    // warm-up: builds the tile plan, per-worker scratch, and (for
-    // threads >= 2) spawns the persistent worker pool
-    for _ in 0..2 {
-        prop.step_into(
-            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads },
-            &mut um_pad,
-        );
-        std::mem::swap(&mut u_pad, &mut um_pad);
-    }
+    // warm-up: builds the tile plan, per-worker scratch, the fused
+    // family's output pair, and (for threads >= 2) spawns the
+    // persistent worker pool
+    advance(&mut u_pad, &mut um_pad, prop.as_mut(), 2 * fuse);
 
     ALLOCS.store(0, Ordering::SeqCst);
     ARMED.store(true, Ordering::SeqCst);
-    for _ in 0..steps {
-        prop.step_into(
-            &PropagatorInputs { domain, u_pad: &u_pad, v: &v, eta_pad: &eta_pad, threads },
-            &mut um_pad,
-        );
-        std::mem::swap(&mut u_pad, &mut um_pad);
-    }
+    advance(&mut u_pad, &mut um_pad, prop.as_mut(), steps);
     ARMED.store(false, Ordering::SeqCst);
     assert!(
         u_pad.max_abs() > 0.0 && !u_pad.has_non_finite(),
@@ -107,8 +120,9 @@ fn steady_state_time_loop_performs_zero_heap_allocations() {
     let domain =
         Domain::new(Dim3::new(19, 17, 21), 3, h, stencil::cfl_dt(h, 2000.0)).expect("domain");
 
-    // all four code-shape families, serial and pooled-parallel
-    for variant in ["naive", "gmem_8x8x8", "st_smem_8x8", "semi"] {
+    // all five code-shape families (the fused one at both degrees),
+    // serial and pooled-parallel
+    for variant in ["naive", "gmem_8x8x8", "st_smem_8x8", "semi", "tf_s2", "tf_s4"] {
         for threads in [1, 3] {
             let n = allocs_in_steady_state(variant, &domain, 8, threads);
             assert_eq!(

@@ -5,7 +5,11 @@
 #   BENCH_1.json — the same bench on the current working tree
 #   BENCH_2.json — the working tree's persistent-pool thread sweep
 #                  (`bench --thread-sweep`): per-worker-count
-#                  steady-state rates + parallel efficiency
+#                  steady-state rates + parallel efficiency (plus the
+#                  Amdahl scaling_model fit when the sweep includes 1)
+#   BENCH_3.json — the working tree's temporal-fusion sweep
+#                  (`bench --fuse 1,2,4`): steady-state rate per fusion
+#                  degree with speedups vs the unfused s=1 control
 # and print the per-shape speedup plus the pool's thread scaling. Run
 # from the repository root in a cargo-capable environment, then commit
 # the files:
@@ -13,13 +17,14 @@
 #   ./scripts/bench_delta.sh [baseline-ref]
 #
 # Honors HOSTENCIL_BENCH_SAMPLES / HOSTENCIL_BENCH_WARMUP and
-# BENCH_SIZE / BENCH_STEPS / BENCH_SWEEP.
+# BENCH_SIZE / BENCH_STEPS / BENCH_SWEEP / BENCH_FUSE.
 set -euo pipefail
 
 BASE_REF="${1:-HEAD~1}"
 SIZE="${BENCH_SIZE:-40}"
 STEPS="${BENCH_STEPS:-6}"
 SWEEP="${BENCH_SWEEP:-1,2,4,8}"
+FUSE="${BENCH_FUSE:-1,2,4}"
 OUT_DIR="$(pwd)"
 
 if ! git rev-parse --verify --quiet "$BASE_REF^{commit}" >/dev/null; then
@@ -40,15 +45,16 @@ echo "== baseline $(git rev-parse --short "$BASE_REF") -> BENCH_0.json"
 (cd "$WORKTREE" && cargo run --release -p hostencil -- bench \
   --size "$SIZE" --steps "$STEPS" --json "$OUT_DIR/BENCH_0.json")
 
-# One head-side run yields both the matrix (cases) and the pool sweep
-# (thread_sweep); BENCH_2 is split out of BENCH_1's JSON below instead
-# of re-benching the whole matrix a second time.
-echo "== working tree (+ pool thread sweep $SWEEP) -> BENCH_1.json / BENCH_2.json"
+# One head-side run yields the matrix (cases), the pool sweep
+# (thread_sweep + scaling_model) and the fusion sweep (fuse_sweep);
+# BENCH_2 and BENCH_3 are split out of BENCH_1's JSON below instead of
+# re-benching the whole matrix again.
+echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE) -> BENCH_1/2/3.json"
 cargo run --release -p hostencil -- bench \
-  --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" \
+  --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" --fuse "$FUSE" \
   --json "$OUT_DIR/BENCH_1.json"
 
-python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" <<'EOF'
+python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" <<'EOF'
 import json, sys
 
 def rates(path):
@@ -61,14 +67,31 @@ def rates(path):
 
 head = json.load(open(sys.argv[2]))
 
-# BENCH_2: the pool's thread sweep, split out of the head run so the
-# scaling trajectory is a standalone committable artifact
+# BENCH_2: the pool's thread sweep (+ the Amdahl scaling-model fit),
+# split out of the head run so the scaling trajectory is a standalone
+# committable artifact
 sweep = head.pop("thread_sweep", [])
-bench2 = {k: head[k] for k in ("format_version", "grid", "steps_per_sample", "samples", "warmup") if k in head}
+scaling = head.pop("scaling_model", [])
+meta_keys = ("format_version", "grid", "steps_per_sample", "samples", "warmup")
+bench2 = {k: head[k] for k in meta_keys if k in head}
 bench2["kind"] = "hostencil-bench-thread-sweep"
 bench2["thread_sweep"] = sweep
+bench2["scaling_model"] = scaling
 with open(sys.argv[3], "w") as f:
     json.dump(bench2, f, indent=1)
+
+# BENCH_3: the temporal-fusion sweep (s in {1,2,4}), same treatment
+fuse = head.pop("fuse_sweep", [])
+bench3 = {k: head[k] for k in meta_keys if k in head}
+bench3["kind"] = "hostencil-bench-fuse-sweep"
+bench3["fuse_sweep"] = fuse
+with open(sys.argv[4], "w") as f:
+    json.dump(bench3, f, indent=1)
+
+# rewrite BENCH_1 without the sweeps it just donated, so the committed
+# matrix artifact does not duplicate BENCH_2/BENCH_3's contents
+with open(sys.argv[2], "w") as f:
+    json.dump(head, f, indent=1)
 
 base, new = rates(sys.argv[1]), rates(sys.argv[2])
 print(f"{'shape':<24}{'BENCH_0 Mpts/s':>16}{'BENCH_1 Mpts/s':>16}{'speedup':>9}")
@@ -83,4 +106,17 @@ if sweep:
     for r in sweep:
         eff = f"{100.0 * r['efficiency']:9.0f}%" if "efficiency" in r else "        -"
         print(f"{r['name']:<24}{int(r['threads']):>8}{r['points_per_sec_best'] / 1e6:>12.2f}{eff:>12}")
+
+if scaling:
+    print(f"\nscaling model (Amdahl serial fraction vs gpusim occupancy):")
+    for r in scaling:
+        sf = f"{100.0 * r['serial_fraction']:6.1f}%" if "serial_fraction" in r else "      -"
+        oc = f"{r['occupancy_pct']:6.1f}%" if "occupancy_pct" in r else "      -"
+        print(f"{r['name']:<24}serial {sf}   occupancy {oc}")
+
+if fuse:
+    print(f"\ntemporal-fusion sweep (tf_s{{S}}; speedup vs the s=1 control):")
+    for r in fuse:
+        sp = f"{r['speedup_vs_unfused']:6.2f}x" if "speedup_vs_unfused" in r else "      -"
+        print(f"s={int(r['fuse']):<3}{r['points_per_sec_best'] / 1e6:>12.2f} Mpts/s{sp:>10}")
 EOF
