@@ -28,8 +28,10 @@ use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
+use crate::json::Json;
 use crate::runtime::{Engine, ExecArg};
 use crate::stencil::propagator::{self, FusedInputs, Propagator, PropagatorInputs, SourceBatch};
+use crate::telemetry::{Counter, Histogram, Registry, LATENCY_BOUNDS};
 use crate::wave::Source;
 use crate::R;
 
@@ -79,12 +81,32 @@ pub struct RunOptions {
     /// stepping (NaN only spreads) but returns a summary so the metrics
     /// collector can report *where* the field blew up.
     pub halt_on_non_finite: bool,
+    /// Upper bound on the recording batch size, in steps. 0 (the
+    /// default) keeps the backend's natural cadence — per step for
+    /// unfused families, per fused batch for `tf_*`. Setting N >= 1
+    /// caps batches at N steps so observed runs retain finer-grained
+    /// energy/receiver traces from fused backends, trading away some
+    /// of the fusion win (`--sample-every` on the CLI).
+    pub sample_every: usize,
 }
 
 impl Default for RunOptions {
     fn default() -> Self {
-        RunOptions { halt_on_non_finite: true }
+        RunOptions { halt_on_non_finite: true, sample_every: 0 }
     }
+}
+
+/// Pre-registered coordinator metric handles: registration (which
+/// allocates) happens once in [`Coordinator::set_telemetry`], so the
+/// observed-run loop only bumps atomics. Metric names are catalogued
+/// in docs/METRICS.md.
+struct CoordTelemetry {
+    registry: Registry,
+    steps: Counter,
+    batches: Counter,
+    injections: Counter,
+    nonfinite: Counter,
+    batch_latency: Histogram,
 }
 
 /// Summary of a completed run.
@@ -163,6 +185,9 @@ pub struct Coordinator<'e> {
     energy_log: Vec<f64>,
     steps_done: usize,
     launches: u64,
+    /// Attached flight-recorder registry + pre-registered handles
+    /// (None until [`Coordinator::set_telemetry`]).
+    telemetry: Option<CoordTelemetry>,
 }
 
 impl<'e> Coordinator<'e> {
@@ -273,7 +298,44 @@ impl<'e> Coordinator<'e> {
             energy_log: Vec::new(),
             steps_done: 0,
             launches: 0,
+            telemetry: None,
         })
+    }
+
+    /// Attach a telemetry registry. Pre-registers the coordinator's
+    /// counters and the batch-latency histogram so the stepping hot
+    /// path only bumps pre-allocated atomics; the same registry rides
+    /// down into the propagator layer via `PropagatorInputs`, where
+    /// plans register their per-family instrumentation on next build.
+    /// Flight-recorder events go to the registry's event log when one
+    /// is enabled.
+    pub fn set_telemetry(&mut self, reg: &Registry) {
+        self.telemetry = Some(CoordTelemetry {
+            registry: reg.clone(),
+            steps: reg.counter("hostencil_steps_total", "Leapfrog time steps completed."),
+            batches: reg.counter(
+                "hostencil_batches_total",
+                "Observed-run step batches completed (a fused sweep counts once).",
+            ),
+            injections: reg.counter(
+                "hostencil_source_injections_total",
+                "Individual source-term injections applied to the wavefield.",
+            ),
+            nonfinite: reg.counter(
+                "hostencil_watchdog_nonfinite_total",
+                "Times the energy watchdog observed a non-finite wavefield.",
+            ),
+            batch_latency: reg.histogram(
+                "hostencil_batch_latency_seconds",
+                "Wall-clock latency of one observed-run step batch.",
+                &LATENCY_BOUNDS,
+            ),
+        });
+    }
+
+    /// The attached telemetry registry, if any.
+    pub fn telemetry(&self) -> Option<&Registry> {
+        self.telemetry.as_ref().map(|t| &t.registry)
     }
 
     /// One decomposed step: slice -> launch -> scatter, per region.
@@ -344,6 +406,7 @@ impl<'e> Coordinator<'e> {
                         v: &self.v,
                         eta_pad: &self.eta_pad,
                         threads: self.cpu_threads,
+                        telemetry: self.telemetry.as_ref().map(|t| &t.registry),
                     },
                     &mut self.um_pad,
                 );
@@ -375,6 +438,10 @@ impl<'e> Coordinator<'e> {
         // ghost ring is zero, so padded energy == interior energy
         self.energy_log.push(self.u_pad.energy());
         self.steps_done += 1;
+        if let Some(tel) = &self.telemetry {
+            tel.steps.inc();
+            tel.injections.add(self.sources.len() as u64);
+        }
         Ok(())
     }
 
@@ -406,6 +473,7 @@ impl<'e> Coordinator<'e> {
                 v: &self.v,
                 eta_pad: &self.eta_pad,
                 threads: self.cpu_threads,
+                telemetry: self.telemetry.as_ref().map(|t| &t.registry),
             },
             &mut self.u_pad,
             &mut self.um_pad,
@@ -419,6 +487,10 @@ impl<'e> Coordinator<'e> {
             self.traces[i].push(self.u_pad.get(R + r.z, R + r.y, R + r.x));
         }
         self.energy_log.push(self.u_pad.energy());
+        if let Some(tel) = &self.telemetry {
+            tel.steps.add(b as u64);
+            tel.injections.add((self.sources.len() * b) as u64);
+        }
         Ok(())
     }
 
@@ -478,9 +550,24 @@ impl<'e> Coordinator<'e> {
         }
         let t0 = Instant::now();
         let fuse = self.fuse.max(1);
+        // sample_every caps the recording cadence below the backend's
+        // natural fusion degree (0 keeps it)
+        let cadence = match opts.sample_every {
+            0 => fuse,
+            n => fuse.min(n),
+        };
+        if let Some(tel) = &self.telemetry {
+            tel.registry.events().emit("run_start", &[
+                ("mode", Json::Str(format!("{:?}", self.mode))),
+                ("steps", Json::Num(steps as f64)),
+                ("fuse", Json::Num(fuse as f64)),
+                ("cadence", Json::Num(cadence as f64)),
+            ]);
+        }
         let mut done = 0;
         while done < steps {
-            let b = fuse.min(steps - done);
+            let b = cadence.min(steps - done);
+            let t_batch = Instant::now();
             if b <= 1 {
                 self.step()?;
             } else {
@@ -491,10 +578,29 @@ impl<'e> Coordinator<'e> {
             // always sums to a finite f64, so a non-finite energy is an
             // exact (and O(1)-here) proxy for a non-finite wavefield.
             let energy = self.energy_log.last().copied().unwrap_or(0.0);
+            if let Some(tel) = &self.telemetry {
+                tel.batches.inc();
+                tel.batch_latency.observe(t_batch.elapsed().as_secs_f64());
+                if tel.registry.events().enabled() {
+                    tel.registry.events().emit("batch", &[
+                        ("step", Json::Num(self.steps_done as f64)),
+                        ("b", Json::Num(b as f64)),
+                        ("secs", Json::Num(t_batch.elapsed().as_secs_f64())),
+                        ("energy", Json::Num(energy)),
+                    ]);
+                }
+            }
             if let Some(obs) = observer.as_deref_mut() {
                 obs.on_step(self.steps_done, &self.u_pad, energy);
             }
             if !energy.is_finite() {
+                if let Some(tel) = &self.telemetry {
+                    tel.nonfinite.inc();
+                    tel.registry.events().emit("watchdog_nonfinite", &[
+                        ("step", Json::Num(self.steps_done as f64)),
+                        ("halting", Json::Bool(opts.halt_on_non_finite)),
+                    ]);
+                }
                 anyhow::ensure!(
                     !opts.halt_on_non_finite,
                     "wavefield blew up at step {} (CFL violation? dt={}, h={})",
@@ -507,6 +613,12 @@ impl<'e> Coordinator<'e> {
             }
         }
         let wall = t0.elapsed();
+        if let Some(tel) = &self.telemetry {
+            tel.registry.events().emit("run_end", &[
+                ("steps_done", Json::Num(done as f64)),
+                ("wall_ms", Json::Num(wall.as_secs_f64() * 1e3)),
+            ]);
+        }
         let u = self.wavefield();
         Ok(RunSummary {
             steps: done,
@@ -783,7 +895,7 @@ mod tests {
 
         let mut c = mk_unstable();
         let mut obs = Counter { calls: 0, saw_non_finite: false };
-        let opts = RunOptions { halt_on_non_finite: false };
+        let opts = RunOptions { halt_on_non_finite: false, ..RunOptions::default() };
         let s = c.run_observed(400, opts, Some(&mut obs)).unwrap();
         assert!(s.steps < 400, "blow-up should end the run early, got {}", s.steps);
         assert!(obs.saw_non_finite, "observer must witness the blow-up");
@@ -868,6 +980,78 @@ mod tests {
         let mut obs = Counter { calls: 0, saw_non_finite: false };
         c.run_observed(10, RunOptions::default(), Some(&mut obs)).unwrap();
         assert_eq!(obs.calls, 10);
+    }
+
+    #[test]
+    fn sample_every_restores_per_step_traces_under_fusion() {
+        // an s=4 fused backend normally records ceil(10/4) = 3 batch
+        // boundaries; --sample-every 1 must restore the full per-step
+        // trace, bit-identical to the unfused run
+        let mut base = mk_variant_coord("naive", 1);
+        let su = base.run(10).unwrap();
+        assert_eq!(su.energy_log.len(), 10);
+
+        let mut fused = mk_variant_coord("tf_s4", 1);
+        let sf = fused.run(10).unwrap();
+        assert_eq!(sf.energy_log.len(), 3, "natural cadence is per fused batch");
+
+        let mut fused = mk_variant_coord("tf_s4", 1);
+        let opts = RunOptions { sample_every: 1, ..RunOptions::default() };
+        let sf = fused.run_observed(10, opts, None).unwrap();
+        assert_eq!(sf.energy_log.len(), su.energy_log.len());
+        assert_eq!(sf.traces[0].len(), su.traces[0].len());
+        for (i, (a, b)) in sf.energy_log.iter().zip(&su.energy_log).enumerate() {
+            assert_eq!(a, b, "energy diverged at step {i}");
+        }
+
+        // intermediate cadences cap, never stretch, the batch size
+        let mut fused = mk_variant_coord("tf_s4", 1);
+        let opts = RunOptions { sample_every: 2, ..RunOptions::default() };
+        let sf = fused.run_observed(10, opts, None).unwrap();
+        assert_eq!(sf.energy_log.len(), 5);
+        // unfused backends are unaffected by a larger sample_every
+        let mut c = mk_variant_coord("naive", 1);
+        let opts = RunOptions { sample_every: 4, ..RunOptions::default() };
+        let s = c.run_observed(10, opts, None).unwrap();
+        assert_eq!(s.energy_log.len(), 10);
+    }
+
+    #[test]
+    fn telemetry_counts_steps_injections_and_batches() {
+        let mut c = mk_variant_coord("tf_s2", 1);
+        let reg = crate::telemetry::Registry::new();
+        reg.events().to_memory();
+        c.set_telemetry(&reg);
+        c.run(10).unwrap();
+        let text = reg.render();
+        assert!(text.contains("hostencil_steps_total 10"), "{text}");
+        // two sources (constructor + add_source) x 10 steps
+        assert!(text.contains("hostencil_source_injections_total 20"), "{text}");
+        assert!(text.contains("hostencil_batches_total 5"), "{text}");
+        assert!(text.contains("hostencil_batch_latency_seconds_count 5"), "{text}");
+        assert!(
+            text.contains("hostencil_plan_builds_total{family=\"time_fused\"} 1"),
+            "{text}"
+        );
+        assert!(text.contains("hostencil_pool_workers"), "{text}");
+        let lines = reg.events().lines();
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"run_start\"")), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"plan_build\"")), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"batch\"")), "{lines:?}");
+        assert!(lines.iter().any(|l| l.contains("\"event\":\"run_end\"")), "{lines:?}");
+    }
+
+    #[test]
+    fn telemetry_watchdog_counts_blowups() {
+        let mut c = mk_unstable();
+        let reg = crate::telemetry::Registry::new();
+        c.set_telemetry(&reg);
+        let opts = RunOptions { halt_on_non_finite: false, ..RunOptions::default() };
+        c.run_observed(400, opts, None).unwrap();
+        assert!(
+            reg.render().contains("hostencil_watchdog_nonfinite_total 1"),
+            "watchdog must record exactly one non-finite observation"
+        );
     }
 
     #[test]

@@ -82,6 +82,19 @@
 //! --measured --fuse` select, sweep, and rank fusion degrees; the
 //! gpusim traffic model amortizes DRAM by `s` and charges the `s*R`
 //! skirt at L2, so the model ranks fusion alongside tile shapes.
+//!
+//! Every layer is observable through the **flight-recorder telemetry**
+//! ([`telemetry`]): a zero-steady-state-allocation metrics registry
+//! (atomic counters/gauges, fixed-bucket log-scale histograms, RAII
+//! phase spans) threaded through `PropagatorInputs`/`Plan` so serial,
+//! pooled, and fused paths instrument identically — pool park/wake/
+//! busy stats, per-family plan builds and tile claims, fused-skirt
+//! recompute overhead, coordinator batch latency, source injections,
+//! and watchdog trips. `--telemetry out.prom` writes Prometheus text
+//! exposition (the `/metrics` payload a future `hostencil serve` will
+//! expose), `--events out.jsonl` streams the JSONL event log, and
+//! `hostencil telemetry --demo` prints a live snapshot; see
+//! `docs/METRICS.md` for the full metric reference.
 
 pub mod bench;
 pub mod config;
@@ -94,6 +107,7 @@ pub mod report;
 pub mod runtime;
 pub mod scenario;
 pub mod stencil;
+pub mod telemetry;
 pub mod testkit;
 pub mod wave;
 

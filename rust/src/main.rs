@@ -16,9 +16,10 @@
 
 use std::collections::HashMap;
 
-use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::coordinator::{Coordinator, Mode, RunOptions};
 use hostencil::gpusim::{arch, kernels, occupancy, timing, KernelResources};
 use hostencil::runtime::Engine;
+use hostencil::telemetry::Registry;
 use hostencil::wave;
 use hostencil::{config::RunConfig, report};
 
@@ -125,6 +126,9 @@ commands:
                                             per memory sweep, bit-identical
                                             physics, energy/receivers sampled
                                             per batch
+             [--sample-every N]             cap observed batches at N steps
+                                            so fused runs keep finer-grained
+                                            energy/receiver traces
   validate   [--artifacts dir] [--steps N]    PJRT vs golden, all variants
   table2     [--steps N]                      predicted wall time vs paper
   table3                                      occupancy characteristics
@@ -148,13 +152,14 @@ commands:
                                             CPU cost and report
                                             model-vs-measured rank agreement
   scenario   [--id name|all] [--list] [--steps N] [--machine m --variant v]
-             [--propagator p] [--cpu-threads N] [--json path]
+             [--propagator p] [--cpu-threads N] [--json path] [--sample-every N]
                                             run named physics stress scenarios
                                             (CPU propagator backend) with
                                             pass/fail verdicts; stress ids
                                             expect HardFail
   campaign   [--machine v100|p100|nvs510|a100|all] [--variant id|all]
              [--quick] [--threads N] [--json path] [--steps-scale f]
+             [--sample-every N]
                                             scenario x variant x machine matrix
                                             in parallel; each cell shows
                                             measured (CPU code shape) and
@@ -211,6 +216,20 @@ commands:
                                             efficiency too; honors
                                             HOSTENCIL_BENCH_SAMPLES /
                                             HOSTENCIL_BENCH_WARMUP
+  telemetry  [--demo] [--propagator p] [--steps N] [--size N] [--cpu-threads N]
+                                            short instrumented run; print the
+                                            Prometheus exposition and the
+                                            captured flight-recorder events
+
+telemetry flags (run / scenario / campaign / bench):
+  --telemetry out.prom    write the Prometheus text exposition of every
+                          registered metric (steps/injections counters,
+                          batch-latency histograms, pool gauges, per-slot
+                          tile/busy counters) at exit
+  --events out.jsonl      stream flight-recorder events (plan builds,
+                          batch boundaries, watchdog trips, run start/end)
+                          to a JSONL file as the run progresses
+  --sample-every N        cap observed batches at N steps (see run)
 ";
 
 /// Map a fusion degree to its executable `tf_*` descriptor (1 = the
@@ -242,6 +261,45 @@ fn parse_fuse_list(s: &str) -> anyhow::Result<Vec<usize>> {
     out.sort_unstable();
     out.dedup();
     Ok(out)
+}
+
+/// Shared `--telemetry` / `--events` wiring for run/scenario/campaign/
+/// bench: one registry every layer instruments into, plus the
+/// exposition path to write at exit. `None` when neither flag was
+/// given — those runs stay exactly as un-instrumented as before.
+struct CliTelemetry {
+    registry: Registry,
+    prom_path: Option<String>,
+}
+
+fn telemetry_from_args(args: &Args) -> anyhow::Result<Option<CliTelemetry>> {
+    let prom_path = args.get("telemetry")?.map(str::to_string);
+    let events_path = args.get("events")?.map(str::to_string);
+    if prom_path.is_none() && events_path.is_none() {
+        return Ok(None);
+    }
+    let registry = Registry::new();
+    if let Some(p) = &events_path {
+        // route the flight recorder to the file now, so events stream
+        // out as the run progresses instead of buffering until exit
+        registry.events().to_file(std::path::Path::new(p))?;
+    }
+    Ok(Some(CliTelemetry { registry, prom_path }))
+}
+
+impl CliTelemetry {
+    /// Flush the event stream and write the exposition snapshot. Runs
+    /// that error out skip this — a half-run has no snapshot worth
+    /// publishing, and the streamed events still carry the story up to
+    /// the failure (`BufWriter` flushes on drop).
+    fn finish(&self) -> anyhow::Result<()> {
+        self.registry.events().flush();
+        if let Some(path) = &self.prom_path {
+            std::fs::write(path, self.registry.render())?;
+            println!("wrote {path}");
+        }
+        Ok(())
+    }
 }
 
 fn main() {
@@ -282,6 +340,7 @@ fn run() -> anyhow::Result<()> {
         "scenario" => cmd_scenario(&args),
         "campaign" => cmd_campaign(&args),
         "bench" => cmd_bench(&args),
+        "telemetry" => cmd_telemetry(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -390,10 +449,21 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     );
     let mut coord = build_coordinator(&cfg, engine.as_ref())?;
     coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+    let telemetry = telemetry_from_args(args)?;
+    if let Some(t) = &telemetry {
+        coord.set_telemetry(&t.registry);
+    }
     if let Some(sig) = coord.propagator_signature() {
         println!("cpu code shape: {sig}");
     }
-    let summary = coord.run(cfg.steps)?;
+    let summary = coord.run_observed(
+        cfg.steps,
+        RunOptions {
+            sample_every: args.usize_or("sample-every", 0)?,
+            ..RunOptions::default()
+        },
+        None,
+    )?;
     println!(
         "done: {} launches, wall {:.3?}, {:.2} Mpts/s ({:.1} steps/s measured), \
          final |u|max {:.3e}, energy {:.3e}",
@@ -424,6 +494,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             .collect();
         let rms_str: Vec<String> = rms.iter().map(|r| format!("{r:.3e}")).collect();
         println!("receiver RMS: [{}]", rms_str.join(", "));
+    }
+    if let Some(t) = &telemetry {
+        t.finish()?;
     }
     Ok(())
 }
@@ -657,6 +730,7 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         None | Some("all") => ScenarioId::all(),
         Some(name) => vec![ScenarioId::parse(name)?],
     };
+    let telemetry = telemetry_from_args(args)?;
     let opts = RunnerOptions {
         steps_override: match args.get("steps")? {
             None => None,
@@ -670,6 +744,8 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         },
         propagator: args.get("propagator")?.map(|s| s.to_string()),
         cpu_threads: args.usize_or("cpu-threads", 0)?,
+        sample_every: args.usize_or("sample-every", 0)?,
+        telemetry: telemetry.as_ref().map(|t| t.registry.clone()),
     };
 
     let mut unexpected = Vec::new();
@@ -725,6 +801,11 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, hostencil::json::Json::Arr(json_runs).emit())?;
         println!("wrote {path}");
     }
+    if let Some(t) = &telemetry {
+        // publish before the verdict gate: an unexpected verdict is
+        // exactly when the exposition is most worth reading
+        t.finish()?;
+    }
     anyhow::ensure!(
         unexpected.is_empty(),
         "scenarios with unexpected verdicts: {}",
@@ -758,6 +839,9 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         spec.steps_scale = Some(scale);
     }
     spec.threads = args.usize_or("threads", 0)?;
+    spec.sample_every = args.usize_or("sample-every", 0)?;
+    let telemetry = telemetry_from_args(args)?;
+    spec.telemetry = telemetry.as_ref().map(|t| t.registry.clone());
 
     println!(
         "campaign: {} scenarios x {} variants x {} machines = {} cells",
@@ -772,6 +856,10 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("json")? {
         std::fs::write(path, report.to_json().emit())?;
         println!("wrote {path}");
+    }
+    if let Some(t) = &telemetry {
+        // publish before the off-expectation gate (see cmd_scenario)
+        t.finish()?;
     }
     anyhow::ensure!(
         report.off_expectation_count() == 0,
@@ -830,6 +918,11 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         None => None,
         Some(list) => Some(parse_fuse_list(list)?),
     };
+    // one registry across the whole matrix (series are deduplicated by
+    // name + labels, collectors re-point to the live pool), so the
+    // exit snapshot aggregates every timed shape
+    let telemetry = telemetry_from_args(args)?;
+    let sample_every = args.usize_or("sample-every", 0)?;
     let h = 10.0;
     let v0 = 2500.0f32;
     let dt = stencil::cfl_dt(h, v0 as f64);
@@ -863,8 +956,20 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         let mut coord =
             Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, vec![])?;
         coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+        if let Some(t) = &telemetry {
+            coord.set_telemetry(&t.registry);
+        }
         let (median_ns, mean_ns, min_ns) = {
-            let s = b.bench(label, || coord.run(steps).expect("bench step").final_max_abs);
+            let s = b.bench(label, || {
+                coord
+                    .run_observed(
+                        steps,
+                        RunOptions { sample_every, ..RunOptions::default() },
+                        None,
+                    )
+                    .expect("bench step")
+                    .final_max_abs
+            });
             (s.median.as_nanos(), s.mean.as_nanos(), s.min.as_nanos())
         };
         rows.push(Row {
@@ -928,9 +1033,19 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                     vec![],
                 )?;
                 coord.set_cpu_threads(t);
+                if let Some(tel) = &telemetry {
+                    coord.set_telemetry(&tel.registry);
+                }
                 let min_ns = b
                     .bench(&format!("{label} @{t}thr"), || {
-                        coord.run(steps).expect("bench step").final_max_abs
+                        coord
+                            .run_observed(
+                                steps,
+                                RunOptions { sample_every, ..RunOptions::default() },
+                                None,
+                            )
+                            .expect("bench step")
+                            .final_max_abs
                     })
                     .min
                     .as_nanos();
@@ -1040,9 +1155,19 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 vec![],
             )?;
             coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+            if let Some(t) = &telemetry {
+                coord.set_telemetry(&t.registry);
+            }
             let min_ns = b
                 .bench(&format!("tf @s{s}"), || {
-                    coord.run(steps).expect("bench step").final_max_abs
+                    coord
+                        .run_observed(
+                            steps,
+                            RunOptions { sample_every, ..RunOptions::default() },
+                            None,
+                        )
+                        .expect("bench step")
+                        .final_max_abs
                 })
                 .min
                 .as_nanos();
@@ -1157,6 +1282,12 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 .collect();
             root.insert("fuse_sweep".to_string(), Json::Arr(fuse_json));
         }
+        if let Some(t) = &telemetry {
+            // flat registry snapshot next to the timing cases, so one
+            // artifact carries both the ranks and the counters that
+            // produced them
+            root.insert("telemetry".to_string(), t.registry.snapshot_json());
+        }
         std::fs::write(path, Json::Obj(root).emit())?;
         println!("wrote {path}");
     }
@@ -1244,6 +1375,65 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                  the matrix"
             );
         }
+    }
+    if let Some(t) = &telemetry {
+        t.finish()?;
+    }
+    Ok(())
+}
+
+/// `hostencil telemetry --demo`: run a short instrumented simulation
+/// on a small grid and print a live snapshot — the full Prometheus
+/// exposition plus the flight-recorder event stream. The quickest way
+/// to see what `--telemetry` / `--events` will emit without wiring up
+/// files, and a smoke check that every layer's instrumentation fires.
+fn cmd_telemetry(args: &Args) -> anyhow::Result<()> {
+    use hostencil::grid::{Dim3, Domain};
+    use hostencil::stencil;
+    use hostencil::wave::{Source, VelocityModel};
+
+    // --demo is the only mode today; accept its absence so plain
+    // `hostencil telemetry` works too
+    let _ = args.has_flag("demo");
+    let n = args.usize_or("size", 20)?;
+    anyhow::ensure!(n >= 12, "--size must be >= 12 (needs room for PML width 4)");
+    let steps = args.usize_or("steps", 12)?;
+    // the fused family exercises the most instrumentation (skirt
+    // counters, batch cadence); any propagator/tf descriptor works
+    let variant = args.get("propagator")?.unwrap_or("tf_s2");
+
+    let h = 10.0;
+    let v0 = 2500.0f32;
+    let dt = stencil::cfl_dt(h, v0 as f64);
+    let domain = Domain::new(Dim3::new(n, n, n), 4, h, dt)?;
+    let interior = domain.interior;
+    let v = VelocityModel::Constant(v0).build(interior);
+    let eta = wave::eta_profile(&domain, v0 as f64);
+    let src = Source { pos: Dim3::new(n / 2, n / 2, n / 2), f0: 15.0, amplitude: 1.0 };
+    let mut coord =
+        Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, vec![])?;
+    coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+
+    let reg = Registry::new();
+    reg.events().to_memory();
+    coord.set_telemetry(&reg);
+    let summary = coord.run_observed(
+        steps,
+        RunOptions {
+            sample_every: args.usize_or("sample-every", 0)?,
+            ..RunOptions::default()
+        },
+        None,
+    )?;
+    println!(
+        "telemetry demo: {} steps of {variant} on {interior} in {:.3?}\n",
+        summary.steps, summary.wall
+    );
+    print!("{}", reg.render());
+    let lines = reg.events().lines();
+    println!("\nflight recorder ({} events):", lines.len());
+    for l in &lines {
+        println!("  {l}");
     }
     Ok(())
 }
@@ -1378,6 +1568,58 @@ mod tests {
         assert!(parse_fuse_list("0,2").is_err(), "zero steps per sweep is meaningless");
         assert!(parse_fuse_list("1,3").is_err(), "only supported degrees");
         assert!(parse_fuse_list("two").is_err());
+    }
+
+    #[test]
+    fn telemetry_flags_parse_on_every_command() {
+        for cmd in ["run", "scenario", "campaign", "bench"] {
+            let a = parse(&[
+                cmd,
+                "--telemetry",
+                "out.prom",
+                "--events",
+                "ev.jsonl",
+                "--sample-every",
+                "2",
+            ]);
+            assert_eq!(a.get("telemetry").unwrap(), Some("out.prom"));
+            assert_eq!(a.get("events").unwrap(), Some("ev.jsonl"));
+            assert_eq!(a.usize_or("sample-every", 0).unwrap(), 2);
+        }
+        // a bare --telemetry (forgotten path) errors instead of
+        // silently writing a file named "true"
+        let bare = parse(&["run", "--telemetry"]);
+        assert!(bare.get("telemetry").is_err());
+        let bare = parse(&["run", "--events"]);
+        assert!(bare.get("events").is_err());
+    }
+
+    #[test]
+    fn telemetry_from_args_wires_registry_and_paths() {
+        // neither flag: no registry, runs stay un-instrumented
+        assert!(telemetry_from_args(&parse(&["run", "--steps", "5"])).unwrap().is_none());
+
+        // --telemetry alone: exposition path set, recorder stays off
+        let t = telemetry_from_args(&parse(&["run", "--telemetry", "out.prom"]))
+            .unwrap()
+            .expect("registry");
+        assert_eq!(t.prom_path.as_deref(), Some("out.prom"));
+        assert!(!t.registry.events().enabled());
+
+        // --events alone: recorder routed to the file immediately
+        let path = std::env::temp_dir()
+            .join(format!("hostencil_cli_events_{}.jsonl", std::process::id()));
+        let toks = vec!["run".to_string(), format!("--events={}", path.display())];
+        let t2 = telemetry_from_args(&Args::parse_from(toks).unwrap())
+            .unwrap()
+            .expect("registry");
+        assert!(t2.registry.events().enabled());
+        assert!(t2.prom_path.is_none());
+        t2.registry.events().emit("run_start", &[]);
+        t2.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(text.contains("\"event\":\"run_start\""), "{text}");
     }
 
     #[test]

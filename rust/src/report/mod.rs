@@ -171,11 +171,11 @@ pub fn fig3(machine: &str, steps: usize) -> anyhow::Result<(String, String)> {
 /// the other table renderers.)
 pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> String {
     let mut out = format!(
-        "{:<26}{:<20}{:<9}{:>9}{:>7}{:>11}{:>11}{:>9}  {}\n",
-        "scenario", "variant", "machine", "verdict", "steps", "meas st/s", "pred st/s", "leak",
-        "notes"
+        "{:<26}{:<20}{:<9}{:>9}{:>7}{:>11}{:>11}{:>10}{:>9}  {}\n",
+        "scenario", "variant", "machine", "verdict", "steps", "meas st/s", "pred st/s",
+        "kern ms", "leak", "notes"
     );
-    out.push_str(&hr(116));
+    out.push_str(&hr(126));
     out.push('\n');
     for c in &report.cells {
         let notes = if let Some(e) = &c.error {
@@ -188,7 +188,7 @@ pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> Str
             c.failed_criteria.join(", ")
         };
         out.push_str(&format!(
-            "{:<26}{:<20}{:<9}{:>9}{:>7}{:>11.1}{:>11.1}{:>9.3}  {}\n",
+            "{:<26}{:<20}{:<9}{:>9}{:>7}{:>11.1}{:>11.1}{:>10.1}{:>9.3}  {}\n",
             c.scenario.name(),
             c.variant,
             c.machine,
@@ -196,11 +196,12 @@ pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> Str
             c.steps_completed,
             c.measured_steps_per_sec,
             c.predicted_steps_per_sec,
+            c.batch_wall_ms,
             c.boundary_leakage,
             notes
         ));
     }
-    out.push_str(&hr(116));
+    out.push_str(&hr(126));
     out.push('\n');
     out.push_str(&format!(
         "{} cells: {} Pass, {} SoftFail, {} HardFail ({} off-expectation) — \
@@ -309,11 +310,14 @@ mod tests {
             machines: vec!["v100".to_string()],
             steps_scale: Some(0.5),
             threads: 1,
+            sample_every: 0,
+            telemetry: None,
         };
         let t = campaign_table(&run_campaign(&spec));
         assert!(t.contains("tiny-grid"), "{t}");
         assert!(t.contains("gmem_8x8x8"));
         assert!(t.contains("meas st/s") && t.contains("pred st/s"), "{t}");
+        assert!(t.contains("kern ms"), "the telemetry wall column must render: {t}");
         assert!(t.contains("1 cells:"), "{t}");
         assert!(t.contains("1 shared physics run(s)"), "{t}");
     }

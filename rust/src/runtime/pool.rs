@@ -35,9 +35,12 @@
 
 use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::telemetry::Registry;
 
 /// Process-wide gauge of live parked pool threads. Lifecycle tests
 /// assert the serial fast path spawns nothing, steady-state steps
@@ -71,12 +74,28 @@ struct State {
     shutdown: bool,
 }
 
+/// Always-on pool counters, read lazily by telemetry collectors.
+/// Plain relaxed atomics bumped outside the mutex: the cost is not
+/// measurable next to a tile sweep, and the steady-state path stays
+/// allocation-free whether or not a registry is attached.
+struct PoolStats {
+    /// Times a worker went to sleep on the condvar between epochs.
+    parks: AtomicU64,
+    /// Times a parked worker was released by a fresh epoch.
+    wakes: AtomicU64,
+    /// Jobs executed across all slots (one per slot per epoch).
+    jobs: AtomicU64,
+    /// Nanoseconds each slot has spent inside jobs.
+    busy_ns: Vec<AtomicU64>,
+}
+
 struct Shared {
     state: Mutex<State>,
     /// Workers park here between steps.
     go: Condvar,
     /// The caller joins here until `active` drains to zero.
     done: Condvar,
+    stats: PoolStats,
 }
 
 impl Shared {
@@ -110,6 +129,12 @@ impl WorkerPool {
             }),
             go: Condvar::new(),
             done: Condvar::new(),
+            stats: PoolStats {
+                parks: AtomicU64::new(0),
+                wakes: AtomicU64::new(0),
+                jobs: AtomicU64::new(0),
+                busy_ns: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
+            },
         });
         let handles = (1..workers.max(1))
             .map(|slot| {
@@ -139,7 +164,9 @@ impl WorkerPool {
     /// pool remains usable.
     pub fn run(&mut self, job: &(dyn Fn(usize) + Sync)) {
         if self.handles.is_empty() {
+            let t0 = Instant::now();
             job(0);
+            self.record_slot0(t0);
             return;
         }
         // SAFETY: the erased borrow only escapes to this pool's own
@@ -158,7 +185,9 @@ impl WorkerPool {
             st.panic_payload = None;
             self.shared.go.notify_all();
         }
+        let t0 = Instant::now();
         let caller = catch_unwind(AssertUnwindSafe(|| job(0)));
+        self.record_slot0(t0);
         let worker_panic = {
             let mut st = self.shared.lock();
             while st.active > 0 {
@@ -176,6 +205,50 @@ impl WorkerPool {
         }
         if let Some(payload) = worker_panic {
             resume_unwind(payload);
+        }
+    }
+
+    fn record_slot0(&self, t0: Instant) {
+        let stats = &self.shared.stats;
+        stats.busy_ns[0].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        stats.jobs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Point `reg`'s pool collectors at this pool's live stats. Called
+    /// from `Plan::ensure` when a plan binds a telemetry registry;
+    /// re-registration replaces the closures, so a rebuilt plan's new
+    /// pool re-points the same exposition series at its own counters.
+    pub fn register_telemetry(&self, reg: &Registry) {
+        let s = Arc::clone(&self.shared);
+        reg.counter_fn(
+            "hostencil_pool_parks_total",
+            "Times a pool worker parked on the condvar between epochs.",
+            &[],
+            move || s.stats.parks.load(Ordering::Relaxed),
+        );
+        let s = Arc::clone(&self.shared);
+        reg.counter_fn(
+            "hostencil_pool_wakes_total",
+            "Times a parked pool worker was released by a fresh epoch.",
+            &[],
+            move || s.stats.wakes.load(Ordering::Relaxed),
+        );
+        let s = Arc::clone(&self.shared);
+        reg.counter_fn(
+            "hostencil_pool_jobs_total",
+            "Jobs executed across all pool slots (one per slot per epoch).",
+            &[],
+            move || s.stats.jobs.load(Ordering::Relaxed),
+        );
+        for slot in 0..self.shared.stats.busy_ns.len() {
+            let s = Arc::clone(&self.shared);
+            let label = slot.to_string();
+            reg.counter_fn(
+                "hostencil_pool_slot_busy_ns_total",
+                "Nanoseconds each pool slot has spent running jobs.",
+                &[("slot", &label)],
+                move || s.stats.busy_ns[slot].load(Ordering::Relaxed),
+            );
         }
     }
 }
@@ -211,9 +284,13 @@ fn worker_loop(shared: &Shared, slot: usize) {
                     // completed, so a new epoch always carries one
                     Some(job) if st.epoch != seen => {
                         seen = st.epoch;
+                        shared.stats.wakes.fetch_add(1, Ordering::Relaxed);
                         break job;
                     }
-                    _ => st = shared.go.wait(st).unwrap_or_else(PoisonError::into_inner),
+                    _ => {
+                        shared.stats.parks.fetch_add(1, Ordering::Relaxed);
+                        st = shared.go.wait(st).unwrap_or_else(PoisonError::into_inner);
+                    }
                 }
             }
         };
@@ -221,7 +298,10 @@ fn worker_loop(shared: &Shared, slot: usize) {
         // payload (first one wins), keep the completed-count honest so
         // the caller never hangs, and let `run` re-raise it after the
         // join.
+        let t0 = Instant::now();
         let result = catch_unwind(AssertUnwindSafe(|| (job.0)(slot)));
+        shared.stats.busy_ns[slot].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        shared.stats.jobs.fetch_add(1, Ordering::Relaxed);
         let mut st = shared.lock();
         if let Err(payload) = result {
             st.panic_payload.get_or_insert(payload);
@@ -273,6 +353,27 @@ mod tests {
             calls.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn stats_accumulate_and_export_through_a_registry() {
+        let mut pool = WorkerPool::new(2);
+        let reg = Registry::new();
+        pool.register_telemetry(&reg);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..5 {
+            pool.run(&|_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+        let text = reg.render();
+        // 2 slots x 5 epochs; wakes come only from the spawned worker
+        assert!(text.contains("hostencil_pool_jobs_total 10"), "{text}");
+        assert!(text.contains("hostencil_pool_wakes_total 5"), "{text}");
+        assert!(text.contains("hostencil_pool_parks_total"), "{text}");
+        assert!(text.contains("hostencil_pool_slot_busy_ns_total{slot=\"0\"}"), "{text}");
+        assert!(text.contains("hostencil_pool_slot_busy_ns_total{slot=\"1\"}"), "{text}");
     }
 
     #[test]

@@ -42,6 +42,13 @@ pub struct CampaignSpec {
     /// and each propagator's tile fan-out (see [`split_budget`]);
     /// 0 = available parallelism.
     pub threads: usize,
+    /// Cap observed-run batches at N steps (fused backends keep
+    /// finer-grained traces; 0 keeps the natural cadence).
+    pub sample_every: usize,
+    /// Shared telemetry registry attached to every physics run. Jobs
+    /// run in parallel but series are deduplicated by name + labels,
+    /// so the whole matrix accumulates into one exposition.
+    pub telemetry: Option<crate::telemetry::Registry>,
 }
 
 /// Split one global worker budget between the outer physics-job
@@ -93,6 +100,8 @@ impl CampaignSpec {
             machines,
             steps_scale: None,
             threads: 0,
+            sample_every: 0,
+            telemetry: None,
         }
     }
 
@@ -105,6 +114,8 @@ impl CampaignSpec {
             machines,
             steps_scale: Some(0.25),
             threads: 0,
+            sample_every: 0,
+            telemetry: None,
         }
     }
 
@@ -143,6 +154,10 @@ pub struct CampaignCell {
     /// Signature of that propagator (e.g. `blocked3d:8x8x8`).
     pub propagator: String,
     pub wall_ms: f64,
+    /// Kernel-only wall time: the physics run's step batches, summed
+    /// from its telemetry batch-latency histogram (a slice of
+    /// `wall_ms`; shared across cells with the same physics run).
+    pub batch_wall_ms: f64,
     /// Runner error (cell recorded as HardFail), if any.
     pub error: Option<String>,
 }
@@ -213,6 +228,7 @@ impl CampaignReport {
                 o.insert("measured_steps_per_sec".into(), num(c.measured_steps_per_sec));
                 o.insert("propagator".into(), Json::Str(c.propagator.clone()));
                 o.insert("wall_ms".into(), num(c.wall_ms));
+                o.insert("batch_wall_ms".into(), num(c.batch_wall_ms));
                 if let Some(e) = &c.error {
                     o.insert("error".into(), Json::Str(e.clone()));
                 }
@@ -265,6 +281,7 @@ fn assemble_cell(
         measured_steps_per_sec: 0.0,
         propagator: String::new(),
         wall_ms: 0.0,
+        batch_wall_ms: 0.0,
         error: Some(e),
     };
     let base = match physics {
@@ -297,6 +314,7 @@ fn assemble_cell(
         measured_steps_per_sec: metrics.measured_steps_per_sec,
         propagator: metrics.propagator.clone(),
         wall_ms: metrics.wall_ms,
+        batch_wall_ms: metrics.batch_wall_ms,
         error: None,
     }
 }
@@ -307,6 +325,8 @@ fn physics_opts(spec: &CampaignSpec, variant: &str, tile_threads: usize) -> Runn
         variant: Some(variant.to_string()),
         // this job's share of the global worker budget
         cpu_threads: tile_threads,
+        sample_every: spec.sample_every,
+        telemetry: spec.telemetry.clone(),
         ..RunnerOptions::default()
     }
 }
@@ -404,6 +424,8 @@ mod tests {
             machines: vec!["v100".to_string()],
             steps_scale: Some(0.5),
             threads: 2,
+            sample_every: 0,
+            telemetry: None,
         }
     }
 
@@ -449,6 +471,8 @@ mod tests {
             machines: vec!["m1".into(), "m2".into()],
             steps_scale: None,
             threads: 0,
+            sample_every: 0,
+            telemetry: None,
         };
         assert_eq!(spec.cells().len(), 2 * 3 * 2);
     }
@@ -482,6 +506,8 @@ mod tests {
             machines: vec!["v100".to_string()],
             steps_scale: Some(0.5),
             threads: 2,
+            sample_every: 0,
+            telemetry: None,
         };
         let report = run_campaign(&spec);
         assert_eq!(report.cells.len(), 2);
@@ -502,7 +528,12 @@ mod tests {
         assert!(c.predicted_steps_per_sec > 0.0);
         assert!(c.measured_steps_per_sec > 0.0, "{:?}", c);
         assert_eq!(c.propagator, "blocked3d:8x8x8");
+        assert!(c.batch_wall_ms > 0.0, "cell must carry its telemetry wall time");
+        assert!(c.batch_wall_ms <= c.wall_ms);
         assert_eq!(report.off_expectation_count(), 0, "{:?}", c);
+        let j = report.to_json();
+        let cell = &j.get("cells").unwrap().as_arr().unwrap()[0];
+        assert!(cell.get("batch_wall_ms").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]
@@ -516,6 +547,8 @@ mod tests {
             machines: vec!["v100".to_string(), "p100".to_string()],
             steps_scale: Some(0.5),
             threads: 2,
+            sample_every: 0,
+            telemetry: None,
         };
         let report = run_campaign(&spec);
         assert_eq!(report.cells.len(), 4);
@@ -580,6 +613,7 @@ mod tests {
             measured_steps_per_sec: 1.0,
             propagator: "naive".to_string(),
             wall_ms: 1.0,
+            batch_wall_ms: 0.5,
             error: None,
         };
         assert!(cell.off_expectation(), "an unexpectedly-green stress cell must fail the gate");

@@ -68,6 +68,11 @@ pub struct Metrics {
     /// Peak |trace| per receiver.
     pub receiver_peak: Vec<f32>,
     pub wall_ms: f64,
+    /// Wall time spent inside step batches, summed from the run's
+    /// telemetry batch-latency histogram — the kernel-only slice of
+    /// `wall_ms` (observer and setup overhead excluded). 0 when the
+    /// run carried no telemetry registry.
+    pub batch_wall_ms: f64,
     pub measured_mpts_per_sec: f64,
     /// Measured full-step rate of the CPU propagator that actually ran
     /// this scenario's physics — the empirical column next to the
@@ -194,6 +199,7 @@ impl MetricsCollector {
                 .map(|t| t.iter().fold(0.0f32, |a, &b| a.max(b.abs())))
                 .collect(),
             wall_ms: summary.wall.as_secs_f64() * 1e3,
+            batch_wall_ms: 0.0, // filled in by run_scenario_physics from telemetry
             measured_mpts_per_sec: summary.points_per_sec / 1e6,
             measured_steps_per_sec: summary.steps as f64
                 / summary.wall.as_secs_f64().max(1e-12),

@@ -37,6 +37,7 @@ use crate::config::RunConfig;
 use crate::coordinator::{Coordinator, Mode, RunOptions};
 use crate::grid::{Dim3, Domain};
 use crate::stencil;
+use crate::telemetry::{Registry, LATENCY_BOUNDS};
 use crate::wave::{self, Source, VelocityModel};
 
 /// The scenario catalogue. Every entry is deterministic: same id, same
@@ -397,6 +398,14 @@ pub struct RunnerOptions {
     /// core). The campaign sets each job's share of the global worker
     /// budget (`campaign::split_budget`).
     pub cpu_threads: usize,
+    /// Cap observed-run batches at N steps so fused backends retain
+    /// finer-grained energy/receiver traces (0 keeps the backend's
+    /// natural cadence; `--sample-every` on the CLI).
+    pub sample_every: usize,
+    /// Telemetry registry to attach to the run (a cloned handle shares
+    /// the same series). When absent the physics still runs with a
+    /// private registry so per-batch wall time lands in the metrics.
+    pub telemetry: Option<Registry>,
 }
 
 impl RunnerOptions {
@@ -455,6 +464,11 @@ pub fn run_scenario_physics(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Res
         cfg.receivers.clone(),
     )?;
     coord.set_cpu_threads(opts.cpu_threads);
+    // every physics run is instrumented: with a caller-supplied
+    // registry when given (CLI --telemetry), a private one otherwise,
+    // so the batch-latency histogram always feeds the metrics
+    let reg = opts.telemetry.clone().unwrap_or_default();
+    coord.set_telemetry(&reg);
     for s in &spec.extra_sources {
         coord.add_source(*s)?;
     }
@@ -463,10 +477,19 @@ pub fn run_scenario_physics(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Res
     let mut collector = MetricsCollector::new(cfg.domain);
     let summary = coord.run_observed(
         steps,
-        RunOptions { halt_on_non_finite: false },
+        RunOptions { halt_on_non_finite: false, sample_every: opts.sample_every },
         Some(&mut collector),
     )?;
-    Ok(collector.finish(steps, &summary, v_max_grid, signature))
+    let mut metrics = collector.finish(steps, &summary, v_max_grid, signature);
+    metrics.batch_wall_ms = reg
+        .histogram(
+            "hostencil_batch_latency_seconds",
+            "Wall-clock latency of one observed-run step batch.",
+            &LATENCY_BOUNDS,
+        )
+        .sum()
+        * 1e3;
+    Ok(metrics)
 }
 
 /// Run one scenario end to end: propagator physics, optional gpusim
@@ -569,6 +592,37 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(explicit.physics_propagator(), "semi");
+    }
+
+    #[test]
+    fn scenario_runs_feed_telemetry_and_honor_sample_every() {
+        let reg = crate::telemetry::Registry::new();
+        let opts = RunnerOptions {
+            propagator: Some("tf_s4".into()),
+            telemetry: Some(reg.clone()),
+            ..Default::default()
+        };
+        let m = run_scenario_physics(ScenarioId::TinyGrid, &opts).unwrap();
+        assert!(m.batch_wall_ms > 0.0, "batch wall must come from the histogram");
+        assert!(m.batch_wall_ms <= m.wall_ms, "batch wall is a slice of total wall");
+        // TinyGrid runs 80 steps; fuse 4 -> 20 batch-boundary samples
+        assert_eq!(m.energy_trace.len(), 20);
+        let text = reg.render();
+        assert!(text.contains("hostencil_steps_total 80"), "{text}");
+        assert!(text.contains("hostencil_batch_latency_seconds_count 20"), "{text}");
+
+        // --sample-every 1 restores the full per-step trace (satellite
+        // regression: fused runs must match the unfused trace length)
+        let fine = RunnerOptions {
+            propagator: Some("tf_s4".into()),
+            sample_every: 1,
+            ..Default::default()
+        };
+        let mf = run_scenario_physics(ScenarioId::TinyGrid, &fine).unwrap();
+        let unfused = RunnerOptions { propagator: Some("naive".into()), ..Default::default() };
+        let mu = run_scenario_physics(ScenarioId::TinyGrid, &unfused).unwrap();
+        assert_eq!(mf.energy_trace.len(), mu.energy_trace.len());
+        assert_eq!(mf.energy_trace.len(), 80);
     }
 
     #[test]

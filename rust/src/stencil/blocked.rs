@@ -56,6 +56,8 @@ impl Propagator for Blocked3D {
             &mut self.plan,
             inp.domain,
             inp.threads,
+            "blocked3d",
+            inp.telemetry,
             |d| decompose(d).iter().flat_map(|r| r.split(tile)).collect(),
             |_| (),
         );

@@ -65,6 +65,7 @@ use super::propagator::{FusedInputs, Plan, Propagator, PropagatorInputs, SharedO
 use super::{inner_row, pml_row, Consts};
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{Dim3, Domain, Field3, FieldView, Region, RegionClass};
+use crate::telemetry::{Counter, Registry};
 use crate::R;
 
 /// Per-worker staging for one tile's fused batch: two time-level
@@ -107,6 +108,9 @@ pub struct TimeFused {
     /// caller's buffers after each batch); rebuilt only on a domain
     /// change.
     next: Option<(Field3, Field3)>,
+    /// Skirt-recompute overhead counter (points computed beyond the
+    /// tile cores per sweep), registered once when telemetry attaches.
+    skirt: Option<Counter>,
 }
 
 impl TimeFused {
@@ -117,6 +121,7 @@ impl TimeFused {
             tile_y: tile_y.max(1),
             plan: None,
             next: None,
+            skirt: None,
         }
     }
 
@@ -135,6 +140,7 @@ fn ensure_plan<'a>(
     slot: &'a mut Option<Plan<FusedScratch>>,
     domain: &Domain,
     threads: usize,
+    telemetry: Option<&Registry>,
     s: usize,
     tz: usize,
     ty: usize,
@@ -144,6 +150,8 @@ fn ensure_plan<'a>(
         slot,
         domain,
         threads,
+        "time_fused",
+        telemetry,
         |d| {
             let whole = Region {
                 name: "interior",
@@ -173,8 +181,15 @@ impl Propagator for TimeFused {
     fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
         debug_assert_eq!(out.dims(), inp.domain.padded());
         let k = Consts::of(inp.domain);
-        let plan =
-            ensure_plan(&mut self.plan, inp.domain, inp.threads, self.s, self.tile_z, self.tile_y);
+        let plan = ensure_plan(
+            &mut self.plan,
+            inp.domain,
+            inp.threads,
+            inp.telemetry,
+            self.s,
+            self.tile_z,
+            self.tile_y,
+        );
         plan.run_into(out, |t, _scr, o| direct_tile_into(inp, t, k, o));
     }
 
@@ -208,6 +223,7 @@ impl Propagator for TimeFused {
                     v: inp.v,
                     eta_pad: inp.eta_pad,
                     threads: inp.threads,
+                    telemetry: inp.telemetry,
                 },
                 um_pad,
             );
@@ -226,8 +242,27 @@ impl Propagator for TimeFused {
         if self.next.as_ref().map(|(a, _)| a.dims()) != Some(padded) {
             self.next = Some((Field3::zeros(padded), Field3::zeros(padded)));
         }
-        let plan =
-            ensure_plan(&mut self.plan, inp.domain, inp.threads, self.s, self.tile_z, self.tile_y);
+        if self.skirt.is_none() {
+            if let Some(reg) = inp.telemetry {
+                let sv = self.s.to_string();
+                self.skirt = Some(reg.counter_with(
+                    "hostencil_fused_skirt_points_total",
+                    "Redundantly recomputed trapezoid-skirt points in fused sweeps \
+                     (computed points beyond the tile cores).",
+                    &[("s", &sv)],
+                ));
+            }
+        }
+        let skirt_counter = self.skirt.clone();
+        let plan = ensure_plan(
+            &mut self.plan,
+            inp.domain,
+            inp.threads,
+            inp.telemetry,
+            self.s,
+            self.tile_z,
+            self.tile_y,
+        );
         let (next_u, next_um) = self.next.as_mut().expect("just ensured");
         {
             let out_u = SharedOut::new(next_u);
@@ -237,7 +272,12 @@ impl Propagator for TimeFused {
             let v = inp.v.view();
             let eta = inp.eta_pad.view();
             plan.run_tasks(|t, scr| {
-                fused_tile_batch(&domain, u, um, v, eta, t, n, k, batch, scr, &out_u, &out_um);
+                let extra =
+                    fused_tile_batch(&domain, u, um, v, eta, t, n, k, batch, scr, &out_u, &out_um);
+                if let Some(c) = &skirt_counter {
+                    // one atomic add per tile per sweep (Counter is Sync)
+                    c.add(extra);
+                }
             });
         }
         std::mem::swap(u_pad, next_u);
@@ -312,8 +352,11 @@ fn zero_frame(buf: &mut [f32], dp: Dim3) {
 
 /// Advance one tile `batch.n_steps` virtual sub-steps in per-worker
 /// scratch and write its core's two newest time levels into the
-/// output pair. See the module docs for the trapezoid geometry; the
-/// invariants the loops below maintain are:
+/// output pair. Returns the number of redundantly recomputed skirt
+/// points (computed points beyond `n` visits of the tile core) — the
+/// fused family's recompute-overhead telemetry. See the module docs
+/// for the trapezoid geometry; the invariants the loops below maintain
+/// are:
 ///
 /// * `E_j` (the sub-step-`j` computed box) is the tile plus an
 ///   `(n-j)*R` skirt, clipped to the interior;
@@ -336,7 +379,7 @@ fn fused_tile_batch(
     scr: &mut FusedScratch,
     out_u: &SharedOut,
     out_um: &SharedOut,
-) {
+) -> u64 {
     let ni = d.interior;
     let nx = ni.x;
     debug_assert_eq!(t.shape.x, nx, "fused tiles keep whole x rows");
@@ -392,12 +435,14 @@ fn fused_tile_batch(
     // the trapezoid: ua holds the newest computed level, ub the one
     // before it (and, on entry to each sub-step, the row kernels'
     // in-place um term)
+    let mut computed: u64 = 0;
     for j in 1..=n {
         let sk = (n - j) * R;
         let z0j = t.offset.z.saturating_sub(sk);
         let z1j = (t.offset.z + t.shape.z + sk).min(ni.z);
         let y0j = t.offset.y.saturating_sub(sk);
         let y1j = (t.offset.y + t.shape.y + sk).min(ni.y);
+        computed += ((z1j - z0j) * (y1j - y0j) * nx) as u64;
         {
             let uav = FieldView::new(dp, &ua[..dp.volume()]);
             let vvv = FieldView::new(de, vv);
@@ -449,6 +494,7 @@ fn fused_tile_batch(
     }
     scr.ua = ua;
     scr.ub = ub;
+    computed - (n * t.shape.z * t.shape.y * nx) as u64
 }
 
 #[cfg(test)]
@@ -479,7 +525,7 @@ mod tests {
     }
 
     fn inputs(st: &State, threads: usize) -> FusedInputs<'_> {
-        FusedInputs { domain: &st.domain, v: &st.v, eta_pad: &st.eta_pad, threads }
+        FusedInputs { domain: &st.domain, v: &st.v, eta_pad: &st.eta_pad, threads, telemetry: None }
     }
 
     /// Sources that straddle region classes: inner center, PML corner
@@ -579,6 +625,7 @@ mod tests {
                     v: &st.v,
                     eta_pad: &st.eta_pad,
                     threads,
+                    telemetry: None,
                 },
                 &mut out,
             );

@@ -51,7 +51,9 @@ use std::time::{Duration, Instant};
 use super::{inner_row, pml_row, Consts};
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
 use crate::gpusim::kernels::{self, Family, KernelVariant};
+use crate::json::Json;
 use crate::runtime::pool::WorkerPool;
+use crate::telemetry::{Counter, Histogram, Registry, LATENCY_BOUNDS};
 use crate::R;
 
 pub use super::blocked::Blocked3D;
@@ -73,6 +75,10 @@ pub struct PropagatorInputs<'a> {
     pub eta_pad: &'a Field3,
     /// Worker threads for the tile fan-out (0 = one per core).
     pub threads: usize,
+    /// Metrics registry; `None` runs uninstrumented. Instrumentation
+    /// handles are registered once at plan-build time, so the
+    /// steady-state step stays allocation-free either way.
+    pub telemetry: Option<&'a Registry>,
 }
 
 /// Borrowed per-batch state for [`Propagator::advance_fused`]: the
@@ -87,6 +93,8 @@ pub struct FusedInputs<'a> {
     pub eta_pad: &'a Field3,
     /// Worker threads for the tile fan-out (0 = one per core).
     pub threads: usize,
+    /// Metrics registry; `None` runs uninstrumented.
+    pub telemetry: Option<&'a Registry>,
 }
 
 /// Per-batch source-injection schedule: after every virtual sub-step
@@ -171,6 +179,7 @@ pub trait Propagator: Send {
                     v: inp.v,
                     eta_pad: inp.eta_pad,
                     threads: inp.threads,
+                    telemetry: inp.telemetry,
                 },
                 um_pad,
             );
@@ -251,6 +260,43 @@ pub(crate) struct Plan<S> {
     /// serial fast path: one worker slot never touches a pool or
     /// spawns a thread.
     pool: Option<WorkerPool>,
+    /// Telemetry handles, registered once when a registry is attached
+    /// (at build, or lazily on the first instrumented step). `None`
+    /// runs uninstrumented at zero cost.
+    instr: Option<PlanInstr>,
+}
+
+/// Pre-registered per-plan metric handles: the steady-state step only
+/// touches these atomics, never the registry.
+pub(crate) struct PlanInstr {
+    /// Tiles claimed off the shared cursor, one counter per worker slot.
+    tiles: Vec<Counter>,
+    /// One whole `run_tasks` sweep (a step for unfused families, a
+    /// fused batch for `tf_*`).
+    sweep: Histogram,
+}
+
+impl PlanInstr {
+    fn register(reg: &Registry, family: &'static str, slots: usize) -> PlanInstr {
+        let tiles = (0..slots)
+            .map(|i| {
+                let slot = i.to_string();
+                reg.counter_with(
+                    "hostencil_tiles_claimed_total",
+                    "Tile tasks claimed by each worker slot.",
+                    &[("family", family), ("slot", &slot)],
+                )
+            })
+            .collect();
+        let sweep = reg.histogram_with(
+            "hostencil_step_latency_seconds",
+            "Latency of one tile sweep: a single step for unfused families, \
+             a whole fused batch for tf_*.",
+            &LATENCY_BOUNDS,
+            &[("family", family)],
+        );
+        PlanInstr { tiles, sweep }
+    }
 }
 
 impl<S> Plan<S> {
@@ -258,10 +304,18 @@ impl<S> Plan<S> {
     /// rebuild re-tiles and re-sizes scratch, but the old pool's
     /// parked threads are recycled whenever the resolved worker count
     /// is unchanged — a domain switch must not pay a respawn.
+    ///
+    /// `family` labels this plan's metric series; when `telemetry` is
+    /// present, builds/rebuilds are counted and logged to the flight
+    /// recorder, and the plan's instrumentation handles (tile-claim
+    /// counters, sweep-latency histogram) are registered here — never
+    /// on the steady-state path.
     pub(crate) fn ensure<'a>(
         slot: &'a mut Option<Plan<S>>,
         domain: &Domain,
         threads: usize,
+        family: &'static str,
+        telemetry: Option<&Registry>,
         tile: impl FnOnce(&Domain) -> Vec<Region>,
         mk_scratch: impl Fn(&[Region]) -> S,
     ) -> &'a mut Plan<S> {
@@ -270,6 +324,7 @@ impl<S> Plan<S> {
             None => true,
         };
         if stale {
+            let rebuild = slot.is_some();
             // retire the old plan *first*: its task list and per-worker
             // scratch (which the fused family sizes in whole wavefield
             // bricks) must not coexist with the replacement, and a
@@ -289,10 +344,41 @@ impl<S> Plan<S> {
                     }
                 }
             };
-            let scratch = (0..workers).map(|_| mk_scratch(&tasks)).collect();
-            *slot = Some(Plan { domain: *domain, threads, tasks, scratch, pool });
+            let scratch: Vec<S> = (0..workers).map(|_| mk_scratch(&tasks)).collect();
+            if let Some(reg) = telemetry {
+                let name = if rebuild {
+                    "hostencil_plan_rebuilds_total"
+                } else {
+                    "hostencil_plan_builds_total"
+                };
+                let help = if rebuild {
+                    "Plan rebuilds after a (domain, threads) key change."
+                } else {
+                    "First-use plan builds per propagator family."
+                };
+                reg.counter_with(name, help, &[("family", family)]).inc();
+                reg.events().emit(
+                    "plan_build",
+                    &[
+                        ("family", Json::Str(family.to_string())),
+                        ("rebuild", Json::Bool(rebuild)),
+                        ("tasks", Json::Num(tasks.len() as f64)),
+                        ("workers", Json::Num(workers as f64)),
+                    ],
+                );
+            }
+            *slot = Some(Plan { domain: *domain, threads, tasks, scratch, pool, instr: None });
         }
-        slot.as_mut().expect("plan just ensured")
+        let plan = slot.as_mut().expect("plan just ensured");
+        if plan.instr.is_none() {
+            if let Some(reg) = telemetry {
+                plan.instr = Some(PlanInstr::register(reg, family, plan.scratch.len()));
+                if let Some(pool) = &plan.pool {
+                    pool.register_telemetry(reg);
+                }
+            }
+        }
+        plan
     }
 
     /// Fan the plan's tile tasks over its worker slots, each task
@@ -325,14 +411,22 @@ impl<S> Plan<S> {
     where
         S: Send,
     {
+        // RAII sweep timer: observes into the per-family latency
+        // histogram when this call returns (pre-registered handle —
+        // cloning it is an Arc bump, no allocation)
+        let _sweep = self.instr.as_ref().map(|i| i.sweep.time());
         if self.scratch.len() <= 1 {
             let s = self.scratch.first_mut().expect("plan always has >= 1 worker slot");
             for t in &self.tasks {
                 f(t, &mut *s);
             }
+            if let Some(instr) = &self.instr {
+                instr.tiles[0].add(self.tasks.len() as u64);
+            }
             return;
         }
         let tasks = &self.tasks;
+        let instr = self.instr.as_ref();
         let cursor = AtomicUsize::new(0);
         let scratch = SharedScratch::new(&mut self.scratch);
         let pool = self.pool.as_mut().expect("multi-worker plans always carry a pool");
@@ -351,12 +445,18 @@ impl<S> Plan<S> {
             // thread per step (the caller is 0, parked workers 1..),
             // so slots never alias.
             let s = unsafe { scratch.slot(slot) };
+            let mut claimed = 0u64;
             loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= tasks.len() {
                     break;
                 }
                 f(&tasks[i], &mut *s);
+                claimed += 1;
+            }
+            // one atomic add per slot per sweep, not per tile
+            if let Some(instr) = instr {
+                instr.tiles[slot].add(claimed);
             }
         });
     }
@@ -513,7 +613,15 @@ impl Propagator for Naive {
     fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
         debug_assert_eq!(out.dims(), inp.domain.padded());
         let k = Consts::of(inp.domain);
-        let plan = Plan::ensure(&mut self.plan, inp.domain, inp.threads, decompose, |_| ());
+        let plan = Plan::ensure(
+            &mut self.plan,
+            inp.domain,
+            inp.threads,
+            "naive",
+            inp.telemetry,
+            decompose,
+            |_| (),
+        );
         plan.run_into(out, |t, _s, o| {
             if t.class.is_pml() {
                 pml_tile_into(inp, t, k, o);
@@ -548,7 +656,7 @@ pub fn measure_steps_per_sec(
 
     let run = |u_pad: &mut Field3, um_pad: &mut Field3, prop: &mut dyn Propagator| {
         let fuse = prop.max_fuse().max(1);
-        let inp = FusedInputs { domain, v: &v, eta_pad: &eta_pad, threads: 0 };
+        let inp = FusedInputs { domain, v: &v, eta_pad: &eta_pad, threads: 0, telemetry: None };
         let t0 = Instant::now();
         let mut done = 0;
         while done < steps {
@@ -605,6 +713,7 @@ mod tests {
                 v: &st.v,
                 eta_pad: &st.eta_pad,
                 threads,
+                telemetry: None,
             },
             &mut out,
         );
@@ -712,6 +821,7 @@ mod tests {
                         v: &st.v,
                         eta_pad: &st.eta_pad,
                         threads,
+                        telemetry: None,
                     },
                     &mut out,
                 );

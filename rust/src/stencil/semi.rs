@@ -76,6 +76,8 @@ impl Propagator for SemiStencil {
             &mut self.plan,
             inp.domain,
             inp.threads,
+            "semi_stencil",
+            inp.telemetry,
             |d| decompose(d).iter().flat_map(|r| r.split(tile)).collect(),
             PartialRow::for_tasks,
         );

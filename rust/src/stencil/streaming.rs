@@ -77,6 +77,8 @@ impl Propagator for Streaming25D {
             &mut self.plan,
             inp.domain,
             inp.threads,
+            "streaming2.5d",
+            inp.telemetry,
             // every region keeps its full x extent: the stream axis is
             // never tiled (that is the point of the 2.5D shape)
             |d| {

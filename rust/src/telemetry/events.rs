@@ -1,0 +1,185 @@
+//! The flight recorder: an append-only JSONL event log for the rare,
+//! high-signal moments of a run — plan builds/rebuilds, batch
+//! boundaries, source injections gone silent, watchdog trips, worker
+//! panics. One JSON object per line, every object carrying `event`
+//! (the kind) and `t_ms` (milliseconds since the log was created), so
+//! `jq`/`python -c 'json.loads(line)'` consume it directly.
+//!
+//! The log starts disabled (every `emit` is a cheap boolean check and
+//! a no-op) and can be routed to an in-memory buffer (tests) or a
+//! buffered file (`--events out.jsonl`) *in place* — all clones share
+//! one sink, so the `EventLog` embedded in a
+//! [`Registry`](super::Registry) at construction can be pointed at a
+//! file later by the CLI.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::json::Json;
+
+enum Sink {
+    Off,
+    Mem(Vec<String>),
+    File(BufWriter<File>),
+}
+
+/// Shared handle to one event stream. `Clone` is an `Arc` bump.
+#[derive(Clone)]
+pub struct EventLog {
+    sink: Arc<Mutex<Sink>>,
+    start: Instant,
+}
+
+impl EventLog {
+    /// A log that drops everything (the default state).
+    pub fn disabled() -> EventLog {
+        EventLog { sink: Arc::new(Mutex::new(Sink::Off)), start: Instant::now() }
+    }
+
+    /// A fresh log buffering lines in memory (tests, `--demo`).
+    pub fn in_memory() -> EventLog {
+        let log = EventLog::disabled();
+        log.to_memory();
+        log
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Sink> {
+        self.sink.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Route this log (and every clone of it) to an in-memory buffer.
+    pub fn to_memory(&self) {
+        *self.lock() = Sink::Mem(Vec::new());
+    }
+
+    /// Route this log (and every clone of it) to `path`, truncating.
+    pub fn to_file(&self, path: &Path) -> anyhow::Result<()> {
+        let f = File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating event log {}: {e}", path.display()))?;
+        *self.lock() = Sink::File(BufWriter::new(f));
+        Ok(())
+    }
+
+    /// Whether `emit` currently records anything. Callers assembling
+    /// expensive event payloads should check this first; `emit` itself
+    /// also no-ops when disabled.
+    pub fn enabled(&self) -> bool {
+        !matches!(*self.lock(), Sink::Off)
+    }
+
+    /// Append one event. `fields` are merged into the line next to the
+    /// standard `event` and `t_ms` keys.
+    pub fn emit(&self, event: &str, fields: &[(&str, Json)]) {
+        let mut sink = self.lock();
+        if matches!(*sink, Sink::Off) {
+            return;
+        }
+        let mut o = BTreeMap::new();
+        o.insert("event".to_string(), Json::Str(event.to_string()));
+        o.insert(
+            "t_ms".to_string(),
+            Json::Num(self.start.elapsed().as_secs_f64() * 1e3),
+        );
+        for (k, v) in fields {
+            o.insert((*k).to_string(), v.clone());
+        }
+        let line = Json::Obj(o).emit();
+        match &mut *sink {
+            Sink::Off => {}
+            Sink::Mem(lines) => lines.push(line),
+            Sink::File(w) => {
+                let _ = writeln!(w, "{line}");
+            }
+        }
+    }
+
+    /// Buffered lines (in-memory sink only; empty for off/file sinks).
+    pub fn lines(&self) -> Vec<String> {
+        match &*self.lock() {
+            Sink::Mem(lines) => lines.clone(),
+            _ => Vec::new(),
+        }
+    }
+
+    /// Flush a file sink (no-op otherwise). Call before process exit;
+    /// dropping the last clone also flushes via `BufWriter`'s drop.
+    pub fn flush(&self) {
+        if let Sink::File(w) = &mut *self.lock() {
+            let _ = w.flush();
+        }
+    }
+}
+
+impl Default for EventLog {
+    fn default() -> EventLog {
+        EventLog::disabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_log_drops_everything() {
+        let log = EventLog::disabled();
+        assert!(!log.enabled());
+        log.emit("plan_build", &[("family", Json::Str("naive".into()))]);
+        assert!(log.lines().is_empty());
+    }
+
+    #[test]
+    fn every_line_is_json_with_event_and_t_ms() {
+        let log = EventLog::in_memory();
+        assert!(log.enabled());
+        log.emit("plan_build", &[("family", Json::Str("blocked3d".into()))]);
+        log.emit(
+            "batch",
+            &[("steps", Json::Num(4.0)), ("injections", Json::Num(1.0))],
+        );
+        let lines = log.lines();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).expect("JSONL line parses");
+            assert!(j.get("event").unwrap().as_str().is_ok(), "{line}");
+            assert!(j.get("t_ms").unwrap().as_f64().unwrap() >= 0.0, "{line}");
+        }
+        assert_eq!(
+            Json::parse(&lines[0]).unwrap().get("family").unwrap().as_str().unwrap(),
+            "blocked3d"
+        );
+        assert_eq!(
+            Json::parse(&lines[1]).unwrap().get("steps").unwrap().as_usize().unwrap(),
+            4
+        );
+    }
+
+    #[test]
+    fn clones_share_one_sink_and_rerouting_applies_to_all() {
+        let log = EventLog::disabled();
+        let clone = log.clone();
+        log.to_memory();
+        clone.emit("watchdog_nonfinite", &[]);
+        assert_eq!(log.lines().len(), 1, "clone writes must land in the shared sink");
+    }
+
+    #[test]
+    fn file_sink_writes_parseable_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("hostencil_events_test_{}.jsonl", std::process::id()));
+        let log = EventLog::disabled();
+        log.to_file(&path).expect("temp file");
+        log.emit("run_start", &[("steps", Json::Num(8.0))]);
+        log.flush();
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let _ = std::fs::remove_file(&path);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1);
+        let j = Json::parse(lines[0]).unwrap();
+        assert_eq!(j.get("event").unwrap().as_str().unwrap(), "run_start");
+    }
+}

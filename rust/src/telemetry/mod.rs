@@ -1,0 +1,595 @@
+//! Flight-recorder telemetry: a lock-light metrics registry with a
+//! **zero-allocation steady state**, plus two exporters (Prometheus
+//! text exposition in [`prometheus`], JSONL event log in [`events`])
+//! and RAII phase timers in [`span`].
+//!
+//! Design contract, enforced by `rust/tests/zero_alloc.rs`:
+//!
+//! * **Registration allocates, observation never does.** Handles
+//!   ([`Counter`], [`Gauge`], [`Histogram`]) are registered once at
+//!   plan-build / warm-up time — that path takes the registry mutex
+//!   and grows the family table. The hot path (`inc`/`add`/`set`/
+//!   `observe`) touches only pre-`Arc`'d atomics and preallocated
+//!   fixed-size buckets: no locks, no heap.
+//! * **Registration is idempotent.** Re-registering the same
+//!   `(name, labels)` returns the *existing* handle, so plan rebuilds
+//!   and repeated runs keep accumulating into one series instead of
+//!   shadowing it. Callback collectors ([`Registry::counter_fn`] /
+//!   [`Registry::gauge_fn`]) instead *replace* the closure, so a
+//!   rebuilt worker pool re-points its collectors at the live pool.
+//! * **Reading is exporter business.** `render`/`snapshot_json` take
+//!   the mutex and walk every series; they run at exit or on demand,
+//!   never inside the time loop.
+//!
+//! The registry handle is `Clone` (an `Arc` bump) and threads through
+//! `PropagatorInputs`/`FusedInputs`/`Plan`, so serial, pooled, and
+//! fused execution paths instrument identically — and the future
+//! `hostencil serve` daemon can expose [`Registry::render`] verbatim
+//! at `/metrics`.
+
+pub mod events;
+pub mod prometheus;
+pub mod span;
+
+use std::fmt;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::json::Json;
+
+pub use events::EventLog;
+pub use span::Span;
+
+/// Default log-scale latency bucket upper bounds (seconds): x4 per
+/// bucket from 1 µs to ~4.2 s, 12 finite bounds plus the implicit
+/// `+Inf` overflow bucket. Wide enough to hold one tile batch on a
+/// laptop and a full campaign cell on a loaded CI runner.
+pub const LATENCY_BOUNDS: [f64; 12] = [
+    1e-6,
+    4e-6,
+    1.6e-5,
+    6.4e-5,
+    2.56e-4,
+    1.024e-3,
+    4.096e-3,
+    1.6384e-2,
+    6.5536e-2,
+    2.62144e-1,
+    1.048576,
+    4.194304,
+];
+
+/// Prometheus metric kinds supported by the registry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Monotonically increasing counter. Cloning shares the underlying
+/// atomic; all operations are `Relaxed` (exporters only need eventual
+/// consistency, the hot path needs zero contention).
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    fn new() -> Counter {
+        Counter(Arc::new(AtomicU64::new(0)))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous signed value (occupancy, queue depth, ...).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    fn new() -> Gauge {
+        Gauge(Arc::new(AtomicI64::new(0)))
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistogramInner {
+    /// Finite bucket upper bounds, ascending; the `buckets` vec has one
+    /// extra trailing slot for the `+Inf` overflow bucket.
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum of observed values as `f64` bits, updated by CAS (no
+    /// `AtomicF64` in std; contention here is one CAS per observation).
+    sum_bits: AtomicU64,
+}
+
+/// Fixed-bucket histogram: bounds chosen at registration, bins
+/// preallocated, every observation a handful of relaxed atomic ops.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+impl Histogram {
+    fn new(bounds: &[f64]) -> Histogram {
+        assert!(!bounds.is_empty(), "histogram needs at least one bucket bound");
+        assert!(
+            bounds.windows(2).all(|w| w[0] < w[1]) && bounds.iter().all(|b| b.is_finite()),
+            "histogram bounds must be finite and strictly ascending"
+        );
+        Histogram(Arc::new(HistogramInner {
+            bounds: bounds.to_vec(),
+            buckets: (0..bounds.len() + 1).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }))
+    }
+
+    /// Record one observation. Allocation-free: a linear scan over the
+    /// (dozen-ish) preallocated bounds plus three relaxed atomic ops.
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        let h = &*self.0;
+        let mut i = 0;
+        while i < h.bounds.len() && v > h.bounds[i] {
+            i += 1;
+        }
+        h.buckets[i].fetch_add(1, Ordering::Relaxed);
+        h.count.fetch_add(1, Ordering::Relaxed);
+        let mut old = h.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let new = (f64::from_bits(old) + v).to_bits();
+            match h.sum_bits.compare_exchange_weak(old, new, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => break,
+                Err(cur) => old = cur,
+            }
+        }
+    }
+
+    #[inline]
+    pub fn observe_duration(&self, d: Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Start an RAII span that observes its elapsed seconds on drop.
+    pub fn time(&self) -> Span {
+        Span::new(self.clone())
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Finite bucket upper bounds (the `+Inf` bucket is implicit).
+    pub fn bounds(&self) -> &[f64] {
+        &self.0.bounds
+    }
+
+    /// Per-bucket (non-cumulative) counts; the final entry is the
+    /// `+Inf` overflow bucket.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Upper bound of the bucket holding the q-quantile observation
+    /// (`+Inf` overflow reports `f64::INFINITY`; empty histograms 0).
+    /// Bucket-resolution only — good enough for demo snapshots and
+    /// threshold tests, not for precise percentiles.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.0.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return self.0.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+/// One registered series: a concrete handle or a callback collector
+/// read at export time (used for stats owned elsewhere, e.g. the
+/// worker pool's own atomics).
+pub(crate) enum Value {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+    CounterFn(Box<dyn Fn() -> u64 + Send + Sync>),
+    GaugeFn(Box<dyn Fn() -> i64 + Send + Sync>),
+}
+
+pub(crate) struct Series {
+    pub(crate) labels: Vec<(String, String)>,
+    pub(crate) value: Value,
+}
+
+pub(crate) struct Family {
+    pub(crate) name: String,
+    pub(crate) help: String,
+    pub(crate) kind: Kind,
+    pub(crate) series: Vec<Series>,
+}
+
+struct Inner {
+    families: Mutex<Vec<Family>>,
+    events: EventLog,
+}
+
+/// The metrics registry: cheaply clonable (`Arc` bump), safe to share
+/// across worker threads, holding every registered family in
+/// registration order plus the flight-recorder [`EventLog`].
+#[derive(Clone)]
+pub struct Registry(Arc<Inner>);
+
+impl Registry {
+    pub fn new() -> Registry {
+        let reg = Registry(Arc::new(Inner {
+            families: Mutex::new(Vec::new()),
+            events: EventLog::disabled(),
+        }));
+        // Every registry exposes pool occupancy out of the box: the
+        // gauge reads the process-global live-worker count, so the
+        // exposition carries it even for runs that never build a pool.
+        reg.gauge_fn(
+            "hostencil_pool_workers",
+            "Live persistent worker-pool threads (parked or running).",
+            &[],
+            || crate::runtime::pool::live_worker_threads() as i64,
+        );
+        reg
+    }
+
+    /// The flight-recorder event log riding along with this registry
+    /// (disabled until routed to a sink; see [`EventLog`]).
+    pub fn events(&self) -> &EventLog {
+        &self.0.events
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Vec<Family>> {
+        self.0.families.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    pub(crate) fn with_families<R>(&self, f: impl FnOnce(&[Family]) -> R) -> R {
+        let fams = self.lock();
+        f(&fams)
+    }
+
+    fn family_index(fams: &mut Vec<Family>, name: &str, help: &str, kind: Kind) -> usize {
+        match fams.iter().position(|f| f.name == name) {
+            Some(i) => {
+                assert_eq!(
+                    fams[i].kind, kind,
+                    "metric {name} re-registered as {:?}, originally {:?}",
+                    kind, fams[i].kind
+                );
+                i
+            }
+            None => {
+                fams.push(Family {
+                    name: name.to_string(),
+                    help: help.to_string(),
+                    kind,
+                    series: Vec::new(),
+                });
+                fams.len() - 1
+            }
+        }
+    }
+
+    fn handle<T>(
+        &self,
+        name: &str,
+        help: &str,
+        kind: Kind,
+        labels: &[(&str, &str)],
+        mk: impl FnOnce() -> Value,
+        get: impl Fn(&Value) -> Option<T>,
+    ) -> T {
+        let mut fams = self.lock();
+        let idx = Self::family_index(&mut fams, name, help, kind);
+        let fam = &mut fams[idx];
+        let owned: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        if let Some(s) = fam.series.iter().find(|s| s.labels == owned) {
+            return get(&s.value).unwrap_or_else(|| {
+                panic!("metric {name}: series re-registered with a different value shape")
+            });
+        }
+        let value = mk();
+        let out = get(&value).expect("freshly built value matches its own kind");
+        fam.series.push(Series { labels: owned, value });
+        out
+    }
+
+    fn collector(&self, name: &str, help: &str, kind: Kind, labels: &[(&str, &str)], value: Value) {
+        let mut fams = self.lock();
+        let idx = Self::family_index(&mut fams, name, help, kind);
+        let fam = &mut fams[idx];
+        let owned: Vec<(String, String)> =
+            labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+        if let Some(s) = fam.series.iter_mut().find(|s| s.labels == owned) {
+            // collectors track a live source that may be rebuilt (a new
+            // worker pool after a thread-count change): newest wins
+            s.value = value;
+        } else {
+            fam.series.push(Series { labels: owned, value });
+        }
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Counter {
+        self.counter_with(name, help, &[])
+    }
+
+    pub fn counter_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Counter {
+        self.handle(name, help, Kind::Counter, labels, || Value::Counter(Counter::new()), |v| {
+            match v {
+                Value::Counter(c) => Some(c.clone()),
+                _ => None,
+            }
+        })
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Gauge {
+        self.gauge_with(name, help, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, help: &str, labels: &[(&str, &str)]) -> Gauge {
+        self.handle(name, help, Kind::Gauge, labels, || Value::Gauge(Gauge::new()), |v| match v {
+            Value::Gauge(g) => Some(g.clone()),
+            _ => None,
+        })
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[f64]) -> Histogram {
+        self.histogram_with(name, help, bounds, &[])
+    }
+
+    /// Register (or fetch) a histogram; `bounds` only apply on first
+    /// registration — an existing series keeps its original buckets.
+    pub fn histogram_with(
+        &self,
+        name: &str,
+        help: &str,
+        bounds: &[f64],
+        labels: &[(&str, &str)],
+    ) -> Histogram {
+        self.handle(
+            name,
+            help,
+            Kind::Histogram,
+            labels,
+            || Value::Histogram(Histogram::new(bounds)),
+            |v| match v {
+                Value::Histogram(h) => Some(h.clone()),
+                _ => None,
+            },
+        )
+    }
+
+    /// Register a counter read from `f` at export time (for counts
+    /// owned by another subsystem's atomics). Re-registering the same
+    /// series replaces the closure.
+    pub fn counter_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.collector(name, help, Kind::Counter, labels, Value::CounterFn(Box::new(f)));
+    }
+
+    /// Register a gauge read from `f` at export time.
+    pub fn gauge_fn(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        f: impl Fn() -> i64 + Send + Sync + 'static,
+    ) {
+        self.collector(name, help, Kind::Gauge, labels, Value::GaugeFn(Box::new(f)));
+    }
+
+    /// Prometheus text exposition of every registered series.
+    pub fn render(&self) -> String {
+        prometheus::render(self)
+    }
+
+    /// Flat JSON snapshot: `"name{k=\"v\"}"` -> number for counters and
+    /// gauges, `{count, sum}` for histograms. Embedded in bench and
+    /// campaign JSON reports.
+    pub fn snapshot_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        self.with_families(|fams| {
+            for fam in fams {
+                for s in &fam.series {
+                    let key = prometheus::series_name(&fam.name, &s.labels);
+                    let val = match &s.value {
+                        Value::Counter(c) => Json::Num(c.get() as f64),
+                        Value::CounterFn(f) => Json::Num(f() as f64),
+                        Value::Gauge(g) => Json::Num(g.get() as f64),
+                        Value::GaugeFn(f) => Json::Num(f() as f64),
+                        Value::Histogram(h) => {
+                            let mut o = std::collections::BTreeMap::new();
+                            o.insert("count".to_string(), Json::Num(h.count() as f64));
+                            let sum = h.sum();
+                            o.insert(
+                                "sum".to_string(),
+                                if sum.is_finite() { Json::Num(sum) } else { Json::Null },
+                            );
+                            Json::Obj(o)
+                        }
+                    };
+                    root.insert(key, val);
+                }
+            }
+        });
+        Json::Obj(root)
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Registry {
+        Registry::new()
+    }
+}
+
+impl fmt::Debug for Registry {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let n = self.with_families(|fams| fams.len());
+        f.debug_struct("Registry").field("families", &n).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate_through_shared_handles() {
+        let reg = Registry::new();
+        let c = reg.counter("t_total", "help");
+        c.inc();
+        c.add(4);
+        // re-registration returns the same series
+        let c2 = reg.counter("t_total", "help");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        let g = reg.gauge("t_gauge", "help");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(reg.gauge("t_gauge", "help").get(), 5);
+    }
+
+    #[test]
+    fn labeled_series_are_distinct() {
+        let reg = Registry::new();
+        let a = reg.counter_with("t_tiles_total", "h", &[("slot", "0")]);
+        let b = reg.counter_with("t_tiles_total", "h", &[("slot", "1")]);
+        a.add(3);
+        b.add(5);
+        assert_eq!(reg.counter_with("t_tiles_total", "h", &[("slot", "0")]).get(), 3);
+        assert_eq!(reg.counter_with("t_tiles_total", "h", &[("slot", "1")]).get(), 5);
+    }
+
+    #[test]
+    fn histogram_buckets_are_le_boundaries() {
+        let reg = Registry::new();
+        let h = reg.histogram("t_lat_seconds", "h", &[0.001, 0.01, 0.1]);
+        // a value exactly on a bound lands in that bound's bucket (le)
+        h.observe(0.001);
+        h.observe(0.0005);
+        h.observe(0.05);
+        h.observe(1.0); // overflow
+        assert_eq!(h.bucket_counts(), vec![2, 0, 1, 1]);
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 1.0515).abs() < 1e-12, "{}", h.sum());
+    }
+
+    #[test]
+    fn histogram_quantiles_resolve_to_bucket_bounds() {
+        let reg = Registry::new();
+        let h = reg.histogram("t_q_seconds", "h", &[0.001, 0.01, 0.1]);
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram");
+        for _ in 0..90 {
+            h.observe(0.0005);
+        }
+        for _ in 0..9 {
+            h.observe(0.05);
+        }
+        h.observe(5.0);
+        assert_eq!(h.quantile(0.5), 0.001);
+        assert_eq!(h.quantile(0.95), 0.1);
+        assert_eq!(h.quantile(1.0), f64::INFINITY, "max lives in the +Inf bucket");
+    }
+
+    #[test]
+    #[should_panic(expected = "re-registered")]
+    fn kind_mismatch_panics() {
+        let reg = Registry::new();
+        reg.counter("t_conflict", "h");
+        reg.gauge("t_conflict", "h");
+    }
+
+    #[test]
+    fn collectors_read_live_and_replace_on_reregistration() {
+        let reg = Registry::new();
+        let src = Arc::new(AtomicU64::new(11));
+        let s2 = src.clone();
+        reg.counter_fn("t_live_total", "h", &[], move || s2.load(Ordering::Relaxed));
+        let text = reg.render();
+        assert!(text.contains("t_live_total 11"), "{text}");
+        src.store(13, Ordering::Relaxed);
+        assert!(reg.render().contains("t_live_total 13"));
+        // a rebuilt source replaces the closure instead of stacking a dup
+        reg.counter_fn("t_live_total", "h", &[], || 99);
+        let text = reg.render();
+        assert!(text.contains("t_live_total 99"), "{text}");
+        assert_eq!(text.matches("t_live_total ").count(), 1, "{text}");
+    }
+
+    #[test]
+    fn every_registry_carries_the_pool_occupancy_gauge() {
+        let text = Registry::new().render();
+        assert!(text.contains("# TYPE hostencil_pool_workers gauge"), "{text}");
+    }
+
+    #[test]
+    fn snapshot_json_is_flat_and_emittable() {
+        let reg = Registry::new();
+        reg.counter_with("t_c_total", "h", &[("family", "naive")]).add(2);
+        reg.histogram("t_h_seconds", "h", &[0.1]).observe(0.05);
+        let j = reg.snapshot_json();
+        assert_eq!(
+            j.get("t_c_total{family=\"naive\"}").unwrap().as_usize().unwrap(),
+            2
+        );
+        let h = j.get("t_h_seconds").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 1);
+        assert!(crate::json::Json::parse(&j.emit()).is_ok());
+    }
+}

@@ -1,0 +1,142 @@
+//! Prometheus text-format exposition (version 0.0.4): `# HELP` /
+//! `# TYPE` headers per family, one sample line per series, histograms
+//! expanded into cumulative `_bucket{le="..."}` lines plus `_sum` and
+//! `_count`. The output is what `hostencil run --telemetry out.prom`
+//! writes and what a future `hostencil serve` would return from
+//! `/metrics`; `testkit::prom` parses it back for round-trip tests.
+
+use std::fmt::Write as _;
+
+use super::{Histogram, Registry, Value};
+
+/// Render every registered family, in registration order.
+pub fn render(reg: &Registry) -> String {
+    let mut out = String::new();
+    reg.with_families(|fams| {
+        for fam in fams {
+            let _ = writeln!(out, "# HELP {} {}", fam.name, escape_help(&fam.help));
+            let _ = writeln!(out, "# TYPE {} {}", fam.name, fam.kind.name());
+            for s in &fam.series {
+                match &s.value {
+                    Value::Counter(c) => {
+                        let _ = writeln!(out, "{} {}", series_name(&fam.name, &s.labels), c.get());
+                    }
+                    Value::CounterFn(f) => {
+                        let _ = writeln!(out, "{} {}", series_name(&fam.name, &s.labels), f());
+                    }
+                    Value::Gauge(g) => {
+                        let _ = writeln!(out, "{} {}", series_name(&fam.name, &s.labels), g.get());
+                    }
+                    Value::GaugeFn(f) => {
+                        let _ = writeln!(out, "{} {}", series_name(&fam.name, &s.labels), f());
+                    }
+                    Value::Histogram(h) => render_histogram(&mut out, &fam.name, &s.labels, h),
+                }
+            }
+        }
+    });
+    out
+}
+
+fn render_histogram(out: &mut String, name: &str, labels: &[(String, String)], h: &Histogram) {
+    let mut cum = 0u64;
+    let counts = h.bucket_counts();
+    for (i, &bound) in h.bounds().iter().enumerate() {
+        cum += counts[i];
+        let _ = writeln!(
+            out,
+            "{}_bucket{} {}",
+            name,
+            label_set(labels, Some(("le", &fmt_f64(bound)))),
+            cum
+        );
+    }
+    cum += counts[h.bounds().len()];
+    let _ = writeln!(out, "{}_bucket{} {}", name, label_set(labels, Some(("le", "+Inf"))), cum);
+    let _ = writeln!(out, "{}_sum{} {}", name, label_set(labels, None), fmt_f64(h.sum()));
+    let _ = writeln!(out, "{}_count{} {}", name, label_set(labels, None), h.count());
+}
+
+/// `name` + rendered label set — the exposition sample name and the
+/// key used by `Registry::snapshot_json`.
+pub(crate) fn series_name(name: &str, labels: &[(String, String)]) -> String {
+    format!("{}{}", name, label_set(labels, None))
+}
+
+fn label_set(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{}=\"{}\"", k, escape_label(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{}=\"{}\"", k, escape_label(v)));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// `f64` as exposition text: `Display` is shortest-roundtrip and never
+/// uses exponent notation, so the parser reads back the exact value.
+fn fmt_f64(v: f64) -> String {
+    if v == f64::INFINITY {
+        "+Inf".to_string()
+    } else if v == f64::NEG_INFINITY {
+        "-Inf".to_string()
+    } else if v.is_nan() {
+        "NaN".to_string()
+    } else {
+        format!("{v}")
+    }
+}
+
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Registry;
+
+    #[test]
+    fn renders_help_type_and_samples() {
+        let reg = Registry::new();
+        reg.counter("demo_steps_total", "Steps completed.").add(12);
+        reg.gauge_with("demo_depth", "Queue depth.", &[("q", "a")]).set(-3);
+        let text = reg.render();
+        assert!(text.contains("# HELP demo_steps_total Steps completed."), "{text}");
+        assert!(text.contains("# TYPE demo_steps_total counter"), "{text}");
+        assert!(text.contains("\ndemo_steps_total 12\n"), "{text}");
+        assert!(text.contains("demo_depth{q=\"a\"} -3"), "{text}");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_end_at_inf() {
+        let reg = Registry::new();
+        let h = reg.histogram("demo_lat_seconds", "Latency.", &[0.001, 0.01]);
+        h.observe(0.0005);
+        h.observe(0.005);
+        h.observe(0.005);
+        h.observe(2.0);
+        let text = reg.render();
+        assert!(text.contains("demo_lat_seconds_bucket{le=\"0.001\"} 1"), "{text}");
+        assert!(text.contains("demo_lat_seconds_bucket{le=\"0.01\"} 3"), "{text}");
+        assert!(text.contains("demo_lat_seconds_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("demo_lat_seconds_count 4"), "{text}");
+        assert!(text.contains("demo_lat_seconds_sum 2.0105"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let reg = Registry::new();
+        reg.counter_with("demo_esc_total", "h", &[("path", "a\"b\\c")]).inc();
+        let text = reg.render();
+        assert!(text.contains("demo_esc_total{path=\"a\\\"b\\\\c\"} 1"), "{text}");
+    }
+}

@@ -1,0 +1,68 @@
+//! RAII phase spans: start one at the top of a phase (a tile sweep, a
+//! coordinator batch, a campaign cell) and its elapsed seconds land in
+//! the backing [`Histogram`](super::Histogram) when it drops — early
+//! returns and `?` propagation included. The drop path is
+//! allocation-free (one `Instant` read plus the histogram's atomics),
+//! so spans are safe inside the zero-alloc steady state.
+
+use std::time::Instant;
+
+use super::Histogram;
+
+/// A live phase timer; observes into its histogram on drop.
+pub struct Span {
+    hist: Histogram,
+    start: Instant,
+    armed: bool,
+}
+
+impl Span {
+    pub(crate) fn new(hist: Histogram) -> Span {
+        Span { hist, start: Instant::now(), armed: true }
+    }
+
+    /// Seconds elapsed so far (the span keeps running).
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Drop without recording (e.g. a phase aborted by an error whose
+    /// duration would poison the latency distribution).
+    pub fn discard(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            self.hist.observe(self.start.elapsed().as_secs_f64());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Registry;
+
+    #[test]
+    fn span_observes_on_drop() {
+        let reg = Registry::new();
+        let h = reg.histogram("t_span_seconds", "h", &[10.0]);
+        {
+            let _s = h.time();
+        }
+        assert_eq!(h.count(), 1);
+        assert!(h.sum() >= 0.0 && h.sum() < 10.0);
+    }
+
+    #[test]
+    fn discarded_span_records_nothing() {
+        let reg = Registry::new();
+        let h = reg.histogram("t_disc_seconds", "h", &[10.0]);
+        let s = h.time();
+        assert!(s.elapsed_secs() >= 0.0);
+        s.discard();
+        assert_eq!(h.count(), 0);
+    }
+}

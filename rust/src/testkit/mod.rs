@@ -1,6 +1,10 @@
 //! Property-testing helpers (substrate — no `proptest` in the offline
 //! crate set): a fast deterministic RNG plus shrink-free random-case
-//! runners used by the `rust/tests/proptests.rs` suite.
+//! runners used by the `rust/tests/proptests.rs` suite, and a minimal
+//! Prometheus text-format parser ([`prom`]) that round-trips
+//! `telemetry::prometheus::render` output in exporter tests.
+
+pub mod prom;
 
 use crate::grid::{Dim3, Field3};
 

@@ -1,0 +1,281 @@
+//! Minimal Prometheus text-format (0.0.4) parser for exporter tests
+//! and CI smoke checks: just enough to round-trip
+//! `telemetry::prometheus::render` output and assert on series values.
+//! Not a general scrape client — unsupported syntax is a hard error,
+//! so renderer drift surfaces as a test failure instead of being
+//! silently accepted.
+
+use anyhow::{bail, Context};
+
+/// One sample line: full sample name (histogram samples keep their
+/// `_bucket` / `_sum` / `_count` suffix), label set in source order,
+/// parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromSample {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// Family metadata accumulated from `# HELP` / `# TYPE` lines.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromFamily {
+    pub name: String,
+    pub help: String,
+    /// `counter` | `gauge` | `histogram` (or whatever TYPE said);
+    /// `untyped` when no TYPE line was seen.
+    pub kind: String,
+}
+
+/// A parsed exposition document.
+#[derive(Clone, Debug, Default)]
+pub struct PromMetrics {
+    pub families: Vec<PromFamily>,
+    pub samples: Vec<PromSample>,
+}
+
+impl PromMetrics {
+    pub fn family(&self, name: &str) -> Option<&PromFamily> {
+        self.families.iter().find(|f| f.name == name)
+    }
+
+    /// Value of the sample with exactly this label set
+    /// (order-insensitive; histogram users name the suffix, e.g.
+    /// `value("lat_seconds_bucket", &[("le", "+Inf")])`).
+    pub fn value(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.samples
+            .iter()
+            .find(|s| {
+                s.name == name
+                    && s.labels.len() == labels.len()
+                    && labels
+                        .iter()
+                        .all(|(k, v)| s.labels.iter().any(|(sk, sv)| sk == k && sv == v))
+            })
+            .map(|s| s.value)
+    }
+
+    /// All samples with this exact name.
+    pub fn samples_of<'a>(&'a self, name: &'a str) -> impl Iterator<Item = &'a PromSample> {
+        self.samples.iter().filter(move |s| s.name == name)
+    }
+}
+
+/// Parse a full exposition document.
+pub fn parse(text: &str) -> anyhow::Result<PromMetrics> {
+    let mut out = PromMetrics::default();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest.split_once(' ').unwrap_or((rest, ""));
+            family_entry(&mut out.families, name).help = unescape_help(help);
+        } else if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest
+                .split_once(' ')
+                .with_context(|| format!("line {}: TYPE without a kind: {line:?}", ln + 1))?;
+            family_entry(&mut out.families, name).kind = kind.trim().to_string();
+        } else if line.starts_with('#') {
+            // other comments are legal and ignored
+        } else {
+            out.samples
+                .push(parse_sample(line).with_context(|| format!("line {}", ln + 1))?);
+        }
+    }
+    Ok(out)
+}
+
+fn family_entry<'a>(families: &'a mut Vec<PromFamily>, name: &str) -> &'a mut PromFamily {
+    if let Some(i) = families.iter().position(|f| f.name == name) {
+        return &mut families[i];
+    }
+    families.push(PromFamily {
+        name: name.to_string(),
+        help: String::new(),
+        kind: "untyped".to_string(),
+    });
+    families.last_mut().expect("just pushed")
+}
+
+fn parse_sample(line: &str) -> anyhow::Result<PromSample> {
+    let brace = line.find('{');
+    let space = line.find(' ');
+    let labeled = match (brace, space) {
+        (Some(b), Some(s)) => b < s,
+        (Some(_), None) => true,
+        _ => false,
+    };
+    let (name, labels, rest) = if labeled {
+        let b = brace.expect("labeled implies a brace");
+        let (labels, rest) = parse_labels(&line[b..])?;
+        (&line[..b], labels, rest)
+    } else {
+        let s = space.with_context(|| format!("sample has no value: {line:?}"))?;
+        (&line[..s], Vec::new(), &line[s..])
+    };
+    anyhow::ensure!(!name.is_empty(), "sample has no name: {line:?}");
+    let mut toks = rest.split_whitespace();
+    let value = parse_value(
+        toks.next()
+            .with_context(|| format!("sample has no value: {line:?}"))?,
+    )?;
+    // one optional trailing token (a timestamp) is legal; more is not
+    anyhow::ensure!(toks.count() <= 1, "trailing garbage in sample: {line:?}");
+    Ok(PromSample { name: name.to_string(), labels, value })
+}
+
+/// Parse a `{k="v",...}` label set; returns the labels and the
+/// remainder of the line after the closing brace.
+fn parse_labels(s: &str) -> anyhow::Result<(Vec<(String, String)>, &str)> {
+    let bytes = s.as_bytes();
+    anyhow::ensure!(bytes.first() == Some(&b'{'), "label set must start with '{{': {s:?}");
+    let mut i = 1;
+    let mut labels = Vec::new();
+    loop {
+        anyhow::ensure!(i < bytes.len(), "unterminated label set: {s:?}");
+        if bytes[i] == b'}' {
+            i += 1;
+            break;
+        }
+        let start = i;
+        while i < bytes.len() && bytes[i] != b'=' {
+            i += 1;
+        }
+        anyhow::ensure!(i < bytes.len(), "label without '=': {s:?}");
+        let key = s[start..i].to_string();
+        i += 1; // '='
+        anyhow::ensure!(bytes.get(i) == Some(&b'"'), "label value must be quoted: {s:?}");
+        i += 1;
+        let mut val = String::new();
+        loop {
+            anyhow::ensure!(i < bytes.len(), "unterminated label value: {s:?}");
+            match bytes[i] {
+                b'\\' => {
+                    match bytes.get(i + 1) {
+                        Some(b'\\') => val.push('\\'),
+                        Some(b'"') => val.push('"'),
+                        Some(b'n') => val.push('\n'),
+                        _ => bail!("bad escape in label value: {s:?}"),
+                    }
+                    i += 2;
+                }
+                b'"' => {
+                    i += 1;
+                    break;
+                }
+                _ => {
+                    let ch = s[i..].chars().next().expect("in-bounds index");
+                    val.push(ch);
+                    i += ch.len_utf8();
+                }
+            }
+        }
+        labels.push((key, val));
+        match bytes.get(i) {
+            Some(b',') => i += 1,
+            Some(b'}') => {}
+            _ => bail!("expected ',' or '}}' after a label: {s:?}"),
+        }
+    }
+    Ok((labels, &s[i..]))
+}
+
+fn parse_value(tok: &str) -> anyhow::Result<f64> {
+    Ok(match tok {
+        "+Inf" | "Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        t => t.parse::<f64>().with_context(|| format!("bad sample value {t:?}"))?,
+    })
+}
+
+fn unescape_help(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('\\') => out.push('\\'),
+                Some('n') => out.push('\n'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+
+    #[test]
+    fn round_trips_the_registry_renderer() {
+        let reg = Registry::new();
+        reg.counter("rt_steps_total", "Steps.").add(42);
+        reg.gauge("rt_depth", "Depth.").set(-7);
+        reg.counter_with("rt_tiles_total", "Tiles.", &[("family", "naive"), ("slot", "0")])
+            .add(9);
+        let h = reg.histogram("rt_lat_seconds", "Latency.", &[0.001, 0.01, 0.1]);
+        for v in [0.0005, 0.002, 0.02, 5.0] {
+            h.observe(v);
+        }
+        let m = parse(&reg.render()).unwrap();
+
+        assert_eq!(m.family("rt_steps_total").unwrap().kind, "counter");
+        assert_eq!(m.family("rt_steps_total").unwrap().help, "Steps.");
+        assert_eq!(m.family("rt_depth").unwrap().kind, "gauge");
+        assert_eq!(m.family("rt_lat_seconds").unwrap().kind, "histogram");
+        assert_eq!(m.value("rt_steps_total", &[]), Some(42.0));
+        assert_eq!(m.value("rt_depth", &[]), Some(-7.0));
+        // label order must not matter to the lookup
+        assert_eq!(m.value("rt_tiles_total", &[("slot", "0"), ("family", "naive")]), Some(9.0));
+        // cumulative buckets; +Inf equals _count
+        assert_eq!(m.value("rt_lat_seconds_bucket", &[("le", "0.001")]), Some(1.0));
+        assert_eq!(m.value("rt_lat_seconds_bucket", &[("le", "0.01")]), Some(2.0));
+        assert_eq!(m.value("rt_lat_seconds_bucket", &[("le", "0.1")]), Some(3.0));
+        assert_eq!(m.value("rt_lat_seconds_bucket", &[("le", "+Inf")]), Some(4.0));
+        assert_eq!(m.value("rt_lat_seconds_count", &[]), Some(4.0));
+        let sum = m.value("rt_lat_seconds_sum", &[]).unwrap();
+        assert!((sum - 5.0225).abs() < 1e-12, "{sum}");
+        // the auto-registered pool gauge is part of every registry
+        assert_eq!(m.family("hostencil_pool_workers").unwrap().kind, "gauge");
+        assert!(m.value("hostencil_pool_workers", &[]).is_some());
+    }
+
+    #[test]
+    fn escaped_label_values_round_trip() {
+        let reg = Registry::new();
+        let tricky = "a\\b\"c\nd";
+        reg.counter_with("rt_esc_total", "Escapes.", &[("path", tricky)]).inc();
+        let m = parse(&reg.render()).unwrap();
+        assert_eq!(m.value("rt_esc_total", &[("path", tricky)]), Some(1.0));
+    }
+
+    #[test]
+    fn special_values_and_timestamps_parse() {
+        let m = parse("a 1 1234567890\nb +Inf\nc -Inf\nd NaN\ne 2.5e-3\n").unwrap();
+        assert_eq!(m.value("a", &[]), Some(1.0));
+        assert_eq!(m.value("b", &[]), Some(f64::INFINITY));
+        assert_eq!(m.value("c", &[]), Some(f64::NEG_INFINITY));
+        assert!(m.value("d", &[]).unwrap().is_nan());
+        assert_eq!(m.value("e", &[]), Some(0.0025));
+    }
+
+    #[test]
+    fn malformed_lines_are_hard_errors() {
+        assert!(parse("name_only\n").is_err());
+        assert!(parse("x{unclosed=\"v\" 1\n").is_err());
+        assert!(parse("x{k=unquoted} 1\n").is_err());
+        assert!(parse("x 1 2 3\n").is_err());
+        assert!(parse("x notanumber\n").is_err());
+    }
+}

@@ -60,6 +60,7 @@ fn step(prop: &mut Box<dyn Propagator>, st: &State, threads: usize) -> Field3 {
             v: &st.v,
             eta_pad: &st.eta_pad,
             threads,
+            telemetry: None,
         },
         &mut out,
     );

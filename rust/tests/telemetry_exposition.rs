@@ -1,0 +1,182 @@
+//! End-to-end exporter checks: an instrumented run must produce a
+//! Prometheus exposition the in-repo parser (`testkit::prom`)
+//! validates — counters for steps/injections, histograms for batch
+//! latency, gauges for pool occupancy — and a flight-recorder stream
+//! whose every line is a JSON object carrying `event` and `t_ms`.
+//!
+//! Two layers are covered: the library path (Coordinator +
+//! `set_telemetry`, in process) and the CLI path (the `hostencil`
+//! binary with `--telemetry` / `--events` / `--sample-every`, via
+//! `CARGO_BIN_EXE`), so a drift between the renderer, the CLI wiring
+//! and the parser cannot land silently.
+
+use hostencil::coordinator::{Coordinator, Mode, RunOptions};
+use hostencil::grid::Dim3;
+use hostencil::json::Json;
+use hostencil::telemetry::Registry;
+use hostencil::testkit::prom;
+use hostencil::wave::{Source, VelocityModel};
+use hostencil::{grid::Domain, stencil, wave};
+
+fn coordinator(variant: &str, n: usize) -> Coordinator<'static> {
+    let h = 10.0;
+    let v0 = 2000.0f32;
+    let dt = stencil::cfl_dt(h, v0 as f64);
+    let domain = Domain::new(Dim3::new(n, n, n), 4, h, dt).expect("domain");
+    let interior = domain.interior;
+    let v = VelocityModel::Constant(v0).build(interior);
+    let eta = wave::eta_profile(&domain, v0 as f64);
+    let src = Source { pos: Dim3::new(n / 2, n / 2, n / 2), f0: 15.0, amplitude: 1.0 };
+    Coordinator::new(
+        None,
+        domain,
+        Mode::Golden,
+        variant,
+        "gmem",
+        v,
+        eta,
+        src,
+        vec![Dim3::new(2, 2, 2)],
+    )
+    .expect("coordinator")
+}
+
+#[test]
+fn instrumented_run_round_trips_through_the_prom_parser() {
+    let mut coord = coordinator("tf_s2", 16);
+    coord.set_cpu_threads(2);
+    let reg = Registry::new();
+    reg.events().to_memory();
+    coord.set_telemetry(&reg);
+    coord
+        .run_observed(10, RunOptions::default(), None)
+        .expect("instrumented run");
+
+    let m = prom::parse(&reg.render()).expect("exposition parses");
+    assert_eq!(m.value("hostencil_steps_total", &[]), Some(10.0));
+    assert_eq!(m.value("hostencil_source_injections_total", &[]), Some(10.0));
+    // tf_s2's natural cadence: 10 steps in 5 fused batches
+    assert_eq!(m.value("hostencil_batches_total", &[]), Some(5.0));
+    assert_eq!(m.value("hostencil_batch_latency_seconds_count", &[]), Some(5.0));
+    assert_eq!(
+        m.value("hostencil_batch_latency_seconds_bucket", &[("le", "+Inf")]),
+        Some(5.0)
+    );
+    assert!(m.value("hostencil_batch_latency_seconds_sum", &[]).unwrap() > 0.0);
+    assert_eq!(
+        m.family("hostencil_batch_latency_seconds").unwrap().kind,
+        "histogram"
+    );
+    assert_eq!(
+        m.value("hostencil_plan_builds_total", &[("family", "time_fused")]),
+        Some(1.0)
+    );
+    // the fused family reports its recompute overhead, labeled by degree
+    assert!(
+        m.value("hostencil_fused_skirt_points_total", &[("s", "2")]).unwrap() > 0.0,
+        "fused sweeps must report skirt overhead"
+    );
+    // pool instrumentation: the occupancy gauge is auto-registered,
+    // the stats collectors attach when the plan builds the pool
+    assert_eq!(m.family("hostencil_pool_workers").unwrap().kind, "gauge");
+    assert!(m.value("hostencil_pool_workers", &[]).is_some());
+    assert!(m.value("hostencil_pool_jobs_total", &[]).unwrap() > 0.0);
+    // per-slot tile claims: every sample belongs to the fused family
+    let tiles: f64 = m
+        .samples_of("hostencil_tiles_claimed_total")
+        .map(|s| {
+            assert!(
+                s.labels.iter().any(|(k, v)| k == "family" && v == "time_fused"),
+                "{:?}",
+                s.labels
+            );
+            s.value
+        })
+        .sum();
+    assert!(tiles > 0.0, "sweeps must claim tiles");
+
+    // flight recorder: every line is JSON with `event` + `t_ms`, and
+    // the run's chapter marks are all present
+    let lines = reg.events().lines();
+    assert!(!lines.is_empty());
+    let mut kinds = Vec::new();
+    for line in &lines {
+        let j = Json::parse(line).expect("JSONL line parses");
+        assert!(j.get("t_ms").unwrap().as_f64().unwrap() >= 0.0, "{line}");
+        kinds.push(j.get("event").unwrap().as_str().unwrap().to_string());
+    }
+    for want in ["run_start", "plan_build", "batch", "run_end"] {
+        assert!(kinds.iter().any(|k| k == want), "missing {want} in {kinds:?}");
+    }
+}
+
+#[test]
+fn cli_run_writes_parseable_exposition_and_event_stream() {
+    let exe = env!("CARGO_BIN_EXE_hostencil");
+    let dir = std::env::temp_dir();
+    let prom_path = dir.join(format!("hostencil_cli_expo_{}.prom", std::process::id()));
+    let events_path = dir.join(format!("hostencil_cli_expo_{}.jsonl", std::process::id()));
+    let out = std::process::Command::new(exe)
+        .args(["run", "--fuse", "2", "--steps", "8", "--sample-every", "2", "--cpu-threads", "2"])
+        .arg("--telemetry")
+        .arg(&prom_path)
+        .arg("--events")
+        .arg(&events_path)
+        .output()
+        .expect("spawn hostencil");
+    assert!(
+        out.status.success(),
+        "run failed\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let text = std::fs::read_to_string(&prom_path).expect("exposition written");
+    let events = std::fs::read_to_string(&events_path).expect("event stream written");
+    let _ = std::fs::remove_file(&prom_path);
+    let _ = std::fs::remove_file(&events_path);
+
+    let m = prom::parse(&text).expect("CLI exposition parses");
+    assert_eq!(m.value("hostencil_steps_total", &[]), Some(8.0));
+    assert_eq!(m.value("hostencil_source_injections_total", &[]), Some(8.0));
+    // --sample-every 2 keeps tf_s2's cadence at 2 steps -> 4 batches
+    assert_eq!(m.value("hostencil_batches_total", &[]), Some(4.0));
+    assert_eq!(m.value("hostencil_batch_latency_seconds_count", &[]), Some(4.0));
+    assert_eq!(
+        m.family("hostencil_batch_latency_seconds").unwrap().kind,
+        "histogram"
+    );
+    assert_eq!(
+        m.value("hostencil_plan_builds_total", &[("family", "time_fused")]),
+        Some(1.0)
+    );
+    assert!(m.value("hostencil_pool_workers", &[]).is_some());
+    assert!(m.value("hostencil_pool_jobs_total", &[]).unwrap() > 0.0);
+
+    let mut kinds = Vec::new();
+    for line in events.lines() {
+        let j = Json::parse(line).expect("JSONL line parses");
+        assert!(j.get("t_ms").unwrap().as_f64().unwrap() >= 0.0, "{line}");
+        kinds.push(j.get("event").unwrap().as_str().unwrap().to_string());
+    }
+    for want in ["run_start", "plan_build", "batch", "run_end"] {
+        assert!(kinds.iter().any(|k| k == want), "missing {want} in {kinds:?}");
+    }
+}
+
+#[test]
+fn cli_telemetry_demo_prints_a_live_snapshot() {
+    let exe = env!("CARGO_BIN_EXE_hostencil");
+    let out = std::process::Command::new(exe)
+        .args(["telemetry", "--demo", "--size", "14", "--steps", "6", "--cpu-threads", "1"])
+        .output()
+        .expect("spawn hostencil");
+    assert!(
+        out.status.success(),
+        "demo failed\nstderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("hostencil_steps_total 6"), "{stdout}");
+    assert!(stdout.contains("# TYPE hostencil_batch_latency_seconds histogram"), "{stdout}");
+    assert!(stdout.contains("\"event\":\"run_end\""), "{stdout}");
+}

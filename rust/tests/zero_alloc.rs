@@ -16,12 +16,19 @@
 //! a parallel step costs condvar bookkeeping only: no `thread::scope`,
 //! no spawn, no allocation). The counter is process-global, so pool
 //! worker threads are under the same microscope as the caller.
+//!
+//! Every run here carries a **live telemetry registry**: flight-recorder
+//! instrumentation must be free on the hot path. Series registration
+//! (which allocates) happens at plan-build time inside the warm-up;
+//! armed steps only bump pre-registered atomics and observe into
+//! preallocated histogram buckets.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 
 use hostencil::grid::{Dim3, Domain, Field3};
 use hostencil::stencil::{self, propagator, FusedInputs, GoldenPropagator, Propagator, SourceBatch};
+use hostencil::telemetry::Registry;
 use hostencil::wave;
 use hostencil::R;
 
@@ -86,7 +93,11 @@ fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize, threads:
     // counter is armed (the coordinator reuses its schedule buffers
     // the same way)
     let amps = vec![1e-3f32; fuse];
-    let inp = FusedInputs { domain, v: &v, eta_pad: &eta_pad, threads };
+    // live registry attached for the whole run: the warm-up registers
+    // every series (tile counters, sweep histogram, pool collectors);
+    // armed steps must not allocate despite full instrumentation
+    let telemetry = Registry::new();
+    let inp = FusedInputs { domain, v: &v, eta_pad: &eta_pad, threads, telemetry: Some(&telemetry) };
     let advance = |u: &mut Field3, um: &mut Field3, prop: &mut dyn Propagator, n: usize| {
         let mut done = 0;
         while done < n {
@@ -109,6 +120,12 @@ fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize, threads:
     assert!(
         u_pad.max_abs() > 0.0 && !u_pad.has_non_finite(),
         "{variant}: steady-state wave must stay finite and non-zero"
+    );
+    assert!(
+        telemetry
+            .render()
+            .contains(&format!("hostencil_plan_builds_total{{family=\"{}\"}}", prop.name())),
+        "{variant}: the warm-up must have registered plan instrumentation"
     );
     ALLOCS.load(Ordering::SeqCst)
 }

@@ -10,6 +10,9 @@
 #   BENCH_3.json — the working tree's temporal-fusion sweep
 #                  (`bench --fuse 1,2,4`): steady-state rate per fusion
 #                  degree with speedups vs the unfused s=1 control
+#   BENCH_1.prom — the head run's Prometheus telemetry exposition
+#                  (pool occupancy, tiles claimed, sweep latency
+#                  histograms — see docs/METRICS.md)
 # and print the per-shape speedup plus the pool's thread scaling. Run
 # from the repository root in a cargo-capable environment, then commit
 # the files:
@@ -49,10 +52,10 @@ echo "== baseline $(git rev-parse --short "$BASE_REF") -> BENCH_0.json"
 # (thread_sweep + scaling_model) and the fusion sweep (fuse_sweep);
 # BENCH_2 and BENCH_3 are split out of BENCH_1's JSON below instead of
 # re-benching the whole matrix again.
-echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE) -> BENCH_1/2/3.json"
+echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE) -> BENCH_1/2/3.json + BENCH_1.prom"
 cargo run --release -p hostencil -- bench \
   --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" --fuse "$FUSE" \
-  --json "$OUT_DIR/BENCH_1.json"
+  --json "$OUT_DIR/BENCH_1.json" --telemetry "$OUT_DIR/BENCH_1.prom"
 
 python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" <<'EOF'
 import json, sys
