@@ -15,12 +15,20 @@
 //! reports where the model's ranking agrees with measured cost —
 //! meaningful only now that the time loop is allocation-free, so the
 //! measured rate reflects code shape rather than allocator traffic.
+//!
+//! The measured mode also searches the CPU-only axes the AMD/Nvidia
+//! tuning study (arXiv 2406.08923) identifies as the per-architecture
+//! payoff: row-kernel lane width and unroll depth. These have no
+//! gpusim-model analog (the model scores GPU tile geometry), so they
+//! enter as a measured-only sweep: each model-ranked tile shape is
+//! timed once per requested `(lanes, unroll)` combination, forced
+//! through [`crate::stencil::simd::force`].
 
 use super::arch::GpuArch;
 use super::kernels::{Family, KernelVariant};
 use super::timing::{simulate, KernelRun};
 use crate::grid::{Dim3, Domain};
-use crate::stencil::{self, propagator};
+use crate::stencil::{self, propagator, simd};
 
 /// One autotuner candidate and its predicted run.
 #[derive(Clone, Debug)]
@@ -177,6 +185,10 @@ pub struct MeasuredCandidate {
     pub candidate: Candidate,
     /// Rank in the model's ordering of the measured set (0 = model-best).
     pub model_rank: usize,
+    /// Row-kernel lane width this row was measured with (1 = scalar).
+    pub lanes: u8,
+    /// Row-kernel unroll depth this row was measured with.
+    pub unroll: u8,
     /// Measured CPU full-step rate of the candidate's executable analog.
     pub steps_per_sec: f64,
 }
@@ -227,6 +239,14 @@ pub fn measured_domain(n: usize) -> anyhow::Result<Domain> {
 /// fused candidates execute through the `TimeFused` CPU analog, so
 /// `s` in {1, 2, 4} is ranked by the same measured signal as the tile
 /// shapes (`&[1]` reproduces the unfused search exactly).
+///
+/// `lane_combos` widens the search once more, to (shape x fuse x lane
+/// width x unroll): each model candidate is measured once per
+/// `(lanes, unroll)` combination, forced through [`simd::force`] for
+/// the duration of the timing (and released afterwards). `&[]` keeps
+/// one row per candidate under whatever kernel dispatch is already
+/// active. Results are bit-identical across combinations by the row-
+/// kernel contract (docs/KERNELS.md), so the sweep ranks cost only.
 #[allow(clippy::too_many_arguments)] // mirrors the bench knobs: search scope + measurement budget
 pub fn tune_measured(
     arch: &GpuArch,
@@ -237,6 +257,7 @@ pub fn tune_measured(
     warmup: usize,
     samples: usize,
     fuse_degrees: &[u32],
+    lane_combos: &[(u8, u8)],
 ) -> anyhow::Result<MeasuredReport> {
     anyhow::ensure!(top >= 2, "--measured needs at least 2 candidates to rank");
     anyhow::ensure!(steps >= 1, "--measured needs at least 1 step per sample");
@@ -246,22 +267,46 @@ pub fn tune_measured(
         "family {family:?} has fewer than 2 feasible candidates on {}",
         arch.name
     );
-    let rows: Vec<MeasuredCandidate> = ranked
-        .into_iter()
-        .take(top)
-        .enumerate()
-        .map(|(i, c)| {
+    let sweep = !lane_combos.is_empty();
+    let active = simd::active();
+    let combos: Vec<(u8, u8)> =
+        if sweep { lane_combos.to_vec() } else { vec![(active.lanes, active.unroll)] };
+    let mut rows: Vec<MeasuredCandidate> = Vec::new();
+    for (i, c) in ranked.into_iter().take(top).enumerate() {
+        for &(lanes, unroll) in &combos {
+            if sweep && !simd::force(lanes, unroll) {
+                simd::clear_force();
+                anyhow::bail!(
+                    "unsupported lane/unroll combination {lanes}x{unroll} \
+                     (lanes 1|4|8|16, unroll 1|2|4; 1x1 is the scalar row)"
+                );
+            }
+            let kern = simd::active();
             let mut prop = propagator::from_variant(&c.variant);
             let sps = propagator::measure_steps_per_sec(prop.as_mut(), domain, steps, warmup, samples);
-            MeasuredCandidate { candidate: c, model_rank: i, steps_per_sec: sps }
-        })
-        .collect();
+            rows.push(MeasuredCandidate {
+                candidate: c.clone(),
+                model_rank: i,
+                lanes: kern.lanes,
+                unroll: kern.unroll,
+                steps_per_sec: sps,
+            });
+        }
+    }
+    if sweep {
+        simd::clear_force();
+    }
     // pairwise agreement: rows are in model order, so a pair is
-    // concordant when the earlier row also measures at least as fast
+    // concordant when the earlier row also measures at least as fast.
+    // Lane variants of the same shape share a model rank — the model
+    // has no opinion on them, so those pairs are excluded.
     let mut concordant = 0usize;
     let mut total = 0usize;
     for i in 0..rows.len() {
         for j in i + 1..rows.len() {
+            if rows[i].model_rank == rows[j].model_rank {
+                continue;
+            }
             total += 1;
             if rows[i].steps_per_sec >= rows[j].steps_per_sec {
                 concordant += 1;
@@ -342,7 +387,7 @@ mod tests {
     #[test]
     fn measured_mode_times_candidates_and_reports_rank_agreement() {
         let domain = measured_domain(14).unwrap();
-        let r = tune_measured(&v100(), Family::Gmem, 3, &domain, 2, 0, 1, &[1]).unwrap();
+        let r = tune_measured(&v100(), Family::Gmem, 3, &domain, 2, 0, 1, &[1], &[]).unwrap();
         assert_eq!(r.rows.len(), 3);
         assert_eq!(r.total_pairs, 3);
         assert!(r.concordant_pairs <= r.total_pairs);
@@ -363,8 +408,11 @@ mod tests {
     #[test]
     fn measured_mode_rejects_degenerate_searches() {
         let domain = measured_domain(14).unwrap();
-        assert!(tune_measured(&v100(), Family::Gmem, 1, &domain, 2, 0, 1, &[1]).is_err());
-        assert!(tune_measured(&v100(), Family::Gmem, 3, &domain, 0, 0, 1, &[1]).is_err());
+        assert!(tune_measured(&v100(), Family::Gmem, 1, &domain, 2, 0, 1, &[1], &[]).is_err());
+        assert!(tune_measured(&v100(), Family::Gmem, 3, &domain, 0, 0, 1, &[1], &[]).is_err());
+        // lane/unroll combos outside the supported grid are rejected
+        assert!(tune_measured(&v100(), Family::Gmem, 2, &domain, 1, 0, 1, &[1], &[(5, 2)]).is_err());
+        assert!(tune_measured(&v100(), Family::Gmem, 2, &domain, 1, 0, 1, &[1], &[(8, 3)]).is_err());
     }
 
     #[test]
@@ -387,11 +435,31 @@ mod tests {
     }
 
     #[test]
+    fn measured_mode_sweeps_lane_width_and_unroll() {
+        let domain = measured_domain(14).unwrap();
+        let combos = [(1u8, 1u8), (4, 2), (8, 2)];
+        let r = tune_measured(&v100(), Family::Gmem, 2, &domain, 1, 0, 1, &[1], &combos).unwrap();
+        assert_eq!(r.rows.len(), 6, "2 shapes x 3 lane combos");
+        // same-shape lane variants share a model rank and are excluded
+        // from concordance: only the 3x3 cross-shape pairs count
+        assert_eq!(r.total_pairs, 9);
+        let seen: std::collections::HashSet<(u8, u8)> =
+            r.rows.iter().map(|m| (m.lanes, m.unroll)).collect();
+        assert!(seen.contains(&(1, 1)), "scalar control row present: {seen:?}");
+        assert!(seen.contains(&(8, 2)), "widest requested combo present: {seen:?}");
+        for m in &r.rows {
+            assert!(m.steps_per_sec > 0.0 && m.steps_per_sec.is_finite());
+        }
+        // the sweep releases its force override when it finishes
+        assert_eq!(simd::active(), simd::detected(), "lane force must not leak");
+    }
+
+    #[test]
     fn measured_mode_ranks_fusion_degrees_through_the_fused_analog() {
         // the fused candidates execute via TimeFused; the report must
         // carry their degrees and finite measured rates
         let domain = measured_domain(16).unwrap();
-        let r = tune_measured(&v100(), Family::StSmem, 4, &domain, 2, 0, 1, &[1, 2, 4]).unwrap();
+        let r = tune_measured(&v100(), Family::StSmem, 4, &domain, 2, 0, 1, &[1, 2, 4], &[]).unwrap();
         assert_eq!(r.rows.len(), 4);
         for m in &r.rows {
             assert!(m.steps_per_sec > 0.0 && m.steps_per_sec.is_finite());

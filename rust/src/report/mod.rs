@@ -205,7 +205,7 @@ pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> Str
     out.push('\n');
     out.push_str(&format!(
         "{} cells: {} Pass, {} SoftFail, {} HardFail ({} off-expectation) — \
-         {:.2?} on {} threads, {} shared physics run(s)\n",
+         {:.2?} on {} threads, {} shared physics run(s), row kernel {}\n",
         report.cells.len(),
         report.count(crate::scenario::Verdict::Pass),
         report.count(crate::scenario::Verdict::SoftFail),
@@ -213,7 +213,11 @@ pub fn campaign_table(report: &crate::scenario::campaign::CampaignReport) -> Str
         report.off_expectation_count(),
         report.wall,
         report.threads,
-        report.physics_runs
+        report.physics_runs,
+        // the dispatched CPU row kernel (scalar / avx2x8 / ...): the
+        // measured columns are only comparable across machines when
+        // the dispatch is known
+        crate::stencil::simd::active().tag()
     ));
     out
 }
@@ -320,6 +324,10 @@ mod tests {
         assert!(t.contains("kern ms"), "the telemetry wall column must render: {t}");
         assert!(t.contains("1 cells:"), "{t}");
         assert!(t.contains("1 shared physics run(s)"), "{t}");
+        // footer records the dispatched row kernel so BENCH/campaign
+        // artifacts are comparable across machines (the tag itself is
+        // not asserted: a parallel test may hold a lane-force override)
+        assert!(t.contains("row kernel "), "{t}");
     }
 
     #[test]

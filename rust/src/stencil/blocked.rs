@@ -13,7 +13,7 @@
 use super::propagator::{
     inner_tile_into, pml_tile_into, Plan, Propagator, PropagatorInputs,
 };
-use super::Consts;
+use super::{simd, Consts};
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{decompose, Dim3, Field3};
 
@@ -45,12 +45,12 @@ impl Propagator for Blocked3D {
     }
 
     fn signature(&self) -> String {
-        format!("blocked3d:{}", self.tile)
+        format!("blocked3d:{}:{}", self.tile, simd::detected().tag())
     }
 
     fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
         debug_assert_eq!(out.dims(), inp.domain.padded());
-        let k = Consts::of(inp.domain);
+        let k = Consts::of(inp.domain).with_kernel(simd::active());
         let tile = self.tile;
         let plan = Plan::ensure(
             &mut self.plan,

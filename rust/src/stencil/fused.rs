@@ -61,8 +61,10 @@
 //! coordinator hands the family whole step batches between observer
 //! callbacks.
 
-use super::propagator::{FusedInputs, Plan, Propagator, PropagatorInputs, SharedOut, SourceBatch};
-use super::{inner_row, pml_row, Consts};
+use super::propagator::{
+    first_touch_zeros, FusedInputs, Plan, Propagator, PropagatorInputs, SharedOut, SourceBatch,
+};
+use super::{inner_row, pml_row, simd, Consts};
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{Dim3, Domain, Field3, FieldView, Region, RegionClass};
 use crate::telemetry::{Counter, Registry};
@@ -89,7 +91,16 @@ impl FusedScratch {
         let ey = (tile_y + 2 * skirt).min(ni.y);
         let dp = Dim3::new(ez, ey, ni.x).padded(R).volume();
         let de = ez * ey * ni.x;
-        FusedScratch { ua: vec![0.0; dp], ub: vec![0.0; dp], ee: vec![0.0; dp], vv: vec![0.0; de] }
+        // first-touch: this ctor runs on the owning worker's thread
+        // (Plan::ensure routes scratch construction through the pool),
+        // so writing every element places the brick's pages on that
+        // worker's NUMA node
+        FusedScratch {
+            ua: first_touch_zeros(dp),
+            ub: first_touch_zeros(dp),
+            ee: first_touch_zeros(dp),
+            vv: first_touch_zeros(de),
+        }
     }
 }
 
@@ -171,7 +182,7 @@ impl Propagator for TimeFused {
     }
 
     fn signature(&self) -> String {
-        format!("time_fused:s{}:{}x{}", self.s, self.tile_z, self.tile_y)
+        format!("time_fused:s{}:{}x{}:{}", self.s, self.tile_z, self.tile_y, simd::detected().tag())
     }
 
     /// Single-step path: the classification-split row walk over the
@@ -180,7 +191,7 @@ impl Propagator for TimeFused {
     /// identical to the golden walk.
     fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
         debug_assert_eq!(out.dims(), inp.domain.padded());
-        let k = Consts::of(inp.domain);
+        let k = Consts::of(inp.domain).with_kernel(simd::active());
         let plan = ensure_plan(
             &mut self.plan,
             inp.domain,
@@ -236,10 +247,14 @@ impl Propagator for TimeFused {
         assert!(n <= self.s, "batch of {n} steps exceeds this family's fusion degree {}", self.s);
         debug_assert_eq!(u_pad.dims(), inp.domain.padded());
         debug_assert_eq!(um_pad.dims(), inp.domain.padded());
-        let k = Consts::of(inp.domain);
+        let k = Consts::of(inp.domain).with_kernel(simd::active());
         let domain = *inp.domain;
         let padded = inp.domain.padded();
         if self.next.as_ref().map(|(a, _)| a.dims()) != Some(padded) {
+            // Field3::zeros is calloc-backed (pages untouched until
+            // written); each worker's core copy-out below is the first
+            // write, so the output pair's pages land on the node of
+            // the worker that owns each tile — first-touch for free.
             self.next = Some((Field3::zeros(padded), Field3::zeros(padded)));
         }
         if self.skirt.is_none() {

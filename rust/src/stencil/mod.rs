@@ -14,6 +14,10 @@
 //!   to the row length, so the inner loop indexes bounds-check-free and
 //!   LLVM auto-vectorizes it. Per-point arithmetic ordering matches the
 //!   two-pass spec exactly: results are bit-identical (asserted below).
+//!   Each row dispatches on the kernel recorded in `Consts`: the scalar
+//!   oracle, or the explicit-SIMD lane kernels in [`simd`] (runtime ISA
+//!   dispatch behind the `simd` cargo feature) — bit-identical by
+//!   construction, so the dispatch choice is purely a speed knob.
 //! * [`GoldenPropagator`] drives the row kernels over the 7-region
 //!   decomposition with two persistent padded buffers — the oracle the
 //!   integration tests compare PJRT output against.
@@ -30,6 +34,7 @@ mod fused;
 mod golden;
 pub mod propagator;
 mod semi;
+pub mod simd;
 mod streaming;
 
 pub use golden::GoldenPropagator;
@@ -188,12 +193,16 @@ pub fn step_pml(
 /// Precomputed per-step scalar constants. Derivations mirror `lap8` /
 /// `step_inner` / `step_pml` exactly (f64 -> f32 casts in the same
 /// places) so the fused row kernels stay bit-identical to the two-pass
-/// spec.
+/// spec. Also carries the dispatched row-kernel choice: [`Consts::of`]
+/// defaults to the scalar oracle; families that take the SIMD path
+/// attach `simd::active()` via [`Consts::with_kernel`].
 #[derive(Copy, Clone)]
 pub(crate) struct Consts {
     pub dt2: f32,
     pub dt_f: f32,
     pub inv_h2: f32,
+    /// Row-kernel dispatch for this step (scalar unless overridden).
+    pub kern: simd::RowKernel,
 }
 
 impl Consts {
@@ -202,7 +211,13 @@ impl Consts {
             dt2: (domain.dt * domain.dt) as f32,
             dt_f: domain.dt as f32,
             inv_h2: (1.0 / (domain.h * domain.h)) as f32,
+            kern: simd::RowKernel::SCALAR,
         }
+    }
+
+    /// The same constants with a dispatched row kernel attached.
+    pub(crate) fn with_kernel(self, kern: simd::RowKernel) -> Consts {
+        Consts { kern, ..self }
     }
 }
 
@@ -217,9 +232,34 @@ impl Consts {
 /// indexes bounds-check-free and auto-vectorizes. Arithmetic ordering
 /// mirrors `lap8` + `step_inner`: per-point results are bit-identical
 /// to the two-pass spec.
+///
+/// Dispatches on `k.kern`: the scalar oracle below, or the explicit-
+/// SIMD path ([`simd`]) — which replicates the per-point op order
+/// exactly and tails into the scalar kernel, so the choice never
+/// changes a single bit of output.
 #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI: fields + row coords + constants
 #[inline]
 pub(crate) fn inner_row(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    if k.kern.lanes > 1 {
+        simd::inner_row_simd(u, v, iz, iy, x0, len, k, out)
+    } else {
+        inner_row_scalar(u, v, iz, iy, x0, len, k, out)
+    }
+}
+
+/// The scalar inner-row oracle (see [`inner_row`] for the contract).
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI: fields + row coords + constants
+#[inline]
+pub(crate) fn inner_row_scalar(
     u: FieldView<'_>,
     v: FieldView<'_>,
     iz: usize,
@@ -260,10 +300,32 @@ pub(crate) fn inner_row(
 
 /// Fused PML (7-point, damped) update of one contiguous x-row, in
 /// place like [`inner_row`]. `eta` is the R-ghost-padded damping
-/// profile. Mirrors `lap2` + `eta_bar` + `step_pml` bit-for-bit.
+/// profile. Mirrors `lap2` + `eta_bar` + `step_pml` bit-for-bit, and
+/// dispatches on `k.kern` exactly like [`inner_row`].
 #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI: fields + row coords + constants
 #[inline]
 pub(crate) fn pml_row(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    eta: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    if k.kern.lanes > 1 {
+        simd::pml_row_simd(u, v, eta, iz, iy, x0, len, k, out)
+    } else {
+        pml_row_scalar(u, v, eta, iz, iy, x0, len, k, out)
+    }
+}
+
+/// The scalar PML-row oracle (see [`pml_row`] for the contract).
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI: fields + row coords + constants
+#[inline]
+pub(crate) fn pml_row_scalar(
     u: FieldView<'_>,
     v: FieldView<'_>,
     eta: FieldView<'_>,

@@ -278,6 +278,22 @@ pub(crate) struct PlanInstr {
 
 impl PlanInstr {
     fn register(reg: &Registry, family: &'static str, slots: usize) -> PlanInstr {
+        // Record the row-kernel dispatch decision alongside the plan:
+        // one gauge for the lane width, one counter per ISA. Both are
+        // registered here — at plan build, never on the steady-state
+        // step — so the instrumented hot loop stays allocation-free.
+        let kern = super::simd::active();
+        reg.gauge(
+            "hostencil_simd_width",
+            "Lane width of the dispatched SIMD row kernel (1 = scalar).",
+        )
+        .set(kern.lanes as i64);
+        reg.counter_with(
+            "hostencil_simd_dispatch_total",
+            "Row-kernel dispatch decisions recorded at plan build, by ISA.",
+            &[("isa", kern.isa.name())],
+        )
+        .inc();
         let tiles = (0..slots)
             .map(|i| {
                 let slot = i.to_string();
@@ -317,8 +333,11 @@ impl<S> Plan<S> {
         family: &'static str,
         telemetry: Option<&Registry>,
         tile: impl FnOnce(&Domain) -> Vec<Region>,
-        mk_scratch: impl Fn(&[Region]) -> S,
-    ) -> &'a mut Plan<S> {
+        mk_scratch: impl Fn(&[Region]) -> S + Sync,
+    ) -> &'a mut Plan<S>
+    where
+        S: Send,
+    {
         let stale = match slot {
             Some(p) => p.domain != *domain || p.threads != threads,
             None => true,
@@ -333,7 +352,7 @@ impl<S> Plan<S> {
             let old_pool = slot.take().and_then(|old| old.pool);
             let tasks = tile(domain);
             let workers = resolve_threads(threads, tasks.len());
-            let pool = match old_pool {
+            let mut pool = match old_pool {
                 Some(old) if workers > 1 && old.workers() == workers => Some(old),
                 other => {
                     drop(other);
@@ -344,7 +363,33 @@ impl<S> Plan<S> {
                     }
                 }
             };
-            let scratch: Vec<S> = (0..workers).map(|_| mk_scratch(&tasks)).collect();
+            // NUMA-aware first-touch placement: each worker slot's
+            // scratch (streaming rings, semi partial rows, fused
+            // wavefield bricks) is constructed — and its pages first
+            // written — *on the thread that owns the slot*, so on
+            // first-touch kernels the backing pages land on the
+            // worker's node. Slot 0 is the caller, matching the slot-0
+            // role in every subsequent sweep; the serial path
+            // constructs inline exactly as before.
+            let scratch: Vec<S> = match pool.as_mut() {
+                Some(pool) => {
+                    let mut slots: Vec<Option<S>> = (0..workers).map(|_| None).collect();
+                    {
+                        let shared = SharedScratch::new(&mut slots);
+                        pool.run(&|slot| {
+                            // SAFETY: each pool slot index runs on
+                            // exactly one thread per `run`, so slots
+                            // never alias.
+                            *unsafe { shared.slot(slot) } = Some(mk_scratch(&tasks));
+                        });
+                    }
+                    slots
+                        .into_iter()
+                        .map(|s| s.expect("every pool slot initializes its scratch"))
+                        .collect()
+                }
+                None => (0..workers).map(|_| mk_scratch(&tasks)).collect(),
+            };
             if let Some(reg) = telemetry {
                 let name = if rebuild {
                     "hostencil_plan_rebuilds_total"
@@ -484,6 +529,22 @@ impl<S> SharedScratch<S> {
         debug_assert!(i < self.len);
         &mut *self.ptr.add(i)
     }
+}
+
+/// A zeroed f32 buffer whose pages are actually *written*, not just
+/// reserved: `vec![0.0; n]` lowers to `alloc_zeroed`, which on Linux
+/// returns copy-on-write zero pages that fault in on first use — on
+/// whichever thread that happens to be. Writing every element here
+/// makes the constructing thread the first toucher, which is what pins
+/// scratch pages to a worker's NUMA node when [`Plan::ensure`] builds
+/// scratch on the owning worker's thread. Scratch constructors
+/// (streaming rings, semi partial rows, fused bricks) must use this
+/// instead of `vec![0.0; n]`.
+#[allow(clippy::slow_vector_initialization)] // deliberate: resize *writes* pages, vec![] callocs
+pub(crate) fn first_touch_zeros(n: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(n);
+    v.resize(n, 0.0);
+    v
 }
 
 fn resolve_threads(requested: usize, tasks: usize) -> usize {

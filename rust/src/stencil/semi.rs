@@ -15,8 +15,10 @@
 //! golden propagator to a few ULP rather than bitwise (the equivalence
 //! suite asserts the tolerance).
 
-use super::propagator::{pml_tile_into, Plan, Propagator, PropagatorInputs, SharedOut};
-use super::Consts;
+use super::propagator::{
+    first_touch_zeros, pml_tile_into, Plan, Propagator, PropagatorInputs, SharedOut,
+};
+use super::{simd, Consts};
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{decompose, Dim3, Field3, Region};
 use crate::{stencil::C8, R};
@@ -34,7 +36,9 @@ impl PartialRow {
             .map(|t| t.shape.x)
             .max()
             .unwrap_or(0);
-        PartialRow { buf: vec![0.0; widest] }
+        // first-touch on the owning worker's thread (the ctor runs
+        // through the pool) so the partial-sum pages are NUMA-local
+        PartialRow { buf: first_touch_zeros(widest) }
     }
 }
 
@@ -65,12 +69,12 @@ impl Propagator for SemiStencil {
     }
 
     fn signature(&self) -> String {
-        format!("semi_stencil:{}", self.tile)
+        format!("semi_stencil:{}:{}", self.tile, simd::detected().tag())
     }
 
     fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
         debug_assert_eq!(out.dims(), inp.domain.padded());
-        let k = Consts::of(inp.domain);
+        let k = Consts::of(inp.domain).with_kernel(simd::active());
         let tile = self.tile;
         let plan = Plan::ensure(
             &mut self.plan,
@@ -137,7 +141,11 @@ fn semi_inner_tile_into(
             // COMBINE: center + z/y-axis gather + completed x partials,
             // fused with the leapfrog update into the output row (which
             // holds um on entry). Neighbor runs are pre-cut to the row
-            // length so this loop vectorizes like `inner_row`.
+            // length so this loop vectorizes like `inner_row`. It stays
+            // scalar-inline rather than dispatching to the `simd` row
+            // kernels: the x-axis term arrives pre-summed in `p`, which
+            // the 25-point row-kernel contract has no slot for (this
+            // family is ULP-equivalent, not bitwise, by design).
             let b = offset.x + R;
             let len = shape.x;
             let zp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz + m + 1, cy, b, len));

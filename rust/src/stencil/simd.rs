@@ -1,0 +1,916 @@
+//! Explicit-SIMD row kernels with runtime ISA dispatch.
+//!
+//! The scalar row kernels in the parent module auto-vectorize well on
+//! a good day — but "on a good day" is exactly the compiler-dependence
+//! the paper's hand-tuned kernels exist to eliminate. This module
+//! vectorizes `inner_row` / `pml_row` across x explicitly:
+//!
+//! * [`Lanes<W>`] is the lane abstraction: a `[f32; W]` wrapper whose
+//!   element-wise `+ - * /` are plain IEEE-754 f32 operations in lane
+//!   order. Rust/LLVM never contracts separate `*`/`+` into an FMA, so
+//!   a W-wide chunk performs **exactly** the scalar per-point op
+//!   sequence — the SIMD path is bit-identical to the scalar oracle by
+//!   construction, not by tolerance.
+//! * `inner_row_w<W, U>` / `pml_row_w<W, U>` walk a row in `U`
+//!   explicitly unrolled `W`-wide chunks (W ∈ {4, 8, 16}, U ∈
+//!   {1, 2, 4}), with the tap chain over radius m = 1..=4 unrolled in
+//!   the scalar reduction order (z+, z-, y+, y-, x+, x-). Partial rows
+//!   end in an **explicit scalar tail**: the remainder is handed to
+//!   the scalar kernel itself, so tails are the oracle by definition.
+//! * Runtime ISA dispatch is decided **once** (a `OnceLock`; the
+//!   steady-state read is one relaxed atomic load, no allocation):
+//!   with the `simd` cargo feature on, x86/x86_64 hosts that pass
+//!   `is_x86_feature_detected!("avx2")` get `#[target_feature]`-
+//!   compiled AVX2 monomorphizations; aarch64 uses the portable lanes
+//!   (NEON is baseline, no feature gate needed); everything else gets
+//!   the portable lanes or the scalar fallback. With the feature off,
+//!   dispatch is always scalar and the engine behaves exactly as
+//!   before.
+//! * [`force`] / [`clear_force`] override the (lane width, unroll)
+//!   pair without touching the detected ISA — this is how `bench
+//!   --simd-sweep` times the scalar control and how `autotune
+//!   --measured` searches the lane-width × unroll axes on the host.
+//!
+//! The dispatch decision is recorded in every non-oracle propagator's
+//! `signature()` (via [`RowKernel::tag`] of the *detected* kernel, so
+//! signatures stay stable while a force override is probing) and in
+//! telemetry at plan build (`hostencil_simd_width` gauge,
+//! `hostencil_simd_dispatch_total{isa=...}` counter). `Naive` keeps
+//! the scalar path unconditionally: it is the bit-identity oracle the
+//! equivalence tests compare everything else against.
+//!
+//! See `docs/KERNELS.md` for the full row-kernel contract.
+#![allow(clippy::too_many_arguments)] // kernels mirror the row ABI: fields + row coords + constants
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::OnceLock;
+
+use super::{inner_row_scalar, pml_row_scalar, Consts, C2, C8};
+use crate::grid::FieldView;
+use crate::R;
+
+// The tap macros below unroll exactly radius-4 chains.
+const _: () = assert!(R == 4, "explicit tap unrolling assumes an 8th-order (R = 4) stencil");
+
+/// Instruction set the dispatched row kernel is compiled for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Plain scalar loop — the bit-identity oracle, always available.
+    Scalar,
+    /// Portable lane code without a `#[target_feature]` gate: the
+    /// compiler targets the build's baseline vector ISA (SSE2 on
+    /// x86_64, the forced-width path on hosts without a detected
+    /// backend).
+    Portable,
+    /// AVX2 monomorphizations, selected after a positive
+    /// `is_x86_feature_detected!("avx2")`.
+    Avx2,
+    /// aarch64 portable lanes — NEON is baseline on aarch64, so the
+    /// portable code *is* NEON code; no runtime gate is needed.
+    Neon,
+}
+
+impl Isa {
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Portable => "portable",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// One dispatched row-kernel choice: which ISA path, how many f32
+/// lanes per chunk, and how many chunks each unrolled group advances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RowKernel {
+    pub isa: Isa,
+    pub lanes: u8,
+    pub unroll: u8,
+}
+
+impl RowKernel {
+    /// The always-available fallback (and the `Naive` oracle's kernel).
+    pub const SCALAR: RowKernel = RowKernel { isa: Isa::Scalar, lanes: 1, unroll: 1 };
+
+    /// Compact display tag: `scalar`, `avx2x8`, `neonx4`, `portablex4`.
+    pub fn tag(self) -> String {
+        if self.lanes <= 1 {
+            "scalar".to_string()
+        } else {
+            format!("{}x{}", self.isa.name(), self.lanes)
+        }
+    }
+}
+
+/// Lane widths the dispatcher has monomorphizations for.
+pub const LANE_WIDTHS: [u8; 3] = [4, 8, 16];
+/// Unroll depths the dispatcher has monomorphizations for.
+pub const UNROLLS: [u8; 3] = [1, 2, 4];
+
+/// Default chunk-unroll depth for detected backends: two chunks in
+/// flight hide the tap-chain latency without blowing the register
+/// budget at W = 16.
+const DEFAULT_UNROLL: u8 = 2;
+
+static DETECTED: OnceLock<RowKernel> = OnceLock::new();
+/// Force override, encoded as `0x8000_0000 | lanes << 8 | unroll`
+/// (0 = no override). Relaxed ordering is enough: the override is a
+/// single-word probe toggled between timed runs, never mid-row.
+static FORCE: AtomicU32 = AtomicU32::new(0);
+
+fn detect() -> RowKernel {
+    if !cfg!(feature = "simd") {
+        return RowKernel::SCALAR;
+    }
+    detect_arch()
+}
+
+#[allow(unreachable_code)] // arch-gated early returns leave dead tails on some targets
+fn detect_arch() -> RowKernel {
+    #[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return RowKernel { isa: Isa::Avx2, lanes: 8, unroll: DEFAULT_UNROLL };
+        }
+        return RowKernel { isa: Isa::Portable, lanes: 4, unroll: DEFAULT_UNROLL };
+    }
+    #[cfg(target_arch = "aarch64")]
+    return RowKernel { isa: Isa::Neon, lanes: 4, unroll: DEFAULT_UNROLL };
+    RowKernel { isa: Isa::Portable, lanes: 4, unroll: DEFAULT_UNROLL }
+}
+
+/// The kernel runtime detection chose for this host (feature- and
+/// ISA-dependent, never affected by [`force`]). Decided once, cached.
+pub fn detected() -> RowKernel {
+    *DETECTED.get_or_init(detect)
+}
+
+/// The kernel the propagator families will dispatch to *right now*:
+/// the detected kernel unless a [`force`] override is live.
+pub fn active() -> RowKernel {
+    decode_force(FORCE.load(Ordering::Relaxed), detected())
+}
+
+fn decode_force(f: u32, base: RowKernel) -> RowKernel {
+    if f == 0 {
+        return base;
+    }
+    let lanes = ((f >> 8) & 0xff) as u8;
+    let unroll = (f & 0xff) as u8;
+    if lanes <= 1 {
+        return RowKernel::SCALAR;
+    }
+    // A forced width on a host whose detection came back scalar (e.g.
+    // the `simd` feature is off) runs the portable lanes — safe
+    // everywhere, and exactly what the autotune lane sweep wants.
+    let isa = match base.isa {
+        Isa::Scalar => Isa::Portable,
+        other => other,
+    };
+    RowKernel { isa, lanes, unroll }
+}
+
+fn encode_force(lanes: u8, unroll: u8) -> u32 {
+    0x8000_0000 | ((lanes as u32) << 8) | unroll as u32
+}
+
+/// Override the dispatched (lane width, unroll) pair — `(1, 1)` forces
+/// the scalar oracle. Returns `false` (and changes nothing) for combos
+/// without a monomorphization. Probe-only API for `bench --simd-sweep`
+/// and the `autotune --measured` lane search; [`clear_force`] restores
+/// detection.
+pub fn force(lanes: u8, unroll: u8) -> bool {
+    let ok = (lanes == 1 && unroll == 1)
+        || (LANE_WIDTHS.contains(&lanes) && UNROLLS.contains(&unroll));
+    if ok {
+        FORCE.store(encode_force(lanes, unroll), Ordering::Relaxed);
+    }
+    ok
+}
+
+/// Drop any [`force`] override and return to the detected kernel.
+pub fn clear_force() {
+    FORCE.store(0, Ordering::Relaxed);
+}
+
+// ---------------------------------------------------------------------------
+// Lane abstraction
+
+/// `W` f32 lanes updated element-wise in lane order. Every operator is
+/// a plain f32 op — no `mul_add`, no re-association — so arithmetic on
+/// `Lanes<W>` is the scalar arithmetic, W points at a time.
+#[derive(Copy, Clone)]
+struct Lanes<const W: usize>([f32; W]);
+
+impl<const W: usize> Lanes<W> {
+    #[inline(always)]
+    fn load(s: &[f32], i: usize) -> Lanes<W> {
+        let s = &s[i..i + W];
+        Lanes(std::array::from_fn(|j| s[j]))
+    }
+
+    #[inline(always)]
+    fn splat(v: f32) -> Lanes<W> {
+        Lanes([v; W])
+    }
+
+    #[inline(always)]
+    fn store(self, out: &mut [f32], i: usize) {
+        out[i..i + W].copy_from_slice(&self.0);
+    }
+}
+
+impl<const W: usize> std::ops::Add for Lanes<W> {
+    type Output = Lanes<W>;
+    #[inline(always)]
+    fn add(self, o: Lanes<W>) -> Lanes<W> {
+        Lanes(std::array::from_fn(|j| self.0[j] + o.0[j]))
+    }
+}
+
+impl<const W: usize> std::ops::Sub for Lanes<W> {
+    type Output = Lanes<W>;
+    #[inline(always)]
+    fn sub(self, o: Lanes<W>) -> Lanes<W> {
+        Lanes(std::array::from_fn(|j| self.0[j] - o.0[j]))
+    }
+}
+
+impl<const W: usize> std::ops::Mul for Lanes<W> {
+    type Output = Lanes<W>;
+    #[inline(always)]
+    fn mul(self, o: Lanes<W>) -> Lanes<W> {
+        Lanes(std::array::from_fn(|j| self.0[j] * o.0[j]))
+    }
+}
+
+impl<const W: usize> std::ops::Div for Lanes<W> {
+    type Output = Lanes<W>;
+    #[inline(always)]
+    fn div(self, o: Lanes<W>) -> Lanes<W> {
+        Lanes(std::array::from_fn(|j| self.0[j] / o.0[j]))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// W-wide chunk updates (bit-identical to one scalar loop iteration x W)
+
+/// One `W`-wide chunk of the inner 25-point update at row offset `i`.
+/// Mirrors the scalar body of `inner_row_scalar` op for op.
+#[inline(always)]
+fn inner_lanes<const W: usize>(
+    zp: &[&[f32]; R],
+    zm: &[&[f32]; R],
+    yp: &[&[f32]; R],
+    ym: &[&[f32]; R],
+    xp: &[&[f32]; R],
+    xm: &[&[f32]; R],
+    ctr: &[f32],
+    vs: &[f32],
+    out: &mut [f32],
+    i: usize,
+    k: Consts,
+) {
+    let c = Lanes::<W>::load(ctr, i);
+    let mut acc = Lanes::splat(3.0 * C8[0]) * c;
+    // Explicitly unrolled tap chain, one expansion per radius m, in
+    // the scalar reduction order (z+, z-, y+, y-, x+, x-).
+    macro_rules! tap {
+        ($m:literal) => {{
+            let t = Lanes::<W>::load(zp[$m - 1], i)
+                + Lanes::load(zm[$m - 1], i)
+                + Lanes::load(yp[$m - 1], i)
+                + Lanes::load(ym[$m - 1], i)
+                + Lanes::load(xp[$m - 1], i)
+                + Lanes::load(xm[$m - 1], i);
+            acc = acc + Lanes::splat(C8[$m]) * t;
+        }};
+    }
+    tap!(1);
+    tap!(2);
+    tap!(3);
+    tap!(4);
+    let lap = acc * Lanes::splat(k.inv_h2);
+    let vv = Lanes::<W>::load(vs, i);
+    let o = Lanes::<W>::load(out, i);
+    (Lanes::splat(2.0) * c - o + Lanes::splat(k.dt2) * vv * vv * lap).store(out, i);
+}
+
+/// One `W`-wide chunk of the damped 7-point PML update at row offset
+/// `i`. Mirrors the scalar body of `pml_row_scalar` op for op.
+#[inline(always)]
+fn pml_lanes<const W: usize>(
+    uc: &[f32],
+    u_zp: &[f32],
+    u_zm: &[f32],
+    u_yp: &[f32],
+    u_ym: &[f32],
+    u_xp: &[f32],
+    u_xm: &[f32],
+    ec: &[f32],
+    e_zp: &[f32],
+    e_zm: &[f32],
+    e_yp: &[f32],
+    e_ym: &[f32],
+    e_xp: &[f32],
+    e_xm: &[f32],
+    vs: &[f32],
+    out: &mut [f32],
+    i: usize,
+    k: Consts,
+) {
+    let c = Lanes::<W>::load(uc, i);
+    let s = Lanes::<W>::load(u_zp, i)
+        + Lanes::load(u_zm, i)
+        + Lanes::load(u_yp, i)
+        + Lanes::load(u_ym, i)
+        + Lanes::load(u_xp, i)
+        + Lanes::load(u_xm, i);
+    let acc = Lanes::splat(3.0 * C2[0]) * c + s;
+    let lap = acc * Lanes::splat(k.inv_h2);
+    let eb = (Lanes::<W>::load(ec, i)
+        + Lanes::load(e_zp, i)
+        + Lanes::load(e_zm, i)
+        + Lanes::load(e_yp, i)
+        + Lanes::load(e_ym, i)
+        + Lanes::load(e_xp, i)
+        + Lanes::load(e_xm, i))
+        / Lanes::splat(7.0);
+    let ed = eb * Lanes::splat(k.dt_f);
+    let vv = Lanes::<W>::load(vs, i);
+    let o = Lanes::<W>::load(out, i);
+    let num =
+        Lanes::splat(2.0) * c - (Lanes::splat(1.0) - ed) * o + Lanes::splat(k.dt2) * vv * vv * lap;
+    (num / (Lanes::splat(1.0) + ed)).store(out, i);
+}
+
+// ---------------------------------------------------------------------------
+// Whole-row kernels: U unrolled W-wide chunks + explicit scalar tail
+
+/// `W`-lane, `U`-chunk-unrolled inner update of one x-row. Same ABI,
+/// same per-point arithmetic, and — via the scalar tail on the
+/// remainder — the same results as `inner_row_scalar`, bit for bit.
+#[inline(always)]
+fn inner_row_w<const W: usize, const U: usize>(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), len, "output row length mismatch");
+    let (cz, cy) = (iz + R, iy + R);
+    let b = x0 + R;
+    let zp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz + m + 1, cy, b, len));
+    let zm: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz - m - 1, cy, b, len));
+    let yp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy + m + 1, b, len));
+    let ym: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy - m - 1, b, len));
+    let xp: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy, b + m + 1, len));
+    let xm: [&[f32]; R] = std::array::from_fn(|m| u.seg(cz, cy, b - m - 1, len));
+    let ctr = u.seg(cz, cy, b, len);
+    let vs = v.seg(iz, iy, x0, len);
+    let main = len - len % W;
+    let mut i = 0;
+    // U chunks per iteration; the inner bound is const, so the loop
+    // body is U explicitly unrolled chunk updates.
+    while i + W * U <= main {
+        let mut j = 0;
+        while j < U {
+            inner_lanes::<W>(&zp, &zm, &yp, &ym, &xp, &xm, ctr, vs, out, i + j * W, k);
+            j += 1;
+        }
+        i += W * U;
+    }
+    while i + W <= main {
+        inner_lanes::<W>(&zp, &zm, &yp, &ym, &xp, &xm, ctr, vs, out, i, k);
+        i += W;
+    }
+    // Explicit scalar tail: the remainder *is* the scalar oracle.
+    if main < len {
+        inner_row_scalar(u, v, iz, iy, x0 + main, len - main, k, &mut out[main..]);
+    }
+}
+
+/// `W`-lane, `U`-chunk-unrolled PML update of one x-row; bit-identical
+/// to `pml_row_scalar` (same op order, scalar tail).
+#[inline(always)]
+fn pml_row_w<const W: usize, const U: usize>(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    eta: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), len, "output row length mismatch");
+    let (cz, cy) = (iz + R, iy + R);
+    let b = x0 + R;
+    let uc = u.seg(cz, cy, b, len);
+    let u_zp = u.seg(cz + 1, cy, b, len);
+    let u_zm = u.seg(cz - 1, cy, b, len);
+    let u_yp = u.seg(cz, cy + 1, b, len);
+    let u_ym = u.seg(cz, cy - 1, b, len);
+    let u_xp = u.seg(cz, cy, b + 1, len);
+    let u_xm = u.seg(cz, cy, b - 1, len);
+    let ec = eta.seg(cz, cy, b, len);
+    let e_zp = eta.seg(cz + 1, cy, b, len);
+    let e_zm = eta.seg(cz - 1, cy, b, len);
+    let e_yp = eta.seg(cz, cy + 1, b, len);
+    let e_ym = eta.seg(cz, cy - 1, b, len);
+    let e_xp = eta.seg(cz, cy, b + 1, len);
+    let e_xm = eta.seg(cz, cy, b - 1, len);
+    let vs = v.seg(iz, iy, x0, len);
+    let main = len - len % W;
+    let mut i = 0;
+    while i + W * U <= main {
+        let mut j = 0;
+        while j < U {
+            pml_lanes::<W>(
+                uc,
+                u_zp,
+                u_zm,
+                u_yp,
+                u_ym,
+                u_xp,
+                u_xm,
+                ec,
+                e_zp,
+                e_zm,
+                e_yp,
+                e_ym,
+                e_xp,
+                e_xm,
+                vs,
+                out,
+                i + j * W,
+                k,
+            );
+            j += 1;
+        }
+        i += W * U;
+    }
+    while i + W <= main {
+        pml_lanes::<W>(
+            uc, u_zp, u_zm, u_yp, u_ym, u_xp, u_xm, ec, e_zp, e_zm, e_yp, e_ym, e_xp, e_xm, vs,
+            out, i, k,
+        );
+        i += W;
+    }
+    if main < len {
+        pml_row_scalar(u, v, eta, iz, iy, x0 + main, len - main, k, &mut out[main..]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch
+
+/// Expand a `(lanes, unroll)` pair into the matching monomorphization,
+/// falling back to the scalar kernel for combos without one.
+macro_rules! width_match {
+    ($lanes:expr, $unroll:expr, $call:ident ( $($a:expr),* ), $fallback:expr) => {
+        match ($lanes, $unroll) {
+            (4, 1) => $call::<4, 1>($($a),*),
+            (4, 2) => $call::<4, 2>($($a),*),
+            (4, 4) => $call::<4, 4>($($a),*),
+            (8, 1) => $call::<8, 1>($($a),*),
+            (8, 2) => $call::<8, 2>($($a),*),
+            (8, 4) => $call::<8, 4>($($a),*),
+            (16, 1) => $call::<16, 1>($($a),*),
+            (16, 2) => $call::<16, 2>($($a),*),
+            (16, 4) => $call::<16, 4>($($a),*),
+            _ => $fallback,
+        }
+    };
+}
+
+/// Route one inner row through the kernel recorded in `k.kern`. Called
+/// by the `inner_row` dispatcher in the parent module whenever the
+/// kernel is non-scalar.
+#[inline]
+pub(crate) fn inner_row_simd(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    let kern = k.kern;
+    #[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+    if kern.isa == Isa::Avx2 {
+        // SAFETY: `Isa::Avx2` is only ever produced by `detect()`
+        // after `is_x86_feature_detected!("avx2")` returned true on
+        // this host, so the AVX2-compiled monomorphizations are safe
+        // to enter.
+        unsafe { x86::inner(kern, u, v, iz, iy, x0, len, k, out) };
+        return;
+    }
+    width_match!(
+        kern.lanes,
+        kern.unroll,
+        inner_row_w(u, v, iz, iy, x0, len, k, out),
+        inner_row_scalar(u, v, iz, iy, x0, len, k, out)
+    )
+}
+
+/// Route one PML row through the kernel recorded in `k.kern`.
+#[inline]
+pub(crate) fn pml_row_simd(
+    u: FieldView<'_>,
+    v: FieldView<'_>,
+    eta: FieldView<'_>,
+    iz: usize,
+    iy: usize,
+    x0: usize,
+    len: usize,
+    k: Consts,
+    out: &mut [f32],
+) {
+    let kern = k.kern;
+    #[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+    if kern.isa == Isa::Avx2 {
+        // SAFETY: as in `inner_row_simd` — AVX2 presence was verified
+        // by detection before this ISA could be selected.
+        unsafe { x86::pml(kern, u, v, eta, iz, iy, x0, len, k, out) };
+        return;
+    }
+    width_match!(
+        kern.lanes,
+        kern.unroll,
+        pml_row_w(u, v, eta, iz, iy, x0, len, k, out),
+        pml_row_scalar(u, v, eta, iz, iy, x0, len, k, out)
+    )
+}
+
+/// AVX2 monomorphizations. `#[target_feature]` recompiles the (fully
+/// `#[inline(always)]`) generic lane kernels with the AVX2 register
+/// file and 256-bit ops; the arithmetic is the same element-wise f32
+/// sequence, so results remain bit-identical to the scalar oracle —
+/// wider registers change *how fast*, never *what*.
+#[cfg(all(feature = "simd", any(target_arch = "x86", target_arch = "x86_64")))]
+mod x86 {
+    use super::*;
+
+    macro_rules! avx2_pair {
+        ($inner:ident, $pml:ident, $w:literal, $u:literal) => {
+            /// SAFETY: requires AVX2 on the running host.
+            #[target_feature(enable = "avx2")]
+            unsafe fn $inner(
+                u: FieldView<'_>,
+                v: FieldView<'_>,
+                iz: usize,
+                iy: usize,
+                x0: usize,
+                len: usize,
+                k: Consts,
+                out: &mut [f32],
+            ) {
+                inner_row_w::<$w, $u>(u, v, iz, iy, x0, len, k, out)
+            }
+
+            /// SAFETY: requires AVX2 on the running host.
+            #[target_feature(enable = "avx2")]
+            unsafe fn $pml(
+                u: FieldView<'_>,
+                v: FieldView<'_>,
+                eta: FieldView<'_>,
+                iz: usize,
+                iy: usize,
+                x0: usize,
+                len: usize,
+                k: Consts,
+                out: &mut [f32],
+            ) {
+                pml_row_w::<$w, $u>(u, v, eta, iz, iy, x0, len, k, out)
+            }
+        };
+    }
+
+    avx2_pair!(inner_w4_u1, pml_w4_u1, 4, 1);
+    avx2_pair!(inner_w4_u2, pml_w4_u2, 4, 2);
+    avx2_pair!(inner_w4_u4, pml_w4_u4, 4, 4);
+    avx2_pair!(inner_w8_u1, pml_w8_u1, 8, 1);
+    avx2_pair!(inner_w8_u2, pml_w8_u2, 8, 2);
+    avx2_pair!(inner_w8_u4, pml_w8_u4, 8, 4);
+    avx2_pair!(inner_w16_u1, pml_w16_u1, 16, 1);
+    avx2_pair!(inner_w16_u2, pml_w16_u2, 16, 2);
+    avx2_pair!(inner_w16_u4, pml_w16_u4, 16, 4);
+
+    /// SAFETY: the caller must have verified AVX2 support on this host.
+    pub(super) unsafe fn inner(
+        kern: RowKernel,
+        u: FieldView<'_>,
+        v: FieldView<'_>,
+        iz: usize,
+        iy: usize,
+        x0: usize,
+        len: usize,
+        k: Consts,
+        out: &mut [f32],
+    ) {
+        match (kern.lanes, kern.unroll) {
+            (4, 1) => inner_w4_u1(u, v, iz, iy, x0, len, k, out),
+            (4, 2) => inner_w4_u2(u, v, iz, iy, x0, len, k, out),
+            (4, 4) => inner_w4_u4(u, v, iz, iy, x0, len, k, out),
+            (8, 1) => inner_w8_u1(u, v, iz, iy, x0, len, k, out),
+            (8, 2) => inner_w8_u2(u, v, iz, iy, x0, len, k, out),
+            (8, 4) => inner_w8_u4(u, v, iz, iy, x0, len, k, out),
+            (16, 1) => inner_w16_u1(u, v, iz, iy, x0, len, k, out),
+            (16, 2) => inner_w16_u2(u, v, iz, iy, x0, len, k, out),
+            (16, 4) => inner_w16_u4(u, v, iz, iy, x0, len, k, out),
+            _ => inner_row_scalar(u, v, iz, iy, x0, len, k, out),
+        }
+    }
+
+    /// SAFETY: the caller must have verified AVX2 support on this host.
+    pub(super) unsafe fn pml(
+        kern: RowKernel,
+        u: FieldView<'_>,
+        v: FieldView<'_>,
+        eta: FieldView<'_>,
+        iz: usize,
+        iy: usize,
+        x0: usize,
+        len: usize,
+        k: Consts,
+        out: &mut [f32],
+    ) {
+        match (kern.lanes, kern.unroll) {
+            (4, 1) => pml_w4_u1(u, v, eta, iz, iy, x0, len, k, out),
+            (4, 2) => pml_w4_u2(u, v, eta, iz, iy, x0, len, k, out),
+            (4, 4) => pml_w4_u4(u, v, eta, iz, iy, x0, len, k, out),
+            (8, 1) => pml_w8_u1(u, v, eta, iz, iy, x0, len, k, out),
+            (8, 2) => pml_w8_u2(u, v, eta, iz, iy, x0, len, k, out),
+            (8, 4) => pml_w8_u4(u, v, eta, iz, iy, x0, len, k, out),
+            (16, 1) => pml_w16_u1(u, v, eta, iz, iy, x0, len, k, out),
+            (16, 2) => pml_w16_u2(u, v, eta, iz, iy, x0, len, k, out),
+            (16, 4) => pml_w16_u4(u, v, eta, iz, iy, x0, len, k, out),
+            _ => pml_row_scalar(u, v, eta, iz, iy, x0, len, k, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grid::{Dim3, Domain};
+    use crate::testkit::Rng;
+
+    /// Compare `inner_row_w` / `pml_row_w` against the scalar oracle
+    /// on the tail-stress row lengths (W-1, W, W+1, 2W+3, full) at
+    /// several offsets and row positions. Bit-identity, not tolerance.
+    fn check_pair<const W: usize, const U: usize>() {
+        let s = Dim3::new(6, 5, 40);
+        let domain = Domain::new(s, 2, 10.0, 1e-3).unwrap();
+        let mut rng = Rng::new(0x51AD + W as u64 * 131 + U as u64);
+        let u_pad = rng.field(s).pad(R);
+        let um_pad = rng.field(s).pad(R);
+        let eta_pad = rng.field_in(s, 0.0, 50.0).pad(R);
+        let v = rng.field_in(s, 1500.0, 3500.0);
+        let k = Consts::of(&domain);
+        let uv = u_pad.view();
+        let vv = v.view();
+        let ev = eta_pad.view();
+        let w = W;
+        for len in [w - 1, w, w + 1, 2 * w + 3, s.x] {
+            for x0 in [0usize, 3] {
+                if x0 + len > s.x {
+                    continue;
+                }
+                for (iz, iy) in [(0usize, 0usize), (3, 2), (s.z - 1, s.y - 1)] {
+                    let mut a = um_pad.clone();
+                    let mut b = um_pad.clone();
+                    inner_row_scalar(
+                        uv,
+                        vv,
+                        iz,
+                        iy,
+                        x0,
+                        len,
+                        k,
+                        a.view_mut().seg_mut(iz + R, iy + R, x0 + R, len),
+                    );
+                    inner_row_w::<W, U>(
+                        uv,
+                        vv,
+                        iz,
+                        iy,
+                        x0,
+                        len,
+                        k,
+                        b.view_mut().seg_mut(iz + R, iy + R, x0 + R, len),
+                    );
+                    assert_eq!(a.max_abs_diff(&b), 0.0, "inner W={W} U={U} len={len} x0={x0}");
+
+                    let mut a = um_pad.clone();
+                    let mut b = um_pad.clone();
+                    pml_row_scalar(
+                        uv,
+                        vv,
+                        ev,
+                        iz,
+                        iy,
+                        x0,
+                        len,
+                        k,
+                        a.view_mut().seg_mut(iz + R, iy + R, x0 + R, len),
+                    );
+                    pml_row_w::<W, U>(
+                        uv,
+                        vv,
+                        ev,
+                        iz,
+                        iy,
+                        x0,
+                        len,
+                        k,
+                        b.view_mut().seg_mut(iz + R, iy + R, x0 + R, len),
+                    );
+                    assert_eq!(a.max_abs_diff(&b), 0.0, "pml W={W} U={U} len={len} x0={x0}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_kernels_match_scalar_bitwise_w4() {
+        check_pair::<4, 1>();
+        check_pair::<4, 2>();
+        check_pair::<4, 4>();
+    }
+
+    #[test]
+    fn wide_kernels_match_scalar_bitwise_w8() {
+        check_pair::<8, 1>();
+        check_pair::<8, 2>();
+        check_pair::<8, 4>();
+    }
+
+    #[test]
+    fn wide_kernels_match_scalar_bitwise_w16() {
+        check_pair::<16, 1>();
+        check_pair::<16, 2>();
+        check_pair::<16, 4>();
+    }
+
+    #[test]
+    fn odd_grid_full_sweep_is_bit_identical() {
+        // An odd interior (x = 37 leaves a 5-point tail at W = 8, a
+        // 1-point tail at W = 4) swept row by row through both paths.
+        let s = Dim3::new(5, 7, 37);
+        let domain = Domain::new(s, 2, 10.0, 1e-3).unwrap();
+        let mut rng = Rng::new(0x0DDD);
+        let u_pad = rng.field(s).pad(R);
+        let um_pad = rng.field(s).pad(R);
+        let eta_pad = rng.field_in(s, 0.0, 50.0).pad(R);
+        let v = rng.field_in(s, 1500.0, 3500.0);
+        let k = Consts::of(&domain);
+        let (uv, vv, ev) = (u_pad.view(), v.view(), eta_pad.view());
+        let mut scalar = um_pad.clone();
+        let mut wide = um_pad.clone();
+        for iz in 0..s.z {
+            for iy in 0..s.y {
+                inner_row_scalar(
+                    uv,
+                    vv,
+                    iz,
+                    iy,
+                    0,
+                    s.x,
+                    k,
+                    scalar.view_mut().seg_mut(iz + R, iy + R, R, s.x),
+                );
+                inner_row_w::<8, 2>(
+                    uv,
+                    vv,
+                    iz,
+                    iy,
+                    0,
+                    s.x,
+                    k,
+                    wide.view_mut().seg_mut(iz + R, iy + R, R, s.x),
+                );
+            }
+        }
+        assert_eq!(scalar.max_abs_diff(&wide), 0.0, "inner full sweep");
+        let mut scalar = um_pad.clone();
+        let mut wide = um_pad.clone();
+        for iz in 0..s.z {
+            for iy in 0..s.y {
+                pml_row_scalar(
+                    uv,
+                    vv,
+                    ev,
+                    iz,
+                    iy,
+                    0,
+                    s.x,
+                    k,
+                    scalar.view_mut().seg_mut(iz + R, iy + R, R, s.x),
+                );
+                pml_row_w::<4, 4>(
+                    uv,
+                    vv,
+                    ev,
+                    iz,
+                    iy,
+                    0,
+                    s.x,
+                    k,
+                    wide.view_mut().seg_mut(iz + R, iy + R, R, s.x),
+                );
+            }
+        }
+        assert_eq!(scalar.max_abs_diff(&wide), 0.0, "pml full sweep");
+    }
+
+    #[test]
+    fn pml_rows_split_at_region_seams_match_full_rows() {
+        // A row updated in two wide pieces (the x-seam between two PML
+        // regions) must equal one full scalar row: each piece runs its
+        // own chunk/tail split, so seams stress every tail path.
+        let s = Dim3::new(6, 6, 23);
+        let domain = Domain::new(s, 2, 10.0, 1e-3).unwrap();
+        let mut rng = Rng::new(0x5EA3);
+        let u_pad = rng.field(s).pad(R);
+        let um_pad = rng.field(s).pad(R);
+        let eta_pad = rng.field_in(s, 0.0, 50.0).pad(R);
+        let v = rng.field_in(s, 1500.0, 3500.0);
+        let k = Consts::of(&domain);
+        let (uv, vv, ev) = (u_pad.view(), v.view(), eta_pad.view());
+        let (iz, iy) = (2, 4);
+        let mut full = um_pad.clone();
+        pml_row_scalar(
+            uv,
+            vv,
+            ev,
+            iz,
+            iy,
+            0,
+            s.x,
+            k,
+            full.view_mut().seg_mut(iz + R, iy + R, R, s.x),
+        );
+        for split in [1usize, 4, 7, 8, 9, 19] {
+            let mut parts = um_pad.clone();
+            pml_row_w::<8, 1>(
+                uv,
+                vv,
+                ev,
+                iz,
+                iy,
+                0,
+                split,
+                k,
+                parts.view_mut().seg_mut(iz + R, iy + R, R, split),
+            );
+            pml_row_w::<8, 1>(
+                uv,
+                vv,
+                ev,
+                iz,
+                iy,
+                split,
+                s.x - split,
+                k,
+                parts.view_mut().seg_mut(iz + R, iy + R, R + split, s.x - split),
+            );
+            assert_eq!(full.max_abs_diff(&parts), 0.0, "seam at x = {split}");
+        }
+    }
+
+    #[test]
+    fn dispatch_is_cached_and_encodes_forces() {
+        let a = detected();
+        assert_eq!(a, detected(), "detection must be stable");
+        assert!(a.lanes >= 1);
+        if !cfg!(feature = "simd") {
+            assert_eq!(a, RowKernel::SCALAR, "feature off must dispatch scalar");
+        }
+        // Pure decode checks (no global state): scalar force, width
+        // force, width force on a scalar-detected host.
+        assert_eq!(decode_force(0, a), a);
+        assert_eq!(decode_force(encode_force(1, 1), a), RowKernel::SCALAR);
+        let f = decode_force(encode_force(8, 2), a);
+        assert_eq!((f.lanes, f.unroll), (8, 2));
+        assert_ne!(f.isa, Isa::Scalar);
+        let g = decode_force(encode_force(16, 4), RowKernel::SCALAR);
+        assert_eq!((g.isa, g.lanes, g.unroll), (Isa::Portable, 16, 4));
+        // Unsupported combos are rejected without touching the override.
+        assert!(!force(5, 2));
+        assert!(!force(8, 3));
+        assert_eq!(RowKernel::SCALAR.tag(), "scalar");
+        assert_eq!(RowKernel { isa: Isa::Avx2, lanes: 8, unroll: 2 }.tag(), "avx2x8");
+        assert_eq!(RowKernel { isa: Isa::Neon, lanes: 4, unroll: 1 }.tag(), "neonx4");
+    }
+}

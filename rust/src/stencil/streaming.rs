@@ -15,8 +15,10 @@
 //! the `lap8` term ordering, so results are bit-identical to the
 //! golden propagator.
 
-use super::propagator::{pml_tile_into, Plan, Propagator, PropagatorInputs, SharedOut};
-use super::Consts;
+use super::propagator::{
+    first_touch_zeros, pml_tile_into, Plan, Propagator, PropagatorInputs, SharedOut,
+};
+use super::{simd, Consts};
 use crate::gpusim::kernels::KernelVariant;
 use crate::grid::{decompose, Dim3, Field3, Region};
 use crate::{stencil::C8, R};
@@ -37,7 +39,11 @@ impl Ring {
             .map(|t| (t.shape.z + 2 * R) * (t.shape.y + 2 * R))
             .max()
             .unwrap_or(0);
-        Ring { buf: vec![0.0; (2 * R + 1) * plane_cap], plane_cap }
+        // first-touch: the ring is built on the owning worker's thread
+        // (Plan::ensure runs the scratch ctor through the pool), so
+        // writing every element here places its pages on that worker's
+        // NUMA node rather than wherever the main thread first faulted
+        Ring { buf: first_touch_zeros((2 * R + 1) * plane_cap), plane_cap }
     }
 }
 
@@ -66,12 +72,12 @@ impl Propagator for Streaming25D {
     }
 
     fn signature(&self) -> String {
-        format!("streaming2.5d:{}x{}", self.tile_z, self.tile_y)
+        format!("streaming2.5d:{}x{}:{}", self.tile_z, self.tile_y, simd::detected().tag())
     }
 
     fn step_into(&mut self, inp: &PropagatorInputs<'_>, out: &mut Field3) {
         debug_assert_eq!(out.dims(), inp.domain.padded());
-        let k = Consts::of(inp.domain);
+        let k = Consts::of(inp.domain).with_kernel(simd::active());
         let (tz, ty) = (self.tile_z, self.tile_y);
         let plan = Plan::ensure(
             &mut self.plan,
@@ -101,6 +107,13 @@ impl Propagator for Streaming25D {
 
 /// Stream one inner (z, y) tile along x with a ring of 2R+1 planes,
 /// updating the tile's points of the padded output in place.
+///
+/// This loop nest stays scalar-inline rather than dispatching to the
+/// `simd` row kernels: the ring transposes the data so the unit-stride
+/// axis is y within a plane slot, not x of the padded field, and the
+/// x-taps come from five different ring slots — the row-kernel contract
+/// (contiguous x segments of one array) does not apply. The PML faces
+/// of this family do go through the dispatched `pml_row`.
 fn streaming_inner_tile_into(
     inp: &PropagatorInputs<'_>,
     t: &Region,

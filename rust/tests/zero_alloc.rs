@@ -22,6 +22,13 @@
 //! (which allocates) happens at plan-build time inside the warm-up;
 //! armed steps only bump pre-registered atomics and observe into
 //! preallocated histogram buckets.
+//!
+//! The row-kernel dispatch is under the same microscope: the ISA
+//! detection caches in a `OnceLock` during warm-up and per-step
+//! `simd::active()` is one relaxed atomic load, so the guarantee holds
+//! for the SIMD path too — CI runs this binary both with and without
+//! `--features simd` (the `simd` job), and the assertions below are
+//! identical either way.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -121,11 +128,18 @@ fn allocs_in_steady_state(variant: &str, domain: &Domain, steps: usize, threads:
         u_pad.max_abs() > 0.0 && !u_pad.has_non_finite(),
         "{variant}: steady-state wave must stay finite and non-zero"
     );
+    let rendered = telemetry.render();
     assert!(
-        telemetry
-            .render()
-            .contains(&format!("hostencil_plan_builds_total{{family=\"{}\"}}", prop.name())),
+        rendered.contains(&format!("hostencil_plan_builds_total{{family=\"{}\"}}", prop.name())),
         "{variant}: the warm-up must have registered plan instrumentation"
+    );
+    assert!(
+        rendered.contains("hostencil_simd_width"),
+        "{variant}: plan build must record the dispatched row-kernel lane width"
+    );
+    assert!(
+        rendered.contains("hostencil_simd_dispatch_total{isa="),
+        "{variant}: plan build must record the dispatch decision by ISA"
     );
     ALLOCS.load(Ordering::SeqCst)
 }

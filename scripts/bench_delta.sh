@@ -10,6 +10,10 @@
 #   BENCH_3.json — the working tree's temporal-fusion sweep
 #                  (`bench --fuse 1,2,4`): steady-state rate per fusion
 #                  degree with speedups vs the unfused s=1 control
+#   BENCH_4.json — the working tree's scalar-vs-SIMD row-kernel sweep
+#                  (`bench --simd-sweep`, built `--features simd`):
+#                  per-shape forced-scalar vs dispatched-SIMD rates at
+#                  threads=1 with speedups (docs/KERNELS.md)
 #   BENCH_1.prom — the head run's Prometheus telemetry exposition
 #                  (pool occupancy, tiles claimed, sweep latency
 #                  histograms — see docs/METRICS.md)
@@ -49,15 +53,17 @@ echo "== baseline $(git rev-parse --short "$BASE_REF") -> BENCH_0.json"
   --size "$SIZE" --steps "$STEPS" --json "$OUT_DIR/BENCH_0.json")
 
 # One head-side run yields the matrix (cases), the pool sweep
-# (thread_sweep + scaling_model) and the fusion sweep (fuse_sweep);
-# BENCH_2 and BENCH_3 are split out of BENCH_1's JSON below instead of
+# (thread_sweep + scaling_model), the fusion sweep (fuse_sweep) and
+# the scalar-vs-SIMD row sweep (simd_sweep — the head build carries
+# `--features simd` so the dispatched leg is the wide kernel);
+# BENCH_2..4 are split out of BENCH_1's JSON below instead of
 # re-benching the whole matrix again.
-echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE) -> BENCH_1/2/3.json + BENCH_1.prom"
-cargo run --release -p hostencil -- bench \
-  --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" --fuse "$FUSE" \
+echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE, simd sweep) -> BENCH_1/2/3/4.json + BENCH_1.prom"
+cargo run --release --features simd -p hostencil -- bench \
+  --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" --fuse "$FUSE" --simd-sweep \
   --json "$OUT_DIR/BENCH_1.json" --telemetry "$OUT_DIR/BENCH_1.prom"
 
-python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" <<'EOF'
+python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" "$OUT_DIR/BENCH_4.json" <<'EOF'
 import json, sys
 
 def rates(path):
@@ -91,6 +97,15 @@ bench3["fuse_sweep"] = fuse
 with open(sys.argv[4], "w") as f:
     json.dump(bench3, f, indent=1)
 
+# BENCH_4: the scalar-vs-SIMD row-kernel sweep (threads=1, forced
+# scalar vs dispatched kernel per shape), same treatment
+simd = head.pop("simd_sweep", [])
+bench4 = {k: head[k] for k in meta_keys if k in head}
+bench4["kind"] = "hostencil-bench-simd-sweep"
+bench4["simd_sweep"] = simd
+with open(sys.argv[5], "w") as f:
+    json.dump(bench4, f, indent=1)
+
 # rewrite BENCH_1 without the sweeps it just donated, so the committed
 # matrix artifact does not duplicate BENCH_2/BENCH_3's contents
 with open(sys.argv[2], "w") as f:
@@ -122,4 +137,14 @@ if fuse:
     for r in fuse:
         sp = f"{r['speedup_vs_unfused']:6.2f}x" if "speedup_vs_unfused" in r else "      -"
         print(f"s={int(r['fuse']):<3}{r['points_per_sec_best'] / 1e6:>12.2f} Mpts/s{sp:>10}")
+
+if simd:
+    print(f"\nscalar -> SIMD row kernels (threads=1; dispatched vs forced scalar):")
+    print(f"{'shape':<24}{'scalar Mpts/s':>15}{'simd Mpts/s':>13}{'speedup':>9}")
+    for r in simd:
+        print(
+            f"{r['name']:<24}{r['scalar_points_per_sec_best'] / 1e6:>15.2f}"
+            f"{r['simd_points_per_sec_best'] / 1e6:>13.2f}"
+            f"{r['speedup_vs_scalar']:>8.2f}x  ({r['isa']}x{int(r['lanes'])})"
+        )
 EOF
