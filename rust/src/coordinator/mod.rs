@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
 use crate::json::Json;
 use crate::runtime::{Engine, ExecArg};
+use crate::shard::ShardedEngine;
 use crate::stencil::propagator::{self, FusedInputs, Propagator, PropagatorInputs, SourceBatch};
 use crate::telemetry::{Counter, Histogram, Registry, LATENCY_BOUNDS};
 use crate::wave::Source;
@@ -166,6 +167,14 @@ pub struct Coordinator<'e> {
     /// Worker threads for the propagator tile fan-out (0 = one per
     /// core). The campaign sets 1: its cell fan-out owns the cores.
     cpu_threads: usize,
+    /// z-slab shard count for the sharded Golden run path (1 =
+    /// unsharded; see [`Coordinator::set_shards`]).
+    shard_count: usize,
+    /// Lazily built sharded engine (first sharded batch). Dropped on
+    /// any reconfiguration and rebuilt from the global pair — shard
+    /// state equals the global wavefield at every batch boundary, so
+    /// a rebuild loses nothing.
+    shard: Option<ShardedEngine>,
     /// The propagator's natural fusion degree (1 for every family but
     /// `TimeFused`): observed runs advance in batches of this many
     /// steps, recording energy/traces and firing the observer once per
@@ -289,6 +298,8 @@ impl<'e> Coordinator<'e> {
             um_pad: Field3::zeros(domain.padded()),
             propagator: cpu_propagator,
             cpu_threads: 0,
+            shard_count: 1,
+            shard: None,
             fuse,
             fused_pos: Vec::new(),
             fused_amps: Vec::new(),
@@ -310,6 +321,7 @@ impl<'e> Coordinator<'e> {
     /// Flight-recorder events go to the registry's event log when one
     /// is enabled.
     pub fn set_telemetry(&mut self, reg: &Registry) {
+        self.shard = None; // rebuild so the engine registers its series
         self.telemetry = Some(CoordTelemetry {
             registry: reg.clone(),
             steps: reg.counter("hostencil_steps_total", "Leapfrog time steps completed."),
@@ -494,12 +506,96 @@ impl<'e> Coordinator<'e> {
         Ok(())
     }
 
+    /// Advance `b` steps on the sharded engine ([`crate::shard`],
+    /// Golden mode only). The injection schedule is the exact one
+    /// [`Coordinator::step_fused`] builds; every shard advances `b`
+    /// sub-steps without inter-shard sync, the batch-boundary halo
+    /// exchange runs, and the owned slabs are gathered back into the
+    /// global padded pair — so receiver/energy recording, observers,
+    /// and the non-finite watchdog read the same state an unsharded
+    /// run produces, bit-identically.
+    fn step_sharded(&mut self, b: usize) -> anyhow::Result<()> {
+        debug_assert!(b >= 1 && b <= self.fuse.max(1));
+        if self.shard.is_none() {
+            let mut engine = ShardedEngine::new(
+                &self.domain,
+                &self.v,
+                &self.eta,
+                self.fuse.max(1),
+                self.shard_count,
+                self.cpu_threads,
+                self.telemetry.as_ref().map(|t| &t.registry),
+            )?;
+            engine.load(&self.u_pad, &self.um_pad);
+            self.shard = Some(engine);
+        }
+        self.fused_pos.clear();
+        self.fused_amps.clear();
+        self.fused_pos.reserve(self.sources.len());
+        self.fused_amps.reserve(self.sources.len() * b);
+        for (src, _) in &self.sources {
+            self.fused_pos.push(src.pos);
+        }
+        for j in 0..b {
+            for (src, v_at) in &self.sources {
+                self.fused_amps.push(src.amp_at(self.steps_done + j, self.domain.dt, *v_at));
+            }
+        }
+        let engine = self.shard.as_mut().expect("built above");
+        engine.advance_batch(&SourceBatch {
+            positions: &self.fused_pos,
+            amps: &self.fused_amps,
+            n_steps: b,
+        });
+        engine.gather_into(&mut self.u_pad, &mut self.um_pad);
+        // launch bookkeeping: one logical launch per shard per
+        // (virtual) step — the sharded analog of one per region
+        self.launches += (self.shard_count * b) as u64;
+        self.steps_done += b;
+        for (i, r) in self.receivers.iter().enumerate() {
+            self.traces[i].push(self.u_pad.get(R + r.z, R + r.y, R + r.x));
+        }
+        self.energy_log.push(self.u_pad.energy());
+        if let Some(tel) = &self.telemetry {
+            tel.steps.add(b as u64);
+            tel.injections.add((self.sources.len() * b) as u64);
+        }
+        Ok(())
+    }
+
     /// Natural step-batch size of this coordinator's backend: the
     /// propagator's fusion degree in Golden mode, 1 otherwise.
     /// Observed runs record energy/traces and fire the observer once
     /// per batch.
     pub fn fuse(&self) -> usize {
         self.fuse
+    }
+
+    /// Shard the Golden run path into `n` z-slabs ([`crate::shard`]):
+    /// each slab advances on its own buffers/plan/pool and seam halos
+    /// are exchanged at fused batch boundaries. `n <= 1` restores the
+    /// unsharded path. Feasibility (every slab at least `fuse * R`
+    /// planes thick) is validated here so infeasible configurations
+    /// fail fast with a clear error instead of mid-run.
+    pub fn set_shards(&mut self, n: usize) -> anyhow::Result<()> {
+        self.shard = None;
+        if n <= 1 {
+            self.shard_count = 1;
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.mode == Mode::Golden,
+            "--shards applies to the Golden (CPU engine) mode only, not {:?}",
+            self.mode
+        );
+        crate::shard::plan_slabs(self.domain.interior.z, n, self.fuse.max(1) * R)?;
+        self.shard_count = n;
+        Ok(())
+    }
+
+    /// Active shard count (1 = unsharded).
+    pub fn shards(&self) -> usize {
+        self.shard_count
     }
 
     /// Register an additional injection source (multi-source scenarios:
@@ -568,7 +664,9 @@ impl<'e> Coordinator<'e> {
         while done < steps {
             let b = cadence.min(steps - done);
             let t_batch = Instant::now();
-            if b <= 1 {
+            if self.shard_count > 1 {
+                self.step_sharded(b)?;
+            } else if b <= 1 {
                 self.step()?;
             } else {
                 self.step_fused(b)?;
@@ -643,6 +741,7 @@ impl<'e> Coordinator<'e> {
     /// saturates the machine.
     pub fn set_cpu_threads(&mut self, threads: usize) {
         self.cpu_threads = threads;
+        self.shard = None; // the budget split is baked into the engine
     }
 
     /// Name of the active CPU code shape (Golden mode only).
@@ -964,6 +1063,84 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn sharded_runs_are_bit_identical_to_unsharded() {
+        // multi-source (one per mk_variant_coord), receivers, and PML
+        // regions all straddle the 2- and 3-shard seams of a 24-deep
+        // grid (seams at z = 12 and z = 8/16, pml_width = 4)
+        let mut base = mk_variant_coord("naive", 1);
+        let base_summary = base.run(25).unwrap();
+        for (variant, fuse) in [("naive", 1usize), ("tf_s2", 2)] {
+            for shards in [2usize, 3] {
+                let mut c = mk_variant_coord(variant, 2);
+                c.set_shards(shards).unwrap();
+                assert_eq!(c.shards(), shards);
+                let s = c.run(25).unwrap();
+                assert_eq!(s.steps, 25);
+                assert_eq!(
+                    s.launches,
+                    (shards * 25) as u64,
+                    "one logical launch per shard per step"
+                );
+                assert_eq!(
+                    c.wavefield().max_abs_diff(&base.wavefield()),
+                    0.0,
+                    "{variant} x {shards} shards deviated from the unsharded oracle"
+                );
+                assert_eq!(s.final_energy, base_summary.final_energy, "{variant} x {shards}");
+                let batches = 25usize.div_ceil(fuse);
+                assert_eq!(s.energy_log.len(), batches, "{variant} x {shards}");
+                assert_eq!(s.traces[0].len(), batches, "{variant} x {shards}");
+                for (i, e) in s.energy_log.iter().enumerate() {
+                    let step = ((i + 1) * fuse).min(25);
+                    assert_eq!(
+                        *e,
+                        base_summary.energy_log[step - 1],
+                        "{variant} x {shards}: energy at batch {i} (step {step})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn set_shards_rejects_infeasible_decompositions() {
+        // 24 z-planes over 2 shards is 12 < the s=4 halo depth of 16
+        let mut c = mk_variant_coord("tf_s4", 1);
+        let err = c.set_shards(2).unwrap_err().to_string();
+        assert!(err.contains("fused halo needs 16"), "got: {err}");
+        // more shards than z-planes is degenerate outright
+        let mut c = mk_variant_coord("naive", 1);
+        assert!(c.set_shards(25).is_err());
+        // shards = 1 resets to the unsharded path cleanly
+        let mut c = mk_variant_coord("tf_s2", 1);
+        c.set_shards(2).unwrap();
+        c.set_shards(1).unwrap();
+        let s = c.run(10).unwrap();
+        assert_eq!(s.launches, 7 * 10, "unsharded launch bookkeeping restored");
+    }
+
+    #[test]
+    fn sharded_telemetry_counts_halo_exchanges() {
+        let mut c = mk_variant_coord("tf_s2", 1);
+        c.set_shards(2).unwrap();
+        let reg = crate::telemetry::Registry::new();
+        c.set_telemetry(&reg);
+        let mut obs = Counter { calls: 0, saw_non_finite: false };
+        let s = c.run_observed(10, RunOptions::default(), Some(&mut obs)).unwrap();
+        assert_eq!(s.steps, 10);
+        assert_eq!(obs.calls, 5, "observer fires once per fused shard batch");
+        let text = reg.render();
+        assert!(text.contains("hostencil_steps_total 10"), "{text}");
+        // 5 batches x 1 seam
+        assert!(text.contains("hostencil_halo_exchanges_total 5"), "{text}");
+        // 5 batches x 1 seam x 2 bands x 2 levels x 8*24*24 floats x 4 bytes
+        assert!(text.contains("hostencil_halo_bytes_total 368640"), "{text}");
+        assert!(text.contains("hostencil_halo_exchange_latency_seconds_count 5"), "{text}");
+        // one plan build per shard, under the "shard" family label
+        assert!(text.contains("hostencil_plan_builds_total{family=\"shard\"} 2"), "{text}");
     }
 
     #[test]

@@ -106,6 +106,7 @@ pub mod manifest;
 pub mod report;
 pub mod runtime;
 pub mod scenario;
+pub mod shard;
 pub mod stencil;
 pub mod telemetry;
 pub mod testkit;

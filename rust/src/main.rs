@@ -129,6 +129,17 @@ commands:
              [--sample-every N]             cap observed batches at N steps
                                             so fused runs keep finer-grained
                                             energy/receiver traces
+             [--shards N]                   split the interior into N z-slab
+                                            shards (golden mode only): each
+                                            shard owns private padded buffers
+                                            plus an s*R-deep halo band and
+                                            advances on its own plan/pool;
+                                            seam halos are exchanged at fused
+                                            batch boundaries, physics stays
+                                            bit-identical to unsharded (see
+                                            docs/SHARDING.md); errors up front
+                                            when a slab would be thinner than
+                                            the fused halo
   validate   [--artifacts dir] [--steps N]    PJRT vs golden, all variants
   table2     [--steps N]                      predicted wall time vs paper
   table3                                      occupancy characteristics
@@ -162,13 +173,17 @@ commands:
                                             1|4|8|16, unroll 1|2|4)
   scenario   [--id name|all] [--list] [--steps N] [--machine m --variant v]
              [--propagator p] [--cpu-threads N] [--json path] [--sample-every N]
+             [--shards N]
                                             run named physics stress scenarios
                                             (CPU propagator backend) with
                                             pass/fail verdicts; stress ids
-                                            expect HardFail
+                                            expect HardFail; --shards runs the
+                                            physics on the sharded engine
+                                            (bit-identical, so expectations
+                                            are unchanged)
   campaign   [--machine v100|p100|nvs510|a100|all] [--variant id|all]
              [--quick] [--threads N] [--json path] [--steps-scale f]
-             [--sample-every N]
+             [--sample-every N] [--shards N] [--serial-fraction f]
                                             scenario x variant x machine matrix
                                             in parallel; each cell shows
                                             measured (CPU code shape) and
@@ -179,11 +194,23 @@ commands:
                                             budget split between the job
                                             fan-out and each job's tile fan-out
                                             (default: available cores);
+                                            --shards N runs every physics job
+                                            on the sharded engine (the job's
+                                            budget slice splits again across
+                                            shards x tiles, still bounded by
+                                            --threads); --serial-fraction f
+                                            derates the gpusim-predicted
+                                            steps/sec column by the Amdahl
+                                            efficiency 1/(f*P + (1-f)) at the
+                                            machine's modeled parallelism
+                                            P = blocks/SM x SM count — feed it
+                                            the fitted serial fraction that
+                                            `bench --thread-sweep` prints;
                                             non-zero exit when any cell deviates
                                             from its expected verdict
   bench      [--size N] [--steps N] [--json path] [--cpu-threads N] [--check]
              [--margin 0.15] [--thread-sweep 1,2,4,8] [--fuse 1,2,4]
-             [--simd-sweep] [--machine v100]
+             [--simd-sweep] [--machine v100] [--shards N] [--shard-sweep 1,2,4]
                                             time the CPU propagator matrix
                                             (naive/blocked/streaming/semi +
                                             the fused tf_s2/tf_s4 rows; JSON
@@ -237,7 +264,20 @@ commands:
                                             (--machine, default v100; JSON
                                             `scaling_model` array) — measured
                                             vs predicted now covers parallel
-                                            efficiency too; honors
+                                            efficiency too (feed the fit to
+                                            `campaign --serial-fraction`);
+                                            --shards N times the main matrix
+                                            on the sharded engine;
+                                            --shard-sweep re-times the fuse-2
+                                            sharded engine at each z-slab
+                                            shard count and emits a
+                                            `shard_sweep` JSON array with
+                                            speedups vs the 1-shard control
+                                            (infeasible counts are skipped
+                                            with a note); with --check and
+                                            measured 1- and 2-shard rows,
+                                            2 shards must not lose to 1
+                                            beyond --margin; honors
                                             HOSTENCIL_BENCH_SAMPLES /
                                             HOSTENCIL_BENCH_WARMUP
   telemetry  [--demo] [--propagator p] [--steps N] [--size N] [--cpu-threads N]
@@ -473,12 +513,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     );
     let mut coord = build_coordinator(&cfg, engine.as_ref())?;
     coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+    coord.set_shards(args.usize_or("shards", 1)?)?;
     let telemetry = telemetry_from_args(args)?;
     if let Some(t) = &telemetry {
         coord.set_telemetry(&t.registry);
     }
     if let Some(sig) = coord.propagator_signature() {
         println!("cpu code shape: {sig}");
+    }
+    if coord.shards() > 1 {
+        println!("sharding      : {} z-slab shards, halo exchange every batch", coord.shards());
     }
     let summary = coord.run_observed(
         cfg.steps,
@@ -819,6 +863,7 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         propagator: args.get("propagator")?.map(|s| s.to_string()),
         cpu_threads: args.usize_or("cpu-threads", 0)?,
         sample_every: args.usize_or("sample-every", 0)?,
+        shards: args.usize_or("shards", 0)?,
         telemetry: telemetry.as_ref().map(|t| t.registry.clone()),
     };
 
@@ -914,6 +959,15 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     }
     spec.threads = args.usize_or("threads", 0)?;
     spec.sample_every = args.usize_or("sample-every", 0)?;
+    spec.shards = args.usize_or("shards", 1)?;
+    if let Some(f) = args.get("serial-fraction")? {
+        let f: f64 = f.parse().map_err(|e| anyhow::anyhow!("--serial-fraction: {e}"))?;
+        anyhow::ensure!(
+            (0.0..1.0).contains(&f),
+            "--serial-fraction must be a fraction in [0.0, 1.0), got {f}"
+        );
+        spec.serial_fraction = Some(f);
+    }
     let telemetry = telemetry_from_args(args)?;
     spec.telemetry = telemetry.as_ref().map(|t| t.registry.clone());
 
@@ -956,6 +1010,25 @@ fn parse_thread_list(s: &str) -> anyhow::Result<Vec<usize>> {
             .parse()
             .map_err(|e| anyhow::anyhow!("--thread-sweep: bad count {tok:?}: {e}"))?;
         anyhow::ensure!(t >= 1, "--thread-sweep: worker counts must be >= 1");
+        out.push(t);
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
+/// Parse a `--shard-sweep` list (`1,2,4`): comma-separated z-slab
+/// shard counts, sorted and deduplicated so the 1-shard control (when
+/// the list contains it) is measured before the counts that report
+/// speedup against it, and so `--check` can gate 2-vs-1 shards.
+fn parse_shard_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let t: usize = tok
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--shard-sweep: bad count {tok:?}: {e}"))?;
+        anyhow::ensure!(t >= 1, "--shard-sweep: shard counts must be >= 1");
         out.push(t);
     }
     out.sort_unstable();
@@ -1006,6 +1079,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         None => None,
         Some(list) => Some(parse_fuse_list(list)?),
     };
+    let shard_list: Option<Vec<usize>> = match args.get("shard-sweep")? {
+        None => None,
+        Some(list) => Some(parse_shard_list(list)?),
+    };
     // one registry across the whole matrix (series are deduplicated by
     // name + labels, collectors re-point to the live pool), so the
     // exit snapshot aggregates every timed shape
@@ -1053,6 +1130,7 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         let mut coord =
             Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, vec![])?;
         coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+        coord.set_shards(args.usize_or("shards", 1)?)?;
         if let Some(t) = &telemetry {
             coord.set_telemetry(&t.registry);
         }
@@ -1301,6 +1379,51 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
     }
 
+    // --shard-sweep: re-time the deep-halo sharded engine (fuse 2, so
+    // the halo exchange cadence is exercised, not just the split) at
+    // each z-slab shard count. Speedup is measured against the 1-shard
+    // control; counts the grid cannot host (a slab thinner than the
+    // s*R halo) are skipped with a note rather than failing the sweep.
+    struct ShardRow {
+        shards: usize,
+        sps_best: f64,
+        speedup: Option<f64>,
+    }
+    let mut shard_rows: Vec<ShardRow> = Vec::new();
+    if let Some(counts) = &shard_list {
+        println!("\nshard sweep (fuse 2 deep-halo z-slabs; steady-state best; speedup vs 1 shard):");
+        let mut rate1: Option<f64> = None;
+        for &sc in counts {
+            match hostencil::shard::measure_sharded_steps_per_sec(
+                &domain,
+                2,
+                sc,
+                steps,
+                b.warmup,
+                b.samples.max(1),
+            ) {
+                Ok(sps) => {
+                    if sc == 1 {
+                        rate1 = Some(sps);
+                    }
+                    shard_rows.push(ShardRow {
+                        shards: sc,
+                        sps_best: sps,
+                        speedup: rate1.map(|r1| sps / r1),
+                    });
+                }
+                Err(e) => println!("  {sc:>2} shards: skipped ({e})"),
+            }
+        }
+        for r in &shard_rows {
+            let sp = match r.speedup {
+                Some(x) => format!("{x:>5.2}x"),
+                None => "     -".to_string(),
+            };
+            println!("  {:>2} shards {:>8.1} steps/s  vs 1 shard {sp}", r.shards, r.sps_best);
+        }
+    }
+
     // --simd-sweep: re-time the tiled matrix at threads=1, once with
     // the row kernel forced scalar and once with the process dispatch,
     // so the explicit-SIMD payoff is directly measurable per shape
@@ -1481,6 +1604,24 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 .collect();
             root.insert("fuse_sweep".to_string(), Json::Arr(fuse_json));
         }
+        if !shard_rows.is_empty() {
+            // JSON v2 extension: the z-slab shard-count sweep (absent
+            // unless --shard-sweep was given; infeasible counts are
+            // skipped, so rows cover the measured counts only)
+            let shard_json: Vec<Json> = shard_rows
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("shards".to_string(), Json::Num(r.shards as f64));
+                    o.insert("steps_per_sec_best".to_string(), Json::Num(r.sps_best));
+                    if let Some(x) = r.speedup {
+                        o.insert("speedup_vs_single".to_string(), Json::Num(x));
+                    }
+                    Json::Obj(o)
+                })
+                .collect();
+            root.insert("shard_sweep".to_string(), Json::Arr(shard_json));
+        }
         if full_simd_sweep && !simd_rows.is_empty() {
             // JSON v2 extension: the scalar-vs-SIMD row-kernel sweep
             // (absent unless --simd-sweep was given)
@@ -1622,6 +1763,36 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 "bench --check OK: {hi}-thread steady-state holds >= {lo}-thread across \
                  the matrix"
             );
+        }
+
+        // Shard-scaling canary: splitting the grid into two z-slabs —
+        // seam halo exchange, per-shard pools and all — must not make
+        // a step materially slower than the 1-shard control. If it
+        // does, the exchange (or the budget split) costs more than the
+        // fan-out buys and the sharded path regressed. Same --margin
+        // noise allowance; needs both counts 1 and 2 in the sweep (an
+        // infeasible/skipped count skips the gate with a note).
+        if shard_list.is_some() {
+            let rate_at =
+                |n: usize| shard_rows.iter().find(|r| r.shards == n).map(|r| r.sps_best);
+            match (rate_at(1), rate_at(2)) {
+                (Some(r1), Some(r2)) => {
+                    anyhow::ensure!(
+                        r2 >= (1.0 - margin) * r1,
+                        "bench --check: 2-shard steady-state ({r2:.1} steps/s) fell below \
+                         the 1-shard control ({r1:.1} steps/s) beyond the {pct:.0}% noise \
+                         margin; the halo exchange must not cost more than the shard \
+                         fan-out buys",
+                    );
+                    println!(
+                        "bench --check OK: 2-shard steady-state holds >= 1-shard ({:.2}x)",
+                        r2 / r1
+                    );
+                }
+                _ => println!(
+                    "bench --check: shard gate skipped (needs measured 1- and 2-shard rows)"
+                ),
+            }
         }
     }
     if let Some(t) = &telemetry {
@@ -1913,5 +2084,41 @@ mod tests {
         assert_eq!(lane_label(1, 1), "scalar");
         assert_eq!(lane_label(8, 2), "w8u2");
         assert_eq!(lane_label(16, 4), "w16u4");
+    }
+
+    #[test]
+    fn shard_flags_parse_on_run_scenario_campaign_and_bench() {
+        for cmd in ["run", "scenario", "campaign", "bench"] {
+            let a = parse(&[cmd, "--shards", "2", "--steps", "10"]);
+            assert_eq!(a.usize_or("shards", 1).unwrap(), 2);
+            let b = parse(&[cmd, "--shards=3"]);
+            assert_eq!(b.usize_or("shards", 1).unwrap(), 3);
+        }
+        // a bare --shards (forgotten count) errors instead of silently
+        // defaulting
+        let bare = parse(&["run", "--shards"]);
+        assert!(bare.usize_or("shards", 1).is_err());
+    }
+
+    #[test]
+    fn shard_sweep_list_parses_sorts_and_dedups() {
+        assert_eq!(parse_shard_list("1,2,4").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_shard_list("4, 2,1,2").unwrap(), vec![1, 2, 4]);
+        assert_eq!(parse_shard_list("3").unwrap(), vec![3]);
+        assert!(parse_shard_list("").is_err());
+        assert!(parse_shard_list("0,2").is_err(), "zero shards is meaningless");
+        assert!(parse_shard_list("two").is_err());
+    }
+
+    #[test]
+    fn serial_fraction_flag_takes_fractional_values() {
+        let a = parse(&["campaign", "--serial-fraction", "0.03", "--quick"]);
+        assert_eq!(a.get("serial-fraction").unwrap(), Some("0.03"));
+        assert!(a.has_flag("quick"));
+        let b = parse(&["campaign", "--serial-fraction=0.1"]);
+        assert_eq!(b.get("serial-fraction").unwrap(), Some("0.1"));
+        // a bare --serial-fraction errors instead of becoming "true"
+        let bare = parse(&["campaign", "--serial-fraction"]);
+        assert!(bare.get("serial-fraction").is_err());
     }
 }

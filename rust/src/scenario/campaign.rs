@@ -45,6 +45,18 @@ pub struct CampaignSpec {
     /// Cap observed-run batches at N steps (fused backends keep
     /// finer-grained traces; 0 keeps the natural cadence).
     pub sample_every: usize,
+    /// Z-slab shard count for every physics run (`--shards`); 0 or 1 =
+    /// unsharded. Sharded runs are bit-identical to unsharded ones, so
+    /// verdicts and expectations are unchanged — only the execution
+    /// shape (and each job's internal budget split) moves.
+    pub shards: usize,
+    /// Fitted Amdahl serial fraction (`bench --thread-sweep` prints the
+    /// least-squares fit; `--serial-fraction` feeds it back here). When
+    /// set, the gpusim-predicted steps/sec column is derated by the
+    /// Amdahl efficiency `1 / (f*P + (1-f))` at the machine's modeled
+    /// parallelism `P = blocks_per_sm * sm_count`, so predictions stop
+    /// assuming perfectly parallel kernels. `None` keeps the raw model.
+    pub serial_fraction: Option<f64>,
     /// Shared telemetry registry attached to every physics run. Jobs
     /// run in parallel but series are deduplicated by name + labels,
     /// so the whole matrix accumulates into one exposition.
@@ -61,6 +73,21 @@ pub fn split_budget(budget: usize, jobs: usize) -> (usize, usize) {
     let budget = budget.max(1);
     let outer = budget.min(jobs.max(1));
     (outer, (budget / outer).max(1))
+}
+
+/// Three-way budget split for sharded campaigns: the global budget is
+/// first shared between the physics jobs ([`split_budget`]), then each
+/// job's slice is shared between its shard fan-out and every shard's
+/// tile fan-out ([`crate::shard::split_shard_budget`]). Returns
+/// `(job_workers, shard_workers, tile_threads)` with
+/// `job_workers * shard_workers * tile_threads <= budget`, so a
+/// sharded matrix can never oversubscribe the host either. Each job's
+/// `RunnerOptions::cpu_threads` carries the middle*inner product and
+/// the coordinator's engine re-derives the same split deterministically.
+pub fn split_budget3(budget: usize, jobs: usize, shards: usize) -> (usize, usize, usize) {
+    let (outer, per_job) = split_budget(budget, jobs);
+    let (shard_workers, tile) = crate::shard::split_shard_budget(per_job, shards);
+    (outer, shard_workers, tile)
 }
 
 /// One representative variant per code-shape family: the six families
@@ -101,6 +128,8 @@ impl CampaignSpec {
             steps_scale: None,
             threads: 0,
             sample_every: 0,
+            shards: 1,
+            serial_fraction: None,
             telemetry: None,
         }
     }
@@ -115,6 +144,8 @@ impl CampaignSpec {
             steps_scale: Some(0.25),
             threads: 0,
             sample_every: 0,
+            shards: 1,
+            serial_fraction: None,
             telemetry: None,
         }
     }
@@ -257,6 +288,19 @@ impl CampaignReport {
     }
 }
 
+/// Derate a raw gpusim steps/sec prediction by the Amdahl efficiency
+/// at the machine's modeled parallelism: `P` concurrent blocks
+/// (`blocks_per_sm * sm_count`) and a fitted serial fraction `f` give
+/// `speedup(P)/P = 1 / (f*P + (1-f))`. The raw model assumes the
+/// kernel scales perfectly across blocks; the fitted fraction (from
+/// `bench --thread-sweep`'s least-squares Amdahl fit) folds the
+/// measured serial residue back into the predicted column.
+fn amdahl_derate(steps_per_sec: f64, serial_fraction: f64, parallelism: f64) -> f64 {
+    let f = serial_fraction.clamp(0.0, 1.0);
+    let p = parallelism.max(1.0);
+    steps_per_sec / (f * p + (1.0 - f))
+}
+
 /// Assemble one cell from its (possibly shared) physics outcome plus a
 /// per-cell gpusim prediction and verdict. Any error — physics or
 /// prediction — records the cell as an errored HardFail.
@@ -264,6 +308,7 @@ fn assemble_cell(
     sc: ScenarioId,
     variant: &str,
     machine: &str,
+    serial_fraction: Option<f64>,
     physics: &anyhow::Result<Metrics>,
 ) -> CampaignCell {
     let error_cell = |e: String| CampaignCell {
@@ -288,10 +333,20 @@ fn assemble_cell(
         Ok(m) => m,
         Err(e) => return error_cell(e.to_string()),
     };
-    let predicted = match predict_perf(machine, variant) {
+    let mut predicted = match predict_perf(machine, variant) {
         Ok(p) => p,
         Err(e) => return error_cell(e.to_string()),
     };
+    if let Some(f) = serial_fraction {
+        if f > 0.0 {
+            let arch = match crate::gpusim::arch::by_name(machine) {
+                Ok(a) => a,
+                Err(e) => return error_cell(e.to_string()),
+            };
+            let p = (predicted.blocks_per_sm as f64) * (arch.sm_count as f64);
+            predicted.steps_per_sec = amdahl_derate(predicted.steps_per_sec, f, p);
+        }
+    }
     let mut metrics = base.clone();
     metrics.predicted = Some(predicted);
     let result = evaluate_pass_fail(&metrics, &sc.materialize().expectations);
@@ -323,9 +378,11 @@ fn physics_opts(spec: &CampaignSpec, variant: &str, tile_threads: usize) -> Runn
     RunnerOptions {
         steps_scale: spec.steps_scale,
         variant: Some(variant.to_string()),
-        // this job's share of the global worker budget
+        // this job's share of the global worker budget; with shards the
+        // coordinator's engine re-splits it via split_shard_budget
         cpu_threads: tile_threads,
         sample_every: spec.sample_every,
+        shards: spec.shards,
         telemetry: spec.telemetry.clone(),
         ..RunnerOptions::default()
     }
@@ -337,7 +394,7 @@ fn physics_opts(spec: &CampaignSpec, variant: &str, tile_threads: usize) -> Runn
 /// directly).
 fn run_cell(spec: &CampaignSpec, sc: ScenarioId, variant: &str, machine: &str) -> CampaignCell {
     let physics = run_scenario_physics(sc, &physics_opts(spec, variant, spec.threads));
-    assemble_cell(sc, variant, machine, &physics)
+    assemble_cell(sc, variant, machine, spec.serial_fraction, &physics)
 }
 
 /// Run the whole matrix. The physics is deduplicated to one run per
@@ -372,7 +429,11 @@ pub fn run_campaign(spec: &CampaignSpec) -> CampaignReport {
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
     };
-    let (n_threads, tile_threads) = split_budget(budget, jobs.len());
+    // sharded specs split each job's slice a second time (shard
+    // fan-out x per-shard tiles); the job still carries the product so
+    // the engine's own split_shard_budget re-derives the same factors
+    let (n_threads, shard_workers, shard_tile) = split_budget3(budget, jobs.len(), spec.shards);
+    let tile_threads = shard_workers * shard_tile;
 
     let t0 = Instant::now();
     let cursor = AtomicUsize::new(0);
@@ -402,7 +463,9 @@ pub fn run_campaign(spec: &CampaignSpec) -> CampaignReport {
     let out = cells
         .iter()
         .zip(&job_of_cell)
-        .map(|((sc, variant, machine), &j)| assemble_cell(*sc, variant, machine, &physics[j]))
+        .map(|((sc, variant, machine), &j)| {
+            assemble_cell(*sc, variant, machine, spec.serial_fraction, &physics[j])
+        })
         .collect();
     CampaignReport {
         cells: out,
@@ -425,6 +488,8 @@ mod tests {
             steps_scale: Some(0.5),
             threads: 2,
             sample_every: 0,
+            shards: 1,
+            serial_fraction: None,
             telemetry: None,
         }
     }
@@ -445,6 +510,87 @@ mod tests {
                 assert!(outer <= jobs.max(1));
             }
         }
+    }
+
+    #[test]
+    fn split_budget3_never_oversubscribes_either_layer() {
+        assert_eq!(split_budget3(16, 2, 2), (2, 2, 4));
+        assert_eq!(split_budget3(4, 1, 2), (1, 2, 2));
+        assert_eq!(split_budget3(8, 3, 1), (3, 1, 2)); // unsharded == split_budget
+        assert_eq!(split_budget3(1, 5, 5), (1, 1, 1)); // serial host stays serial
+        for budget in 1..20 {
+            for jobs in 1..8 {
+                for shards in 1..6 {
+                    let (a, b, c) = split_budget3(budget, jobs, shards);
+                    assert!(a >= 1 && b >= 1 && c >= 1);
+                    assert!(
+                        a * b * c <= budget,
+                        "({budget},{jobs},{shards}) -> ({a},{b},{c}) oversubscribes"
+                    );
+                    assert!(b <= shards.max(1));
+                    // the job's slice carries the product, so the
+                    // engine's own re-split reproduces the same factors
+                    let (eb, ec) = crate::shard::split_shard_budget(b * c, shards);
+                    assert_eq!((eb, ec), (b, c), "engine re-split must be deterministic");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn amdahl_derate_matches_the_closed_form() {
+        // f = 0 or P = 1: nothing to derate
+        assert_eq!(amdahl_derate(1000.0, 0.0, 80.0), 1000.0);
+        assert_eq!(amdahl_derate(1000.0, 0.5, 1.0), 1000.0);
+        // f = 1: fully serial, the parallel model overcounts by P
+        assert!((amdahl_derate(800.0, 1.0, 80.0) - 10.0).abs() < 1e-9);
+        // derating is monotone in f
+        let raw = 1234.5;
+        let mut last = raw;
+        for f in [0.01, 0.05, 0.2, 0.8] {
+            let d = amdahl_derate(raw, f, 160.0);
+            assert!(d < last, "serial fraction {f} must shrink the prediction");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn serial_fraction_derates_the_predicted_column_only() {
+        let raw = run_cell(&tiny_spec(), ScenarioId::TinyGrid, "gmem_8x8x8", "v100");
+        let mut spec = tiny_spec();
+        spec.serial_fraction = Some(0.05);
+        let fit = run_cell(&spec, ScenarioId::TinyGrid, "gmem_8x8x8", "v100");
+        assert!(fit.predicted_steps_per_sec > 0.0);
+        assert!(
+            fit.predicted_steps_per_sec < raw.predicted_steps_per_sec,
+            "fitted serial fraction must derate the model ({} !< {})",
+            fit.predicted_steps_per_sec,
+            raw.predicted_steps_per_sec
+        );
+        assert_eq!(fit.verdict, raw.verdict, "the verdict judges physics, not the model");
+        // a zero fraction is the identity
+        spec.serial_fraction = Some(0.0);
+        let zero = run_cell(&spec, ScenarioId::TinyGrid, "gmem_8x8x8", "v100");
+        assert_eq!(zero.predicted_steps_per_sec, raw.predicted_steps_per_sec);
+    }
+
+    #[test]
+    fn sharded_campaign_matches_the_unsharded_physics() {
+        // TinyGrid is 9 z-planes: two fuse-1 shards own 5 and 4, both
+        // >= the halo depth 4, so the decomposition is feasible — and
+        // must be invisible in every physics column
+        let base = run_campaign(&tiny_spec());
+        let mut spec = tiny_spec();
+        spec.shards = 2;
+        spec.threads = 4;
+        let sharded = run_campaign(&spec);
+        assert_eq!(sharded.off_expectation_count(), 0, "{:?}", sharded.cells);
+        assert_eq!(sharded.tile_threads, 4, "1 job: shard x tile product gets the budget");
+        let (a, b) = (&base.cells[0], &sharded.cells[0]);
+        assert_eq!(a.peak_abs, b.peak_abs, "sharding leaked into physics");
+        assert_eq!(a.final_energy, b.final_energy);
+        assert_eq!(a.boundary_leakage, b.boundary_leakage);
+        assert_eq!(a.verdict, b.verdict);
     }
 
     #[test]
@@ -472,6 +618,8 @@ mod tests {
             steps_scale: None,
             threads: 0,
             sample_every: 0,
+            shards: 1,
+            serial_fraction: None,
             telemetry: None,
         };
         assert_eq!(spec.cells().len(), 2 * 3 * 2);
@@ -507,6 +655,8 @@ mod tests {
             steps_scale: Some(0.5),
             threads: 2,
             sample_every: 0,
+            shards: 1,
+            serial_fraction: None,
             telemetry: None,
         };
         let report = run_campaign(&spec);
@@ -548,6 +698,8 @@ mod tests {
             steps_scale: Some(0.5),
             threads: 2,
             sample_every: 0,
+            shards: 1,
+            serial_fraction: None,
             telemetry: None,
         };
         let report = run_campaign(&spec);

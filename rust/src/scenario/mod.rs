@@ -402,6 +402,11 @@ pub struct RunnerOptions {
     /// finer-grained energy/receiver traces (0 keeps the backend's
     /// natural cadence; `--sample-every` on the CLI).
     pub sample_every: usize,
+    /// z-slab shard count for the physics run (0/1 = unsharded;
+    /// `--shards` on the CLI). Sharded runs stay bit-identical to
+    /// unsharded ones, so expectations are unchanged; infeasible
+    /// decompositions (slab thinner than the fused halo) error out.
+    pub shards: usize,
     /// Telemetry registry to attach to the run (a cloned handle shares
     /// the same series). When absent the physics still runs with a
     /// private registry so per-batch wall time lands in the metrics.
@@ -464,6 +469,7 @@ pub fn run_scenario_physics(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Res
         cfg.receivers.clone(),
     )?;
     coord.set_cpu_threads(opts.cpu_threads);
+    coord.set_shards(opts.shards.max(1))?;
     // every physics run is instrumented: with a caller-supplied
     // registry when given (CLI --telemetry), a private one otherwise,
     // so the batch-latency histogram always feeds the metrics

@@ -1,0 +1,795 @@
+//! Sharded domain decomposition with fused halo exchange.
+//!
+//! One domain is split into `shards` z-slabs. Each [`Shard`] owns a
+//! **private** R-ghost-padded buffer pair covering its slab plus an
+//! `s*R`-deep halo band on each interior seam (`s` = fusion degree),
+//! its own velocity/eta extracts, and its own tile [`Plan`] +
+//! `WorkerPool` — so shards place their working set NUMA-locally and
+//! never touch a neighbour's memory on the hot path.
+//!
+//! **Deep halos buy communication avoidance.** A leapfrog sub-step
+//! contaminates at most `R` planes inward from a cut edge (the 25-point
+//! stencil reaches `R = 4` planes; the PML eta halo of 1 and the
+//! velocity's own plane are inside that bound). With an `H = s*R` halo
+//! a shard can advance `s` sub-steps *without any synchronization*:
+//! after `j <= s` steps only planes closer than `j*R` to the cut edge
+//! are stale, and the owned slab is still bit-exact — for both leapfrog
+//! levels, since level n-1 is level n of the previous sub-step. Shards
+//! therefore exchange halos only at `TimeFused` batch boundaries (every
+//! `s` steps): fusion amortizes exchanges exactly like it amortizes
+//! DRAM sweeps.
+//!
+//! **Bit-identity** with the unsharded golden oracle falls out of three
+//! facts: (a) every point applies its *global* region class (PML vs
+//! inner) via [`row_segments`] on global coordinates, so classification
+//! is identical; (b) the per-row kernels are the same
+//! [`inner_row`]/[`pml_row`] the whole engine uses; and (c) at the
+//! global z-edges the local zero ghost frame *is* the true Dirichlet
+//! ghost, while at cut seams every plane a frame-zero read could
+//! influence is overwritten by the next exchange before anyone reads
+//! it. `rust/tests/shard_equivalence.rs` asserts `max_abs_diff == 0.0`
+//! against the unsharded coordinator across fuse degrees, odd grids,
+//! and seam-straddling sources/PML.
+//!
+//! **Transport is abstract**: shards publish/collect opaque band
+//! buffers through [`HaloTransport`], so the in-process
+//! [`InProcessTransport`] (per-seam mailboxes: publish copies *out* of
+//! the live field, collect copies *into* the halo — a double-buffer
+//! that never blocks a publisher on a collector) can be swapped for a
+//! multi-process or multi-node backend without touching the engine.
+//!
+//! Concurrency is two-level and budgeted: `split_shard_budget` divides
+//! the global worker budget into `outer` shard-parallel slots × `inner`
+//! tile threads per shard (product never exceeds the budget, so
+//! `--shards N` cannot oversubscribe). The steady state allocates
+//! nothing — see `rust/tests/zero_alloc_shard.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::grid::{Dim3, Domain, Field3, Region, RegionClass};
+use crate::runtime::pool::WorkerPool;
+use crate::stencil::propagator::Plan;
+use crate::stencil::{inner_row, pml_row, row_segments, simd, Consts, SourceBatch};
+use crate::telemetry::{Counter, Histogram, Registry, LATENCY_BOUNDS};
+use crate::R;
+
+/// z-depth of one shard-local tile task (full y/x rows per tile).
+const SHARD_TILE_Z: usize = 4;
+
+/// One shard's owned z-slab `[z0, z1)` in global interior coordinates.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Slab {
+    pub z0: usize,
+    pub z1: usize,
+}
+
+/// Split `nz` interior z-planes into `shards` contiguous slabs (the
+/// first `nz % shards` slabs take the remainder plane each).
+///
+/// Rejects decompositions the deep-halo protocol cannot honour: with
+/// more than one shard, every slab must be at least `halo = s*R`
+/// planes thick, so a seam neighbour's *owned* planes fully cover the
+/// band its peers collect (and so `ze0 = z0 - halo` never crosses a
+/// second seam).
+pub fn plan_slabs(nz: usize, shards: usize, halo: usize) -> anyhow::Result<Vec<Slab>> {
+    anyhow::ensure!(shards >= 1, "shard count must be >= 1, got {shards}");
+    anyhow::ensure!(
+        shards <= nz,
+        "{shards} shards cannot split {nz} z-planes: at most one shard per plane"
+    );
+    let base = nz / shards;
+    let extra = nz % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut z0 = 0;
+    for i in 0..shards {
+        let thick = base + usize::from(i < extra);
+        if shards > 1 && thick < halo {
+            anyhow::bail!(
+                "shard {i} would own {thick} z-planes but the fused halo needs {halo} (s*R); \
+                 use fewer shards, a lower fusion degree, or a deeper grid"
+            );
+        }
+        out.push(Slab { z0, z1: z0 + thick });
+        z0 += thick;
+    }
+    Ok(out)
+}
+
+/// Divide a global worker budget between the shard fan-out and each
+/// shard's tile fan-out: `outer` shards advance concurrently, each on
+/// `inner` tile threads, with `outer * inner <= budget.max(1)` — the
+/// same contract as the campaign's job/tile split, so `--shards N`
+/// never oversubscribes the machine.
+pub fn split_shard_budget(budget: usize, shards: usize) -> (usize, usize) {
+    let budget = budget.max(1);
+    let outer = budget.min(shards.max(1));
+    (outer, (budget / outer).max(1))
+}
+
+/// Which seam band of a shard a transport message refers to.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Side {
+    /// The low-z end (toward shard `i - 1`).
+    Low,
+    /// The high-z end (toward shard `i + 1`).
+    High,
+}
+
+/// The halo-exchange backend. Shards talk only in terms of opaque band
+/// buffers (`halo * ny * nx` floats per leapfrog level), so an
+/// implementation may live in-process, cross-process, or cross-node.
+///
+/// Contract: `publish(i, side, ...)` posts shard `i`'s *owned* band on
+/// that side; `collect(i, side, ...)` fills shard `i`'s *halo* on that
+/// side from the neighbour's published owned band. The engine
+/// barrier-separates the publish and collect phases of a batch
+/// boundary, so a transport never sees a collect race a publish of the
+/// same exchange round.
+pub trait HaloTransport: Send + Sync {
+    fn publish(&self, from: usize, side: Side, u: &[f32], um: &[f32]);
+    fn collect(&self, to: usize, side: Side, u: &mut [f32], um: &mut [f32]);
+}
+
+/// One posted band: both leapfrog levels of one shard's owned seam
+/// planes. Preallocated at construction — steady-state exchanges only
+/// `copy_from_slice` under a short mutex hold.
+struct Band {
+    u: Vec<f32>,
+    um: Vec<f32>,
+}
+
+/// The in-process transport: a mailbox per (shard, side). Publishing
+/// copies the live field *out* into the mailbox and collecting copies
+/// the mailbox *into* the halo — double-buffering that keeps
+/// publishers and collectors off each other's live buffers. Mutexes
+/// (not channels) keep the steady state allocation-free.
+pub struct InProcessTransport {
+    /// `bands[i][0]` = shard i's published Low band, `[1]` = High.
+    bands: Vec<[Mutex<Band>; 2]>,
+}
+
+impl InProcessTransport {
+    pub fn new(shards: usize, band_len: usize) -> InProcessTransport {
+        let mk = || {
+            Mutex::new(Band { u: vec![0.0; band_len], um: vec![0.0; band_len] })
+        };
+        InProcessTransport { bands: (0..shards).map(|_| [mk(), mk()]).collect() }
+    }
+}
+
+fn side_idx(side: Side) -> usize {
+    match side {
+        Side::Low => 0,
+        Side::High => 1,
+    }
+}
+
+impl HaloTransport for InProcessTransport {
+    fn publish(&self, from: usize, side: Side, u: &[f32], um: &[f32]) {
+        let mut b = self.bands[from][side_idx(side)]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        b.u.copy_from_slice(u);
+        b.um.copy_from_slice(um);
+    }
+
+    fn collect(&self, to: usize, side: Side, u: &mut [f32], um: &mut [f32]) {
+        // shard `to`'s Low halo is its low neighbour's owned High band
+        // (and vice versa): the seam is shared, the roles are mirrored
+        let (nbr, nbr_side) = match side {
+            Side::Low => (to - 1, Side::High),
+            Side::High => (to + 1, Side::Low),
+        };
+        let b = self.bands[nbr][side_idx(nbr_side)]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        u.copy_from_slice(&b.u);
+        um.copy_from_slice(&b.um);
+    }
+}
+
+/// One z-slab of the domain: private padded buffer pair over the
+/// extended range `[ze0, ze1) = [z0 - H, z1 + H)` (clamped to the
+/// grid), local velocity/eta extracts, a private tile plan, and the
+/// preallocated pack/unpack staging for one seam band.
+struct Shard {
+    /// Owned slab `[z0, z1)` in global interior z.
+    z0: usize,
+    z1: usize,
+    /// Extended (owned + halo) range `[ze0, ze1)` in global interior z.
+    ze0: usize,
+    ze1: usize,
+    /// Extended interior shape: `(ze1 - ze0, ny, nx)`.
+    ext: Dim3,
+    /// R-ghost-padded leapfrog pair over the extended range. The ghost
+    /// frame stays zero: at global edges it *is* the Dirichlet ghost,
+    /// at cut seams every value it could influence is overwritten by
+    /// the next halo exchange before the owned slab can read it.
+    u: Field3,
+    um: Field3,
+    /// Velocity extract over the extended range (interior-shaped).
+    v: Field3,
+    /// Eta extract over the extended range, R-padded like the global
+    /// `eta_pad` (the PML kernel reads a 1-deep eta halo).
+    eta_pad: Field3,
+    /// Private tile plan (own `WorkerPool` for `inner >= 2`).
+    plan: Option<Plan<()>>,
+    /// Seam-band staging, `halo * ny * nx` floats per level.
+    band_u: Vec<f32>,
+    band_um: Vec<f32>,
+}
+
+impl Shard {
+    /// Advance one leapfrog sub-step over the **whole extended range**
+    /// in place, swap the pair, then apply sub-step `j`'s source
+    /// injections that land in this shard's extended range.
+    ///
+    /// Every row applies its global region class: `gz = ze0 + lz` and
+    /// `gy = ly` (y/x are not sharded) feed [`row_segments`] on the
+    /// *global* domain, so per-point classification — and therefore
+    /// arithmetic — is bit-identical to the unsharded sweep.
+    fn advance_sub(&mut self, gd: &Domain, k: Consts, batch: &SourceBatch, j: usize) {
+        let Shard { u, um, v, eta_pad, plan, ze0, ze1, .. } = self;
+        let (ze0, ze1) = (*ze0, *ze1);
+        let uv = u.view();
+        let vv = v.view();
+        let ev = eta_pad.view();
+        let plan = plan.as_mut().expect("plan is built in ShardedEngine::new");
+        plan.run_into(um, |t, _s, out| {
+            for dz in 0..t.shape.z {
+                let lz = t.offset.z + dz;
+                let gz = ze0 + lz;
+                for dy in 0..t.shape.y {
+                    let ly = t.offset.y + dy;
+                    for (x0, len, inner) in row_segments(gd, gz, ly) {
+                        if len == 0 {
+                            continue;
+                        }
+                        // SAFETY: tile tasks cover disjoint z-ranges,
+                        // so each padded output row is written by
+                        // exactly one worker
+                        let row = unsafe { out.seg_mut(lz + R, ly + R, x0 + R, len) };
+                        if inner {
+                            inner_row(uv, vv, lz, ly, x0, len, k, row);
+                        } else {
+                            pml_row(uv, vv, ev, lz, ly, x0, len, k, row);
+                        }
+                    }
+                }
+            }
+        });
+        std::mem::swap(u, um);
+        // inject *after* the swap (u now holds step n+1), mirroring the
+        // coordinator/fused schedule: sub-step j applies amps row j.
+        // Halo-plane injections keep those planes in lockstep with the
+        // owner's computation; they are overwritten at the exchange
+        // anyway, but owned planes within R of a seam read them first.
+        for (i, p) in batch.positions.iter().enumerate() {
+            if p.z >= ze0 && p.z < ze1 {
+                u.add(R + (p.z - ze0), R + p.y, R + p.x, batch.amp(j, i));
+            }
+        }
+    }
+
+    /// Copy this shard's **owned** seam band (`halo` planes at `side`)
+    /// into the preallocated staging buffers.
+    fn pack(&mut self, side: Side, halo: usize) {
+        let g0 = match side {
+            Side::Low => self.z0,
+            Side::High => self.z1 - halo,
+        };
+        let (ny, nx) = (self.ext.y, self.ext.x);
+        for d in 0..halo {
+            let lz = g0 + d - self.ze0;
+            for y in 0..ny {
+                let o = (d * ny + y) * nx;
+                self.band_u[o..o + nx].copy_from_slice(self.u.view().seg(lz + R, y + R, R, nx));
+                self.band_um[o..o + nx]
+                    .copy_from_slice(self.um.view().seg(lz + R, y + R, R, nx));
+            }
+        }
+    }
+
+    /// Overwrite this shard's **halo** planes at `side` from the
+    /// staging buffers (collected from the seam neighbour).
+    fn unpack(&mut self, side: Side, halo: usize) {
+        let g0 = match side {
+            Side::Low => self.ze0,
+            Side::High => self.z1,
+        };
+        let (ny, nx) = (self.ext.y, self.ext.x);
+        for d in 0..halo {
+            let lz = g0 + d - self.ze0;
+            for y in 0..ny {
+                let o = (d * ny + y) * nx;
+                self.u
+                    .view_mut()
+                    .seg_mut(lz + R, y + R, R, nx)
+                    .copy_from_slice(&self.band_u[o..o + nx]);
+                self.um
+                    .view_mut()
+                    .seg_mut(lz + R, y + R, R, nx)
+                    .copy_from_slice(&self.band_um[o..o + nx]);
+            }
+        }
+    }
+
+    /// Load both levels of the extended range from global padded
+    /// buffers (ghost frames stay zero on both sides).
+    fn load(&mut self, u_pad: &Field3, um_pad: &Field3) {
+        let (ny, nx) = (self.ext.y, self.ext.x);
+        for lz in 0..self.ext.z {
+            let gz = self.ze0 + lz;
+            for y in 0..ny {
+                self.u
+                    .view_mut()
+                    .seg_mut(lz + R, y + R, R, nx)
+                    .copy_from_slice(u_pad.view().seg(gz + R, y + R, R, nx));
+                self.um
+                    .view_mut()
+                    .seg_mut(lz + R, y + R, R, nx)
+                    .copy_from_slice(um_pad.view().seg(gz + R, y + R, R, nx));
+            }
+        }
+    }
+
+    /// Scatter the **owned** slab (both levels) back into global
+    /// padded buffers.
+    fn store_owned(&self, u_pad: &mut Field3, um_pad: &mut Field3) {
+        let (ny, nx) = (self.ext.y, self.ext.x);
+        for gz in self.z0..self.z1 {
+            let lz = gz - self.ze0;
+            for y in 0..ny {
+                u_pad
+                    .view_mut()
+                    .seg_mut(gz + R, y + R, R, nx)
+                    .copy_from_slice(self.u.view().seg(lz + R, y + R, R, nx));
+                um_pad
+                    .view_mut()
+                    .seg_mut(gz + R, y + R, R, nx)
+                    .copy_from_slice(self.um.view().seg(lz + R, y + R, R, nx));
+            }
+        }
+    }
+}
+
+#[allow(dead_code)]
+fn assert_shard_is_send() {
+    fn needs_send<T: Send>() {}
+    needs_send::<Shard>();
+}
+
+/// Hand-rolled disjoint-slot access for the shard fan-out (the plan
+/// executor's equivalent wrapper is private to `propagator`).
+struct ShardSlots {
+    ptr: *mut Shard,
+    len: usize,
+}
+
+// SAFETY: indices are handed out by an atomic cursor that gives each
+// shard to exactly one worker per phase, and `Shard: Send` (asserted
+// above), so moving the &mut access across threads is sound.
+unsafe impl Sync for ShardSlots {}
+
+impl ShardSlots {
+    fn new(shards: &mut [Shard]) -> ShardSlots {
+        ShardSlots { ptr: shards.as_mut_ptr(), len: shards.len() }
+    }
+
+    /// SAFETY: caller must hand each index to exactly one worker per
+    /// phase (the atomic-cursor claim loop below).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn get(&self, i: usize) -> &mut Shard {
+        debug_assert!(i < self.len);
+        &mut *self.ptr.add(i)
+    }
+}
+
+/// Fan `f(i, shard)` over the shards: serially without an outer pool,
+/// else via an atomic-cursor claim loop on the persistent pool (the
+/// same zero-alloc release/claim protocol the tile executor uses).
+fn run_phase(
+    pool: &mut Option<WorkerPool>,
+    shards: &mut [Shard],
+    f: impl Fn(usize, &mut Shard) + Sync,
+) {
+    match pool {
+        Some(p) if shards.len() > 1 => {
+            let slots = ShardSlots::new(shards);
+            let n = slots.len;
+            let cursor = AtomicUsize::new(0);
+            p.run(&|_slot| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: the cursor hands index i to exactly one
+                // worker, so this &mut Shard aliases nothing
+                f(i, unsafe { slots.get(i) });
+            });
+        }
+        _ => {
+            for (i, sh) in shards.iter_mut().enumerate() {
+                f(i, sh);
+            }
+        }
+    }
+}
+
+/// Halo-exchange instrumentation (registered once at engine build;
+/// steady-state updates are atomic bumps and histogram observes).
+struct ShardInstr {
+    exchanges: Counter,
+    bytes: Counter,
+    latency: Histogram,
+}
+
+/// The sharded propagation engine: per-shard buffers/plans/pools plus
+/// a transport, advancing whole fused batches between exchanges.
+pub struct ShardedEngine {
+    domain: Domain,
+    fuse: usize,
+    halo: usize,
+    outer: usize,
+    inner: usize,
+    shards: Vec<Shard>,
+    transport: Box<dyn HaloTransport>,
+    pool: Option<WorkerPool>,
+    instr: Option<ShardInstr>,
+}
+
+impl ShardedEngine {
+    /// Build the engine: plan slabs, extract per-shard model fields,
+    /// build per-shard plans (family `"shard"`), split the worker
+    /// budget, and wire the in-process transport.
+    ///
+    /// `v` and `eta` are the interior-shaped velocity model and damping
+    /// profile; `threads` is the *global* worker budget (0 = all
+    /// cores); `fuse` fixes the halo depth `s*R` and the exchange
+    /// cadence (batches of up to `fuse` steps).
+    pub fn new(
+        domain: &Domain,
+        v: &Field3,
+        eta: &Field3,
+        fuse: usize,
+        shards: usize,
+        threads: usize,
+        telemetry: Option<&Registry>,
+    ) -> anyhow::Result<ShardedEngine> {
+        anyhow::ensure!(fuse >= 1, "fusion degree must be >= 1, got {fuse}");
+        let interior = domain.interior;
+        assert_eq!(v.dims(), interior, "velocity model must be interior-shaped");
+        assert_eq!(eta.dims(), interior, "eta profile must be interior-shaped");
+        let halo = fuse * R;
+        let slabs = plan_slabs(interior.z, shards, halo)?;
+        let budget = if threads > 0 {
+            threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        let (outer, inner) = split_shard_budget(budget, slabs.len());
+        let band_len = if slabs.len() > 1 { halo * interior.y * interior.x } else { 0 };
+        let mut shard_v = Vec::with_capacity(slabs.len());
+        for sl in &slabs {
+            let ze0 = sl.z0.saturating_sub(halo);
+            let ze1 = (sl.z1 + halo).min(interior.z);
+            let ext = Dim3::new(ze1 - ze0, interior.y, interior.x);
+            let local =
+                Domain { interior: ext, pml_width: domain.pml_width, h: domain.h, dt: domain.dt };
+            let mut sh = Shard {
+                z0: sl.z0,
+                z1: sl.z1,
+                ze0,
+                ze1,
+                ext,
+                u: Field3::zeros(local.padded()),
+                um: Field3::zeros(local.padded()),
+                v: v.extract(Dim3::new(ze0, 0, 0), ext),
+                eta_pad: eta.extract(Dim3::new(ze0, 0, 0), ext).pad(R),
+                plan: None,
+                band_u: vec![0.0; band_len],
+                band_um: vec![0.0; band_len],
+            };
+            Plan::ensure(&mut sh.plan, &local, inner, "shard", telemetry, shard_tiles, |_| ());
+            shard_v.push(sh);
+        }
+        let pool = if outer > 1 { Some(WorkerPool::new(outer)) } else { None };
+        if let (Some(p), Some(reg)) = (&pool, telemetry) {
+            p.register_telemetry(reg);
+        }
+        let instr = telemetry.map(|reg| ShardInstr {
+            exchanges: reg.counter(
+                "hostencil_halo_exchanges_total",
+                "Halo-exchange rounds completed (one per shard seam per batch boundary).",
+            ),
+            bytes: reg.counter(
+                "hostencil_halo_bytes_total",
+                "Bytes of seam-band data moved through the halo transport (both leapfrog levels, both directions).",
+            ),
+            latency: reg.histogram(
+                "hostencil_halo_exchange_latency_seconds",
+                "Wall-clock latency of one batch-boundary halo exchange (publish + collect, all seams).",
+                &LATENCY_BOUNDS,
+            ),
+        });
+        Ok(ShardedEngine {
+            domain: *domain,
+            fuse,
+            halo,
+            outer,
+            inner,
+            shards: shard_v,
+            transport: Box::new(InProcessTransport::new(slabs.len(), band_len)),
+            pool,
+            instr,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Halo depth in z-planes (`fuse * R`).
+    pub fn halo_depth(&self) -> usize {
+        self.halo
+    }
+
+    pub fn fuse(&self) -> usize {
+        self.fuse
+    }
+
+    /// `(outer shard slots, inner tile threads per shard)`.
+    pub fn concurrency(&self) -> (usize, usize) {
+        (self.outer, self.inner)
+    }
+
+    /// (Re)load every shard's extended range from global padded
+    /// buffers. Call once after building (and after any out-of-band
+    /// edit of the global wavefield).
+    pub fn load(&mut self, u_pad: &Field3, um_pad: &Field3) {
+        for sh in &mut self.shards {
+            sh.load(u_pad, um_pad);
+        }
+    }
+
+    /// Scatter every shard's **owned** slab back into global padded
+    /// buffers — the owned union tiles the interior exactly, so the
+    /// result is the full wavefield pair.
+    pub fn gather_into(&self, u_pad: &mut Field3, um_pad: &mut Field3) {
+        for sh in &self.shards {
+            sh.store_owned(u_pad, um_pad);
+        }
+    }
+
+    /// Advance one fused batch of `batch.n_steps <= fuse` sub-steps on
+    /// every shard (no inter-shard sync inside the batch), then run
+    /// the batch-boundary halo exchange: a publish phase posting owned
+    /// seam bands and a collect phase overwriting halos — each phase a
+    /// barrier, so single-mailbox transports are race-free.
+    pub fn advance_batch(&mut self, batch: &SourceBatch) {
+        let b = batch.n_steps;
+        assert!(
+            b >= 1 && b <= self.fuse,
+            "batch of {b} steps outside the engine's exchange cadence 1..={}",
+            self.fuse
+        );
+        let gd = self.domain;
+        let k = Consts::of(&gd).with_kernel(simd::active());
+        let halo = self.halo;
+        let n = self.shards.len();
+        let ShardedEngine { shards, pool, transport, instr, .. } = self;
+        let transport: &dyn HaloTransport = &**transport;
+
+        run_phase(pool, shards, |_i, sh| {
+            for j in 0..b {
+                sh.advance_sub(&gd, k, batch, j);
+            }
+        });
+
+        if n > 1 {
+            let span = instr.as_ref().map(|i| i.latency.time());
+            run_phase(pool, shards, |i, sh| {
+                if i > 0 {
+                    sh.pack(Side::Low, halo);
+                    transport.publish(i, Side::Low, &sh.band_u, &sh.band_um);
+                }
+                if i + 1 < n {
+                    sh.pack(Side::High, halo);
+                    transport.publish(i, Side::High, &sh.band_u, &sh.band_um);
+                }
+            });
+            run_phase(pool, shards, |i, sh| {
+                if i > 0 {
+                    transport.collect(i, Side::Low, &mut sh.band_u, &mut sh.band_um);
+                    sh.unpack(Side::Low, halo);
+                }
+                if i + 1 < n {
+                    transport.collect(i, Side::High, &mut sh.band_u, &mut sh.band_um);
+                    sh.unpack(Side::High, halo);
+                }
+            });
+            drop(span);
+            if let Some(i) = instr.as_ref() {
+                i.exchanges.add((n - 1) as u64);
+                let seam_bytes =
+                    2 * 2 * halo * gd.interior.y * gd.interior.x * std::mem::size_of::<f32>();
+                i.bytes.add(((n - 1) * seam_bytes) as u64);
+            }
+        }
+    }
+}
+
+/// Tile a shard's extended interior into `SHARD_TILE_Z`-deep z-slices
+/// (full y/x rows — classification happens per row inside the sweep).
+fn shard_tiles(d: &Domain) -> Vec<Region> {
+    Region { name: "shard", class: RegionClass::Inner, offset: Dim3::new(0, 0, 0), shape: d.interior }
+        .split(Dim3::new(SHARD_TILE_Z, d.interior.y, d.interior.x))
+}
+
+/// Steady-state sharded throughput in steps/sec: silent batches at the
+/// engine's exchange cadence, best of `samples` timed runs of `steps`
+/// steps after `warmup` untimed runs (mirrors
+/// `propagator::measure_steps_per_sec`; no gather inside the timed
+/// region — this measures the engine, not the observer path).
+pub fn measure_sharded_steps_per_sec(
+    domain: &Domain,
+    fuse: usize,
+    shards: usize,
+    steps: usize,
+    warmup: usize,
+    samples: usize,
+) -> anyhow::Result<f64> {
+    let interior = domain.interior;
+    let v = Field3::full(interior, 2500.0);
+    let eta = crate::wave::eta_profile(domain, 2500.0);
+    let mut engine = ShardedEngine::new(domain, &v, &eta, fuse, shards, 0, None)?;
+    let mut u_pad = Field3::zeros(domain.padded());
+    u_pad.set(R + interior.z / 2, R + interior.y / 2, R + interior.x / 2, 1.0);
+    let um_pad = Field3::zeros(domain.padded());
+    engine.load(&u_pad, &um_pad);
+    let run = |engine: &mut ShardedEngine| {
+        let t0 = Instant::now();
+        let mut done = 0;
+        while done < steps {
+            let b = fuse.min(steps - done);
+            engine.advance_batch(&SourceBatch::silent(b));
+            done += b;
+        }
+        t0.elapsed()
+    };
+    for _ in 0..warmup {
+        run(&mut engine);
+    }
+    let mut best = Duration::MAX;
+    for _ in 0..samples.max(1) {
+        best = best.min(run(&mut engine));
+    }
+    let mut out_u = Field3::zeros(domain.padded());
+    let mut out_um = Field3::zeros(domain.padded());
+    engine.gather_into(&mut out_u, &mut out_um);
+    std::hint::black_box(out_u.as_slice().first().copied());
+    Ok(steps as f64 / best.as_secs_f64().max(1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stencil::{cfl_dt, propagator, FusedInputs, Propagator};
+    use crate::testkit::Rng;
+    use crate::wave;
+
+    #[test]
+    fn plan_slabs_distributes_the_remainder_and_tiles_the_axis() {
+        let slabs = plan_slabs(13, 3, 4).expect("feasible");
+        assert_eq!(
+            slabs,
+            vec![Slab { z0: 0, z1: 5 }, Slab { z0: 5, z1: 9 }, Slab { z0: 9, z1: 13 }]
+        );
+        // single shard: whole axis, halo irrelevant
+        assert_eq!(plan_slabs(7, 1, 16).expect("single"), vec![Slab { z0: 0, z1: 7 }]);
+    }
+
+    #[test]
+    fn plan_slabs_rejects_degenerate_counts() {
+        assert!(plan_slabs(13, 0, 4).is_err());
+        let err = plan_slabs(5, 6, 1).unwrap_err().to_string();
+        assert!(err.contains("at most one shard per plane"), "got: {err}");
+    }
+
+    #[test]
+    fn plan_slabs_rejects_slabs_thinner_than_the_halo() {
+        // 13 planes over 3 shards -> 5,4,4; a fuse-2 halo needs 8
+        let err = plan_slabs(13, 3, 8).unwrap_err().to_string();
+        assert!(err.contains("fused halo needs 8"), "got: {err}");
+        assert!(err.contains("fewer shards"), "got: {err}");
+    }
+
+    #[test]
+    fn split_shard_budget_never_oversubscribes() {
+        for budget in 1..=24usize {
+            for shards in 1..=24usize {
+                let (outer, inner) = split_shard_budget(budget, shards);
+                assert!(outer >= 1 && inner >= 1);
+                assert!(outer <= shards.max(1));
+                assert!(
+                    outer * inner <= budget.max(1),
+                    "budget {budget} x shards {shards} -> {outer}x{inner}"
+                );
+            }
+        }
+        assert_eq!(split_shard_budget(8, 2), (2, 4));
+        assert_eq!(split_shard_budget(3, 8), (3, 1));
+        assert_eq!(split_shard_budget(0, 4), (1, 1));
+    }
+
+    #[test]
+    fn transport_routes_bands_between_seam_neighbours() {
+        let t = InProcessTransport::new(3, 4);
+        t.publish(0, Side::High, &[1.0; 4], &[2.0; 4]);
+        t.publish(1, Side::Low, &[3.0; 4], &[4.0; 4]);
+        let (mut u, mut um) = ([0.0f32; 4], [0.0f32; 4]);
+        // shard 1's Low halo <- shard 0's owned High band
+        t.collect(1, Side::Low, &mut u, &mut um);
+        assert_eq!((u, um), ([1.0; 4], [2.0; 4]));
+        // shard 0's High halo <- shard 1's owned Low band
+        t.collect(0, Side::High, &mut u, &mut um);
+        assert_eq!((u, um), ([3.0; 4], [4.0; 4]));
+    }
+
+    /// Quick in-module bit-identity check (fuse 1, random state, seam
+    /// sources); the full fuse x shards x grid matrix lives in
+    /// `rust/tests/shard_equivalence.rs`.
+    #[test]
+    fn sharded_engine_matches_the_unsharded_reference_bitwise() {
+        let h = 10.0;
+        let interior = Dim3::new(19, 9, 11);
+        let domain = Domain::new(interior, 2, h, cfl_dt(h, 3500.0)).expect("domain");
+        let mut rng = Rng::new(0x5eed_5a5d);
+        let u0 = rng.field(interior).pad(R);
+        let um0 = rng.field(interior).pad(R);
+        let v = rng.field_in(interior, 1500.0, 3500.0);
+        let eta = wave::eta_profile(&domain, 3500.0);
+        // sources straddling the 2-shard seam (z = 10) and the 3-shard
+        // seams (z = 7, 13)
+        let sources =
+            [Dim3::new(9, 4, 5), Dim3::new(10, 2, 3), Dim3::new(7, 6, 8), Dim3::new(13, 4, 2)];
+        let steps = 6;
+
+        // unsharded reference: the naive propagator, one step at a time
+        let eta_pad = eta.pad(R);
+        let mut prop = propagator::build("naive").expect("naive");
+        let (mut ru, mut rum) = (u0.clone(), um0.clone());
+        for n in 0..steps {
+            let amps: Vec<f32> =
+                (0..sources.len()).map(|i| 1e-2 * ((n * sources.len() + i + 1) as f32)).collect();
+            let inp = FusedInputs { domain: &domain, v: &v, eta_pad: &eta_pad, threads: 1, telemetry: None };
+            prop.advance_fused(
+                &inp,
+                &mut ru,
+                &mut rum,
+                &SourceBatch { positions: &sources, amps: &amps, n_steps: 1 },
+            );
+        }
+
+        for shards in [1, 2, 3] {
+            let mut engine =
+                ShardedEngine::new(&domain, &v, &eta, 1, shards, 2, None).expect("engine");
+            engine.load(&u0, &um0);
+            for n in 0..steps {
+                let amps: Vec<f32> = (0..sources.len())
+                    .map(|i| 1e-2 * ((n * sources.len() + i + 1) as f32))
+                    .collect();
+                engine.advance_batch(&SourceBatch { positions: &sources, amps: &amps, n_steps: 1 });
+            }
+            let mut gu = Field3::zeros(domain.padded());
+            let mut gum = Field3::zeros(domain.padded());
+            engine.gather_into(&mut gu, &mut gum);
+            assert_eq!(gu.max_abs_diff(&ru), 0.0, "{shards} shards: u diverged");
+            assert_eq!(gum.max_abs_diff(&rum), 0.0, "{shards} shards: um diverged");
+            // ghost ring stays zero
+            assert_eq!(gu.unpad(R).pad(R).max_abs_diff(&gu), 0.0, "{shards} shards: ghost dirty");
+        }
+    }
+}

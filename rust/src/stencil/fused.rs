@@ -307,7 +307,7 @@ impl Propagator for TimeFused {
 /// segment (the two tail entries come back zero-length). Keeping this
 /// split exact is what makes per-point classification bit-identical to
 /// the golden region walk.
-fn row_segments(d: &Domain, gz: usize, gy: usize) -> [(usize, usize, bool); 3] {
+pub(crate) fn row_segments(d: &Domain, gz: usize, gy: usize) -> [(usize, usize, bool); 3] {
     let n = d.interior;
     let w = d.pml_width;
     let inner_zy = gz >= w && gz < n.z - w && gy >= w && gy < n.y - w;

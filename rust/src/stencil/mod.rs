@@ -40,6 +40,8 @@ mod streaming;
 pub use golden::GoldenPropagator;
 pub use propagator::{FusedInputs, Propagator, PropagatorInputs, SourceBatch};
 
+pub(crate) use fused::row_segments;
+
 use crate::grid::{Dim3, Domain, Field3, FieldView};
 use crate::{R, R_ETA};
 

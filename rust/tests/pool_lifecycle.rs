@@ -6,7 +6,9 @@
 //! * steady-state steps never spawn (the zero-spawn guarantee),
 //! * plan rebuilds on a domain change recycle the parked workers while
 //!   a worker-count change resizes the pool — and physics never
-//!   notices either.
+//!   notices either,
+//! * the sharded engine's two-level pools (outer shard fan-out plus
+//!   one tile pool per shard) spawn exactly once and join on drop.
 //!
 //! Panic propagation (a panicking job re-raises cleanly on the caller
 //! and the pool stays usable) is covered by the `WorkerPool` unit
@@ -21,7 +23,8 @@ use std::sync::Mutex;
 
 use hostencil::grid::{Dim3, Domain, Field3};
 use hostencil::runtime::pool;
-use hostencil::stencil::{self, propagator, Propagator, PropagatorInputs};
+use hostencil::shard::ShardedEngine;
+use hostencil::stencil::{self, propagator, Propagator, PropagatorInputs, SourceBatch};
 use hostencil::wave;
 use hostencil::R;
 
@@ -111,6 +114,68 @@ fn pool_spawns_once_and_joins_on_drop() {
         before,
         "dropping the propagator must join the pool workers"
     );
+}
+
+#[test]
+fn sharded_engine_pools_spawn_once_and_join_on_drop() {
+    let _guard = serialize();
+    let before = pool::live_worker_threads();
+    // 24 z-planes at fuse 2 (8-deep halos): 2 shards own 12/12
+    let h = 10.0;
+    let domain =
+        Domain::new(Dim3::new(24, 13, 15), 3, h, stencil::cfl_dt(h, 2000.0)).expect("domain");
+    let interior = domain.interior;
+    let v = Field3::full(interior, 2000.0);
+    let eta = wave::eta_profile(&domain, 2000.0);
+
+    let mut engine = ShardedEngine::new(&domain, &v, &eta, 2, 2, 4, None).expect("engine");
+    assert_eq!(engine.concurrency(), (2, 2), "budget 4 over 2 shards = 2 outer x 2 inner");
+    // every pool spawns at engine build: the outer fan-out pool (2
+    // slots = the caller + 1 parked thread) plus one 2-slot plan pool
+    // per shard (1 parked thread each)
+    assert_eq!(
+        pool::live_worker_threads(),
+        before + 3,
+        "engine build must spawn the outer pool and each shard's plan pool, once"
+    );
+
+    let mut u_pad = Field3::zeros(domain.padded());
+    u_pad.set(R + interior.z / 2, R + interior.y / 2, R + interior.x / 2, 1.0);
+    let um_pad = Field3::zeros(domain.padded());
+    engine.load(&u_pad, &um_pad);
+
+    let positions = [Dim3::new(interior.z / 2, interior.y / 2, interior.x / 2)];
+    let amps = [1e-3f32; 2];
+    let batch = SourceBatch { positions: &positions, amps: &amps, n_steps: 2 };
+    for _ in 0..5 {
+        engine.advance_batch(&batch);
+    }
+    assert_eq!(
+        pool::live_worker_threads(),
+        before + 3,
+        "steady-state sharded batches must never spawn"
+    );
+    drop(engine);
+    assert_eq!(
+        pool::live_worker_threads(),
+        before,
+        "dropping the engine must join the outer pool and every shard pool"
+    );
+
+    // serial inner slabs: budget 2 over 2 shards = 2 outer x 1 inner,
+    // so only the outer pool exists and shard plans take the serial
+    // in-place path
+    let mut engine = ShardedEngine::new(&domain, &v, &eta, 2, 2, 2, None).expect("engine");
+    assert_eq!(engine.concurrency(), (2, 1));
+    engine.load(&u_pad, &um_pad);
+    engine.advance_batch(&batch);
+    assert_eq!(
+        pool::live_worker_threads(),
+        before + 1,
+        "inner = 1 must bypass the per-shard pools entirely"
+    );
+    drop(engine);
+    assert_eq!(pool::live_worker_threads(), before);
 }
 
 #[test]

@@ -1,0 +1,155 @@
+//! Integration: the sharded z-slab engine must be bit-identical to the
+//! unsharded coordinator — same variant, same sources, same receivers —
+//! at every supported fusion degree, on odd grids, with sources and
+//! receivers straddling the slab seams and seams cutting through the
+//! PML band. The deep-halo design (each shard computes its `s*R`-deep
+//! halo band redundantly and exchanges at batch boundaries) makes the
+//! decomposition invisible to the physics; these tests are the
+//! enforcement of that contract at the public-API level.
+
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::grid::{Dim3, Domain};
+use hostencil::shard::plan_slabs;
+use hostencil::stencil;
+use hostencil::wave::{self, Source, VelocityModel};
+use hostencil::R;
+
+/// Build a golden-mode coordinator with a seam-straddling multi-source
+/// layout: the primary source at the grid center plus two more at one
+/// and two thirds of the z-axis (wherever the slab seams fall, at
+/// least one source lands on or next to them), and receivers parked
+/// near the same depths.
+fn coordinator(variant: &str, interior: Dim3, pml: usize, threads: usize) -> Coordinator<'static> {
+    let h = 10.0;
+    let v0 = 2500.0f64;
+    let domain = Domain::new(interior, pml, h, stencil::cfl_dt(h, v0)).unwrap();
+    let v = VelocityModel::Constant(v0 as f32).build(interior);
+    let eta = wave::eta_profile(&domain, v0);
+    let (nz, ny, nx) = (interior.z, interior.y, interior.x);
+    let src = Source { pos: Dim3::new(nz / 2, ny / 2, nx / 2), f0: 15.0, amplitude: 1.0 };
+    let recv = vec![
+        Dim3::new(nz / 3, ny / 2, nx / 2),
+        Dim3::new(2 * nz / 3, ny / 2, nx / 3),
+    ];
+    let mut c =
+        Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, recv).unwrap();
+    c.add_source(Source { pos: Dim3::new(nz / 3, ny / 3, nx / 2), f0: 20.0, amplitude: -0.5 })
+        .unwrap();
+    c.add_source(Source { pos: Dim3::new(2 * nz / 3, 2 * ny / 3, nx / 3), f0: 12.0, amplitude: 0.75 })
+        .unwrap();
+    c.set_cpu_threads(threads);
+    c
+}
+
+/// Run `steps` unsharded and sharded and demand bitwise agreement on
+/// everything observable: wavefield, energy log, receiver traces.
+fn assert_bit_identical(variant: &str, interior: Dim3, pml: usize, shards: usize, steps: usize) {
+    let label = format!("{variant} {interior:?} x{shards}");
+    let mut reference = coordinator(variant, interior, pml, 1);
+    let base = reference.run(steps).unwrap();
+
+    let mut sharded = coordinator(variant, interior, pml, 3);
+    sharded.set_shards(shards).unwrap();
+    assert_eq!(sharded.shards(), shards);
+    let got = sharded.run(steps).unwrap();
+
+    assert!(base.final_max_abs > 0.0, "{label}: wave must have propagated");
+    assert_eq!(
+        reference.wavefield().max_abs_diff(&sharded.wavefield()),
+        0.0,
+        "{label}: sharded wavefield must be bit-identical"
+    );
+    assert_eq!(got.final_energy.to_bits(), base.final_energy.to_bits(), "{label}: energy");
+    assert_eq!(got.energy_log, base.energy_log, "{label}: per-batch energy log");
+    assert_eq!(got.traces, base.traces, "{label}: receiver traces");
+    // launch accounting: one logical launch per shard per step
+    assert_eq!(got.launches, (shards * steps) as u64, "{label}: launches");
+}
+
+#[test]
+fn unfused_sharding_is_bit_identical_on_an_odd_grid() {
+    // 19 z-planes: 2 shards own 10/9, 3 shards own 7/6/6 — both
+    // non-dividing decompositions, halo depth 1*R = 4
+    for shards in [2, 3] {
+        assert_bit_identical("naive", Dim3::new(19, 11, 13), 3, shards, 18);
+    }
+}
+
+#[test]
+fn fuse2_sharding_is_bit_identical_across_seam_sources() {
+    // tf_s2 needs 8-deep halos: 25 planes give 9/8/8 at 3 shards, all
+    // >= 8; 18 steps = 9 full fused batches
+    for shards in [2, 3] {
+        assert_bit_identical("tf_s2", Dim3::new(25, 11, 13), 3, shards, 18);
+    }
+}
+
+#[test]
+fn fuse4_sharding_is_bit_identical_with_a_partial_tail_batch() {
+    // tf_s4 needs 16-deep halos: 33 planes split 17/16 at 2 shards.
+    // 18 steps = 4 batches of 4 plus a tail batch of 2, so the
+    // b < fuse exchange path is exercised too.
+    assert_bit_identical("tf_s4", Dim3::new(33, 11, 13), 3, 2, 18);
+}
+
+#[test]
+fn seams_through_the_pml_band_stay_bit_identical() {
+    // pml 4 on 19 planes with 4 shards puts slab seams at z = 5, 10,
+    // 15 — the last inside the absorbing band (z >= 15) — so the
+    // damped-update halo exchange is exercised, not just the inner one
+    assert_bit_identical("naive", Dim3::new(19, 13, 13), 4, 4, 16);
+}
+
+#[test]
+fn remainder_planes_spread_across_the_leading_slabs() {
+    // 19 = 3*6 + 1: the first slab takes the extra plane
+    let slabs = plan_slabs(19, 3, R).unwrap();
+    assert_eq!(slabs.len(), 3);
+    assert_eq!((slabs[0].z0, slabs[0].z1), (0, 7));
+    assert_eq!((slabs[1].z0, slabs[1].z1), (7, 13));
+    assert_eq!((slabs[2].z0, slabs[2].z1), (13, 19));
+    // and the coordinator accepts the same non-dividing decomposition
+    let mut c = coordinator("naive", Dim3::new(19, 11, 13), 3, 2);
+    c.set_shards(3).unwrap();
+    let s = c.run(6).unwrap();
+    assert_eq!(s.launches, 3 * 6);
+}
+
+#[test]
+fn slab_thinner_than_the_fused_halo_is_a_clear_error() {
+    // tf_s4 halo is 16; two shards of a 19-plane grid would own 10/9
+    let err = plan_slabs(19, 2, 4 * R).unwrap_err().to_string();
+    assert!(err.contains("fused halo needs 16"), "{err}");
+    assert!(err.contains("fewer shards"), "{err}");
+    // the coordinator rejects it up front, before any stepping
+    let mut c = coordinator("tf_s4", Dim3::new(19, 11, 13), 3, 1);
+    let err = c.set_shards(2).unwrap_err().to_string();
+    assert!(err.contains("fused halo needs 16"), "{err}");
+    // and recovers: dropping back to 1 shard runs normally
+    c.set_shards(1).unwrap();
+    assert!(c.run(4).is_ok());
+    // more shards than planes is rejected too
+    let mut c = coordinator("naive", Dim3::new(19, 11, 13), 3, 1);
+    let err = c.set_shards(20).unwrap_err().to_string();
+    assert!(err.contains("at most one shard per plane"), "{err}");
+}
+
+#[test]
+fn sharding_composes_with_observer_batching() {
+    // sample_every caps the observed batch below the fusion degree;
+    // the sharded path must honor the same cadence and stay identical
+    use hostencil::coordinator::RunOptions;
+    let interior = Dim3::new(25, 11, 13);
+    let opts = RunOptions { sample_every: 1, ..RunOptions::default() };
+
+    let mut reference = coordinator("tf_s2", interior, 3, 1);
+    let base = reference.run_observed(18, opts, None).unwrap();
+    let mut sharded = coordinator("tf_s2", interior, 3, 2);
+    sharded.set_shards(2).unwrap();
+    let got = sharded.run_observed(18, opts, None).unwrap();
+
+    assert_eq!(base.energy_log.len(), 18, "sample_every 1 must sample per step");
+    assert_eq!(got.energy_log, base.energy_log);
+    assert_eq!(got.traces, base.traces);
+    assert_eq!(reference.wavefield().max_abs_diff(&sharded.wavefield()), 0.0);
+}

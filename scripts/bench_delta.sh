@@ -14,6 +14,10 @@
 #                  (`bench --simd-sweep`, built `--features simd`):
 #                  per-shape forced-scalar vs dispatched-SIMD rates at
 #                  threads=1 with speedups (docs/KERNELS.md)
+#   BENCH_5.json — the working tree's shard scaling sweep
+#                  (`bench --shard-sweep`): steady-state sharded
+#                  steps/sec per z-slab shard count at fuse 2 with
+#                  speedups vs the 1-shard control (docs/SHARDING.md)
 #   BENCH_1.prom — the head run's Prometheus telemetry exposition
 #                  (pool occupancy, tiles claimed, sweep latency
 #                  histograms — see docs/METRICS.md)
@@ -24,7 +28,7 @@
 #   ./scripts/bench_delta.sh [baseline-ref]
 #
 # Honors HOSTENCIL_BENCH_SAMPLES / HOSTENCIL_BENCH_WARMUP and
-# BENCH_SIZE / BENCH_STEPS / BENCH_SWEEP / BENCH_FUSE.
+# BENCH_SIZE / BENCH_STEPS / BENCH_SWEEP / BENCH_FUSE / BENCH_SHARDS.
 set -euo pipefail
 
 BASE_REF="${1:-HEAD~1}"
@@ -32,6 +36,7 @@ SIZE="${BENCH_SIZE:-40}"
 STEPS="${BENCH_STEPS:-6}"
 SWEEP="${BENCH_SWEEP:-1,2,4,8}"
 FUSE="${BENCH_FUSE:-1,2,4}"
+SHARDS="${BENCH_SHARDS:-1,2,4}"
 OUT_DIR="$(pwd)"
 
 if ! git rev-parse --verify --quiet "$BASE_REF^{commit}" >/dev/null; then
@@ -53,17 +58,18 @@ echo "== baseline $(git rev-parse --short "$BASE_REF") -> BENCH_0.json"
   --size "$SIZE" --steps "$STEPS" --json "$OUT_DIR/BENCH_0.json")
 
 # One head-side run yields the matrix (cases), the pool sweep
-# (thread_sweep + scaling_model), the fusion sweep (fuse_sweep) and
-# the scalar-vs-SIMD row sweep (simd_sweep — the head build carries
-# `--features simd` so the dispatched leg is the wide kernel);
-# BENCH_2..4 are split out of BENCH_1's JSON below instead of
-# re-benching the whole matrix again.
-echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE, simd sweep) -> BENCH_1/2/3/4.json + BENCH_1.prom"
+# (thread_sweep + scaling_model), the fusion sweep (fuse_sweep), the
+# scalar-vs-SIMD row sweep (simd_sweep — the head build carries
+# `--features simd` so the dispatched leg is the wide kernel) and the
+# shard scaling sweep (shard_sweep); BENCH_2..5 are split out of
+# BENCH_1's JSON below instead of re-benching the whole matrix again.
+echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE, simd sweep, shard sweep $SHARDS) -> BENCH_1/2/3/4/5.json + BENCH_1.prom"
 cargo run --release --features simd -p hostencil -- bench \
   --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" --fuse "$FUSE" --simd-sweep \
+  --shard-sweep "$SHARDS" \
   --json "$OUT_DIR/BENCH_1.json" --telemetry "$OUT_DIR/BENCH_1.prom"
 
-python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" "$OUT_DIR/BENCH_4.json" <<'EOF'
+python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" "$OUT_DIR/BENCH_4.json" "$OUT_DIR/BENCH_5.json" <<'EOF'
 import json, sys
 
 def rates(path):
@@ -106,6 +112,15 @@ bench4["simd_sweep"] = simd
 with open(sys.argv[5], "w") as f:
     json.dump(bench4, f, indent=1)
 
+# BENCH_5: the z-slab shard scaling sweep (fuse 2, steady-state
+# sharded steps/sec per shard count), same treatment
+shard = head.pop("shard_sweep", [])
+bench5 = {k: head[k] for k in meta_keys if k in head}
+bench5["kind"] = "hostencil-bench-shard-sweep"
+bench5["shard_sweep"] = shard
+with open(sys.argv[6], "w") as f:
+    json.dump(bench5, f, indent=1)
+
 # rewrite BENCH_1 without the sweeps it just donated, so the committed
 # matrix artifact does not duplicate BENCH_2/BENCH_3's contents
 with open(sys.argv[2], "w") as f:
@@ -147,4 +162,10 @@ if simd:
             f"{r['simd_points_per_sec_best'] / 1e6:>13.2f}"
             f"{r['speedup_vs_scalar']:>8.2f}x  ({r['isa']}x{int(r['lanes'])})"
         )
+
+if shard:
+    print(f"\nz-slab shard scaling (fuse 2; speedup vs the 1-shard control):")
+    for r in shard:
+        sp = f"{r['speedup_vs_single']:6.2f}x" if "speedup_vs_single" in r else "      -"
+        print(f"shards={int(r['shards']):<3}{r['steps_per_sec_best']:>10.1f} steps/s{sp:>10}")
 EOF
