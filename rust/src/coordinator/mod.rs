@@ -25,14 +25,16 @@
 //!   `rust/tests/zero_alloc.rs`).
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
 use crate::json::Json;
+use crate::recovery::{self, BreakerConfig, BreakerKind, Checkpoint, DivergenceBreaker, SoftAbort};
 use crate::runtime::{Engine, ExecArg};
 use crate::shard::ShardedEngine;
 use crate::stencil::propagator::{self, FusedInputs, Propagator, PropagatorInputs, SourceBatch};
-use crate::telemetry::{Counter, Histogram, Registry, LATENCY_BOUNDS};
+use crate::telemetry::{Counter, Gauge, Histogram, Registry, LATENCY_BOUNDS};
 use crate::wave::Source;
 use crate::R;
 
@@ -108,6 +110,12 @@ struct CoordTelemetry {
     injections: Counter,
     nonfinite: Counter,
     batch_latency: Histogram,
+    ckpt_writes: Counter,
+    ckpt_bytes: Counter,
+    ckpt_last_step: Gauge,
+    ckpt_latency: Histogram,
+    breaker_energy_trips: Counter,
+    breaker_nan_trips: Counter,
 }
 
 /// Summary of a completed run.
@@ -197,6 +205,18 @@ pub struct Coordinator<'e> {
     /// Attached flight-recorder registry + pre-registered handles
     /// (None until [`Coordinator::set_telemetry`]).
     telemetry: Option<CoordTelemetry>,
+    /// Cadence checkpointing: write a snapshot whenever the step
+    /// counter crosses a multiple of `checkpoint_every` (0 = no
+    /// cadence). `checkpoint_path` is also the destination for
+    /// breaker-trip snapshots, independent of the cadence.
+    checkpoint_every: usize,
+    checkpoint_path: Option<PathBuf>,
+    /// Divergence circuit breakers for observed runs (None = the
+    /// legacy non-finite watchdog alone owns divergence handling).
+    breaker_cfg: Option<BreakerConfig>,
+    /// Structured reason the last observed run halted via a breaker
+    /// trip (cleared when a run starts).
+    soft_abort: Option<SoftAbort>,
 }
 
 impl<'e> Coordinator<'e> {
@@ -310,6 +330,10 @@ impl<'e> Coordinator<'e> {
             steps_done: 0,
             launches: 0,
             telemetry: None,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            breaker_cfg: None,
+            soft_abort: None,
         })
     }
 
@@ -341,6 +365,33 @@ impl<'e> Coordinator<'e> {
                 "hostencil_batch_latency_seconds",
                 "Wall-clock latency of one observed-run step batch.",
                 &LATENCY_BOUNDS,
+            ),
+            ckpt_writes: reg.counter(
+                "hostencil_checkpoint_writes_total",
+                "Checkpoint snapshots written (cadence + breaker trips).",
+            ),
+            ckpt_bytes: reg.counter(
+                "hostencil_checkpoint_bytes_total",
+                "Serialized checkpoint bytes written.",
+            ),
+            ckpt_last_step: reg.gauge(
+                "hostencil_checkpoint_last_step",
+                "Step index of the most recent checkpoint write.",
+            ),
+            ckpt_latency: reg.histogram(
+                "hostencil_checkpoint_write_latency_seconds",
+                "Wall-clock latency of one checkpoint serialize + atomic write.",
+                &LATENCY_BOUNDS,
+            ),
+            breaker_energy_trips: reg.counter_with(
+                "hostencil_breaker_trips_total",
+                "Divergence circuit-breaker trips, by breaker kind.",
+                &[("kind", "energy_growth")],
+            ),
+            breaker_nan_trips: reg.counter_with(
+                "hostencil_breaker_trips_total",
+                "Divergence circuit-breaker trips, by breaker kind.",
+                &[("kind", "nan_rate")],
             ),
         });
     }
@@ -614,6 +665,163 @@ impl<'e> Coordinator<'e> {
         Ok(())
     }
 
+    /// Injection sources with the velocity sampled at each position
+    /// (primary + extras, in registration order).
+    pub fn sources(&self) -> &[(Source, f32)] {
+        &self.sources
+    }
+
+    /// Receiver positions, in trace order.
+    pub fn receivers(&self) -> &[Dim3] {
+        &self.receivers
+    }
+
+    /// Enable cadence checkpointing: a snapshot is written atomically
+    /// to `path` every time the step counter crosses a multiple of
+    /// `every` (a fused batch checkpoints at the first boundary past
+    /// the multiple). `every = 0` disables the cadence but keeps
+    /// `path` as the destination for breaker-trip snapshots.
+    pub fn set_checkpointing(&mut self, every: usize, path: Option<PathBuf>) {
+        self.checkpoint_every = every;
+        self.checkpoint_path = path;
+    }
+
+    /// Arm the divergence circuit breakers for subsequent observed
+    /// runs (`None` disarms; see [`crate::recovery::BreakerConfig`]).
+    /// With breakers armed, divergence ends the run in a [`SoftAbort`]
+    /// (checkpoint-and-halt) instead of the legacy hard error.
+    pub fn set_breakers(&mut self, cfg: Option<BreakerConfig>) {
+        self.breaker_cfg = cfg;
+    }
+
+    /// Structured reason the last observed run halted early via a
+    /// breaker trip (cleared when a run starts).
+    pub fn soft_abort(&self) -> Option<&SoftAbort> {
+        self.soft_abort.as_ref()
+    }
+
+    /// Default arming step for the energy-growth breaker: the Ricker
+    /// wavelets are effectively silent past ~2.4/f0 seconds (delay
+    /// 1.2/f0 plus the symmetric tail); 3/f0 adds margin. Before this
+    /// step the injection ramp grows energy super-exponentially on
+    /// perfectly healthy runs, so the window only starts recording
+    /// once every source has gone quiet.
+    fn auto_arm_step(&self) -> usize {
+        let dt = self.domain.dt.max(f64::MIN_POSITIVE);
+        self.sources
+            .iter()
+            .map(|(s, _)| (3.0 / (s.f0.max(f64::MIN_POSITIVE) * dt)).ceil() as usize)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Snapshot the full propagator state at the current step
+    /// boundary. The sharded path needs no extra gather: every sharded
+    /// batch already collects the owned slabs back into the global
+    /// padded pair, so batch boundaries always hold the global state.
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            interior: self.domain.interior,
+            pml_width: self.domain.pml_width,
+            h: self.domain.h,
+            dt: self.domain.dt,
+            steps_done: self.steps_done as u64,
+            launches: self.launches,
+            traces: self.traces.clone(),
+            energy_log: self.energy_log.clone(),
+            u_pad: self.u_pad.as_slice().to_vec(),
+            um_pad: self.um_pad.as_slice().to_vec(),
+        }
+    }
+
+    /// Load a snapshot into this coordinator and continue from it.
+    /// The checkpoint's domain must match exactly (grid, PML width,
+    /// and bitwise h/dt — restart consistency is only meaningful for
+    /// the same discretization); the sharded engine, if any, is
+    /// rebuilt lazily from the restored global pair.
+    pub fn restore(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ck.interior == self.domain.interior && ck.pml_width == self.domain.pml_width,
+            "checkpoint grid {} + pml {} does not match run grid {} + pml {}",
+            ck.interior,
+            ck.pml_width,
+            self.domain.interior,
+            self.domain.pml_width
+        );
+        anyhow::ensure!(
+            ck.h.to_bits() == self.domain.h.to_bits()
+                && ck.dt.to_bits() == self.domain.dt.to_bits(),
+            "checkpoint discretization (h={}, dt={}) does not match the run (h={}, dt={})",
+            ck.h,
+            ck.dt,
+            self.domain.h,
+            self.domain.dt
+        );
+        anyhow::ensure!(
+            ck.traces.len() == self.receivers.len(),
+            "checkpoint carries {} receiver traces, run has {} receivers",
+            ck.traces.len(),
+            self.receivers.len()
+        );
+        let want = self.u_pad.as_slice().len();
+        anyhow::ensure!(
+            ck.u_pad.len() == want && ck.um_pad.len() == want,
+            "checkpoint buffers ({} / {} floats) do not match the padded grid ({} floats)",
+            ck.u_pad.len(),
+            ck.um_pad.len(),
+            want
+        );
+        let steps = usize::try_from(ck.steps_done)
+            .map_err(|_| anyhow::anyhow!("checkpoint step cursor {} overflows", ck.steps_done))?;
+        self.u_pad.as_mut_slice().copy_from_slice(&ck.u_pad);
+        self.um_pad.as_mut_slice().copy_from_slice(&ck.um_pad);
+        self.traces = ck.traces.clone();
+        self.energy_log = ck.energy_log.clone();
+        self.steps_done = steps;
+        self.launches = ck.launches;
+        self.soft_abort = None;
+        self.shard = None;
+        Ok(())
+    }
+
+    /// FNV-1a digest of (step cursor, u bits, um bits): bitwise state
+    /// identity in one printable number, used by the CI restart smoke
+    /// to compare an interrupted-and-restored run against an
+    /// uninterrupted one.
+    pub fn state_digest(&self) -> u64 {
+        recovery::state_digest(
+            self.steps_done as u64,
+            self.u_pad.as_slice(),
+            self.um_pad.as_slice(),
+        )
+    }
+
+    /// Serialize + atomically write a snapshot to the configured path
+    /// (no-op without one). Shared by the cadence and breaker-trip
+    /// paths; bumps the `hostencil_checkpoint_*` series and emits a
+    /// `checkpoint` flight-recorder event.
+    fn write_checkpoint(&mut self) -> anyhow::Result<()> {
+        let Some(path) = self.checkpoint_path.clone() else {
+            return Ok(());
+        };
+        let t0 = Instant::now();
+        let bytes = self.checkpoint().to_bytes();
+        recovery::write_atomic(&path, &bytes)?;
+        if let Some(tel) = &self.telemetry {
+            tel.ckpt_writes.inc();
+            tel.ckpt_bytes.add(bytes.len() as u64);
+            tel.ckpt_last_step.set(self.steps_done as i64);
+            tel.ckpt_latency.observe(t0.elapsed().as_secs_f64());
+            if tel.registry.events().enabled() {
+                tel.registry.events().emit("checkpoint", &[
+                    ("step", Json::Num(self.steps_done as f64)),
+                    ("bytes", Json::Num(bytes.len() as f64)),
+                ]);
+            }
+        }
+        Ok(())
+    }
+
     /// Run `steps` more steps, returning a summary.
     pub fn run(&mut self, steps: usize) -> anyhow::Result<RunSummary> {
         self.run_observed(steps, RunOptions::default(), None)
@@ -644,6 +852,11 @@ impl<'e> Coordinator<'e> {
         for t in &mut self.traces {
             t.reserve(steps);
         }
+        self.soft_abort = None;
+        // the breaker ring is preallocated here, so armed steady-state
+        // observation stays allocation-free
+        let mut breaker =
+            self.breaker_cfg.map(|cfg| DivergenceBreaker::new(cfg, self.auto_arm_step()));
         let t0 = Instant::now();
         let fuse = self.fuse.max(1);
         // sample_every caps the recording cadence below the backend's
@@ -691,6 +904,7 @@ impl<'e> Coordinator<'e> {
             if let Some(obs) = observer.as_deref_mut() {
                 obs.on_step(self.steps_done, &self.u_pad, energy);
             }
+            let tripped = breaker.as_mut().and_then(|br| br.observe(self.steps_done, energy));
             if !energy.is_finite() {
                 if let Some(tel) = &self.telemetry {
                     tel.nonfinite.inc();
@@ -699,15 +913,55 @@ impl<'e> Coordinator<'e> {
                         ("halting", Json::Bool(opts.halt_on_non_finite)),
                     ]);
                 }
-                anyhow::ensure!(
-                    !opts.halt_on_non_finite,
-                    "wavefield blew up at step {} (CFL violation? dt={}, h={})",
-                    self.steps_done,
-                    self.domain.dt,
-                    self.domain.h
-                );
-                // NaN/Inf only spreads from here; stop stepping.
+                // with breakers armed, the NaN-rate budget owns the
+                // halting decision (a trip soft-aborts below)
+                if breaker.is_none() {
+                    anyhow::ensure!(
+                        !opts.halt_on_non_finite,
+                        "wavefield blew up at step {} (CFL violation? dt={}, h={})",
+                        self.steps_done,
+                        self.domain.dt,
+                        self.domain.h
+                    );
+                    // NaN/Inf only spreads from here; stop stepping.
+                    break;
+                }
+            }
+            if let Some(kind) = tripped {
+                let cfg = self.breaker_cfg.unwrap_or_default();
+                let detail = match kind {
+                    BreakerKind::EnergyGrowth => format!(
+                        "energy {energy:.3e} at step {} exceeded {}x the oldest sample in a \
+                         {}-batch window",
+                        self.steps_done, cfg.energy_ratio, cfg.energy_window
+                    ),
+                    BreakerKind::NanRate => format!(
+                        "non-finite energy at step {} exceeded the NaN budget of {}",
+                        self.steps_done, cfg.nan_budget
+                    ),
+                };
+                if let Some(tel) = &self.telemetry {
+                    match kind {
+                        BreakerKind::EnergyGrowth => tel.breaker_energy_trips.inc(),
+                        BreakerKind::NanRate => tel.breaker_nan_trips.inc(),
+                    }
+                    tel.registry.events().emit("watchdog_trip", &[
+                        ("kind", Json::Str(kind.name().to_string())),
+                        ("step", Json::Num(self.steps_done as f64)),
+                        ("energy", Json::Num(energy)),
+                    ]);
+                }
+                // checkpoint-and-halt: preserve the last pre-abort
+                // state for post-mortem restore (no-op without a path)
+                self.write_checkpoint()?;
+                self.soft_abort = Some(SoftAbort { kind, step: self.steps_done, detail });
                 break;
+            }
+            if self.checkpoint_every > 0
+                && (self.steps_done / self.checkpoint_every)
+                    > ((self.steps_done - b) / self.checkpoint_every)
+            {
+                self.write_checkpoint()?;
             }
         }
         let wall = t0.elapsed();
@@ -1238,5 +1492,157 @@ mod tests {
         assert!(Mode::parse("warp").is_err());
         assert!(Mode::Fused.needs_engine());
         assert!(!Mode::Golden.needs_engine());
+    }
+
+    #[test]
+    fn checkpoint_restore_resumes_bitwise() {
+        // uninterrupted oracle
+        let mut full = mk_variant_coord("naive", 1);
+        let full_summary = full.run(25).unwrap();
+
+        // interrupted run: 10 steps, snapshot through the serialized
+        // byte format, restore into a *fresh* coordinator, finish
+        let mut a = mk_variant_coord("naive", 1);
+        a.run(10).unwrap();
+        let ck = Checkpoint::from_bytes(&a.checkpoint().to_bytes()).unwrap();
+        assert_eq!(ck.steps_done, 10);
+
+        let mut b = mk_variant_coord("naive", 1);
+        b.restore(&ck).unwrap();
+        assert_eq!(b.steps_done(), 10);
+        let resumed = b.run(15).unwrap();
+        assert_eq!(b.steps_done(), 25);
+        assert_eq!(b.state_digest(), full.state_digest(), "restored state digest diverged");
+        assert_eq!(b.wavefield().max_abs_diff(&full.wavefield()), 0.0);
+        assert_eq!(resumed.final_energy, full_summary.final_energy);
+        // the restored traces splice seamlessly onto the recording
+        assert_eq!(resumed.traces, full_summary.traces);
+        assert_eq!(resumed.energy_log, full_summary.energy_log);
+        assert_eq!(resumed.launches, full_summary.launches);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_configurations() {
+        let a = mk_variant_coord("naive", 1);
+        let mut b = mk_variant_coord("naive", 1);
+
+        let mut ck = a.checkpoint();
+        ck.dt *= 2.0;
+        let err = b.restore(&ck).unwrap_err().to_string();
+        assert!(err.contains("discretization"), "{err}");
+
+        let mut ck = a.checkpoint();
+        ck.u_pad.pop();
+        assert!(b.restore(&ck).is_err(), "short buffer must be rejected");
+
+        let mut ck = a.checkpoint();
+        ck.traces.push(Vec::new());
+        let err = b.restore(&ck).unwrap_err().to_string();
+        assert!(err.contains("receiver"), "{err}");
+
+        let mut ck = a.checkpoint();
+        ck.interior = Dim3::new(8, 8, 8);
+        assert!(b.restore(&ck).is_err(), "grid mismatch must be rejected");
+    }
+
+    #[test]
+    fn energy_breaker_soft_aborts_unstable_runs_sharded_and_not() {
+        for shards in [1usize, 2] {
+            let mut c = mk_unstable();
+            if shards > 1 {
+                c.set_shards(shards).unwrap();
+            }
+            c.set_breakers(Some(BreakerConfig {
+                energy_window: 4,
+                energy_ratio: 10.0,
+                arm_step: Some(4),
+                nan_budget: 0,
+            }));
+            let reg = crate::telemetry::Registry::new();
+            c.set_telemetry(&reg);
+            reg.events().to_memory();
+            // halt_on_non_finite defaults true, yet the armed breaker
+            // converts divergence into a soft abort, not a hard error
+            let s = c.run(400).expect("breaker must soft-abort, not error");
+            assert!(s.steps < 400, "shards={shards}: breaker should end the run early");
+            let abort = c.soft_abort().expect("breaker must have tripped");
+            assert_eq!(abort.kind, BreakerKind::EnergyGrowth, "shards={shards}");
+            assert!(abort.detail.contains("window"), "{}", abort.detail);
+            let text = reg.render();
+            assert!(
+                text.contains("hostencil_breaker_trips_total{kind=\"energy_growth\"} 1"),
+                "{text}"
+            );
+            let lines = reg.events().lines();
+            assert!(
+                lines.iter().any(|l| l.contains("\"event\":\"watchdog_trip\"")),
+                "{lines:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn energy_breaker_stays_quiet_on_stable_runs() {
+        // default config (auto-arm waits out the Ricker ramp, whose
+        // super-exponential energy growth would otherwise false-trip):
+        // a stable run must step to the budget with the window armed
+        // and full, sharded or not
+        for shards in [1usize, 2] {
+            let mut c = mk_variant_coord("tf_s2", 1);
+            if shards > 1 {
+                c.set_shards(shards).unwrap();
+            }
+            c.set_breakers(Some(BreakerConfig::default()));
+            // auto-arm = ceil(3 / (f0_min * dt)); run well past it so
+            // the 16-batch window fills and compares repeatedly on
+            // PML-decaying energy
+            let arm = (3.0 / (15.0 * c.domain.dt)).ceil() as usize;
+            let steps = arm + 2 * 16 * 2 + 10;
+            let s = c.run(steps).unwrap();
+            assert_eq!(s.steps, steps, "shards={shards}: stable run must reach the budget");
+            assert!(c.soft_abort().is_none(), "shards={shards}: false positive trip");
+        }
+    }
+
+    #[test]
+    fn nan_breaker_trips_and_writes_a_checkpoint() {
+        let path = std::env::temp_dir()
+            .join(format!("hostencil_trip_ckpt_{}.ckpt", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut c = mk_unstable();
+        c.set_checkpointing(0, Some(path.clone()));
+        // arm the energy window past the horizon so only the NaN-rate
+        // breaker can fire
+        c.set_breakers(Some(BreakerConfig {
+            arm_step: Some(usize::MAX),
+            ..BreakerConfig::default()
+        }));
+        let s = c.run(400).unwrap();
+        assert!(s.steps < 400);
+        let abort = c.soft_abort().expect("NaN-rate breaker must trip");
+        assert_eq!(abort.kind, BreakerKind::NanRate);
+        let ck = Checkpoint::load(&path).expect("trip must leave a checkpoint behind");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(ck.steps_done as usize, c.steps_done());
+    }
+
+    #[test]
+    fn cadence_checkpoints_cross_step_multiples() {
+        let path = std::env::temp_dir()
+            .join(format!("hostencil_cadence_ckpt_{}.ckpt", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut c = mk_variant_coord("tf_s2", 1);
+        let reg = crate::telemetry::Registry::new();
+        c.set_telemetry(&reg);
+        c.set_checkpointing(6, Some(path.clone()));
+        c.run(10).unwrap();
+        // batch boundaries land at steps 2,4,6,8,10; only the step-6
+        // boundary crosses a multiple of 6
+        let ck = Checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(ck.steps_done, 6, "fused cadence writes at the first boundary past 6");
+        let text = reg.render();
+        assert!(text.contains("hostencil_checkpoint_writes_total 1"), "{text}");
+        assert!(text.contains("hostencil_checkpoint_last_step 6"), "{text}");
     }
 }

@@ -296,7 +296,10 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 scalar
                     let start = self.pos;
                     let rest = std::str::from_utf8(&self.bytes[start..])?;
-                    let ch = rest.chars().next().unwrap();
+                    let ch = rest
+                        .chars()
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("truncated string at byte {start}"))?;
                     s.push(ch);
                     self.pos += ch.len_utf8();
                 }
@@ -353,6 +356,26 @@ mod tests {
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse("\"unterminated").is_err());
         assert!(Json::parse("nul").is_err());
+    }
+
+    #[test]
+    fn truncated_strings_error_instead_of_panicking() {
+        // every cut point of a string with escapes must produce a
+        // parse error, never a panic (regression: the bare-character
+        // arm used to unwrap the next scalar)
+        let full = r#"{"k": "aA\n\\b"}"#;
+        for cut in 1..full.len() {
+            if let Some(prefix) = full.get(..cut) {
+                assert!(Json::parse(prefix).is_err(), "cut at {cut}: {prefix:?}");
+            }
+        }
+        // escape introducer at EOF
+        assert!(Json::parse("\"\\").is_err());
+        // truncated \u escapes, empty through three hex digits
+        assert!(Json::parse("\"\\u").is_err());
+        assert!(Json::parse("\"\\u1").is_err());
+        assert!(Json::parse("\"\\u12").is_err());
+        assert!(Json::parse("\"\\u123").is_err());
     }
 
     #[test]

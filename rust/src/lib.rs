@@ -95,6 +95,17 @@
 //! expose), `--events out.jsonl` streams the JSONL event log, and
 //! `hostencil telemetry --demo` prints a live snapshot; see
 //! `docs/METRICS.md` for the full metric reference.
+//!
+//! Long-running production runs lean on the **recovery subsystem**
+//! ([`recovery`]): versioned, checksummed binary checkpoints of the
+//! full propagator state (`--checkpoint-every` / `--restore`, bitwise
+//! -identical continuation proven by
+//! `rust/tests/restart_consistency.rs`), divergence circuit breakers
+//! (an energy-growth window and a NaN-rate budget) that trip to a
+//! checkpoint-and-halt `SoftAbort` instead of stepping a dead run to
+//! the budget, and JSONL trace recording (`--record`) replayable by
+//! `hostencil replay`, which re-executes the run and diffs receiver
+//! output against the recording. See `docs/OPERATIONS.md`.
 
 pub mod bench;
 pub mod config;
@@ -103,6 +114,7 @@ pub mod gpusim;
 pub mod grid;
 pub mod json;
 pub mod manifest;
+pub mod recovery;
 pub mod report;
 pub mod runtime;
 pub mod scenario;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   info        platform + artifact manifest + machine table (Table I)
 //!   run         run a wave simulation (PJRT or golden backend)
+//!   replay      re-execute a recorded run and diff receiver output
 //!   validate    PJRT executables vs the pure-Rust golden propagator
 //!   table2      regenerate Table II  (predicted wall time vs paper)
 //!   table3      regenerate Table III (occupancy characteristics)
@@ -15,9 +16,11 @@
 //!   bench       measured CPU propagator matrix (code-shape engine)
 
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 
 use hostencil::coordinator::{Coordinator, Mode, RunOptions};
 use hostencil::gpusim::{arch, kernels, occupancy, timing, KernelResources};
+use hostencil::recovery::{self, BreakerConfig, Checkpoint, Trace, TraceReceiver, TraceSource};
 use hostencil::runtime::Engine;
 use hostencil::telemetry::Registry;
 use hostencil::wave;
@@ -140,6 +143,37 @@ commands:
                                             docs/SHARDING.md); errors up front
                                             when a slab would be thinner than
                                             the fused halo
+             [--checkpoint-every N]         write a versioned, checksummed
+                                            snapshot of the full propagator
+                                            state every N steps (atomic
+                                            tmp+rename; N >= 1; default
+                                            destination hostencil.ckpt)
+             [--checkpoint-path f]          snapshot destination; breaker
+                                            trips dump here even without a
+                                            cadence
+             [--restore f]                  resume from a snapshot: the grid
+                                            and discretization are verified,
+                                            then the remaining step budget
+                                            runs bit-identical to the
+                                            uninterrupted run
+             [--record f]                   write a self-contained JSONL
+                                            trace (model, sources, injected
+                                            amplitudes, receiver traces)
+                                            replayable by `hostencil replay`
+                                            (golden mode only)
+             [--breakers]                   arm the divergence circuit
+                                            breakers: instead of stepping a
+                                            diverged field to the budget,
+                                            trip, checkpoint, and soft-abort
+                                            with a structured reason
+             [--breaker-window N] [--breaker-ratio r] [--breaker-arm N]
+             [--nan-budget N]               breaker tuning; each implies
+                                            --breakers (see docs/OPERATIONS.md)
+  replay     --trace f [--tol t]            re-execute a `--record` trace on
+                                            the CPU golden path and diff the
+                                            replayed receiver output against
+                                            the recording (default tolerance
+                                            0.0 = bitwise)
   validate   [--artifacts dir] [--steps N]    PJRT vs golden, all variants
   table2     [--steps N]                      predicted wall time vs paper
   table3                                      occupancy characteristics
@@ -173,7 +207,8 @@ commands:
                                             1|4|8|16, unroll 1|2|4)
   scenario   [--id name|all] [--list] [--steps N] [--machine m --variant v]
              [--propagator p] [--cpu-threads N] [--json path] [--sample-every N]
-             [--shards N]
+             [--shards N] [--checkpoint-every N] [--checkpoint-path f]
+             [--restore f] [--breakers]
                                             run named physics stress scenarios
                                             (CPU propagator backend) with
                                             pass/fail verdicts; stress ids
@@ -211,6 +246,7 @@ commands:
   bench      [--size N] [--steps N] [--json path] [--cpu-threads N] [--check]
              [--margin 0.15] [--thread-sweep 1,2,4,8] [--fuse 1,2,4]
              [--simd-sweep] [--machine v100] [--shards N] [--shard-sweep 1,2,4]
+             [--checkpoint-sweep 0,8,1]
                                             time the CPU propagator matrix
                                             (naive/blocked/streaming/semi +
                                             the fused tf_s2/tf_s4 rows; JSON
@@ -277,7 +313,14 @@ commands:
                                             with a note); with --check and
                                             measured 1- and 2-shard rows,
                                             2 shards must not lose to 1
-                                            beyond --margin; honors
+                                            beyond --margin;
+                                            --checkpoint-sweep re-times the
+                                            fuse-2 engine at each snapshot
+                                            cadence (0 = the checkpointing-
+                                            off control) and emits a
+                                            `checkpoint_sweep` JSON array
+                                            with the steps/sec overhead of
+                                            each cadence vs off; honors
                                             HOSTENCIL_BENCH_SAMPLES /
                                             HOSTENCIL_BENCH_WARMUP
   telemetry  [--demo] [--propagator p] [--steps N] [--size N] [--cpu-threads N]
@@ -366,6 +409,64 @@ impl CliTelemetry {
     }
 }
 
+/// Resolve the checkpoint cadence + destination from the CLI.
+///
+/// `--checkpoint-every 0` is rejected by name rather than silently
+/// treated as "off": off is the absence of the flag. A cadence without
+/// an explicit `--checkpoint-path` gets the default snapshot name, and
+/// an explicit path *without* a cadence is kept so breaker trips still
+/// have somewhere to dump state.
+fn checkpointing_from_args(args: &Args) -> anyhow::Result<(usize, Option<PathBuf>)> {
+    let every = match args.get("checkpoint-every")? {
+        None => 0,
+        Some(n) => {
+            let n: usize = n.parse().map_err(|e| anyhow::anyhow!("--checkpoint-every: {e}"))?;
+            anyhow::ensure!(n >= 1, "--checkpoint-every must be >= 1 (omit the flag to disable)");
+            n
+        }
+    };
+    let path = match args.get("checkpoint-path")? {
+        Some(p) => Some(PathBuf::from(p)),
+        None if every > 0 => Some(PathBuf::from("hostencil.ckpt")),
+        None => None,
+    };
+    Ok((every, path))
+}
+
+/// Resolve the divergence-breaker configuration from the CLI. Breakers
+/// arm when `--breakers` is given or any tuning option is; every field
+/// defaults to [`BreakerConfig::default`]. Degenerate tunings (a window
+/// too short to compare against, a ratio that would trip on flat
+/// energy) are rejected by flag name.
+fn breakers_from_args(args: &Args) -> anyhow::Result<Option<BreakerConfig>> {
+    let tuned = ["breaker-window", "breaker-ratio", "breaker-arm", "nan-budget"]
+        .iter()
+        .any(|k| !matches!(args.get(k), Ok(None)));
+    if !args.has_flag("breakers") && !tuned {
+        return Ok(None);
+    }
+    let d = BreakerConfig::default();
+    let energy_window = args.usize_or("breaker-window", d.energy_window)?;
+    anyhow::ensure!(
+        energy_window >= 2,
+        "--breaker-window must be >= 2 (the ratio compares newest vs oldest sample)"
+    );
+    let energy_ratio = match args.get("breaker-ratio")? {
+        None => d.energy_ratio,
+        Some(r) => r.parse().map_err(|e| anyhow::anyhow!("--breaker-ratio: {e}"))?,
+    };
+    anyhow::ensure!(
+        energy_ratio > 1.0,
+        "--breaker-ratio must be > 1.0 (a ratio at or below 1 trips on steady energy)"
+    );
+    let arm_step = match args.get("breaker-arm")? {
+        None => d.arm_step,
+        Some(n) => Some(n.parse().map_err(|e| anyhow::anyhow!("--breaker-arm: {e}"))?),
+    };
+    let nan_budget = args.usize_or("nan-budget", d.nan_budget)?;
+    Ok(Some(BreakerConfig { energy_window, energy_ratio, arm_step, nan_budget }))
+}
+
 fn main() {
     if let Err(e) = run() {
         eprintln!("error: {e:#}");
@@ -378,6 +479,7 @@ fn run() -> anyhow::Result<()> {
     match args.cmd.as_str() {
         "info" => cmd_info(&args),
         "run" => cmd_run(&args),
+        "replay" => cmd_replay(&args),
         "validate" => cmd_validate(&args),
         "table2" => {
             print!("{}", report::table2(args.usize_or("steps", 1000)?));
@@ -524,8 +626,29 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     if coord.shards() > 1 {
         println!("sharding      : {} z-slab shards, halo exchange every batch", coord.shards());
     }
+    let breakers = breakers_from_args(args)?;
+    let (ckpt_every, ckpt_path) = checkpointing_from_args(args)?;
+    if ckpt_every > 0 {
+        if let Some(p) = &ckpt_path {
+            println!("checkpointing : every {ckpt_every} steps -> {}", p.display());
+        }
+    }
+    // a breaker trip skips the hard non-finite halt: the breaker owns
+    // the abort (checkpoint + structured reason) instead of a bail
+    coord.set_breakers(breakers);
+    coord.set_checkpointing(ckpt_every, ckpt_path);
+    let mut steps = cfg.steps;
+    if let Some(path) = args.get("restore")? {
+        coord.restore(&Checkpoint::load(Path::new(path))?)?;
+        steps = cfg.steps.saturating_sub(coord.steps_done());
+        println!(
+            "restored      : {path} at step {} ({steps} of {} steps remaining)",
+            coord.steps_done(),
+            cfg.steps
+        );
+    }
     let summary = coord.run_observed(
-        cfg.steps,
+        steps,
         RunOptions {
             sample_every: args.usize_or("sample-every", 0)?,
             ..RunOptions::default()
@@ -542,6 +665,17 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         summary.final_max_abs,
         summary.final_energy
     );
+    if let Some(abort) = coord.soft_abort() {
+        println!(
+            "soft abort    : {} breaker tripped at step {} — {}",
+            abort.kind.name(),
+            abort.step,
+            abort.detail
+        );
+    }
+    // a stable digest over (step cursor, both leapfrog buffers): lets
+    // CI compare a restored run against its uninterrupted twin by grep
+    println!("state digest  : {:#018x}", coord.state_digest());
     if let Some(eng) = &engine {
         println!("\nper-artifact engine stats:");
         for (name, s) in eng.stats() {
@@ -563,9 +697,136 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         let rms_str: Vec<String> = rms.iter().map(|r| format!("{r:.3e}")).collect();
         println!("receiver RMS: [{}]", rms_str.join(", "));
     }
+    if let Some(path) = args.get("record")? {
+        anyhow::ensure!(
+            matches!(cfg.mode, Mode::Golden),
+            "--record needs the CPU golden path (use --propagator or --fuse)"
+        );
+        anyhow::ensure!(
+            args.get("restore")?.is_none(),
+            "--record with --restore is unsupported (a trace must start at step 0)"
+        );
+        anyhow::ensure!(
+            args.usize_or("sample-every", 0)? == 0,
+            "--record with --sample-every is unsupported (the trace cadence is the \
+             propagator's natural batch)"
+        );
+        // the injected amplitudes are recomputed per step and stored in
+        // the trace, so replay can verify the source schedule before
+        // diffing receivers
+        let trace = Trace {
+            interior: cfg.domain.interior,
+            pml_width: cfg.domain.pml_width,
+            h: cfg.domain.h,
+            dt: cfg.domain.dt,
+            steps: summary.steps,
+            fuse: coord.fuse(),
+            propagator: cfg.inner_variant.clone(),
+            model: cfg.model.clone(),
+            sources: coord
+                .sources()
+                .iter()
+                .map(|&(source, v_at)| TraceSource {
+                    source,
+                    amps: (0..summary.steps)
+                        .map(|n| source.amp_at(n, cfg.domain.dt, v_at))
+                        .collect(),
+                })
+                .collect(),
+            receivers: coord
+                .receivers()
+                .iter()
+                .zip(&summary.traces)
+                .map(|(&pos, t)| TraceReceiver { pos, trace: t.clone() })
+                .collect(),
+        };
+        trace.save(Path::new(path))?;
+        println!(
+            "recorded      : {} steps of {} -> {path}",
+            trace.steps, trace.propagator
+        );
+    }
     if let Some(t) = &telemetry {
         t.finish()?;
     }
+    Ok(())
+}
+
+/// `hostencil replay --trace f`: rebuild the recorded run (domain,
+/// velocity model, propagator, sources) from a JSONL trace, re-execute
+/// it on the CPU golden path, and diff the replayed receiver traces
+/// against the recording. The recorded injection schedule is verified
+/// first, so a drifted source term reports as such rather than as a
+/// mysterious receiver mismatch.
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    use hostencil::grid::{Dim3, Domain};
+
+    let path = args
+        .get("trace")?
+        .ok_or_else(|| anyhow::anyhow!("replay needs --trace <file> (a `run --record` trace)"))?;
+    let tol: f64 = match args.get("tol")? {
+        None => 0.0,
+        Some(t) => t.parse().map_err(|e| anyhow::anyhow!("--tol: {e}"))?,
+    };
+    let trace = Trace::load(Path::new(path))?;
+    let domain = Domain::new(trace.interior, trace.pml_width, trace.h, trace.dt)?;
+    let v = trace.model.build(trace.interior);
+    let v_max = v.as_slice().iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+    let eta = wave::eta_profile(&domain, v_max);
+    let receivers: Vec<Dim3> = trace.receivers.iter().map(|r| r.pos).collect();
+    let mut coord = Coordinator::new(
+        None,
+        domain,
+        Mode::Golden,
+        &trace.propagator,
+        "gmem",
+        v,
+        eta,
+        trace.sources[0].source,
+        receivers,
+    )?;
+    for s in &trace.sources[1..] {
+        coord.add_source(s.source)?;
+    }
+    anyhow::ensure!(
+        coord.fuse() == trace.fuse,
+        "propagator {} advances {} steps per sweep but the trace was recorded at fuse {} \
+         (the receiver sampling cadence would differ)",
+        trace.propagator,
+        coord.fuse(),
+        trace.fuse
+    );
+    for (i, (rec, &(source, v_at))) in trace.sources.iter().zip(coord.sources()).enumerate() {
+        for (n, &amp) in rec.amps.iter().enumerate() {
+            let here = source.amp_at(n, trace.dt, v_at);
+            anyhow::ensure!(
+                amp == here,
+                "source {i} amplitude diverged at step {n}: recorded {amp:e}, \
+                 replay computes {here:e}"
+            );
+        }
+    }
+    println!(
+        "replay: {} steps of {} on {} (pml {}), {} source(s), {} receiver(s)",
+        trace.steps,
+        trace.propagator,
+        trace.interior,
+        trace.pml_width,
+        trace.sources.len(),
+        trace.receivers.len()
+    );
+    let summary = coord.run_observed(trace.steps, RunOptions::default(), None)?;
+    let worst = recovery::max_trace_diff(&trace.receivers, &summary.traces)?;
+    println!(
+        "replayed {} steps: max |replayed - recorded| = {worst:.3e} (tolerance {tol:.1e})",
+        summary.steps
+    );
+    anyhow::ensure!(
+        worst <= tol,
+        "replay diverged from the recording: max receiver deviation {worst:.3e} > \
+         tolerance {tol:.3e}"
+    );
+    println!("replay OK: receiver traces match the recording");
     Ok(())
 }
 
@@ -849,6 +1110,7 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         Some(name) => vec![ScenarioId::parse(name)?],
     };
     let telemetry = telemetry_from_args(args)?;
+    let (ckpt_every, ckpt_path) = checkpointing_from_args(args)?;
     let opts = RunnerOptions {
         steps_override: match args.get("steps")? {
             None => None,
@@ -865,6 +1127,10 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         sample_every: args.usize_or("sample-every", 0)?,
         shards: args.usize_or("shards", 0)?,
         telemetry: telemetry.as_ref().map(|t| t.registry.clone()),
+        checkpoint_every: ckpt_every,
+        checkpoint_path: ckpt_path,
+        restore: args.get("restore")?.map(PathBuf::from),
+        breakers: breakers_from_args(args)?,
     };
 
     let mut unexpected = Vec::new();
@@ -1036,6 +1302,24 @@ fn parse_shard_list(s: &str) -> anyhow::Result<Vec<usize>> {
     Ok(out)
 }
 
+/// Parse a `--checkpoint-sweep` cadence list (`0,8,1`): sorted and
+/// deduplicated. Cadence 0 is the checkpointing-off control the
+/// overhead column compares against (so 0 is *allowed* here, unlike
+/// `--checkpoint-every`).
+fn parse_ckpt_list(s: &str) -> anyhow::Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let t: usize = tok
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("--checkpoint-sweep: bad cadence {tok:?}: {e}"))?;
+        out.push(t);
+    }
+    out.sort_unstable();
+    out.dedup();
+    Ok(out)
+}
+
 /// Time the executable CPU propagator matrix on a fixed small grid and
 /// optionally emit a `BENCH_*.json`-compatible file, so the repo's perf
 /// trajectory tracks *measured* numbers (`hostencil bench --json
@@ -1082,6 +1366,10 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     let shard_list: Option<Vec<usize>> = match args.get("shard-sweep")? {
         None => None,
         Some(list) => Some(parse_shard_list(list)?),
+    };
+    let ckpt_list: Option<Vec<usize>> = match args.get("checkpoint-sweep")? {
+        None => None,
+        Some(list) => Some(parse_ckpt_list(list)?),
     };
     // one registry across the whole matrix (series are deduplicated by
     // name + labels, collectors re-point to the live pool), so the
@@ -1424,6 +1712,76 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
         }
     }
 
+    // --checkpoint-sweep: re-time the fuse-2 engine with cadence
+    // checkpointing on vs off, so the snapshot cost (serialize both
+    // padded buffers + atomic tmp/rename) is directly measurable as a
+    // steps/sec overhead. Cadence 0 is the off control; a cadence below
+    // the fuse degree still writes once per crossed multiple.
+    struct CkptRow {
+        every: usize,
+        min_ns: u128,
+        sps_best: f64,
+        overhead_vs_off: Option<f64>,
+    }
+    let mut ckpt_rows: Vec<CkptRow> = Vec::new();
+    if let Some(cadences) = &ckpt_list {
+        let snap = std::env::temp_dir()
+            .join(format!("hostencil_bench_ckpt_{}.ckpt", std::process::id()));
+        println!("\ncheckpoint sweep (tf_s2; steady-state min; overhead vs cadence off):");
+        let mut rate0: Option<f64> = None;
+        for &every in cadences {
+            let v = VelocityModel::Constant(v0).build(interior);
+            let eta = wave::eta_profile(&domain, v0 as f64);
+            let src = Source { pos: Dim3::new(n / 2, n / 2, n / 2), f0: 15.0, amplitude: 1.0 };
+            let mut coord = Coordinator::new(
+                None,
+                domain,
+                Mode::Golden,
+                "tf_s2",
+                "gmem",
+                v,
+                eta,
+                src,
+                vec![],
+            )?;
+            coord.set_cpu_threads(args.usize_or("cpu-threads", 0)?);
+            coord.set_checkpointing(every, Some(snap.clone()));
+            let min_ns = b
+                .bench(&format!("ckpt @{every}"), || {
+                    coord
+                        .run_observed(
+                            steps,
+                            RunOptions { sample_every, ..RunOptions::default() },
+                            None,
+                        )
+                        .expect("bench step")
+                        .final_max_abs
+                })
+                .min
+                .as_nanos();
+            let sps_best = steps as f64 / (min_ns as f64 / 1e9).max(1e-12);
+            if every == 0 {
+                rate0 = Some(sps_best);
+            }
+            ckpt_rows.push(CkptRow {
+                every,
+                min_ns,
+                sps_best,
+                overhead_vs_off: rate0.map(|r0| 1.0 - sps_best / r0),
+            });
+        }
+        let _ = std::fs::remove_file(&snap);
+        let _ = std::fs::remove_file(snap.with_extension("ckpt.tmp"));
+        for r in &ckpt_rows {
+            let ov = match r.overhead_vs_off {
+                Some(x) => format!("{:>6.2}%", 100.0 * x),
+                None => "      -".to_string(),
+            };
+            let label = if r.every == 0 { "off".to_string() } else { r.every.to_string() };
+            println!("  every {label:<4} {:>8.1} steps/s  overhead {ov}", r.sps_best);
+        }
+    }
+
     // --simd-sweep: re-time the tiled matrix at threads=1, once with
     // the row kernel forced scalar and once with the process dispatch,
     // so the explicit-SIMD payoff is directly measurable per shape
@@ -1621,6 +1979,25 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
                 })
                 .collect();
             root.insert("shard_sweep".to_string(), Json::Arr(shard_json));
+        }
+        if !ckpt_rows.is_empty() {
+            // JSON v2 extension: the checkpoint-cadence overhead sweep
+            // (absent unless --checkpoint-sweep was given; cadence 0 is
+            // the checkpointing-off control)
+            let ckpt_json: Vec<Json> = ckpt_rows
+                .iter()
+                .map(|r| {
+                    let mut o = BTreeMap::new();
+                    o.insert("every".to_string(), Json::Num(r.every as f64));
+                    o.insert("min_ns".to_string(), Json::Num(r.min_ns as f64));
+                    o.insert("steps_per_sec_best".to_string(), Json::Num(r.sps_best));
+                    if let Some(x) = r.overhead_vs_off {
+                        o.insert("overhead_vs_off".to_string(), Json::Num(x));
+                    }
+                    Json::Obj(o)
+                })
+                .collect();
+            root.insert("checkpoint_sweep".to_string(), Json::Arr(ckpt_json));
         }
         if full_simd_sweep && !simd_rows.is_empty() {
             // JSON v2 extension: the scalar-vs-SIMD row-kernel sweep
@@ -2108,6 +2485,97 @@ mod tests {
         assert!(parse_shard_list("").is_err());
         assert!(parse_shard_list("0,2").is_err(), "zero shards is meaningless");
         assert!(parse_shard_list("two").is_err());
+    }
+
+    #[test]
+    fn checkpoint_sweep_list_allows_the_off_control() {
+        assert_eq!(parse_ckpt_list("0,8,1").unwrap(), vec![0, 1, 8]);
+        assert_eq!(parse_ckpt_list("4").unwrap(), vec![4]);
+        assert!(parse_ckpt_list("").is_err());
+        assert!(parse_ckpt_list("x").is_err());
+    }
+
+    #[test]
+    fn checkpoint_flags_resolve_and_reject_zero_cadence() {
+        let a = parse(&["run", "--checkpoint-every", "25", "--checkpoint-path", "snap.ckpt"]);
+        assert_eq!(
+            checkpointing_from_args(&a).unwrap(),
+            (25, Some(PathBuf::from("snap.ckpt")))
+        );
+        // a cadence without a path gets the default snapshot name
+        let b = parse(&["run", "--checkpoint-every=10"]);
+        assert_eq!(
+            checkpointing_from_args(&b).unwrap(),
+            (10, Some(PathBuf::from("hostencil.ckpt")))
+        );
+        // --checkpoint-every 0 is rejected by name, not treated as off
+        let z = parse(&["run", "--checkpoint-every", "0"]);
+        let err = checkpointing_from_args(&z).unwrap_err().to_string();
+        assert!(err.contains("--checkpoint-every"), "{err}");
+        assert!(err.contains(">= 1"), "{err}");
+        // no flags at all: checkpointing stays fully off
+        let none = parse(&["run", "--steps", "5"]);
+        assert_eq!(checkpointing_from_args(&none).unwrap(), (0, None));
+        // an explicit path without a cadence is kept for breaker trips
+        let trip = parse(&["run", "--checkpoint-path", "dump.ckpt"]);
+        assert_eq!(
+            checkpointing_from_args(&trip).unwrap(),
+            (0, Some(PathBuf::from("dump.ckpt")))
+        );
+    }
+
+    #[test]
+    fn restore_with_a_missing_file_names_the_path() {
+        let err = Checkpoint::load(Path::new("/nonexistent/run.ckpt"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("cannot read checkpoint"), "{err}");
+        assert!(err.contains("/nonexistent/run.ckpt"), "{err}");
+    }
+
+    #[test]
+    fn breaker_flags_imply_arming_and_validate() {
+        // no breaker flags: breakers stay disarmed
+        assert!(breakers_from_args(&parse(&["run", "--steps", "5"])).unwrap().is_none());
+        // the bare flag arms with defaults
+        let armed = breakers_from_args(&parse(&["run", "--breakers"])).unwrap().expect("armed");
+        assert_eq!(armed.energy_window, BreakerConfig::default().energy_window);
+        assert_eq!(armed.nan_budget, BreakerConfig::default().nan_budget);
+        // any tuning option arms the breakers on its own
+        let tuned = breakers_from_args(&parse(&["run", "--breaker-ratio", "100"]))
+            .unwrap()
+            .expect("armed");
+        assert_eq!(tuned.energy_ratio, 100.0);
+        let win = breakers_from_args(&parse(&["run", "--breaker-window=4", "--nan-budget", "2"]))
+            .unwrap()
+            .expect("armed");
+        assert_eq!(win.energy_window, 4);
+        assert_eq!(win.nan_budget, 2);
+        let arm = breakers_from_args(&parse(&["run", "--breaker-arm", "30"]))
+            .unwrap()
+            .expect("armed");
+        assert_eq!(arm.arm_step, Some(30));
+        // degenerate tunings are rejected with the flag named
+        let e = breakers_from_args(&parse(&["run", "--breaker-window", "1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--breaker-window"), "{e}");
+        let e = breakers_from_args(&parse(&["run", "--breaker-ratio", "0.5"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--breaker-ratio"), "{e}");
+    }
+
+    #[test]
+    fn replay_requires_a_trace_and_reports_missing_files() {
+        let a = parse(&["replay"]);
+        let err = cmd_replay(&a).unwrap_err().to_string();
+        assert!(err.contains("--trace"), "{err}");
+        // a missing trace file is a named error, not a panic
+        let b = parse(&["replay", "--trace", "/nonexistent/rec.jsonl"]);
+        let err = cmd_replay(&b).unwrap_err().to_string();
+        assert!(err.contains("cannot read trace"), "{err}");
+        assert!(err.contains("/nonexistent/rec.jsonl"), "{err}");
     }
 
     #[test]

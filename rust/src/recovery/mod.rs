@@ -1,0 +1,954 @@
+//! Long-run operations: checkpoint/restart, divergence circuit
+//! breakers, and trace replay (see docs/OPERATIONS.md).
+//!
+//! Production stencil runs are hours of wall time, not the 100-step
+//! gauntlets the scenario catalogue gates — a killed process or a
+//! diverged wavefield must not burn the whole budget. This module is
+//! the recovery substrate the coordinator wires through the time loop:
+//!
+//! * [`Checkpoint`] — a versioned, checksummed binary snapshot of the
+//!   full propagator state: both R-ghost-padded leapfrog buffers, the
+//!   step index (which *is* the injection-schedule cursor — sources
+//!   are pure functions of the step index, so there is no separate RNG
+//!   state to save), the accumulated receiver traces and energy log.
+//!   Restoring into a fresh coordinator continues **bitwise
+//!   identically** (`rust/tests/restart_consistency.rs`).
+//! * [`DivergenceBreaker`] — in-loop watchdogs generalizing the
+//!   non-finite abort: an energy-growth breaker over a sliding window
+//!   and a NaN-rate breaker, tripping to [`SoftAbort`]
+//!   (checkpoint-and-halt with a structured reason) instead of
+//!   stepping a dead run to the step budget.
+//! * [`Trace`] — a JSONL recording of the injected source samples and
+//!   receiver traces (`run --record`), replayable via `hostencil
+//!   replay` which re-executes the run and diffs receiver output
+//!   against the recording, turning an incident into a test case.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::grid::Dim3;
+use crate::json::Json;
+use crate::wave::{Source, VelocityModel};
+
+/// Leading magic of every checkpoint file.
+pub const CHECKPOINT_MAGIC: [u8; 8] = *b"HOSTCKPT";
+/// Current checkpoint format version (bump on any layout change).
+pub const CHECKPOINT_VERSION: u32 = 1;
+/// `kind` field of a replay-trace header line.
+pub const TRACE_KIND: &str = "hostencil-trace";
+/// Current replay-trace format version.
+pub const TRACE_VERSION: u32 = 1;
+
+/// FNV-1a 64-bit hash — the checkpoint checksum and the state digest.
+/// Stable, dependency-free, and byte-order independent (it hashes the
+/// little-endian serialized stream).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write `bytes` to `path` atomically: a sibling `.tmp` file is
+/// written first and renamed into place, so a crash mid-write never
+/// leaves a torn checkpoint where a good one used to be.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let tmp = path.with_extension("ckpt.tmp");
+    std::fs::write(&tmp, bytes)
+        .map_err(|e| anyhow::anyhow!("cannot write checkpoint {}: {e}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .map_err(|e| anyhow::anyhow!("cannot move checkpoint into {}: {e}", path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint: versioned, checksummed binary snapshot
+// ---------------------------------------------------------------------------
+
+/// Full propagator state at a step boundary. `u_pad`/`um_pad` are the
+/// two R-ghost-padded leapfrog buffers in row-major order (the same
+/// layout `Field3::as_slice` exposes); `steps_done` doubles as the
+/// injection-schedule cursor because source amplitudes are pure
+/// functions of the step index.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub interior: Dim3,
+    pub pml_width: usize,
+    pub h: f64,
+    pub dt: f64,
+    pub steps_done: u64,
+    pub launches: u64,
+    /// Per-receiver sample history accumulated so far.
+    pub traces: Vec<Vec<f32>>,
+    /// Per-batch energy log accumulated so far.
+    pub energy_log: Vec<f64>,
+    pub u_pad: Vec<f32>,
+    pub um_pad: Vec<f32>,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_f32_slice(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        out.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+}
+
+fn put_f64_slice(out: &mut Vec<u8>, v: &[f64]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+/// Bounds-checked reader over a checkpoint byte stream: every read
+/// errors with the offending byte offset instead of panicking on a
+/// truncated or corrupt file.
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint length overflows at byte {}", self.pos))?;
+        let s = self
+            .bytes
+            .get(self.pos..end)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint truncated at byte {}", self.pos))?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn len(&mut self) -> anyhow::Result<usize> {
+        let n = self.u64()?;
+        usize::try_from(n)
+            .map_err(|_| anyhow::anyhow!("checkpoint length {n} does not fit this platform"))
+    }
+
+    fn f64(&mut self) -> anyhow::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn f32_vec(&mut self) -> anyhow::Result<Vec<f32>> {
+        let n = self.len()?;
+        let raw = self.take(n.checked_mul(4).ok_or_else(|| {
+            anyhow::anyhow!("checkpoint f32 run of {n} elements overflows")
+        })?)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_bits(u32::from_le_bytes(c.try_into().expect("4 bytes"))))
+            .collect())
+    }
+
+    fn f64_vec(&mut self) -> anyhow::Result<Vec<f64>> {
+        let n = self.len()?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f64()?);
+        }
+        Ok(out)
+    }
+}
+
+impl Checkpoint {
+    /// Serialize to the versioned binary layout, FNV-1a 64 checksum
+    /// trailing (computed over every preceding byte).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + 4 * (self.u_pad.len() + self.um_pad.len()));
+        out.extend_from_slice(&CHECKPOINT_MAGIC);
+        put_u32(&mut out, CHECKPOINT_VERSION);
+        put_u64(&mut out, self.interior.z as u64);
+        put_u64(&mut out, self.interior.y as u64);
+        put_u64(&mut out, self.interior.x as u64);
+        put_u64(&mut out, self.pml_width as u64);
+        put_f64(&mut out, self.h);
+        put_f64(&mut out, self.dt);
+        put_u64(&mut out, self.steps_done);
+        put_u64(&mut out, self.launches);
+        put_u64(&mut out, self.traces.len() as u64);
+        for t in &self.traces {
+            put_f32_slice(&mut out, t);
+        }
+        put_f64_slice(&mut out, &self.energy_log);
+        put_f32_slice(&mut out, &self.u_pad);
+        put_f32_slice(&mut out, &self.um_pad);
+        let sum = fnv1a64(&out);
+        put_u64(&mut out, sum);
+        out
+    }
+
+    /// Parse and verify a serialized checkpoint: magic, version, the
+    /// trailing checksum, and exact length are all enforced.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+        anyhow::ensure!(
+            bytes.len() >= CHECKPOINT_MAGIC.len() + 4 + 8,
+            "checkpoint too short ({} bytes) to carry a header",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            bytes[..CHECKPOINT_MAGIC.len()] == CHECKPOINT_MAGIC,
+            "not a hostencil checkpoint (bad magic)"
+        );
+        let body = &bytes[..bytes.len() - 8];
+        let stored =
+            u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("8 bytes"));
+        let computed = fnv1a64(body);
+        anyhow::ensure!(
+            stored == computed,
+            "checkpoint checksum mismatch (stored {stored:#018x}, computed {computed:#018x}) — \
+             file corrupt or torn"
+        );
+        let mut c = Cursor { bytes: body, pos: CHECKPOINT_MAGIC.len() };
+        let version = c.u32()?;
+        anyhow::ensure!(
+            version == CHECKPOINT_VERSION,
+            "checkpoint version {version} unsupported (this build reads version \
+             {CHECKPOINT_VERSION})"
+        );
+        let (z, y, x) = (c.len()?, c.len()?, c.len()?);
+        let pml_width = c.len()?;
+        let h = c.f64()?;
+        let dt = c.f64()?;
+        let steps_done = c.u64()?;
+        let launches = c.u64()?;
+        let n_traces = c.len()?;
+        let mut traces = Vec::with_capacity(n_traces);
+        for _ in 0..n_traces {
+            traces.push(c.f32_vec()?);
+        }
+        let energy_log = c.f64_vec()?;
+        let u_pad = c.f32_vec()?;
+        let um_pad = c.f32_vec()?;
+        anyhow::ensure!(
+            c.pos == body.len(),
+            "checkpoint has {} trailing bytes after the state payload",
+            body.len() - c.pos
+        );
+        Ok(Checkpoint {
+            interior: Dim3::new(z, y, x),
+            pml_width,
+            h,
+            dt,
+            steps_done,
+            launches,
+            traces,
+            energy_log,
+            u_pad,
+            um_pad,
+        })
+    }
+
+    /// Atomic write to `path` (tmp + rename).
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        write_atomic(path, &self.to_bytes())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("cannot read checkpoint {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Digest of the physical state only (both leapfrog buffers plus
+    /// the step cursor) — what the restart-consistency CI smoke
+    /// compares between an interrupted and an uninterrupted run.
+    pub fn state_digest(&self) -> u64 {
+        state_digest(self.steps_done, &self.u_pad, &self.um_pad)
+    }
+}
+
+/// FNV-1a digest over (step cursor, u bits, um bits) — bitwise state
+/// identity in one printable number.
+pub fn state_digest(steps_done: u64, u_pad: &[f32], um_pad: &[f32]) -> u64 {
+    let mut bytes = Vec::with_capacity(8 + 4 * (u_pad.len() + um_pad.len()));
+    put_u64(&mut bytes, steps_done);
+    for &x in u_pad {
+        bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    for &x in um_pad {
+        bytes.extend_from_slice(&x.to_bits().to_le_bytes());
+    }
+    fnv1a64(&bytes)
+}
+
+// ---------------------------------------------------------------------------
+// Divergence circuit breakers
+// ---------------------------------------------------------------------------
+
+/// Which watchdog tripped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerKind {
+    /// Energy grew past `energy_ratio` times the oldest sample in the
+    /// sliding window while the field was still finite.
+    EnergyGrowth,
+    /// More non-finite energy observations than `nan_budget` allows.
+    NanRate,
+}
+
+impl BreakerKind {
+    /// Label value for `hostencil_breaker_trips_total{kind=...}` and
+    /// the `watchdog_trip` flight-recorder event.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerKind::EnergyGrowth => "energy_growth",
+            BreakerKind::NanRate => "nan_rate",
+        }
+    }
+}
+
+/// Breaker thresholds. `arm_step: None` auto-arms after the source
+/// wavelets have finished injecting (the Ricker ramp is
+/// super-exponential, so a window ratio during injection would
+/// false-trip on perfectly healthy runs); once the sources are quiet a
+/// stable run's energy is non-increasing under PML absorption, which
+/// is what makes the ratio test sound.
+#[derive(Clone, Copy, Debug)]
+pub struct BreakerConfig {
+    /// Sliding-window length in observed batches.
+    pub energy_window: usize,
+    /// Trip when `energy > energy_ratio * oldest-in-window`.
+    pub energy_ratio: f64,
+    /// First step index at which energy samples are recorded; `None`
+    /// lets the coordinator compute the source-quiet step.
+    pub arm_step: Option<usize>,
+    /// Non-finite energy observations tolerated before the NaN-rate
+    /// breaker trips (0 = trip on the first one).
+    pub nan_budget: usize,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            energy_window: 16,
+            energy_ratio: 1e3,
+            arm_step: None,
+            nan_budget: 0,
+        }
+    }
+}
+
+/// Structured reason a run halted early: which breaker, at which step,
+/// with a human-readable detail line. The coordinator checkpoints (if
+/// configured) and returns a *successful* summary carrying this — a
+/// tripped breaker is an operational outcome, not a crash.
+#[derive(Clone, Debug)]
+pub struct SoftAbort {
+    pub kind: BreakerKind,
+    pub step: usize,
+    pub detail: String,
+}
+
+/// In-loop divergence watchdog. `observe` is allocation-free: the
+/// energy window is a ring buffer preallocated at construction, so the
+/// zero-alloc steady-state proof holds with breakers armed.
+#[derive(Debug)]
+pub struct DivergenceBreaker {
+    cfg: BreakerConfig,
+    arm_step: usize,
+    ring: Vec<f64>,
+    head: usize,
+    filled: usize,
+    nan_seen: usize,
+}
+
+impl DivergenceBreaker {
+    /// `auto_arm_step` is used when the config leaves `arm_step` unset
+    /// (the coordinator passes the source-quiet step).
+    pub fn new(cfg: BreakerConfig, auto_arm_step: usize) -> DivergenceBreaker {
+        DivergenceBreaker {
+            arm_step: cfg.arm_step.unwrap_or(auto_arm_step),
+            ring: vec![0.0; cfg.energy_window.max(1)],
+            head: 0,
+            filled: 0,
+            nan_seen: 0,
+            cfg,
+        }
+    }
+
+    /// Step index at which the energy-growth window starts recording.
+    pub fn arm_step(&self) -> usize {
+        self.arm_step
+    }
+
+    /// Feed one batch-boundary energy sample; returns the breaker that
+    /// tripped, if any. Non-finite samples count against the NaN
+    /// budget regardless of arming; finite samples only enter the
+    /// window once armed, and the ratio test only fires on a full
+    /// window (so the baseline is a genuine steady-state sample, not
+    /// the first post-arm reading).
+    pub fn observe(&mut self, step: usize, energy: f64) -> Option<BreakerKind> {
+        if !energy.is_finite() {
+            self.nan_seen += 1;
+            if self.nan_seen > self.cfg.nan_budget {
+                return Some(BreakerKind::NanRate);
+            }
+            return None;
+        }
+        if step < self.arm_step {
+            return None;
+        }
+        let window = self.ring.len();
+        if self.filled == window {
+            let oldest = self.ring[self.head];
+            if energy > self.cfg.energy_ratio * oldest && energy > 0.0 {
+                return Some(BreakerKind::EnergyGrowth);
+            }
+            self.ring[self.head] = energy;
+            self.head = (self.head + 1) % window;
+        } else {
+            let idx = (self.head + self.filled) % window;
+            self.ring[idx] = energy;
+            self.filled += 1;
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace replay
+// ---------------------------------------------------------------------------
+
+/// One recorded source: its descriptor plus the per-step injected
+/// amplitude samples (already scaled by dt^2 * v^2 at the source).
+#[derive(Clone, Debug)]
+pub struct TraceSource {
+    pub source: Source,
+    pub amps: Vec<f32>,
+}
+
+/// One recorded receiver: its grid position plus the sampled trace
+/// (one sample per observed batch).
+#[derive(Clone, Debug)]
+pub struct TraceReceiver {
+    pub pos: Dim3,
+    pub trace: Vec<f32>,
+}
+
+/// A replayable run recording: enough to rebuild the exact run
+/// (domain, velocity model, propagator, fusion degree, sources) plus
+/// the observed outputs to diff against (`hostencil replay`).
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub interior: Dim3,
+    pub pml_width: usize,
+    pub h: f64,
+    pub dt: f64,
+    pub steps: usize,
+    pub fuse: usize,
+    pub propagator: String,
+    pub model: VelocityModel,
+    pub sources: Vec<TraceSource>,
+    pub receivers: Vec<TraceReceiver>,
+}
+
+/// Serialize a velocity model to a small JSON descriptor (the trace
+/// must rebuild the exact grid, so the model rides in the header).
+pub fn model_to_json(m: &VelocityModel) -> Json {
+    let mut o = BTreeMap::new();
+    match m {
+        VelocityModel::Constant(v) => {
+            o.insert("kind".to_string(), Json::Str("constant".to_string()));
+            o.insert("v".to_string(), Json::Num(*v as f64));
+        }
+        VelocityModel::Layered(layers) => {
+            o.insert("kind".to_string(), Json::Str("layered".to_string()));
+            o.insert(
+                "layers".to_string(),
+                Json::Arr(
+                    layers
+                        .iter()
+                        .map(|&(frac, v)| Json::Arr(vec![Json::Num(frac), Json::Num(v as f64)]))
+                        .collect(),
+                ),
+            );
+        }
+        VelocityModel::GradientZ { v0, k_per_m, h } => {
+            o.insert("kind".to_string(), Json::Str("gradient_z".to_string()));
+            o.insert("v0".to_string(), Json::Num(*v0 as f64));
+            o.insert("k_per_m".to_string(), Json::Num(*k_per_m as f64));
+            o.insert("h".to_string(), Json::Num(*h));
+        }
+    }
+    Json::Obj(o)
+}
+
+/// Inverse of [`model_to_json`].
+pub fn model_from_json(j: &Json) -> anyhow::Result<VelocityModel> {
+    match j.get("kind")?.as_str()? {
+        "constant" => Ok(VelocityModel::Constant(j.get("v")?.as_f64()? as f32)),
+        "layered" => {
+            let mut layers = Vec::new();
+            for pair in j.get("layers")?.as_arr()? {
+                let pair = pair.as_arr()?;
+                anyhow::ensure!(pair.len() == 2, "layered model: each layer is [frac, v]");
+                layers.push((pair[0].as_f64()?, pair[1].as_f64()? as f32));
+            }
+            Ok(VelocityModel::Layered(layers))
+        }
+        "gradient_z" => Ok(VelocityModel::GradientZ {
+            v0: j.get("v0")?.as_f64()? as f32,
+            k_per_m: j.get("k_per_m")?.as_f64()? as f32,
+            h: j.get("h")?.as_f64()?,
+        }),
+        other => anyhow::bail!("unknown velocity-model kind {other:?} in trace"),
+    }
+}
+
+fn pos_fields(o: &mut BTreeMap<String, Json>, pos: Dim3) {
+    o.insert("z".to_string(), Json::Num(pos.z as f64));
+    o.insert("y".to_string(), Json::Num(pos.y as f64));
+    o.insert("x".to_string(), Json::Num(pos.x as f64));
+}
+
+fn pos_from(j: &Json) -> anyhow::Result<Dim3> {
+    Ok(Dim3::new(j.get("z")?.as_usize()?, j.get("y")?.as_usize()?, j.get("x")?.as_usize()?))
+}
+
+fn f32_arr(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+fn f32_vec_from(j: &Json) -> anyhow::Result<Vec<f32>> {
+    j.as_arr()?.iter().map(|x| Ok(x.as_f64()? as f32)).collect()
+}
+
+impl Trace {
+    /// Emit the JSONL recording: one header line, then one line per
+    /// source and per receiver. Numbers round-trip exactly — f32
+    /// samples widen to f64 losslessly and `Json` emits the shortest
+    /// round-trip decimal — so a replay diff of 0.0 is achievable.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let mut h = BTreeMap::new();
+        h.insert("kind".to_string(), Json::Str(TRACE_KIND.to_string()));
+        h.insert("version".to_string(), Json::Num(TRACE_VERSION as f64));
+        h.insert("nz".to_string(), Json::Num(self.interior.z as f64));
+        h.insert("ny".to_string(), Json::Num(self.interior.y as f64));
+        h.insert("nx".to_string(), Json::Num(self.interior.x as f64));
+        h.insert("pml".to_string(), Json::Num(self.pml_width as f64));
+        h.insert("h".to_string(), Json::Num(self.h));
+        h.insert("dt".to_string(), Json::Num(self.dt));
+        h.insert("steps".to_string(), Json::Num(self.steps as f64));
+        h.insert("fuse".to_string(), Json::Num(self.fuse as f64));
+        h.insert("propagator".to_string(), Json::Str(self.propagator.clone()));
+        h.insert("model".to_string(), model_to_json(&self.model));
+        out.push_str(&Json::Obj(h).emit());
+        out.push('\n');
+        for s in &self.sources {
+            let mut o = BTreeMap::new();
+            o.insert("record".to_string(), Json::Str("source".to_string()));
+            pos_fields(&mut o, s.source.pos);
+            o.insert("f0".to_string(), Json::Num(s.source.f0));
+            o.insert("amplitude".to_string(), Json::Num(s.source.amplitude));
+            o.insert("amps".to_string(), f32_arr(&s.amps));
+            out.push_str(&Json::Obj(o).emit());
+            out.push('\n');
+        }
+        for r in &self.receivers {
+            let mut o = BTreeMap::new();
+            o.insert("record".to_string(), Json::Str("receiver".to_string()));
+            pos_fields(&mut o, r.pos);
+            o.insert("trace".to_string(), f32_arr(&r.trace));
+            out.push_str(&Json::Obj(o).emit());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL recording; the header line is validated (kind +
+    /// version) before any record line is interpreted.
+    pub fn from_jsonl(text: &str) -> anyhow::Result<Trace> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = Json::parse(
+            lines.next().ok_or_else(|| anyhow::anyhow!("empty trace (no header line)"))?,
+        )?;
+        let kind = header.get("kind")?.as_str()?;
+        anyhow::ensure!(kind == TRACE_KIND, "not a hostencil trace (kind {kind:?})");
+        let version = header.get("version")?.as_usize()?;
+        anyhow::ensure!(
+            version == TRACE_VERSION as usize,
+            "trace version {version} unsupported (this build reads version {TRACE_VERSION})"
+        );
+        let mut t = Trace {
+            interior: Dim3::new(
+                header.get("nz")?.as_usize()?,
+                header.get("ny")?.as_usize()?,
+                header.get("nx")?.as_usize()?,
+            ),
+            pml_width: header.get("pml")?.as_usize()?,
+            h: header.get("h")?.as_f64()?,
+            dt: header.get("dt")?.as_f64()?,
+            steps: header.get("steps")?.as_usize()?,
+            fuse: header.get("fuse")?.as_usize()?,
+            propagator: header.get("propagator")?.as_str()?.to_string(),
+            model: model_from_json(header.get("model")?)?,
+            sources: Vec::new(),
+            receivers: Vec::new(),
+        };
+        for line in lines {
+            let j = Json::parse(line)?;
+            match j.get("record")?.as_str()? {
+                "source" => t.sources.push(TraceSource {
+                    source: Source {
+                        pos: pos_from(&j)?,
+                        f0: j.get("f0")?.as_f64()?,
+                        amplitude: j.get("amplitude")?.as_f64()?,
+                    },
+                    amps: f32_vec_from(j.get("amps")?)?,
+                }),
+                "receiver" => t
+                    .receivers
+                    .push(TraceReceiver { pos: pos_from(&j)?, trace: f32_vec_from(j.get("trace")?)? }),
+                other => anyhow::bail!("unknown trace record kind {other:?}"),
+            }
+        }
+        anyhow::ensure!(!t.sources.is_empty(), "trace has no source records");
+        Ok(t)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_jsonl())
+            .map_err(|e| anyhow::anyhow!("cannot write trace {}: {e}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read trace {}: {e}", path.display()))?;
+        Self::from_jsonl(&text)
+    }
+}
+
+/// Max absolute difference between two equally-shaped sample sets
+/// (recorded vs replayed receiver traces). Errors on a shape mismatch
+/// instead of silently truncating the comparison.
+pub fn max_trace_diff(recorded: &[TraceReceiver], replayed: &[Vec<f32>]) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        recorded.len() == replayed.len(),
+        "receiver count mismatch: trace has {}, replay produced {}",
+        recorded.len(),
+        replayed.len()
+    );
+    let mut worst = 0.0f64;
+    for (r, p) in recorded.iter().zip(replayed) {
+        anyhow::ensure!(
+            r.trace.len() == p.len(),
+            "trace length mismatch at receiver {}: recorded {}, replayed {}",
+            r.pos,
+            r.trace.len(),
+            p.len()
+        );
+        for (&a, &b) in r.trace.iter().zip(p) {
+            worst = worst.max((a as f64 - b as f64).abs());
+        }
+    }
+    Ok(worst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_checkpoint() -> Checkpoint {
+        Checkpoint {
+            interior: Dim3::new(4, 5, 6),
+            pml_width: 2,
+            h: 10.0,
+            dt: 1.25e-3,
+            steps_done: 17,
+            launches: 119,
+            traces: vec![vec![0.0, -0.5, 0.25], vec![1.0e-7, 3.5]],
+            energy_log: vec![0.1, 0.4, 0.9],
+            u_pad: (0..24).map(|i| i as f32 * 0.5 - 3.0).collect(),
+            um_pad: (0..24).map(|i| (i as f32).sin()).collect(),
+        }
+    }
+
+    #[test]
+    fn fnv1a64_known_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_bitwise() {
+        let ck = sample_checkpoint();
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.interior, ck.interior);
+        assert_eq!(back.pml_width, ck.pml_width);
+        assert_eq!(back.h.to_bits(), ck.h.to_bits());
+        assert_eq!(back.dt.to_bits(), ck.dt.to_bits());
+        assert_eq!(back.steps_done, ck.steps_done);
+        assert_eq!(back.launches, ck.launches);
+        assert_eq!(back.traces, ck.traces);
+        assert_eq!(back.energy_log, ck.energy_log);
+        assert_eq!(back.u_pad, ck.u_pad);
+        assert_eq!(back.um_pad, ck.um_pad);
+        assert_eq!(back.state_digest(), ck.state_digest());
+    }
+
+    #[test]
+    fn checkpoint_rejects_corruption_truncation_and_bad_magic() {
+        let ck = sample_checkpoint();
+        let good = ck.to_bytes();
+
+        let mut flipped = good.clone();
+        flipped[40] ^= 0x01;
+        let err = Checkpoint::from_bytes(&flipped).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+
+        let err = Checkpoint::from_bytes(&good[..good.len() / 2]).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("truncated") || err.contains("too short"),
+            "{err}"
+        );
+
+        let mut wrong_magic = good.clone();
+        wrong_magic[0] = b'X';
+        let err = Checkpoint::from_bytes(&wrong_magic).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        // a future version must be refused, not misparsed
+        let mut future = good;
+        future[8] = 99; // version u32 LE low byte
+        // fix the checksum so the version check is what fires
+        let n = future.len();
+        let sum = fnv1a64(&future[..n - 8]);
+        future[n - 8..].copy_from_slice(&sum.to_le_bytes());
+        let err = Checkpoint::from_bytes(&future).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn checkpoint_save_load_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("hostencil_ckpt_test_{}.ckpt", std::process::id()));
+        let ck = sample_checkpoint();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(back.u_pad, ck.u_pad);
+        assert_eq!(back.state_digest(), ck.state_digest());
+    }
+
+    #[test]
+    fn state_digest_tracks_state() {
+        let ck = sample_checkpoint();
+        let mut other = ck.clone();
+        assert_eq!(ck.state_digest(), other.state_digest());
+        other.u_pad[3] += 1.0;
+        assert_ne!(ck.state_digest(), other.state_digest());
+        let mut stepped = ck.clone();
+        stepped.steps_done += 1;
+        assert_ne!(ck.state_digest(), stepped.state_digest());
+    }
+
+    #[test]
+    fn breaker_ignores_decaying_energy() {
+        let cfg = BreakerConfig { energy_window: 4, energy_ratio: 10.0, arm_step: Some(0), nan_budget: 0 };
+        let mut br = DivergenceBreaker::new(cfg, 0);
+        // healthy post-source energy: monotone non-increasing
+        let mut e = 1.0;
+        for step in 0..100 {
+            assert_eq!(br.observe(step, e), None, "decay must not trip (step {step})");
+            e *= 0.97;
+        }
+    }
+
+    #[test]
+    fn breaker_trips_on_windowed_growth() {
+        let cfg = BreakerConfig { energy_window: 4, energy_ratio: 10.0, arm_step: Some(0), nan_budget: 0 };
+        let mut br = DivergenceBreaker::new(cfg, 0);
+        let mut e = 1.0;
+        let mut tripped = None;
+        for step in 0..32 {
+            if let Some(kind) = br.observe(step, e) {
+                tripped = Some((kind, step));
+                break;
+            }
+            e *= 3.0; // 3^4 = 81 > ratio 10 across the window
+        }
+        let (kind, step) = tripped.expect("exponential growth must trip");
+        assert_eq!(kind, BreakerKind::EnergyGrowth);
+        // window fills over 4 samples; the first full-window comparison
+        // that sees >10x growth is only a few steps later
+        assert!(step >= 4 && step < 10, "tripped at {step}");
+    }
+
+    #[test]
+    fn breaker_stays_disarmed_before_arm_step() {
+        let cfg = BreakerConfig { energy_window: 2, energy_ratio: 2.0, arm_step: Some(50), nan_budget: 0 };
+        let mut br = DivergenceBreaker::new(cfg, 0);
+        assert_eq!(br.arm_step(), 50);
+        let mut e = 1.0;
+        for step in 0..50 {
+            assert_eq!(br.observe(step, e), None, "disarmed window must not trip");
+            e *= 10.0; // the Ricker-ramp analog: huge growth pre-arm
+        }
+        // armed now: growth within the window trips
+        let mut tripped = false;
+        for step in 50..60 {
+            if br.observe(step, e).is_some() {
+                tripped = true;
+                break;
+            }
+            e *= 10.0;
+        }
+        assert!(tripped);
+    }
+
+    #[test]
+    fn breaker_auto_arm_used_when_unset() {
+        let br = DivergenceBreaker::new(BreakerConfig::default(), 123);
+        assert_eq!(br.arm_step(), 123);
+        let br = DivergenceBreaker::new(
+            BreakerConfig { arm_step: Some(7), ..BreakerConfig::default() },
+            123,
+        );
+        assert_eq!(br.arm_step(), 7);
+    }
+
+    #[test]
+    fn nan_breaker_honors_budget() {
+        let cfg = BreakerConfig { energy_window: 4, energy_ratio: 1e3, arm_step: Some(0), nan_budget: 2 };
+        let mut br = DivergenceBreaker::new(cfg, 0);
+        assert_eq!(br.observe(0, f64::NAN), None);
+        assert_eq!(br.observe(1, f64::INFINITY), None);
+        assert_eq!(br.observe(2, f64::NAN), Some(BreakerKind::NanRate));
+        // budget 0 trips immediately
+        let mut strict = DivergenceBreaker::new(
+            BreakerConfig { nan_budget: 0, ..BreakerConfig::default() },
+            0,
+        );
+        assert_eq!(strict.observe(0, f64::NAN), Some(BreakerKind::NanRate));
+    }
+
+    #[test]
+    fn breaker_kind_names_are_label_safe() {
+        assert_eq!(BreakerKind::EnergyGrowth.name(), "energy_growth");
+        assert_eq!(BreakerKind::NanRate.name(), "nan_rate");
+    }
+
+    fn sample_trace() -> Trace {
+        Trace {
+            interior: Dim3::new(20, 22, 24),
+            pml_width: 4,
+            h: 10.0,
+            dt: 9.17e-4,
+            steps: 6,
+            fuse: 2,
+            propagator: "tf_s2".to_string(),
+            model: VelocityModel::Layered(vec![(0.0, 1800.0), (0.5, 3200.0)]),
+            sources: vec![TraceSource {
+                source: Source { pos: Dim3::new(10, 11, 12), f0: 15.0, amplitude: 1.0 },
+                amps: vec![0.0, 1.25e-3, -7.5e-4, 0.125, -0.25, 3.0e-9],
+            }],
+            receivers: vec![
+                TraceReceiver { pos: Dim3::new(6, 11, 12), trace: vec![0.0, 0.5, -0.125] },
+                TraceReceiver { pos: Dim3::new(6, 11, 18), trace: vec![1.0e-7, -2.5, 0.75] },
+            ],
+        }
+    }
+
+    #[test]
+    fn trace_roundtrips_through_jsonl() {
+        let t = sample_trace();
+        let back = Trace::from_jsonl(&t.to_jsonl()).unwrap();
+        assert_eq!(back.interior, t.interior);
+        assert_eq!(back.pml_width, t.pml_width);
+        assert_eq!(back.h.to_bits(), t.h.to_bits());
+        assert_eq!(back.dt.to_bits(), t.dt.to_bits());
+        assert_eq!(back.steps, t.steps);
+        assert_eq!(back.fuse, t.fuse);
+        assert_eq!(back.propagator, t.propagator);
+        assert_eq!(back.sources.len(), 1);
+        assert_eq!(back.sources[0].source.pos, t.sources[0].source.pos);
+        assert_eq!(back.sources[0].source.f0, t.sources[0].source.f0);
+        // bitwise: f32 -> f64 -> shortest-decimal -> f64 -> f32
+        assert_eq!(back.sources[0].amps, t.sources[0].amps);
+        assert_eq!(back.receivers.len(), 2);
+        assert_eq!(back.receivers[0].pos, t.receivers[0].pos);
+        assert_eq!(back.receivers[0].trace, t.receivers[0].trace);
+        assert_eq!(back.receivers[1].trace, t.receivers[1].trace);
+        match (&back.model, &t.model) {
+            (VelocityModel::Layered(a), VelocityModel::Layered(b)) => assert_eq!(a, b),
+            other => panic!("model variant changed in round trip: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn model_json_roundtrips_all_variants() {
+        let models = [
+            VelocityModel::Constant(2500.0),
+            VelocityModel::Layered(vec![(0.0, 1500.0), (0.45, 3200.0), (0.75, 4200.0)]),
+            VelocityModel::GradientZ { v0: 1600.0, k_per_m: 0.4, h: 10.0 },
+        ];
+        for m in &models {
+            let back = model_from_json(&model_to_json(m)).unwrap();
+            match (m, &back) {
+                (VelocityModel::Constant(a), VelocityModel::Constant(b)) => assert_eq!(a, b),
+                (VelocityModel::Layered(a), VelocityModel::Layered(b)) => assert_eq!(a, b),
+                (
+                    VelocityModel::GradientZ { v0: a0, k_per_m: a1, h: a2 },
+                    VelocityModel::GradientZ { v0: b0, k_per_m: b1, h: b2 },
+                ) => {
+                    assert_eq!(a0, b0);
+                    assert_eq!(a1, b1);
+                    assert_eq!(a2, b2);
+                }
+                other => panic!("variant changed: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trace_rejects_bad_headers_and_records() {
+        assert!(Trace::from_jsonl("").is_err());
+        assert!(Trace::from_jsonl("{\"kind\":\"other\",\"version\":1}").is_err());
+        let t = sample_trace();
+        let versioned = t.to_jsonl().replacen("\"version\":1", "\"version\":9", 1);
+        let err = Trace::from_jsonl(&versioned).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        let bad_record = format!(
+            "{}\n{{\"record\":\"mystery\"}}\n",
+            t.to_jsonl().lines().next().unwrap()
+        );
+        assert!(Trace::from_jsonl(&bad_record).is_err());
+    }
+
+    #[test]
+    fn max_trace_diff_reports_worst_sample_and_shape_errors() {
+        let recorded = vec![TraceReceiver { pos: Dim3::new(1, 2, 3), trace: vec![0.0, 1.0, -1.0] }];
+        let exact = vec![vec![0.0, 1.0, -1.0]];
+        assert_eq!(max_trace_diff(&recorded, &exact).unwrap(), 0.0);
+        let off = vec![vec![0.0, 1.5, -1.0]];
+        assert_eq!(max_trace_diff(&recorded, &off).unwrap(), 0.5);
+        assert!(max_trace_diff(&recorded, &[]).is_err());
+        assert!(max_trace_diff(&recorded, &[vec![0.0]]).is_err());
+    }
+}

@@ -81,6 +81,11 @@ pub struct Metrics {
     /// Code shape that produced the measured physics (propagator
     /// signature, e.g. `blocked3d:8x8x8`).
     pub propagator: String,
+    /// Max |resumed - uninterrupted| over the final wavefield when the
+    /// run exercised checkpoint -> restore -> continue (the
+    /// restart-consistency scenario); `None` when restart was not
+    /// exercised. Bitwise restart consistency means exactly 0.0.
+    pub restart_max_diff: Option<f64>,
     pub predicted: Option<PredictedPerf>,
 }
 
@@ -205,6 +210,7 @@ impl MetricsCollector {
                 / summary.wall.as_secs_f64().max(1e-12),
             propagator,
             energy_trace: energy,
+            restart_max_diff: None, // filled in by run_scenario_physics
             predicted: None,
         }
     }

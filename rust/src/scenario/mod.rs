@@ -36,9 +36,11 @@ pub use verdict::{evaluate_pass_fail, Criterion, Expectations, ScenarioResult, S
 use crate::config::RunConfig;
 use crate::coordinator::{Coordinator, Mode, RunOptions};
 use crate::grid::{Dim3, Domain};
+use crate::recovery::{BreakerConfig, Checkpoint};
 use crate::stencil;
 use crate::telemetry::{Registry, LATENCY_BOUNDS};
 use crate::wave::{self, Source, VelocityModel};
+use std::path::PathBuf;
 
 /// The scenario catalogue. Every entry is deterministic: same id, same
 /// physics, same verdict.
@@ -68,6 +70,16 @@ pub enum ScenarioId {
     /// Degenerate anisotropic tiny grid (single-digit extents, PML 2):
     /// decomposition and stencils must survive the smallest shapes.
     TinyGrid,
+    /// Finely laminated fast/slow medium (~3 planes per layer): each
+    /// cell is isotropic, but the long-wavelength response is
+    /// effectively anisotropic (Backus averaging) — internal multiples
+    /// stress layer lookup and the dt derivation.
+    AnisotropicMedia,
+    /// Checkpoint/restart gauntlet: the run interrupts itself mid-way,
+    /// pushes its state through the serialized snapshot format,
+    /// restores into a fresh coordinator, and must finish bitwise
+    /// identical to the uninterrupted run.
+    RestartConsistency,
 }
 
 /// A materialized scenario: run configuration, any extra sources, and
@@ -91,6 +103,8 @@ impl ScenarioId {
             ScenarioId::EnergyStability,
             ScenarioId::CflMarginStress,
             ScenarioId::TinyGrid,
+            ScenarioId::AnisotropicMedia,
+            ScenarioId::RestartConsistency,
         ]
     }
 
@@ -105,6 +119,8 @@ impl ScenarioId {
             ScenarioId::EnergyStability => "energy-stability",
             ScenarioId::CflMarginStress => "cfl-margin-stress",
             ScenarioId::TinyGrid => "tiny-grid",
+            ScenarioId::AnisotropicMedia => "anisotropic-media",
+            ScenarioId::RestartConsistency => "restart-consistency",
         }
     }
 
@@ -119,6 +135,8 @@ impl ScenarioId {
             ScenarioId::EnergyStability => "long run; energy must decay after the wavelet",
             ScenarioId::CflMarginStress => "dt 2.5x past CFL — expected HardFail",
             ScenarioId::TinyGrid => "degenerate 9x7x11 grid, PML width 2",
+            ScenarioId::AnisotropicMedia => "finely laminated fast/slow medium (effective anisotropy)",
+            ScenarioId::RestartConsistency => "checkpoint -> restore mid-run; must stay bitwise identical",
         }
     }
 
@@ -375,6 +393,61 @@ impl ScenarioId {
                     },
                 }
             }
+            ScenarioId::AnisotropicMedia => {
+                let n = Dim3::new(36, 32, 32);
+                // 12 alternating fast/slow laminae, ~3 planes each: the
+                // Backus-averaged long-wavelength medium is anisotropic
+                // even though every cell is isotropic
+                let layers: Vec<(f64, f32)> = (0..12)
+                    .map(|i| (i as f64 / 12.0, if i % 2 == 0 { 2000.0 } else { 3600.0 }))
+                    .collect();
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        5,
+                        10.0,
+                        VelocityModel::Layered(layers),
+                        1.0,
+                        180,
+                        src(Dim3::new(9, 16, 16), 22.0, 1.0),
+                        shallow_line(n, 5),
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        // internal multiples keep energy bouncing between
+                        // laminae longer than a 3-layer reflector does
+                        max_leakage: 0.8,
+                        max_final_fraction: 0.95,
+                        require_receivers: true,
+                        ..Expectations::default()
+                    },
+                }
+            }
+            ScenarioId::RestartConsistency => {
+                let n = Dim3::new(28, 28, 28);
+                ScenarioSpec {
+                    config: spec(
+                        n,
+                        5,
+                        10.0,
+                        VelocityModel::Constant(2400.0),
+                        1.0,
+                        160,
+                        src(Dim3::new(14, 14, 14), 25.0, 1.0),
+                        shallow_line(n, 5),
+                    ),
+                    extra_sources: vec![],
+                    expectations: Expectations {
+                        min_peak_abs: 1e-4,
+                        max_leakage: 0.7,
+                        max_final_fraction: 0.9,
+                        require_receivers: true,
+                        require_restart_consistency: true,
+                        ..Expectations::default()
+                    },
+                }
+            }
         }
     }
 }
@@ -411,6 +484,19 @@ pub struct RunnerOptions {
     /// the same series). When absent the physics still runs with a
     /// private registry so per-batch wall time lands in the metrics.
     pub telemetry: Option<Registry>,
+    /// Checkpoint cadence in steps (0 = disabled; `--checkpoint-every`
+    /// on the CLI). Needs `checkpoint_path` to actually write.
+    pub checkpoint_every: usize,
+    /// Snapshot destination for cadence checkpoints and breaker-trip
+    /// dumps (`--checkpoint-path` on the CLI).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Restore the run from this snapshot before stepping and execute
+    /// only the remaining step budget (`--restore` on the CLI).
+    pub restore: Option<PathBuf>,
+    /// Divergence circuit breakers to arm (`--breakers` on the CLI):
+    /// a tripped run soft-aborts with a checkpoint instead of stepping
+    /// a dead wavefield to the budget.
+    pub breakers: Option<BreakerConfig>,
 }
 
 impl RunnerOptions {
@@ -454,39 +540,50 @@ pub fn run_scenario_physics(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Res
 
     let propagator = opts.physics_propagator();
     let interior = cfg.domain.interior;
-    let v = cfg.model.build(interior);
-    let v_max_grid = v.as_slice().iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
-    let eta = wave::eta_profile(&cfg.domain, v_max_grid);
-    let mut coord = Coordinator::new(
-        None,
-        cfg.domain,
-        Mode::Golden,
-        &propagator,
-        &cfg.pml_variant,
-        v,
-        eta,
-        cfg.source,
-        cfg.receivers.clone(),
-    )?;
-    coord.set_cpu_threads(opts.cpu_threads);
-    coord.set_shards(opts.shards.max(1))?;
+    let v_max_grid =
+        cfg.model.build(interior).as_slice().iter().fold(0.0f32, |a, &b| a.max(b)) as f64;
+    // the restart-consistency scenario needs identically-configured
+    // twin coordinators, so construction lives in a closure
+    let mk_coord = || -> anyhow::Result<Coordinator<'static>> {
+        let v = cfg.model.build(interior);
+        let eta = wave::eta_profile(&cfg.domain, v_max_grid);
+        let mut c = Coordinator::new(
+            None,
+            cfg.domain,
+            Mode::Golden,
+            &propagator,
+            &cfg.pml_variant,
+            v,
+            eta,
+            cfg.source,
+            cfg.receivers.clone(),
+        )?;
+        c.set_cpu_threads(opts.cpu_threads);
+        c.set_shards(opts.shards.max(1))?;
+        for s in &spec.extra_sources {
+            c.add_source(*s)?;
+        }
+        Ok(c)
+    };
+    let mut coord = mk_coord()?;
     // every physics run is instrumented: with a caller-supplied
     // registry when given (CLI --telemetry), a private one otherwise,
     // so the batch-latency histogram always feeds the metrics
     let reg = opts.telemetry.clone().unwrap_or_default();
     coord.set_telemetry(&reg);
-    for s in &spec.extra_sources {
-        coord.add_source(*s)?;
+    coord.set_checkpointing(opts.checkpoint_every, opts.checkpoint_path.clone());
+    coord.set_breakers(opts.breakers);
+    let mut steps_to_run = steps;
+    if let Some(path) = &opts.restore {
+        coord.restore(&Checkpoint::load(path)?)?;
+        steps_to_run = steps.saturating_sub(coord.steps_done());
     }
     let signature = coord.propagator_signature().expect("Golden mode has a propagator");
 
+    let ropts = RunOptions { halt_on_non_finite: false, sample_every: opts.sample_every };
     let mut collector = MetricsCollector::new(cfg.domain);
-    let summary = coord.run_observed(
-        steps,
-        RunOptions { halt_on_non_finite: false, sample_every: opts.sample_every },
-        Some(&mut collector),
-    )?;
-    let mut metrics = collector.finish(steps, &summary, v_max_grid, signature);
+    let summary = coord.run_observed(steps_to_run, ropts, Some(&mut collector))?;
+    let mut metrics = collector.finish(steps_to_run, &summary, v_max_grid, signature);
     metrics.batch_wall_ms = reg
         .histogram(
             "hostencil_batch_latency_seconds",
@@ -495,6 +592,27 @@ pub fn run_scenario_physics(id: ScenarioId, opts: &RunnerOptions) -> anyhow::Res
         )
         .sum()
         * 1e3;
+
+    // the restart-consistency scenario interrupts a twin of the run
+    // above mid-way, pushes its state through the serialized snapshot
+    // format, restores into a fresh coordinator, finishes the budget,
+    // and records the max deviation from the uninterrupted oracle —
+    // bitwise identity means exactly 0.0
+    if matches!(id, ScenarioId::RestartConsistency) && opts.restore.is_none() {
+        let k = (steps_to_run / 2).max(1);
+        let mut first = mk_coord()?;
+        first.run_observed(k, ropts, None)?;
+        let snapshot = Checkpoint::from_bytes(&first.checkpoint().to_bytes())?;
+        let mut resumed = mk_coord()?;
+        resumed.restore(&snapshot)?;
+        resumed.run_observed(steps_to_run - k, ropts, None)?;
+        let mut worst = resumed.wavefield().max_abs_diff(&coord.wavefield()) as f64;
+        if worst == 0.0 && resumed.state_digest() != coord.state_digest() {
+            // u matches but um or the step cursor drifted
+            worst = f64::MIN_POSITIVE;
+        }
+        metrics.restart_max_diff = Some(worst);
+    }
     Ok(metrics)
 }
 
@@ -629,6 +747,54 @@ mod tests {
         let mu = run_scenario_physics(ScenarioId::TinyGrid, &unfused).unwrap();
         assert_eq!(mf.energy_trace.len(), mu.energy_trace.len());
         assert_eq!(mf.energy_trace.len(), 80);
+    }
+
+    #[test]
+    fn restart_scenario_proves_bitwise_continuation() {
+        let opts = RunnerOptions { steps_override: Some(60), ..Default::default() };
+        let m = run_scenario_physics(ScenarioId::RestartConsistency, &opts).unwrap();
+        assert_eq!(m.restart_max_diff, Some(0.0));
+        // sharded restart gathers slabs through the same format and
+        // must stay bitwise too
+        let sharded =
+            RunnerOptions { steps_override: Some(60), shards: 2, ..Default::default() };
+        let ms = run_scenario_physics(ScenarioId::RestartConsistency, &sharded).unwrap();
+        assert_eq!(ms.restart_max_diff, Some(0.0));
+        // other scenarios do not exercise restart
+        let mt = run_scenario_physics(ScenarioId::TinyGrid, &RunnerOptions::default()).unwrap();
+        assert_eq!(mt.restart_max_diff, None);
+        // and the verdict wires the measurement into its own criterion
+        let run = run_scenario(ScenarioId::RestartConsistency, &opts).unwrap();
+        assert!(run
+            .result
+            .criteria
+            .iter()
+            .any(|c| c.name == "restart_consistent" && c.passed));
+    }
+
+    #[test]
+    fn default_breakers_stay_quiet_on_healthy_scenarios() {
+        // false-positive gate: an armed energy-growth breaker must not
+        // clip any passing scenario short, unsharded or 2-shard (the
+        // EnergyStability 400-step run arms well inside its budget, so
+        // the ring comparison genuinely runs there)
+        for id in ScenarioId::all().into_iter().filter(|i| !i.is_stress()) {
+            for shards in [1usize, 2] {
+                let opts = RunnerOptions {
+                    breakers: Some(BreakerConfig::default()),
+                    shards,
+                    ..Default::default()
+                };
+                let m = run_scenario_physics(id, &opts).unwrap();
+                assert_eq!(
+                    m.steps_completed,
+                    m.steps_requested,
+                    "breaker tripped {} (shards={shards})",
+                    id.name()
+                );
+                assert!(m.first_non_finite.is_none(), "{}", id.name());
+            }
+        }
     }
 
     #[test]

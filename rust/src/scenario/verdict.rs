@@ -102,6 +102,10 @@ pub struct Expectations {
     pub check_absorption: bool,
     /// Whether every receiver must have recorded signal.
     pub require_receivers: bool,
+    /// Whether the run must carry a checkpoint->restore->compare
+    /// measurement (`Metrics::restart_max_diff`) proving bitwise
+    /// restart consistency (the restart-consistency scenario).
+    pub require_restart_consistency: bool,
 }
 
 impl Default for Expectations {
@@ -113,6 +117,7 @@ impl Default for Expectations {
             max_final_fraction: 0.9,
             check_absorption: true,
             require_receivers: false,
+            require_restart_consistency: false,
         }
     }
 }
@@ -233,6 +238,22 @@ pub fn evaluate_pass_fail(m: &Metrics, exp: &Expectations) -> ScenarioResult {
     };
     push("throughput_model", thr_ok, Severity::Soft, thr_detail);
 
+    // 9. restart_consistent (hard): when the run exercised
+    //    checkpoint -> restore -> continue, the resumed state must be
+    //    bitwise identical to the uninterrupted one. Vacuously true
+    //    for scenarios that do not exercise restart.
+    let (rc_ok, rc_detail) = match (exp.require_restart_consistency, m.restart_max_diff) {
+        (false, None) => (true, "restart not exercised by this scenario".to_string()),
+        (true, None) => {
+            (false, "restart required but the run recorded no comparison".to_string())
+        }
+        (_, Some(d)) => (
+            d == 0.0,
+            format!("max |resumed - uninterrupted| = {d:.3e} (bitwise identity required)"),
+        ),
+    };
+    push("restart_consistent", rc_ok, Severity::Hard, rc_detail);
+
     ScenarioResult::from_criteria(criteria)
 }
 
@@ -260,9 +281,11 @@ mod tests {
             first_non_finite: None,
             receiver_peak: vec![0.2, 0.3],
             wall_ms: 12.0,
+            batch_wall_ms: 0.0,
             measured_mpts_per_sec: 1.0,
             measured_steps_per_sec: 8000.0,
             propagator: "naive".to_string(),
+            restart_max_diff: None,
             predicted: None,
         }
     }
@@ -271,7 +294,7 @@ mod tests {
     fn healthy_metrics_pass_every_criterion() {
         let r = evaluate_pass_fail(&healthy(), &Expectations::default());
         assert_eq!(r.overall, Verdict::Pass, "failed: {:?}", r.failed());
-        assert_eq!(r.criteria.len(), 8);
+        assert_eq!(r.criteria.len(), 9);
     }
 
     #[test]
@@ -324,6 +347,30 @@ mod tests {
         let r = evaluate_pass_fail(&m, &Expectations::default());
         assert_eq!(r.overall, Verdict::SoftFail);
         assert!(r.failed().iter().any(|c| c.name == "throughput_model"));
+    }
+
+    #[test]
+    fn restart_criterion_gates_on_bitwise_identity() {
+        // not exercised, not required: vacuous pass
+        let r = evaluate_pass_fail(&healthy(), &Expectations::default());
+        assert!(r.criteria.iter().any(|c| c.name == "restart_consistent" && c.passed));
+
+        // required but the run never compared: hard fail
+        let exp = Expectations { require_restart_consistency: true, ..Expectations::default() };
+        let r = evaluate_pass_fail(&healthy(), &exp);
+        assert_eq!(r.overall, Verdict::HardFail);
+        assert!(r.failed().iter().any(|c| c.name == "restart_consistent"));
+
+        // compared and bitwise identical: pass
+        let mut m = healthy();
+        m.restart_max_diff = Some(0.0);
+        let r = evaluate_pass_fail(&m, &exp);
+        assert_eq!(r.overall, Verdict::Pass, "failed: {:?}", r.failed());
+
+        // any nonzero diff is a hard fail, required or not
+        m.restart_max_diff = Some(1.0e-7);
+        let r = evaluate_pass_fail(&m, &Expectations::default());
+        assert_eq!(r.overall, Verdict::HardFail);
     }
 
     #[test]

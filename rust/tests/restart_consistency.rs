@@ -1,0 +1,156 @@
+//! Integration: checkpoint/restart must be *bitwise invisible* to the
+//! physics. A run interrupted at step k, snapshotted through the
+//! serialized byte format (or the on-disk file), and resumed in a
+//! fresh process-equivalent coordinator must finish with exactly the
+//! wavefield, energy log, and receiver traces of the uninterrupted
+//! run — for the unfused propagator, both fused degrees, and the
+//! sharded engine. This is the enforcement of the recovery contract
+//! (docs/OPERATIONS.md) at the public-API level.
+
+use hostencil::coordinator::{Coordinator, Mode, RunOptions};
+use hostencil::grid::{Dim3, Domain};
+use hostencil::recovery::Checkpoint;
+use hostencil::stencil;
+use hostencil::wave::{self, Source, VelocityModel};
+
+/// A layered-model coordinator with an off-center source and two
+/// receivers, so restart has non-trivial traces and a z-varying medium
+/// to disagree about if the snapshot were lossy.
+fn coordinator(variant: &str, interior: Dim3, threads: usize) -> Coordinator<'static> {
+    let h = 10.0;
+    let v_max = 3000.0f64;
+    let domain = Domain::new(interior, 4, h, stencil::cfl_dt(h, v_max)).unwrap();
+    let model = VelocityModel::Layered(vec![(0.0, 2000.0), (0.4, 2600.0), (0.7, 3000.0)]);
+    let v = model.build(interior);
+    let eta = wave::eta_profile(&domain, v_max);
+    let (nz, ny, nx) = (interior.z, interior.y, interior.x);
+    let src = Source { pos: Dim3::new(nz / 3, ny / 2, nx / 2), f0: 18.0, amplitude: 1.0 };
+    let recv = vec![
+        Dim3::new(2 * nz / 3, ny / 2, nx / 2),
+        Dim3::new(nz / 2, ny / 3, 2 * nx / 3),
+    ];
+    let mut c =
+        Coordinator::new(None, domain, Mode::Golden, variant, "gmem", v, eta, src, recv).unwrap();
+    c.set_cpu_threads(threads);
+    c
+}
+
+/// Run `steps` uninterrupted; run the same configuration to step `k`,
+/// snapshot through the serialized byte format, restore into a fresh
+/// coordinator, finish, and demand bitwise agreement on everything
+/// observable.
+fn assert_restart_bitwise(variant: &str, interior: Dim3, shards: usize, k: usize, steps: usize) {
+    let label = format!("{variant} {interior:?} x{shards} split at {k}");
+    let opts = RunOptions::default();
+
+    let mut full = coordinator(variant, interior, 2);
+    full.set_shards(shards).unwrap();
+    let oracle = full.run_observed(steps, opts, None).unwrap();
+
+    let mut first = coordinator(variant, interior, 2);
+    first.set_shards(shards).unwrap();
+    first.run_observed(k, opts, None).unwrap();
+    // round-trip the snapshot through the wire format, as a real
+    // restart would — not just a clone of in-memory state
+    let ck = Checkpoint::from_bytes(&first.checkpoint().to_bytes()).expect("snapshot roundtrip");
+    assert_eq!(ck.steps_done as usize, k, "{label}: snapshot step cursor");
+
+    let mut resumed = coordinator(variant, interior, 2);
+    resumed.set_shards(shards).unwrap();
+    resumed.restore(&ck).unwrap();
+    let got = resumed.run_observed(steps - k, opts, None).unwrap();
+
+    assert!(oracle.final_max_abs > 0.0, "{label}: wave must have propagated");
+    assert_eq!(
+        resumed.wavefield().max_abs_diff(&full.wavefield()),
+        0.0,
+        "{label}: resumed wavefield must be bit-identical"
+    );
+    assert_eq!(
+        resumed.state_digest(),
+        full.state_digest(),
+        "{label}: state digest (um + step cursor) diverged"
+    );
+    assert_eq!(got.traces, oracle.traces, "{label}: receiver traces must splice seamlessly");
+    assert_eq!(got.energy_log, oracle.energy_log, "{label}: per-batch energy log");
+    assert_eq!(
+        got.final_energy.to_bits(),
+        oracle.final_energy.to_bits(),
+        "{label}: final energy"
+    );
+}
+
+#[test]
+fn unfused_restart_is_bitwise() {
+    // split at a step that is *not* a batch-friendly round number
+    assert_restart_bitwise("naive", Dim3::new(20, 14, 14), 1, 7, 20);
+}
+
+#[test]
+fn fused_restarts_are_bitwise_at_batch_boundaries() {
+    // the checkpoint cursor always sits on a batch boundary (snapshots
+    // are taken between observed batches), so k must be a multiple of
+    // the fusion degree for the interrupted leg
+    assert_restart_bitwise("tf_s2", Dim3::new(20, 14, 14), 1, 8, 20);
+    assert_restart_bitwise("tf_s4", Dim3::new(20, 14, 14), 1, 8, 20);
+}
+
+#[test]
+fn sharded_restart_is_bitwise() {
+    // the sharded engine gathers into the global buffers at batch
+    // boundaries, so a snapshot taken mid-run restores into either a
+    // sharded or unsharded continuation; keep shards on both legs here
+    assert_restart_bitwise("tf_s2", Dim3::new(25, 14, 14), 2, 8, 20);
+}
+
+#[test]
+fn restart_crosses_the_shard_boundary() {
+    // snapshot a *sharded* run, resume it *unsharded*: the snapshot is
+    // the global gathered state, so the decomposition must not matter
+    let interior = Dim3::new(25, 14, 14);
+    let opts = RunOptions::default();
+
+    let mut full = coordinator("naive", interior, 2);
+    let oracle = full.run_observed(18, opts, None).unwrap();
+
+    let mut sharded = coordinator("naive", interior, 2);
+    sharded.set_shards(2).unwrap();
+    sharded.run_observed(9, opts, None).unwrap();
+    let ck = Checkpoint::from_bytes(&sharded.checkpoint().to_bytes()).unwrap();
+
+    let mut resumed = coordinator("naive", interior, 2);
+    resumed.restore(&ck).unwrap();
+    let got = resumed.run_observed(9, opts, None).unwrap();
+
+    assert_eq!(resumed.wavefield().max_abs_diff(&full.wavefield()), 0.0);
+    assert_eq!(resumed.state_digest(), full.state_digest());
+    assert_eq!(got.traces, oracle.traces);
+}
+
+#[test]
+fn on_disk_snapshot_round_trips_and_rejects_corruption() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("hostencil_restart_test_{}.ckpt", std::process::id()));
+
+    let mut first = coordinator("naive", Dim3::new(20, 14, 14), 1);
+    first.run_observed(10, RunOptions::default(), None).unwrap();
+    let ck = first.checkpoint();
+    ck.save(&path).unwrap();
+
+    // the atomic-write staging file must not linger
+    assert!(!path.with_extension("ckpt.tmp").exists(), "staging file left behind");
+
+    let loaded = Checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.steps_done, 10);
+    assert_eq!(loaded.state_digest(), ck.state_digest());
+
+    // flip one payload byte: the checksum must reject the file
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = Checkpoint::load(&path).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+
+    std::fs::remove_file(&path).ok();
+}

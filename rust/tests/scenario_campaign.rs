@@ -71,6 +71,10 @@ fn campaign_matrix_runs_in_parallel_and_aggregates() {
         machines: vec!["v100".to_string()],
         steps_scale: Some(0.5),
         threads: 4,
+        sample_every: 0,
+        shards: 1,
+        serial_fraction: None,
+        telemetry: None,
     };
     let report = run_campaign(&spec);
     assert_eq!(report.cells.len(), 4);
@@ -110,6 +114,10 @@ fn campaign_json_is_parseable_and_round_trips() {
         machines: vec!["v100".to_string()],
         steps_scale: Some(0.5),
         threads: 2,
+        sample_every: 0,
+        shards: 1,
+        serial_fraction: None,
+        telemetry: None,
     };
     let report = run_campaign(&spec);
     let j = report.to_json();
@@ -140,6 +148,10 @@ fn campaign_single_thread_matches_parallel() {
         machines: vec!["v100".to_string(), "nvs510".to_string()],
         steps_scale: Some(0.5),
         threads,
+        sample_every: 0,
+        shards: 1,
+        serial_fraction: None,
+        telemetry: None,
     };
     let serial = run_campaign(&mk(1));
     let parallel = run_campaign(&mk(2));

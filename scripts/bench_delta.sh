@@ -18,6 +18,11 @@
 #                  (`bench --shard-sweep`): steady-state sharded
 #                  steps/sec per z-slab shard count at fuse 2 with
 #                  speedups vs the 1-shard control (docs/SHARDING.md)
+#   BENCH_6.json — the working tree's checkpoint-cadence sweep
+#                  (`bench --checkpoint-sweep`): steady-state fuse-2
+#                  steps/sec per snapshot cadence with the overhead of
+#                  each cadence vs the checkpointing-off control
+#                  (docs/OPERATIONS.md)
 #   BENCH_1.prom — the head run's Prometheus telemetry exposition
 #                  (pool occupancy, tiles claimed, sweep latency
 #                  histograms — see docs/METRICS.md)
@@ -28,7 +33,8 @@
 #   ./scripts/bench_delta.sh [baseline-ref]
 #
 # Honors HOSTENCIL_BENCH_SAMPLES / HOSTENCIL_BENCH_WARMUP and
-# BENCH_SIZE / BENCH_STEPS / BENCH_SWEEP / BENCH_FUSE / BENCH_SHARDS.
+# BENCH_SIZE / BENCH_STEPS / BENCH_SWEEP / BENCH_FUSE / BENCH_SHARDS /
+# BENCH_CKPT.
 set -euo pipefail
 
 BASE_REF="${1:-HEAD~1}"
@@ -37,6 +43,7 @@ STEPS="${BENCH_STEPS:-6}"
 SWEEP="${BENCH_SWEEP:-1,2,4,8}"
 FUSE="${BENCH_FUSE:-1,2,4}"
 SHARDS="${BENCH_SHARDS:-1,2,4}"
+CKPT="${BENCH_CKPT:-0,8,1}"
 OUT_DIR="$(pwd)"
 
 if ! git rev-parse --verify --quiet "$BASE_REF^{commit}" >/dev/null; then
@@ -60,16 +67,17 @@ echo "== baseline $(git rev-parse --short "$BASE_REF") -> BENCH_0.json"
 # One head-side run yields the matrix (cases), the pool sweep
 # (thread_sweep + scaling_model), the fusion sweep (fuse_sweep), the
 # scalar-vs-SIMD row sweep (simd_sweep — the head build carries
-# `--features simd` so the dispatched leg is the wide kernel) and the
-# shard scaling sweep (shard_sweep); BENCH_2..5 are split out of
-# BENCH_1's JSON below instead of re-benching the whole matrix again.
-echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE, simd sweep, shard sweep $SHARDS) -> BENCH_1/2/3/4/5.json + BENCH_1.prom"
+# `--features simd` so the dispatched leg is the wide kernel), the
+# shard scaling sweep (shard_sweep) and the checkpoint-cadence sweep
+# (checkpoint_sweep); BENCH_2..6 are split out of BENCH_1's JSON below
+# instead of re-benching the whole matrix again.
+echo "== working tree (+ pool sweep $SWEEP, fusion sweep $FUSE, simd sweep, shard sweep $SHARDS, checkpoint sweep $CKPT) -> BENCH_1/2/3/4/5/6.json + BENCH_1.prom"
 cargo run --release --features simd -p hostencil -- bench \
   --size "$SIZE" --steps "$STEPS" --thread-sweep "$SWEEP" --fuse "$FUSE" --simd-sweep \
-  --shard-sweep "$SHARDS" \
+  --shard-sweep "$SHARDS" --checkpoint-sweep "$CKPT" \
   --json "$OUT_DIR/BENCH_1.json" --telemetry "$OUT_DIR/BENCH_1.prom"
 
-python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" "$OUT_DIR/BENCH_4.json" "$OUT_DIR/BENCH_5.json" <<'EOF'
+python3 - "$OUT_DIR/BENCH_0.json" "$OUT_DIR/BENCH_1.json" "$OUT_DIR/BENCH_2.json" "$OUT_DIR/BENCH_3.json" "$OUT_DIR/BENCH_4.json" "$OUT_DIR/BENCH_5.json" "$OUT_DIR/BENCH_6.json" <<'EOF'
 import json, sys
 
 def rates(path):
@@ -121,6 +129,15 @@ bench5["shard_sweep"] = shard
 with open(sys.argv[6], "w") as f:
     json.dump(bench5, f, indent=1)
 
+# BENCH_6: the checkpoint-cadence overhead sweep (fuse 2, snapshot
+# every N steps vs the cadence-0 off control), same treatment
+ckpt = head.pop("checkpoint_sweep", [])
+bench6 = {k: head[k] for k in meta_keys if k in head}
+bench6["kind"] = "hostencil-bench-checkpoint-sweep"
+bench6["checkpoint_sweep"] = ckpt
+with open(sys.argv[7], "w") as f:
+    json.dump(bench6, f, indent=1)
+
 # rewrite BENCH_1 without the sweeps it just donated, so the committed
 # matrix artifact does not duplicate BENCH_2/BENCH_3's contents
 with open(sys.argv[2], "w") as f:
@@ -168,4 +185,11 @@ if shard:
     for r in shard:
         sp = f"{r['speedup_vs_single']:6.2f}x" if "speedup_vs_single" in r else "      -"
         print(f"shards={int(r['shards']):<3}{r['steps_per_sec_best']:>10.1f} steps/s{sp:>10}")
+
+if ckpt:
+    print(f"\ncheckpoint cadence (fuse 2; overhead vs the cadence-off control):")
+    for r in ckpt:
+        ov = f"{100.0 * r['overhead_vs_off']:6.2f}%" if "overhead_vs_off" in r else "      -"
+        label = "off" if int(r["every"]) == 0 else str(int(r["every"]))
+        print(f"every={label:<4}{r['steps_per_sec_best']:>10.1f} steps/s  overhead{ov:>9}")
 EOF
