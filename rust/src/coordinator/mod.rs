@@ -25,9 +25,11 @@
 //!   `rust/tests/zero_alloc.rs`).
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::fault::{FaultKind, FaultPlan, FaultSite};
 use crate::grid::{decompose, Dim3, Domain, Field3, Region};
 use crate::json::Json;
 use crate::recovery::{self, BreakerConfig, BreakerKind, Checkpoint, DivergenceBreaker, SoftAbort};
@@ -114,8 +116,10 @@ struct CoordTelemetry {
     ckpt_bytes: Counter,
     ckpt_last_step: Gauge,
     ckpt_latency: Histogram,
+    ckpt_failures: Counter,
     breaker_energy_trips: Counter,
     breaker_nan_trips: Counter,
+    breaker_halo_trips: Counter,
 }
 
 /// Summary of a completed run.
@@ -211,6 +215,18 @@ pub struct Coordinator<'e> {
     /// breaker-trip snapshots, independent of the cadence.
     checkpoint_every: usize,
     checkpoint_path: Option<PathBuf>,
+    /// Retention-ring depth at `checkpoint_path` (1 = the classic
+    /// single overwritten snapshot; K keeps the K newest, rotated
+    /// atomically before every write).
+    checkpoint_keep: usize,
+    /// Armed deterministic fault plan (None = every seam untouched).
+    /// Threaded into the sharded engine on its next lazy build and
+    /// consulted directly for checkpoint/restore I/O faults.
+    faults: Option<Arc<FaultPlan>>,
+    /// Per-exchange halo deadline override for the sharded engine
+    /// (None = the engine default; tests and the chaos harness shrink
+    /// it so injected stalls escalate quickly).
+    halo_deadline: Option<Duration>,
     /// Divergence circuit breakers for observed runs (None = the
     /// legacy non-finite watchdog alone owns divergence handling).
     breaker_cfg: Option<BreakerConfig>,
@@ -332,6 +348,9 @@ impl<'e> Coordinator<'e> {
             telemetry: None,
             checkpoint_every: 0,
             checkpoint_path: None,
+            checkpoint_keep: 1,
+            faults: None,
+            halo_deadline: None,
             breaker_cfg: None,
             soft_abort: None,
         })
@@ -383,6 +402,10 @@ impl<'e> Coordinator<'e> {
                 "Wall-clock latency of one checkpoint serialize + atomic write.",
                 &LATENCY_BOUNDS,
             ),
+            ckpt_failures: reg.counter(
+                "hostencil_checkpoint_failures_total",
+                "Cadence checkpoint writes that failed (run kept alive; the ring still holds the last good snapshot).",
+            ),
             breaker_energy_trips: reg.counter_with(
                 "hostencil_breaker_trips_total",
                 "Divergence circuit-breaker trips, by breaker kind.",
@@ -393,7 +416,15 @@ impl<'e> Coordinator<'e> {
                 "Divergence circuit-breaker trips, by breaker kind.",
                 &[("kind", "nan_rate")],
             ),
+            breaker_halo_trips: reg.counter_with(
+                "hostencil_breaker_trips_total",
+                "Divergence circuit-breaker trips, by breaker kind.",
+                &[("kind", "halo_stall")],
+            ),
         });
+        if let (Some(f), Some(tel)) = (&self.faults, &self.telemetry) {
+            f.register_telemetry(&tel.registry);
+        }
     }
 
     /// The attached telemetry registry, if any.
@@ -565,7 +596,13 @@ impl<'e> Coordinator<'e> {
     /// global padded pair — so receiver/energy recording, observers,
     /// and the non-finite watchdog read the same state an unsharded
     /// run produces, bit-identically.
-    fn step_sharded(&mut self, b: usize) -> anyhow::Result<()> {
+    ///
+    /// Returns `Ok(Some(err))` when the halo exchange exhausted its
+    /// retry budget: the batch never became observable (the global
+    /// padded pair still holds the pre-batch state, nothing was
+    /// gathered or counted), so the caller can checkpoint restorable
+    /// state and soft-abort.
+    fn step_sharded(&mut self, b: usize) -> anyhow::Result<Option<crate::shard::ExchangeError>> {
         debug_assert!(b >= 1 && b <= self.fuse.max(1));
         if self.shard.is_none() {
             let mut engine = ShardedEngine::new(
@@ -578,6 +615,14 @@ impl<'e> Coordinator<'e> {
                 self.telemetry.as_ref().map(|t| &t.registry),
             )?;
             engine.load(&self.u_pad, &self.um_pad);
+            // deadline before faults: the injected stall length is
+            // derived from the deadline at arming time
+            if let Some(d) = self.halo_deadline {
+                engine.set_halo_deadline(d);
+            }
+            if let Some(f) = &self.faults {
+                engine.set_faults(f);
+            }
             self.shard = Some(engine);
         }
         self.fused_pos.clear();
@@ -593,11 +638,17 @@ impl<'e> Coordinator<'e> {
             }
         }
         let engine = self.shard.as_mut().expect("built above");
-        engine.advance_batch(&SourceBatch {
+        if let Err(e) = engine.advance_batch(&SourceBatch {
             positions: &self.fused_pos,
             amps: &self.fused_amps,
             n_steps: b,
-        });
+        }) {
+            // the shard buffers may hold a half-exchanged batch; drop
+            // the engine so any later resume rebuilds from the intact
+            // global pair
+            self.shard = None;
+            return Ok(Some(e));
+        }
         engine.gather_into(&mut self.u_pad, &mut self.um_pad);
         // launch bookkeeping: one logical launch per shard per
         // (virtual) step — the sharded analog of one per region
@@ -684,6 +735,35 @@ impl<'e> Coordinator<'e> {
     pub fn set_checkpointing(&mut self, every: usize, path: Option<PathBuf>) {
         self.checkpoint_every = every;
         self.checkpoint_path = path;
+    }
+
+    /// Retention-ring depth at the checkpoint path: keep the `keep`
+    /// newest snapshots (`path`, `path.1`, ... — rotated atomically
+    /// before every write). Clamped to >= 1; the CLI rejects 0 by name.
+    pub fn set_checkpoint_keep(&mut self, keep: usize) {
+        self.checkpoint_keep = keep.max(1);
+    }
+
+    /// Arm a deterministic fault plan for subsequent runs: halo/pool
+    /// specs ride into the sharded engine on its next lazy build, and
+    /// checkpoint/restore I/O consults the plan directly. Registers
+    /// the `hostencil_fault_injected_total` series if telemetry is
+    /// already attached (and [`Coordinator::set_telemetry`] registers
+    /// it for plans armed first).
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.shard = None; // rebuild so the engine arms its seams
+        if let Some(tel) = &self.telemetry {
+            faults.register_telemetry(&tel.registry);
+        }
+        self.faults = Some(faults);
+    }
+
+    /// Override the sharded engine's per-exchange halo deadline (tests
+    /// and the chaos harness shrink it so injected stalls escalate in
+    /// milliseconds instead of the production default).
+    pub fn set_halo_deadline(&mut self, deadline: Duration) {
+        self.shard = None;
+        self.halo_deadline = Some(deadline);
     }
 
     /// Arm the divergence circuit breakers for subsequent observed
@@ -806,7 +886,8 @@ impl<'e> Coordinator<'e> {
         };
         let t0 = Instant::now();
         let bytes = self.checkpoint().to_bytes();
-        recovery::write_atomic(&path, &bytes)?;
+        recovery::rotate_ring(&path, self.checkpoint_keep)?;
+        recovery::write_atomic_with(&path, &bytes, self.faults.as_deref())?;
         if let Some(tel) = &self.telemetry {
             tel.ckpt_writes.inc();
             tel.ckpt_bytes.add(bytes.len() as u64);
@@ -820,6 +901,44 @@ impl<'e> Coordinator<'e> {
             }
         }
         Ok(())
+    }
+
+    /// `write_checkpoint`, but a failure is counted (and logged to the
+    /// flight recorder) instead of propagated: a full disk or injected
+    /// write fault must not kill an otherwise healthy run — the
+    /// retention ring still holds the last good snapshot.
+    fn write_checkpoint_counted(&mut self) {
+        if let Err(e) = self.write_checkpoint() {
+            if let Some(tel) = &self.telemetry {
+                tel.ckpt_failures.inc();
+                if tel.registry.events().enabled() {
+                    tel.registry.events().emit("checkpoint_failed", &[
+                        ("step", Json::Num(self.steps_done as f64)),
+                        ("error", Json::Str(e.to_string())),
+                    ]);
+                }
+            }
+        }
+    }
+
+    /// Restore from the newest *valid* snapshot in the retention ring
+    /// rooted at `path` (checksum-failed slots are skipped). Returns
+    /// the slot actually used plus one note per skipped slot. An armed
+    /// `restore:corrupt` fault flips a byte of the newest slot first,
+    /// so the fallback path is exercised deterministically.
+    pub fn restore_from_ring(
+        &mut self,
+        path: &Path,
+        keep: usize,
+    ) -> anyhow::Result<(PathBuf, Vec<String>)> {
+        if let Some(f) = &self.faults {
+            if f.fire(FaultSite::Restore, FaultKind::Corrupt) {
+                recovery::flip_byte_mid_file(path)?;
+            }
+        }
+        let (ck, used, skipped) = recovery::load_newest_valid(path, keep)?;
+        self.restore(&ck)?;
+        Ok((used, skipped))
     }
 
     /// Run `steps` more steps, returning a summary.
@@ -876,15 +995,47 @@ impl<'e> Coordinator<'e> {
         let mut done = 0;
         while done < steps {
             let b = cadence.min(steps - done);
+            // the fault clock tracks the step cursor: pre-batch here so
+            // seam faults armed "at step s" fire inside the batch that
+            // starts at s, advanced again after the batch so checkpoint
+            // I/O at the boundary sees the post-batch step
+            if let Some(f) = &self.faults {
+                f.set_step(self.steps_done as u64);
+            }
             let t_batch = Instant::now();
             if self.shard_count > 1 {
-                self.step_sharded(b)?;
+                if let Some(e) = self.step_sharded(b)? {
+                    // the exchange exhausted its retry budget: the
+                    // batch never became observable, so checkpoint the
+                    // intact pre-batch state and soft-abort (the same
+                    // checkpoint-and-halt contract the divergence
+                    // breakers honor — never a panic, never a torn
+                    // wavefield)
+                    if let Some(tel) = &self.telemetry {
+                        tel.breaker_halo_trips.inc();
+                        tel.registry.events().emit("watchdog_trip", &[
+                            ("kind", Json::Str(BreakerKind::HaloStall.name().to_string())),
+                            ("step", Json::Num(self.steps_done as f64)),
+                            ("detail", Json::Str(e.to_string())),
+                        ]);
+                    }
+                    self.write_checkpoint_counted();
+                    self.soft_abort = Some(SoftAbort {
+                        kind: BreakerKind::HaloStall,
+                        step: self.steps_done,
+                        detail: e.to_string(),
+                    });
+                    break;
+                }
             } else if b <= 1 {
                 self.step()?;
             } else {
                 self.step_fused(b)?;
             }
             done += b;
+            if let Some(f) = &self.faults {
+                f.set_step(self.steps_done as u64);
+            }
             // the step/batch just logged its energy; a finite f32 field
             // always sums to a finite f64, so a non-finite energy is an
             // exact (and O(1)-here) proxy for a non-finite wavefield.
@@ -952,8 +1103,10 @@ impl<'e> Coordinator<'e> {
                     ]);
                 }
                 // checkpoint-and-halt: preserve the last pre-abort
-                // state for post-mortem restore (no-op without a path)
-                self.write_checkpoint()?;
+                // state for post-mortem restore (no-op without a path;
+                // a failed write is counted, the ring keeps the last
+                // good snapshot)
+                self.write_checkpoint_counted();
                 self.soft_abort = Some(SoftAbort { kind, step: self.steps_done, detail });
                 break;
             }
@@ -961,7 +1114,7 @@ impl<'e> Coordinator<'e> {
                 && (self.steps_done / self.checkpoint_every)
                     > ((self.steps_done - b) / self.checkpoint_every)
             {
-                self.write_checkpoint()?;
+                self.write_checkpoint_counted();
             }
         }
         let wall = t0.elapsed();
@@ -1644,5 +1797,107 @@ mod tests {
         let text = reg.render();
         assert!(text.contains("hostencil_checkpoint_writes_total 1"), "{text}");
         assert!(text.contains("hostencil_checkpoint_last_step 6"), "{text}");
+    }
+
+    #[test]
+    fn halo_stall_soft_aborts_with_a_restorable_checkpoint() {
+        let path = std::env::temp_dir()
+            .join(format!("hostencil_halo_stall_ckpt_{}.ckpt", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // clean sharded oracle for the resume comparison
+        let mut oracle = mk_variant_coord("tf_s2", 1);
+        oracle.set_shards(2).unwrap();
+        oracle.run(24).unwrap();
+
+        let mut c = mk_variant_coord("tf_s2", 1);
+        c.set_shards(2).unwrap();
+        c.set_checkpointing(0, Some(path.clone()));
+        // a short deadline so the injected stall escalates in
+        // milliseconds instead of the production 200ms
+        c.set_halo_deadline(Duration::from_millis(5));
+        let reg = crate::telemetry::Registry::new();
+        c.set_telemetry(&reg);
+        c.set_faults(FaultPlan::single(FaultSite::Halo, FaultKind::Delay, 8, 3));
+        let s = c.run(24).expect("a halo stall must soft-abort, not error");
+        assert_eq!(s.steps, 8, "the stalled batch must never become observable");
+        let abort = c.soft_abort().expect("halo stall must trip the breaker");
+        assert_eq!(abort.kind, BreakerKind::HaloStall);
+        assert_eq!(abort.step, 8);
+        assert!(abort.detail.contains("transport stalled"), "{}", abort.detail);
+        assert!(abort.detail.contains("halo exchange failed"), "{}", abort.detail);
+        let text = reg.render();
+        assert!(text.contains("hostencil_breaker_trips_total{kind=\"halo_stall\"} 1"), "{text}");
+        assert!(text.contains("hostencil_fault_injected_total{site=\"halo\"} 1"), "{text}");
+
+        // the trip checkpoint holds the intact pre-batch state and
+        // resumes to a bit-identical completion
+        let ck = Checkpoint::load(&path).expect("trip must leave a checkpoint behind");
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(ck.steps_done, 8);
+        let mut resumed = mk_variant_coord("tf_s2", 1);
+        resumed.set_shards(2).unwrap();
+        resumed.restore(&ck).unwrap();
+        resumed.run(24 - ck.steps_done as usize).unwrap();
+        assert_eq!(
+            resumed.state_digest(),
+            oracle.state_digest(),
+            "restore + resume must converge on the unfaulted run"
+        );
+    }
+
+    #[test]
+    fn injected_checkpoint_enospc_is_counted_and_the_ring_keeps_rolling() {
+        let dir = std::env::temp_dir()
+            .join(format!("hostencil_coord_ring_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        let mut c = mk_variant_coord("naive", 1);
+        let reg = crate::telemetry::Registry::new();
+        c.set_telemetry(&reg);
+        c.set_checkpointing(3, Some(path.clone()));
+        c.set_checkpoint_keep(2);
+        c.set_faults(FaultPlan::single(FaultSite::Checkpoint, FaultKind::Enospc, 6, 9));
+        let s = c.run(12).expect("a failed cadence write must not kill the run");
+        assert_eq!(s.steps, 12);
+        // writes attempted at 3, 6, 9, 12; the step-6 write hits the
+        // injected ENOSPC after rotation, so the ring ends holding the
+        // two newest *successful* snapshots
+        let ring = recovery::ring_paths(&path, 2);
+        assert_eq!(Checkpoint::load(&ring[0]).unwrap().steps_done, 12);
+        assert_eq!(Checkpoint::load(&ring[1]).unwrap().steps_done, 9);
+        let text = reg.render();
+        assert!(text.contains("hostencil_checkpoint_failures_total 1"), "{text}");
+        assert!(text.contains("hostencil_checkpoint_writes_total 3"), "{text}");
+        assert!(text.contains("hostencil_fault_injected_total{site=\"ckpt\"} 1"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn restore_falls_back_past_an_injected_corrupt_newest_slot() {
+        let dir = std::env::temp_dir()
+            .join(format!("hostencil_coord_fallback_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ckpt");
+        // produce a two-slot ring: run.ckpt at step 6, run.ckpt.1 at 3
+        let mut writer = mk_variant_coord("naive", 1);
+        writer.set_checkpointing(3, Some(path.clone()));
+        writer.set_checkpoint_keep(2);
+        writer.run(6).unwrap();
+        let at6 = writer.state_digest();
+
+        let mut c = mk_variant_coord("naive", 1);
+        c.set_faults(FaultPlan::single(FaultSite::Restore, FaultKind::Corrupt, 0, 17));
+        let (used, skipped) =
+            c.restore_from_ring(&path, 2).expect("fallback must find the older slot");
+        assert_eq!(used, recovery::ring_paths(&path, 2)[1], "newest slot was corrupted");
+        assert_eq!(skipped.len(), 1);
+        assert!(skipped[0].contains("checksum"), "{}", skipped[0]);
+        assert_eq!(c.steps_done(), 3);
+        // the fallback snapshot resumes onto the writer's trajectory
+        c.run(3).unwrap();
+        assert_eq!(c.state_digest(), at6, "resume from the older slot must reconverge");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

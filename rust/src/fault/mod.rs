@@ -1,0 +1,487 @@
+//! Deterministic fault injection: a seeded [`FaultPlan`] armed from
+//! `--faults "site:kind@step[:p]"` specs, threaded as an
+//! `Option<Arc<FaultPlan>>` through the seams it attacks — the halo
+//! transport (`shard/`), checkpoint I/O (`recovery/`), the worker pool
+//! (`runtime/pool.rs`), and snapshot restore. The plan is **zero cost
+//! when absent**: every seam holds an `Option` and the disarmed path
+//! is a `None` check, so the zero-allocation proofs and bit-identity
+//! gates are untouched by this module's existence.
+//!
+//! Determinism contract: a plan is a pure function of (spec list,
+//! seed, the step cursor the coordinator publishes via [`set_step`],
+//! and the per-spec draw ordinal). Two runs with the same specs and
+//! seed inject at the same opportunities, so every chaos verdict is
+//! reproducible. Probabilistic specs (`p < 1`) draw from a splitmix64
+//! hash of (seed, spec index, draw ordinal) — no global RNG, no
+//! cross-test contamination.
+//!
+//! Each spec is **one-shot**: it arms once the run reaches its step,
+//! fires at most once (the first [`fire`] call that wins the draw and
+//! the atomic claim consumes it), and stays consumed for the rest of
+//! the run. Injections are counted per site and exported as
+//! `hostencil_fault_injected_total{site=…}`.
+//!
+//! [`set_step`]: FaultPlan::set_step
+//! [`fire`]: FaultPlan::fire
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::telemetry::Registry;
+
+/// Per-exchange deadline for the halo retry loop: an exchange that
+/// cannot be completed within this budget is declared stalled and the
+/// engine escalates to the coordinator's soft-abort path. Generous
+/// against an in-process mailbox (microseconds); sized for the future
+/// cross-process transport where a peer can genuinely hang.
+pub const HALO_DEADLINE: Duration = Duration::from_millis(200);
+
+/// How long an injected `halo:delay` fault stalls the transport —
+/// deliberately past [`HALO_DEADLINE`], so a delay fault
+/// deterministically exercises the timeout path rather than racing it.
+pub const HALO_STALL: Duration = Duration::from_millis(250);
+
+/// Bounded retry budget for one halo collect/publish.
+pub const HALO_MAX_ATTEMPTS: u32 = 4;
+
+/// Exponential-backoff base between halo retries (doubles per attempt).
+pub const HALO_BACKOFF_BASE: Duration = Duration::from_micros(50);
+
+/// Named seams a fault can be injected into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Halo exchange through the `HaloTransport` seam.
+    Halo,
+    /// Checkpoint write path (`recovery::write_atomic` and its ring).
+    Checkpoint,
+    /// Worker pool (panic inside a pool thread).
+    Pool,
+    /// Snapshot restore path (on-disk corruption discovered at load).
+    Restore,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 4] =
+        [FaultSite::Halo, FaultSite::Checkpoint, FaultSite::Pool, FaultSite::Restore];
+
+    /// The spec-grammar name (`halo:drop@8` etc.) — also the telemetry
+    /// `site` label value.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::Halo => "halo",
+            FaultSite::Checkpoint => "ckpt",
+            FaultSite::Pool => "pool",
+            FaultSite::Restore => "restore",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultSite::Halo => 0,
+            FaultSite::Checkpoint => 1,
+            FaultSite::Pool => 2,
+            FaultSite::Restore => 3,
+        }
+    }
+}
+
+/// What goes wrong at an armed site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Halo: the transport stalls past the exchange deadline.
+    Delay,
+    /// Halo: one collect finds no band (transient loss; retry heals).
+    Drop,
+    /// Halo: a band arrives bit-corrupted (checksum must catch it).
+    /// Restore: the newest snapshot on disk is bit-corrupted.
+    Corrupt,
+    /// Checkpoint: the write stops partway through the tmp file.
+    ShortWrite,
+    /// Checkpoint: the write fails like a full disk.
+    Enospc,
+    /// Pool: a worker thread panics before claiming a tile.
+    Panic,
+}
+
+impl FaultKind {
+    /// The spec-grammar name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Delay => "delay",
+            FaultKind::Drop => "drop",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::ShortWrite => "short",
+            FaultKind::Enospc => "enospc",
+            FaultKind::Panic => "panic",
+        }
+    }
+}
+
+/// The (site, kind) combinations that mean something. Anything else in
+/// a spec is rejected by name at parse time.
+fn valid_combo(site: FaultSite, kind: FaultKind) -> bool {
+    use FaultKind::*;
+    use FaultSite::*;
+    matches!(
+        (site, kind),
+        (Halo, Delay)
+            | (Halo, Drop)
+            | (Halo, Corrupt)
+            | (Checkpoint, ShortWrite)
+            | (Checkpoint, Enospc)
+            | (Checkpoint, Corrupt)
+            | (Pool, Panic)
+            | (Restore, Corrupt)
+    )
+}
+
+fn site_names(site: FaultSite) -> &'static str {
+    match site {
+        FaultSite::Halo => "delay, drop, corrupt",
+        FaultSite::Checkpoint => "short, enospc, corrupt",
+        FaultSite::Pool => "panic",
+        FaultSite::Restore => "corrupt",
+    }
+}
+
+/// One armed `site:kind@step[:p]` spec.
+struct Spec {
+    site: FaultSite,
+    kind: FaultKind,
+    /// First step (inclusive) at which the spec is armed.
+    step: u64,
+    /// Per-opportunity injection probability in [0, 1] (default 1).
+    p: f64,
+    /// One-shot consumption flag: set by the winning `fire`.
+    fired: AtomicBool,
+    /// Draw ordinal for probabilistic specs, so the k-th opportunity
+    /// draws the same value in every run with the same seed.
+    draws: AtomicU64,
+}
+
+/// A parsed, seeded set of fault specs. Shared (`Arc`) across every
+/// seam of one run; all state is atomic, so `fire` races resolve to
+/// exactly one winner per spec.
+pub struct FaultPlan {
+    specs: Vec<Spec>,
+    seed: u64,
+    /// Step cursor, published by the coordinator before each batch so
+    /// seams deep in the stack know when specs arm.
+    step: AtomicU64,
+    /// Injections per site, indexed by `FaultSite::index`.
+    injected: [AtomicU64; 4],
+}
+
+/// splitmix64: a tiny, high-quality mixing function — deterministic
+/// draws without any RNG state to carry or contaminate.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated `site:kind@step[:p]` list. Sites:
+    /// `halo`, `ckpt`, `pool`, `restore`. Kinds per site: halo
+    /// `delay|drop|corrupt`, ckpt `short|enospc|corrupt`, pool
+    /// `panic`, restore `corrupt`. `p` defaults to 1 and must be in
+    /// [0, 1]. Every malformed token is rejected with the offending
+    /// piece named.
+    pub fn parse(list: &str, seed: u64) -> anyhow::Result<FaultPlan> {
+        let mut specs = Vec::new();
+        for tok in list.split(',') {
+            let tok = tok.trim();
+            anyhow::ensure!(!tok.is_empty(), "--faults: empty spec in {list:?}");
+            let (site_s, rest) = tok.split_once(':').ok_or_else(|| {
+                anyhow::anyhow!("--faults: {tok:?} is not site:kind@step[:p]")
+            })?;
+            let site = match site_s {
+                "halo" => FaultSite::Halo,
+                "ckpt" => FaultSite::Checkpoint,
+                "pool" => FaultSite::Pool,
+                "restore" => FaultSite::Restore,
+                other => anyhow::bail!(
+                    "--faults: unknown site {other:?} (sites: halo, ckpt, pool, restore)"
+                ),
+            };
+            let (kind_s, tail) = rest.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("--faults: {tok:?} is missing the @step trigger")
+            })?;
+            let kind = match kind_s {
+                "delay" => FaultKind::Delay,
+                "drop" => FaultKind::Drop,
+                "corrupt" => FaultKind::Corrupt,
+                "short" => FaultKind::ShortWrite,
+                "enospc" => FaultKind::Enospc,
+                "panic" => FaultKind::Panic,
+                other => anyhow::bail!(
+                    "--faults: unknown kind {other:?} (kinds: delay, drop, corrupt, short, enospc, panic)"
+                ),
+            };
+            anyhow::ensure!(
+                valid_combo(site, kind),
+                "--faults: {}:{} is not a valid combination ({} supports: {})",
+                site.name(),
+                kind.name(),
+                site.name(),
+                site_names(site)
+            );
+            let (step_s, p_s) = match tail.split_once(':') {
+                Some((s, p)) => (s, Some(p)),
+                None => (tail, None),
+            };
+            let step: u64 = step_s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--faults: bad step {step_s:?} in {tok:?}: {e}"))?;
+            let p: f64 = match p_s {
+                None => 1.0,
+                Some(p) => p
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("--faults: bad probability {p:?} in {tok:?}: {e}"))?,
+            };
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&p),
+                "--faults: probability {p} in {tok:?} is outside [0, 1]"
+            );
+            specs.push(Spec {
+                site,
+                kind,
+                step,
+                p,
+                fired: AtomicBool::new(false),
+                draws: AtomicU64::new(0),
+            });
+        }
+        anyhow::ensure!(!specs.is_empty(), "--faults: no specs in {list:?}");
+        Ok(FaultPlan {
+            specs,
+            seed,
+            step: AtomicU64::new(0),
+            injected: [AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0), AtomicU64::new(0)],
+        })
+    }
+
+    /// A plan holding one always-certain spec (tests, chaos matrix).
+    pub fn single(site: FaultSite, kind: FaultKind, step: u64, seed: u64) -> Arc<FaultPlan> {
+        let plan = FaultPlan::parse(&format!("{}:{}@{step}", site.name(), kind.name()), seed)
+            .expect("single-spec grammar is valid by construction");
+        Arc::new(plan)
+    }
+
+    /// Publish the run's step cursor (the coordinator calls this before
+    /// each batch; seams read it inside `fire`).
+    pub fn set_step(&self, step: u64) {
+        self.step.store(step, Ordering::Relaxed);
+    }
+
+    /// The last published step cursor.
+    pub fn step(&self) -> u64 {
+        self.step.load(Ordering::Relaxed)
+    }
+
+    /// Whether any spec targets `site` — seams use this to skip
+    /// fault-path setup entirely when their site is never armed.
+    pub fn targets(&self, site: FaultSite) -> bool {
+        self.specs.iter().any(|s| s.site == site)
+    }
+
+    /// One injection opportunity at (site, kind): returns `true` iff an
+    /// armed, unconsumed spec matches, wins its probability draw, and
+    /// this call wins the atomic claim. At most one `fire` per spec
+    /// ever returns `true`.
+    pub fn fire(&self, site: FaultSite, kind: FaultKind) -> bool {
+        let now = self.step.load(Ordering::Relaxed);
+        for (idx, spec) in self.specs.iter().enumerate() {
+            if spec.site != site || spec.kind != kind {
+                continue;
+            }
+            if spec.fired.load(Ordering::Relaxed) || now < spec.step {
+                continue;
+            }
+            if spec.p < 1.0 {
+                let ordinal = spec.draws.fetch_add(1, Ordering::Relaxed);
+                let h = splitmix64(
+                    self.seed ^ (idx as u64).wrapping_mul(0xA076_1D64_78BD_642F) ^ ordinal,
+                );
+                let draw = (h >> 11) as f64 / (1u64 << 53) as f64;
+                if draw >= spec.p {
+                    continue;
+                }
+            }
+            if spec
+                .fired
+                .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                self.injected[site.index()].fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Injections recorded against `site` so far.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Register `hostencil_fault_injected_total{site=…}` collectors for
+    /// every site (zero series surprise: all four appear, firing or
+    /// not, so dashboards can alert on absence).
+    pub fn register_telemetry(self: &Arc<Self>, reg: &Registry) {
+        for site in FaultSite::ALL {
+            let me = Arc::clone(self);
+            reg.counter_fn(
+                "hostencil_fault_injected_total",
+                "Deterministically injected faults, by site.",
+                &[("site", site.name())],
+                move || me.injected(site),
+            );
+        }
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let specs: Vec<String> = self
+            .specs
+            .iter()
+            .map(|s| format!("{}:{}@{}:{}", s.site.name(), s.kind.name(), s.step, s.p))
+            .collect();
+        f.debug_struct("FaultPlan")
+            .field("specs", &specs)
+            .field("seed", &self.seed)
+            .field("step", &self.step())
+            .finish()
+    }
+}
+
+/// Panic payload used by injected `pool:panic` faults. The pool's
+/// quarantine logic downcasts for exactly this marker: an *injected*
+/// panic is survivable (quarantine + respawn once), while every other
+/// payload — a genuine kernel bug — still re-raises on the caller
+/// exactly as before.
+#[derive(Debug)]
+pub struct InjectedPanic {
+    /// Step cursor at injection time, for the escalation message.
+    pub step: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar_including_probability() {
+        let plan = FaultPlan::parse("halo:drop@8, ckpt:short@6:0.5,pool:panic@3", 42).unwrap();
+        assert_eq!(plan.specs.len(), 3);
+        assert_eq!(plan.specs[0].site, FaultSite::Halo);
+        assert_eq!(plan.specs[0].kind, FaultKind::Drop);
+        assert_eq!(plan.specs[0].step, 8);
+        assert_eq!(plan.specs[0].p, 1.0);
+        assert_eq!(plan.specs[1].site, FaultSite::Checkpoint);
+        assert_eq!(plan.specs[1].p, 0.5);
+        assert!(plan.targets(FaultSite::Pool));
+        assert!(!plan.targets(FaultSite::Restore));
+    }
+
+    #[test]
+    fn rejects_malformed_specs_by_name() {
+        for (spec, needle) in [
+            ("disk:drop@8", "unknown site"),
+            ("halo:melt@8", "unknown kind"),
+            ("halo:panic@8", "not a valid combination"),
+            ("pool:drop@8", "not a valid combination"),
+            ("halo:drop", "missing the @step"),
+            ("halo@8", "not site:kind"),
+            ("halo:drop@eight", "bad step"),
+            ("halo:drop@8:1.5", "outside [0, 1]"),
+            ("halo:drop@8:-0.1", "outside [0, 1]"),
+            ("halo:drop@8:maybe", "bad probability"),
+            ("", "no specs"),
+            ("halo:drop@8,,ckpt:short@2", "empty spec"),
+        ] {
+            let err = FaultPlan::parse(spec, 1).expect_err(spec).to_string();
+            assert!(err.contains(needle), "{spec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn fires_once_at_or_after_the_armed_step() {
+        let plan = FaultPlan::parse("halo:drop@8", 7).unwrap();
+        plan.set_step(4);
+        assert!(!plan.fire(FaultSite::Halo, FaultKind::Drop), "not armed yet");
+        plan.set_step(8);
+        assert!(!plan.fire(FaultSite::Halo, FaultKind::Corrupt), "kind must match");
+        assert!(!plan.fire(FaultSite::Checkpoint, FaultKind::ShortWrite), "site must match");
+        assert!(plan.fire(FaultSite::Halo, FaultKind::Drop));
+        assert!(!plan.fire(FaultSite::Halo, FaultKind::Drop), "one-shot: consumed");
+        plan.set_step(20);
+        assert!(!plan.fire(FaultSite::Halo, FaultKind::Drop), "stays consumed");
+        assert_eq!(plan.injected(FaultSite::Halo), 1);
+        assert_eq!(plan.injected(FaultSite::Checkpoint), 0);
+    }
+
+    #[test]
+    fn probabilistic_draws_are_deterministic_per_seed() {
+        let outcomes = |seed: u64| {
+            let plan = FaultPlan::parse("halo:drop@0:0.3", seed).unwrap();
+            plan.set_step(1);
+            (0..32).map(|_| plan.fire(FaultSite::Halo, FaultKind::Drop)).collect::<Vec<_>>()
+        };
+        assert_eq!(outcomes(11), outcomes(11), "same seed, same draws");
+        // one-shot: at most one true in any sequence
+        assert!(outcomes(11).iter().filter(|&&b| b).count() <= 1);
+        // across many seeds, a p=0.3 spec must both fire and not fire
+        // on the first opportunity somewhere — i.e. the draw is real
+        let firsts: Vec<bool> = (0..64).map(|s| outcomes(s)[0]).collect();
+        assert!(firsts.iter().any(|&b| b) && firsts.iter().any(|&b| !b));
+    }
+
+    #[test]
+    fn p_zero_never_fires_and_p_one_skips_the_draw() {
+        let never = FaultPlan::parse("halo:drop@0:0", 3).unwrap();
+        never.set_step(100);
+        for _ in 0..64 {
+            assert!(!never.fire(FaultSite::Halo, FaultKind::Drop));
+        }
+        let always = FaultPlan::parse("halo:drop@0:1", 3).unwrap();
+        always.set_step(100);
+        assert!(always.fire(FaultSite::Halo, FaultKind::Drop));
+    }
+
+    #[test]
+    fn telemetry_exports_all_four_sites() {
+        let reg = Registry::new();
+        let plan = FaultPlan::single(FaultSite::Halo, FaultKind::Drop, 0, 1);
+        plan.register_telemetry(&reg);
+        plan.set_step(0);
+        assert!(plan.fire(FaultSite::Halo, FaultKind::Drop));
+        let text = reg.render();
+        assert!(text.contains("hostencil_fault_injected_total{site=\"halo\"} 1"), "{text}");
+        assert!(text.contains("hostencil_fault_injected_total{site=\"ckpt\"} 0"), "{text}");
+        assert!(text.contains("hostencil_fault_injected_total{site=\"pool\"} 0"), "{text}");
+        assert!(text.contains("hostencil_fault_injected_total{site=\"restore\"} 0"), "{text}");
+    }
+
+    #[test]
+    fn concurrent_fire_has_exactly_one_winner() {
+        let plan = FaultPlan::single(FaultSite::Pool, FaultKind::Panic, 0, 9);
+        plan.set_step(1);
+        let wins: usize = std::thread::scope(|s| {
+            (0..8)
+                .map(|_| {
+                    let p = Arc::clone(&plan);
+                    s.spawn(move || usize::from(p.fire(FaultSite::Pool, FaultKind::Panic)))
+                })
+                .collect::<Vec<_>>()
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .sum()
+        });
+        assert_eq!(wins, 1);
+        assert_eq!(plan.injected(FaultSite::Pool), 1);
+    }
+}

@@ -106,10 +106,20 @@
 //! the budget, and JSONL trace recording (`--record`) replayable by
 //! `hostencil replay`, which re-executes the run and diffs receiver
 //! output against the recording. See `docs/OPERATIONS.md`.
+//!
+//! Those seams are kept honest by **deterministic fault injection**
+//! ([`fault`]): seeded `--faults "site:kind@step[:p]"` plans arm
+//! the halo exchange, checkpoint I/O, worker pool, and restore paths,
+//! and `hostencil chaos` asserts that every injected fault class
+//! either retries to a bit-identical completion or soft-aborts with
+//! a restorable checkpoint — never a panic, never silent corruption.
+//! With no plan armed the seams cost nothing and the zero-allocation
+//! proofs hold unchanged.
 
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod fault;
 pub mod gpusim;
 pub mod grid;
 pub mod json;

@@ -17,8 +17,11 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
 
 use hostencil::coordinator::{Coordinator, Mode, RunOptions};
+use hostencil::fault::{FaultKind, FaultPlan, FaultSite};
 use hostencil::gpusim::{arch, kernels, occupancy, timing, KernelResources};
 use hostencil::recovery::{self, BreakerConfig, Checkpoint, Trace, TraceReceiver, TraceSource};
 use hostencil::runtime::Engine;
@@ -151,6 +154,28 @@ commands:
              [--checkpoint-path f]          snapshot destination; breaker
                                             trips dump here even without a
                                             cadence
+             [--checkpoint-keep K]          retention-ring depth at the
+                                            snapshot path: keep the K newest
+                                            snapshots (f, f.1, ...) with an
+                                            atomic rotation before each write;
+                                            --restore falls back past slots
+                                            that fail their checksum to the
+                                            newest valid one (K >= 1,
+                                            default 1)
+             [--faults list]                arm deterministic fault injection:
+                                            comma-separated site:kind@step[:p]
+                                            specs — halo:delay|drop|corrupt,
+                                            ckpt:short|enospc|corrupt,
+                                            pool:panic, restore:corrupt; each
+                                            spec fires at most once, at the
+                                            first step boundary at or past
+                                            `step`, with probability p in
+                                            [0, 1] (default 1); the injection
+                                            seams cost nothing when the flag
+                                            is absent (see docs/OPERATIONS.md)
+             [--fault-seed N]               seed for probabilistic fault
+                                            draws (needs --faults; same seed
+                                            = same schedule)
              [--restore f]                  resume from a snapshot: the grid
                                             and discretization are verified,
                                             then the remaining step budget
@@ -327,6 +352,17 @@ commands:
                                             short instrumented run; print the
                                             Prometheus exposition and the
                                             captured flight-recorder events
+  chaos      [--check] [--steps N] [--fault-seed N]
+                                            run the deterministic fault x
+                                            recovery matrix on a small sharded
+                                            configuration: every injected
+                                            fault class must either retry to a
+                                            bit-identical completion or end in
+                                            a soft abort with a restorable
+                                            checkpoint — never a panic, never
+                                            silent corruption; --check exits
+                                            non-zero on any violated cell
+                                            (the CI chaos gate)
 
 telemetry flags (run / scenario / campaign / bench):
   --telemetry out.prom    write the Prometheus text exposition of every
@@ -433,6 +469,53 @@ fn checkpointing_from_args(args: &Args) -> anyhow::Result<(usize, Option<PathBuf
     Ok((every, path))
 }
 
+/// Resolve the checkpoint retention-ring depth. The live snapshot is
+/// itself a slot, so `--checkpoint-keep 0` would mean "write snapshots
+/// nowhere" — rejected by name rather than clamped.
+fn checkpoint_keep_from_args(args: &Args) -> anyhow::Result<usize> {
+    match args.get("checkpoint-keep")? {
+        None => Ok(1),
+        Some(k) => {
+            let k: usize = k.parse().map_err(|e| anyhow::anyhow!("--checkpoint-keep: {e}"))?;
+            anyhow::ensure!(
+                k >= 1,
+                "--checkpoint-keep must be >= 1 (the live snapshot is the first ring slot)"
+            );
+            Ok(k)
+        }
+    }
+}
+
+/// Default seed for probabilistic fault draws: stable across runs so a
+/// reported failure replays without hunting for the seed.
+const DEFAULT_FAULT_SEED: u64 = 0x5EED;
+
+fn fault_seed_from_args(args: &Args) -> anyhow::Result<u64> {
+    match args.get("fault-seed")? {
+        None => Ok(DEFAULT_FAULT_SEED),
+        Some(s) => s.parse().map_err(|e| anyhow::anyhow!("--fault-seed: {e}")),
+    }
+}
+
+/// Resolve the deterministic fault plan from `--faults` /
+/// `--fault-seed`. `None` (the flag absent) keeps every injection seam
+/// disarmed and cost-free; a seed without a plan is rejected by name so
+/// a typo'd `--faults` spelling cannot silently run fault-free.
+fn faults_from_args(args: &Args) -> anyhow::Result<Option<Arc<FaultPlan>>> {
+    match args.get("faults")? {
+        None => {
+            anyhow::ensure!(
+                args.get("fault-seed")?.is_none(),
+                "--fault-seed without --faults has nothing to seed"
+            );
+            Ok(None)
+        }
+        Some(list) => {
+            Ok(Some(Arc::new(FaultPlan::parse(list, fault_seed_from_args(args)?)?)))
+        }
+    }
+}
+
 /// Resolve the divergence-breaker configuration from the CLI. Breakers
 /// arm when `--breakers` is given or any tuning option is; every field
 /// defaults to [`BreakerConfig::default`]. Degenerate tunings (a window
@@ -507,6 +590,7 @@ fn run() -> anyhow::Result<()> {
         "campaign" => cmd_campaign(&args),
         "bench" => cmd_bench(&args),
         "telemetry" => cmd_telemetry(&args),
+        "chaos" => cmd_chaos(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -637,12 +721,31 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     // the abort (checkpoint + structured reason) instead of a bail
     coord.set_breakers(breakers);
     coord.set_checkpointing(ckpt_every, ckpt_path);
+    let keep = checkpoint_keep_from_args(args)?;
+    coord.set_checkpoint_keep(keep);
+    if keep > 1 {
+        println!("retention ring: {keep} snapshot slots");
+    }
+    if let Some(f) = faults_from_args(args)? {
+        println!(
+            "faults armed  : {} (seed {:#x})",
+            args.get("faults")?.unwrap_or(""),
+            fault_seed_from_args(args)?
+        );
+        coord.set_faults(f);
+    }
     let mut steps = cfg.steps;
     if let Some(path) = args.get("restore")? {
-        coord.restore(&Checkpoint::load(Path::new(path))?)?;
+        // the retention ring owns restore: the newest slot that passes
+        // its checksum wins, and skipped (corrupt/torn) slots are named
+        let (used, skipped) = coord.restore_from_ring(Path::new(path), keep)?;
+        for note in &skipped {
+            println!("restore skip  : {note}");
+        }
         steps = cfg.steps.saturating_sub(coord.steps_done());
         println!(
-            "restored      : {path} at step {} ({steps} of {} steps remaining)",
+            "restored      : {} at step {} ({steps} of {} steps remaining)",
+            used.display(),
             coord.steps_done(),
             cfg.steps
         );
@@ -2234,6 +2337,243 @@ fn cmd_telemetry(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The small sharded configuration every chaos cell runs: Golden mode,
+/// fused degree 2, two z-slab shards on a two-worker outer pool — the
+/// smallest shape that exercises the halo transport, the shard pool,
+/// and fused batch boundaries at once.
+fn chaos_coordinator() -> anyhow::Result<Coordinator<'static>> {
+    use hostencil::grid::{Dim3, Domain};
+    use hostencil::stencil;
+    use hostencil::wave::{Source, VelocityModel};
+
+    let interior = Dim3::new(24, 16, 16);
+    let h = 10.0;
+    let v0 = 2500.0f32;
+    let domain = Domain::new(interior, 4, h, stencil::cfl_dt(h, v0 as f64))?;
+    let v = VelocityModel::Constant(v0).build(interior);
+    let eta = wave::eta_profile(&domain, v0 as f64);
+    let src = Source { pos: Dim3::new(12, 8, 8), f0: 15.0, amplitude: 1.0 };
+    let mut c = Coordinator::new(
+        None,
+        domain,
+        Mode::Golden,
+        "tf_s2",
+        "gmem",
+        v,
+        eta,
+        src,
+        vec![Dim3::new(6, 8, 8)],
+    )?;
+    c.set_cpu_threads(2);
+    c.set_shards(2)?;
+    Ok(c)
+}
+
+/// `hostencil chaos`: drive the deterministic fault x recovery matrix
+/// and assert the chaos invariant — **every injected fault class
+/// either retries/heals to a bit-identical completion or ends in a
+/// soft abort with a restorable checkpoint; never a panic, never
+/// silent corruption**. Each cell runs the same small sharded
+/// configuration with one armed fault spec and is compared against the
+/// fault-free baseline digest. `--check` exits non-zero on any
+/// violated cell (the CI chaos gate).
+fn cmd_chaos(args: &Args) -> anyhow::Result<()> {
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    let check = args.has_flag("check");
+    let steps = args.usize_or("steps", 24)?;
+    anyhow::ensure!(
+        steps >= 12 && steps % 6 == 0,
+        "--steps must be a multiple of 6 and >= 12 (the matrix checkpoints on a 6-step cadence)"
+    );
+    let seed = fault_seed_from_args(args)?;
+    let dir = std::env::temp_dir().join(format!("hostencil_chaos_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // the fault-free oracle every cell must reconverge on, bitwise
+    let mut oracle = chaos_coordinator()?;
+    let s = oracle.run(steps)?;
+    anyhow::ensure!(
+        s.steps == steps && oracle.soft_abort().is_none(),
+        "the fault-free baseline must complete"
+    );
+    let want = oracle.state_digest();
+    println!("chaos: {steps} steps, 2 shards, baseline digest {want:#018x}, seed {seed:#x}");
+
+    // the mid-run step every transient fault arms at (a fused batch
+    // boundary, so halo/pool/ckpt seams all cross it)
+    let mid = (steps / 3) as u64;
+
+    // a transient fault the seams must absorb: the run completes with
+    // the fault injected exactly once and a bit-identical digest
+    let heal = |site: FaultSite, kind: FaultKind| -> anyhow::Result<String> {
+        let plan = FaultPlan::single(site, kind, mid, seed);
+        let mut c = chaos_coordinator()?;
+        c.set_faults(Arc::clone(&plan));
+        let s = c.run(steps)?;
+        if let Some(a) = c.soft_abort() {
+            anyhow::bail!("unexpected soft abort at step {}: {}", a.step, a.detail);
+        }
+        anyhow::ensure!(s.steps == steps, "run stopped at step {} of {steps}", s.steps);
+        anyhow::ensure!(plan.injected(site) == 1, "the armed fault never fired");
+        anyhow::ensure!(
+            c.state_digest() == want,
+            "digest {:#018x} diverged from the baseline",
+            c.state_digest()
+        );
+        Ok("healed in place; completion bit-identical".to_string())
+    };
+
+    // an unrecoverable stall: the run must soft-abort with a
+    // checkpoint that restores and resumes onto the oracle
+    let stall = || -> anyhow::Result<String> {
+        let path = dir.join("stall.ckpt");
+        let plan = FaultPlan::single(FaultSite::Halo, FaultKind::Delay, mid, seed);
+        let mut c = chaos_coordinator()?;
+        c.set_checkpointing(0, Some(path.clone()));
+        // a short deadline so the injected stall escalates immediately
+        c.set_halo_deadline(Duration::from_millis(10));
+        c.set_faults(Arc::clone(&plan));
+        let s = c.run(steps)?;
+        let (kind, step) = match c.soft_abort() {
+            Some(a) => (a.kind.name().to_string(), a.step),
+            None => anyhow::bail!("the stalled exchange must soft-abort, ran {} steps", s.steps),
+        };
+        anyhow::ensure!(kind == "halo_stall", "unexpected breaker kind {kind}");
+        anyhow::ensure!(s.steps < steps, "soft abort cannot complete the budget");
+        let mut r = chaos_coordinator()?;
+        let (_, skipped) = r.restore_from_ring(&path, 1)?;
+        anyhow::ensure!(skipped.is_empty(), "the trip checkpoint must be valid: {skipped:?}");
+        anyhow::ensure!(r.steps_done() == step, "checkpoint cursor != abort step");
+        r.run(steps - step)?;
+        anyhow::ensure!(
+            r.state_digest() == want,
+            "resume digest {:#018x} diverged from the baseline",
+            r.state_digest()
+        );
+        Ok(format!("soft-aborted at step {step}; restore + resume reconverged bitwise"))
+    };
+
+    // a failed cadence write (torn tmp or ENOSPC): counted, the run
+    // survives, and the ring's newest slot is still a valid snapshot
+    let ckpt_write = |kind: FaultKind| -> anyhow::Result<String> {
+        let path = dir.join(format!("write_{}.ckpt", kind.name()));
+        let plan = FaultPlan::single(FaultSite::Checkpoint, kind, mid, seed);
+        let mut c = chaos_coordinator()?;
+        c.set_checkpointing(6, Some(path.clone()));
+        c.set_checkpoint_keep(2);
+        c.set_faults(Arc::clone(&plan));
+        let s = c.run(steps)?;
+        anyhow::ensure!(s.steps == steps, "a failed snapshot write must not kill the run");
+        anyhow::ensure!(plan.injected(FaultSite::Checkpoint) == 1, "the write fault never fired");
+        anyhow::ensure!(c.state_digest() == want, "digest diverged from the baseline");
+        let newest = Checkpoint::load(&path)
+            .map_err(|e| anyhow::anyhow!("the ring's newest slot must stay valid: {e}"))?;
+        anyhow::ensure!(
+            newest.steps_done as usize == steps,
+            "newest slot holds step {}, want {steps}",
+            newest.steps_done
+        );
+        Ok("write failed and was counted; run completed, ring slot valid".to_string())
+    };
+
+    // silent post-publish corruption: invisible on the write path by
+    // design, caught by the checksum at restore, where the ring falls
+    // back to the previous cadence snapshot and reconverges
+    let ckpt_corrupt = || -> anyhow::Result<String> {
+        let path = dir.join("corrupt.ckpt");
+        let plan = FaultPlan::single(FaultSite::Checkpoint, FaultKind::Corrupt, steps as u64, seed);
+        let mut c = chaos_coordinator()?;
+        c.set_checkpointing(6, Some(path.clone()));
+        c.set_checkpoint_keep(2);
+        c.set_faults(Arc::clone(&plan));
+        let s = c.run(steps)?;
+        anyhow::ensure!(s.steps == steps && c.state_digest() == want, "corrupting run diverged");
+        anyhow::ensure!(plan.injected(FaultSite::Checkpoint) == 1, "the corruption never fired");
+        let mut r = chaos_coordinator()?;
+        let (_, skipped) = r.restore_from_ring(&path, 2)?;
+        anyhow::ensure!(
+            skipped.len() == 1 && skipped[0].contains("checksum"),
+            "the corrupt newest slot must be skipped by checksum, got {skipped:?}"
+        );
+        anyhow::ensure!(r.steps_done() == steps - 6, "fallback must land on the prior cadence");
+        r.run(6)?;
+        anyhow::ensure!(r.state_digest() == want, "fallback resume diverged from the baseline");
+        Ok("corruption caught by checksum at restore; ring fell back and reconverged".to_string())
+    };
+
+    // corruption injected at restore time on a clean ring: same
+    // detect-and-fall-back contract, armed on the reader instead
+    let restore_corrupt = || -> anyhow::Result<String> {
+        let path = dir.join("restore.ckpt");
+        let mut w = chaos_coordinator()?;
+        w.set_checkpointing(6, Some(path.clone()));
+        w.set_checkpoint_keep(2);
+        let s = w.run(steps)?;
+        anyhow::ensure!(s.steps == steps, "the ring-writer leg must complete");
+        let mut r = chaos_coordinator()?;
+        r.set_faults(FaultPlan::single(FaultSite::Restore, FaultKind::Corrupt, 0, seed));
+        let (_, skipped) = r.restore_from_ring(&path, 2)?;
+        anyhow::ensure!(
+            skipped.len() == 1 && skipped[0].contains("checksum"),
+            "the corrupted slot must be skipped by checksum, got {skipped:?}"
+        );
+        anyhow::ensure!(r.steps_done() == steps - 6, "fallback must land on the prior cadence");
+        r.run(6)?;
+        anyhow::ensure!(r.state_digest() == want, "fallback resume diverged from the baseline");
+        Ok("restore-time corruption detected; ring fell back and reconverged".to_string())
+    };
+
+    let mut failures = 0usize;
+    let mut verdict = |name: &str, r: std::thread::Result<anyhow::Result<String>>| match r {
+        Ok(Ok(note)) => println!("  ok   {name:<16} {note}"),
+        Ok(Err(e)) => {
+            failures += 1;
+            println!("  FAIL {name:<16} {e:#}");
+        }
+        Err(p) => {
+            failures += 1;
+            let msg = p
+                .downcast_ref::<&str>()
+                .copied()
+                .or_else(|| p.downcast_ref::<String>().map(String::as_str))
+                .unwrap_or("non-string panic payload");
+            println!("  FAIL {name:<16} panicked: {msg} (the invariant forbids panics)");
+        }
+    };
+    verdict("halo:drop", catch_unwind(AssertUnwindSafe(|| heal(FaultSite::Halo, FaultKind::Drop))));
+    verdict(
+        "halo:corrupt",
+        catch_unwind(AssertUnwindSafe(|| heal(FaultSite::Halo, FaultKind::Corrupt))),
+    );
+    verdict("halo:delay", catch_unwind(AssertUnwindSafe(stall)));
+    verdict(
+        "pool:panic",
+        catch_unwind(AssertUnwindSafe(|| heal(FaultSite::Pool, FaultKind::Panic))),
+    );
+    verdict(
+        "ckpt:short",
+        catch_unwind(AssertUnwindSafe(|| ckpt_write(FaultKind::ShortWrite))),
+    );
+    verdict("ckpt:enospc", catch_unwind(AssertUnwindSafe(|| ckpt_write(FaultKind::Enospc))));
+    verdict("ckpt:corrupt", catch_unwind(AssertUnwindSafe(ckpt_corrupt)));
+    verdict("restore:corrupt", catch_unwind(AssertUnwindSafe(restore_corrupt)));
+    drop(verdict);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if failures > 0 {
+        anyhow::ensure!(!check, "{failures} chaos cell(s) violated the recovery invariant");
+        println!("chaos: {failures} cell(s) FAILED (run with --check to gate on this)");
+    } else {
+        println!(
+            "chaos: all cells hold — every fault healed bit-identically or soft-aborted \
+             with a restorable checkpoint"
+        );
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -2588,5 +2928,83 @@ mod tests {
         // a bare --serial-fraction errors instead of becoming "true"
         let bare = parse(&["campaign", "--serial-fraction"]);
         assert!(bare.get("serial-fraction").is_err());
+    }
+
+    #[test]
+    fn fault_flags_resolve_and_reject_malformed_specs_by_name() {
+        // no --faults: every injection seam stays disarmed
+        assert!(faults_from_args(&parse(&["run", "--steps", "5"])).unwrap().is_none());
+        // a single spec arms exactly its site
+        let plan = faults_from_args(&parse(&["run", "--faults", "halo:drop@8"]))
+            .unwrap()
+            .expect("armed");
+        assert!(plan.targets(FaultSite::Halo));
+        assert!(!plan.targets(FaultSite::Pool));
+        // comma lists with probabilities and an explicit seed
+        let plan = faults_from_args(&parse(&[
+            "run",
+            "--faults",
+            "ckpt:enospc@6:0.5,pool:panic@8",
+            "--fault-seed",
+            "42",
+        ]))
+        .unwrap()
+        .expect("armed");
+        assert!(plan.targets(FaultSite::Checkpoint));
+        assert!(plan.targets(FaultSite::Pool));
+        // malformed specs are rejected with the offending piece named
+        let bad = |list: &str| {
+            faults_from_args(&parse(&["run", "--faults", list])).unwrap_err().to_string()
+        };
+        assert!(bad("gpu:panic@3").contains("unknown site \"gpu\""), "{}", bad("gpu:panic@3"));
+        assert!(bad("halo:melt@3").contains("unknown kind \"melt\""), "{}", bad("halo:melt@3"));
+        assert!(bad("halo:drop").contains("missing the @step"), "{}", bad("halo:drop"));
+        assert!(bad("pool:corrupt@2").contains("not a valid combination"), "{}", bad("pool:corrupt@2"));
+        assert!(bad("halo:drop@x").contains("bad step"), "{}", bad("halo:drop@x"));
+        assert!(
+            bad("ckpt:enospc@2:1.5").contains("outside [0, 1]"),
+            "{}",
+            bad("ckpt:enospc@2:1.5")
+        );
+        assert!(
+            bad("halo:drop@2:-0.1").contains("outside [0, 1]"),
+            "{}",
+            bad("halo:drop@2:-0.1")
+        );
+        assert!(bad("").contains("empty spec"), "{}", bad(""));
+        // a seed without a plan is rejected by name (typo guard)
+        let e = faults_from_args(&parse(&["run", "--fault-seed", "7"])).unwrap_err().to_string();
+        assert!(e.contains("--fault-seed without --faults"), "{e}");
+        // a malformed seed names its flag
+        let e = faults_from_args(&parse(&["run", "--faults", "halo:drop@1", "--fault-seed", "x"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--fault-seed"), "{e}");
+        // a bare --faults (forgotten list) errors instead of "true"
+        let bare = parse(&["run", "--faults"]);
+        assert!(faults_from_args(&bare).is_err());
+    }
+
+    #[test]
+    fn checkpoint_keep_resolves_and_rejects_zero_by_name() {
+        // absent: the ring is just the live snapshot
+        assert_eq!(checkpoint_keep_from_args(&parse(&["run", "--steps", "5"])).unwrap(), 1);
+        let a = parse(&["run", "--checkpoint-keep", "3"]);
+        assert_eq!(checkpoint_keep_from_args(&a).unwrap(), 3);
+        let b = parse(&["run", "--checkpoint-keep=2"]);
+        assert_eq!(checkpoint_keep_from_args(&b).unwrap(), 2);
+        // 0 would mean "keep no snapshots at all" — rejected by name,
+        // not clamped
+        let z = parse(&["run", "--checkpoint-keep", "0"]);
+        let err = checkpoint_keep_from_args(&z).unwrap_err().to_string();
+        assert!(err.contains("--checkpoint-keep"), "{err}");
+        assert!(err.contains(">= 1"), "{err}");
+        // a malformed count names the flag
+        let neg = parse(&["run", "--checkpoint-keep", "-2"]);
+        let err = checkpoint_keep_from_args(&neg).unwrap_err().to_string();
+        assert!(err.contains("--checkpoint-keep"), "{err}");
+        // a bare --checkpoint-keep errors instead of defaulting
+        let bare = parse(&["run", "--checkpoint-keep"]);
+        assert!(checkpoint_keep_from_args(&bare).is_err());
     }
 }

@@ -24,8 +24,11 @@
 //!   against the recording, turning an incident into a test case.
 
 use std::collections::BTreeMap;
-use std::path::Path;
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
 
+use crate::fault::{FaultKind, FaultPlan, FaultSite};
 use crate::grid::Dim3;
 use crate::json::Json;
 use crate::wave::{Source, VelocityModel};
@@ -51,16 +54,188 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     h
 }
 
-/// Write `bytes` to `path` atomically: a sibling `.tmp` file is
-/// written first and renamed into place, so a crash mid-write never
-/// leaves a torn checkpoint where a good one used to be.
+/// FNV-1a 64 over the little-endian bit patterns of an `f32` slice —
+/// the per-band halo checksum. Allocation-free (no serialization
+/// buffer), so it is safe inside the zero-alloc steady-state loop.
+pub fn fnv1a64_f32(vals: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &v in vals {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// fsync the directory holding `path`, so a rename published into it
+/// survives a crash (on ext4-style journals the rename itself is not
+/// durable until the directory is synced). No-op off unix, where the
+/// directory-handle sync idiom does not exist.
+fn sync_parent_dir(path: &Path) -> anyhow::Result<()> {
+    #[cfg(unix)]
+    {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => PathBuf::from("."),
+        };
+        let dir = File::open(&parent).map_err(|e| {
+            anyhow::anyhow!("cannot open checkpoint directory {}: {e}", parent.display())
+        })?;
+        dir.sync_all().map_err(|e| {
+            anyhow::anyhow!("cannot fsync checkpoint directory {}: {e}", parent.display())
+        })?;
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
+}
+
+/// Write `bytes` to `path` atomically and durably: a sibling `.tmp`
+/// file is written and fsynced first, renamed into place, then the
+/// parent directory is fsynced — so a crash at any point leaves either
+/// the old snapshot or the new one, never a torn or vanished file.
 pub fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    write_atomic_with(path, bytes, None)
+}
+
+/// [`write_atomic`] with an optional fault plan armed at the
+/// checkpoint-I/O site. Injected faults (`ckpt:short`, `ckpt:enospc`)
+/// fail the write with a named error *before* the rename, leaving any
+/// previously published snapshot untouched; `ckpt:corrupt` flips a
+/// byte of the freshly *published* file — silent on the write path by
+/// design, caught by the checksum at restore time (where the retention
+/// ring falls back to an older valid snapshot).
+pub fn write_atomic_with(
+    path: &Path,
+    bytes: &[u8],
+    faults: Option<&FaultPlan>,
+) -> anyhow::Result<()> {
     let tmp = path.with_extension("ckpt.tmp");
-    std::fs::write(&tmp, bytes)
+    if let Some(f) = faults {
+        if f.fire(FaultSite::Checkpoint, FaultKind::Enospc) {
+            anyhow::bail!(
+                "cannot write checkpoint {}: injected fault: no space left on device (ENOSPC)",
+                tmp.display()
+            );
+        }
+    }
+    let write_len = match faults {
+        Some(f) if f.fire(FaultSite::Checkpoint, FaultKind::ShortWrite) => bytes.len() / 2,
+        _ => bytes.len(),
+    };
+    let mut file = File::create(&tmp)
+        .map_err(|e| anyhow::anyhow!("cannot create checkpoint {}: {e}", tmp.display()))?;
+    file.write_all(&bytes[..write_len])
         .map_err(|e| anyhow::anyhow!("cannot write checkpoint {}: {e}", tmp.display()))?;
+    file.sync_all()
+        .map_err(|e| anyhow::anyhow!("cannot fsync checkpoint {}: {e}", tmp.display()))?;
+    drop(file);
+    if write_len != bytes.len() {
+        // the torn tmp is left behind deliberately — exactly what a
+        // real short write leaves — and the next successful write
+        // truncates over it; the *published* path was never touched
+        anyhow::bail!(
+            "cannot write checkpoint {}: injected fault: short write ({write_len} of {} bytes)",
+            tmp.display(),
+            bytes.len()
+        );
+    }
     std::fs::rename(&tmp, path)
         .map_err(|e| anyhow::anyhow!("cannot move checkpoint into {}: {e}", path.display()))?;
+    sync_parent_dir(path)?;
+    if let Some(f) = faults {
+        if f.fire(FaultSite::Checkpoint, FaultKind::Corrupt) {
+            flip_byte_mid_file(path)?;
+        }
+    }
     Ok(())
+}
+
+/// Flip one bit in the middle of `path` — the injected-corruption
+/// primitive shared by the `ckpt:corrupt` / `restore:corrupt` fault
+/// sites and the chaos harness. The midpoint of any non-trivial
+/// snapshot lands in the state payload, so the trailing checksum is
+/// guaranteed to catch the flip at load time.
+pub fn flip_byte_mid_file(path: &Path) -> anyhow::Result<()> {
+    let mut bytes = std::fs::read(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {} to corrupt it: {e}", path.display()))?;
+    anyhow::ensure!(!bytes.is_empty(), "cannot corrupt empty file {}", path.display());
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(path, &bytes)
+        .map_err(|e| anyhow::anyhow!("cannot write corrupted {}: {e}", path.display()))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint retention ring
+// ---------------------------------------------------------------------------
+
+/// The retention-ring member paths for `path` with `keep` slots,
+/// newest first: the live snapshot itself, then `.1` … `.{keep-1}`
+/// suffixed rotations. `keep` is clamped to at least 1.
+pub fn ring_paths(path: &Path, keep: usize) -> Vec<PathBuf> {
+    let mut out = vec![path.to_path_buf()];
+    for i in 1..keep.max(1) {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(format!(".{i}"));
+        out.push(PathBuf::from(os));
+    }
+    out
+}
+
+/// Rotate existing ring members one slot older (the oldest falls off)
+/// so slot 0 is free for a fresh snapshot. With `keep == 1` this is a
+/// no-op — the atomic rename in [`write_atomic`] already replaces the
+/// only slot. Renames are followed by a parent-directory fsync so the
+/// rotation is durable as a unit.
+pub fn rotate_ring(path: &Path, keep: usize) -> anyhow::Result<()> {
+    let ring = ring_paths(path, keep);
+    if ring.len() < 2 {
+        return Ok(());
+    }
+    let mut moved = false;
+    for i in (0..ring.len() - 1).rev() {
+        if ring[i].exists() {
+            std::fs::rename(&ring[i], &ring[i + 1]).map_err(|e| {
+                anyhow::anyhow!(
+                    "cannot rotate checkpoint {} -> {}: {e}",
+                    ring[i].display(),
+                    ring[i + 1].display()
+                )
+            })?;
+            moved = true;
+        }
+    }
+    if moved {
+        sync_parent_dir(path)?;
+    }
+    Ok(())
+}
+
+/// Load the newest *valid* snapshot in the retention ring, scanning
+/// newest-first past corrupt, torn, or missing members. Returns the
+/// checkpoint, the slot it was read from, and one note per skipped
+/// slot (so the caller can surface what the fallback stepped over).
+/// Errors only when every slot is unreadable.
+pub fn load_newest_valid(
+    path: &Path,
+    keep: usize,
+) -> anyhow::Result<(Checkpoint, PathBuf, Vec<String>)> {
+    let mut skipped = Vec::new();
+    for slot in ring_paths(path, keep) {
+        match Checkpoint::load(&slot) {
+            Ok(ck) => return Ok((ck, slot, skipped)),
+            Err(e) => skipped.push(format!("{}: {e}", slot.display())),
+        }
+    }
+    anyhow::bail!(
+        "no valid checkpoint in the retention ring of {} (keep {}):\n  {}",
+        path.display(),
+        keep.max(1),
+        skipped.join("\n  ")
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -308,6 +483,11 @@ pub enum BreakerKind {
     EnergyGrowth,
     /// More non-finite energy observations than `nan_budget` allows.
     NanRate,
+    /// A halo exchange exhausted its retry budget or per-exchange
+    /// deadline: the sharded engine could not complete a batch, the
+    /// pre-batch state is still intact, and the coordinator
+    /// checkpoints it and soft-aborts instead of wedging.
+    HaloStall,
 }
 
 impl BreakerKind {
@@ -317,6 +497,7 @@ impl BreakerKind {
         match self {
             BreakerKind::EnergyGrowth => "energy_growth",
             BreakerKind::NanRate => "nan_rate",
+            BreakerKind::HaloStall => "halo_stall",
         }
     }
 }
@@ -852,6 +1033,122 @@ mod tests {
     fn breaker_kind_names_are_label_safe() {
         assert_eq!(BreakerKind::EnergyGrowth.name(), "energy_growth");
         assert_eq!(BreakerKind::NanRate.name(), "nan_rate");
+        assert_eq!(BreakerKind::HaloStall.name(), "halo_stall");
+    }
+
+    #[test]
+    fn fnv1a64_f32_matches_the_byte_hash_and_tracks_bits() {
+        let vals = [0.0f32, -1.5, 3.25e-7, f32::NEG_INFINITY];
+        let mut bytes = Vec::new();
+        for v in vals {
+            bytes.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+        assert_eq!(fnv1a64_f32(&vals), fnv1a64(&bytes));
+        // -0.0 and 0.0 differ bitwise, so the checksum must separate them
+        assert_ne!(fnv1a64_f32(&[0.0]), fnv1a64_f32(&[-0.0]));
+    }
+
+    #[test]
+    fn ring_paths_name_slots_newest_first() {
+        let p = Path::new("/tmp/run.ckpt");
+        assert_eq!(ring_paths(p, 1), vec![PathBuf::from("/tmp/run.ckpt")]);
+        assert_eq!(ring_paths(p, 0), vec![PathBuf::from("/tmp/run.ckpt")], "keep clamps to 1");
+        assert_eq!(
+            ring_paths(p, 3),
+            vec![
+                PathBuf::from("/tmp/run.ckpt"),
+                PathBuf::from("/tmp/run.ckpt.1"),
+                PathBuf::from("/tmp/run.ckpt.2"),
+            ]
+        );
+    }
+
+    fn ring_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("hostencil_ring_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn ring_rotation_ages_snapshots_and_drops_the_oldest() {
+        let dir = ring_dir("rotate");
+        let path = dir.join("run.ckpt");
+        let mut ck = sample_checkpoint();
+        for step in [10u64, 20, 30, 40] {
+            ck.steps_done = step;
+            rotate_ring(&path, 3).unwrap();
+            ck.save(&path).unwrap();
+        }
+        let ring = ring_paths(&path, 3);
+        assert_eq!(Checkpoint::load(&ring[0]).unwrap().steps_done, 40);
+        assert_eq!(Checkpoint::load(&ring[1]).unwrap().steps_done, 30);
+        assert_eq!(Checkpoint::load(&ring[2]).unwrap().steps_done, 20);
+        // step 10 fell off the end
+        assert_eq!(ring.len(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_newest_valid_falls_back_past_corruption() {
+        let dir = ring_dir("fallback");
+        let path = dir.join("run.ckpt");
+        let mut ck = sample_checkpoint();
+        for step in [5u64, 6] {
+            ck.steps_done = step;
+            rotate_ring(&path, 2).unwrap();
+            ck.save(&path).unwrap();
+        }
+        // pristine ring: newest wins, nothing skipped
+        let (best, slot, skipped) = load_newest_valid(&path, 2).unwrap();
+        assert_eq!(best.steps_done, 6);
+        assert_eq!(slot, path);
+        assert!(skipped.is_empty());
+        // corrupt the newest: the fallback lands on the older slot and
+        // names what it stepped over
+        flip_byte_mid_file(&path).unwrap();
+        let (best, slot, skipped) = load_newest_valid(&path, 2).unwrap();
+        assert_eq!(best.steps_done, 5);
+        assert_eq!(slot, ring_paths(&path, 2)[1]);
+        assert_eq!(skipped.len(), 1);
+        assert!(skipped[0].contains("checksum"), "{}", skipped[0]);
+        // corrupt the older one too: every slot is named in the error
+        flip_byte_mid_file(&ring_paths(&path, 2)[1]).unwrap();
+        let err = load_newest_valid(&path, 2).unwrap_err().to_string();
+        assert!(err.contains("no valid checkpoint"), "{err}");
+        assert!(err.contains("run.ckpt.1"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn injected_write_faults_error_by_name_and_spare_the_published_snapshot() {
+        use crate::fault::{FaultKind, FaultPlan, FaultSite};
+        let dir = ring_dir("wfaults");
+        let path = dir.join("run.ckpt");
+        let ck = sample_checkpoint();
+        ck.save(&path).unwrap();
+
+        for (kind, needle) in
+            [(FaultKind::ShortWrite, "short write"), (FaultKind::Enospc, "ENOSPC")]
+        {
+            let plan = FaultPlan::single(FaultSite::Checkpoint, kind, 0, 1);
+            plan.set_step(1);
+            let err = write_atomic_with(&path, &ck.to_bytes(), Some(plan.as_ref()))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("injected fault"), "{err}");
+            assert!(err.contains(needle), "{err}");
+            // the published snapshot survived the failed write
+            assert_eq!(Checkpoint::load(&path).unwrap().steps_done, ck.steps_done);
+        }
+
+        // post-publish corruption is silent at write time and caught at load
+        let plan = FaultPlan::single(FaultSite::Checkpoint, FaultKind::Corrupt, 0, 1);
+        plan.set_step(1);
+        write_atomic_with(&path, &ck.to_bytes(), Some(plan.as_ref())).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     fn sample_trace() -> Trace {

@@ -40,6 +40,7 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
+use crate::fault::{FaultKind, FaultPlan, FaultSite, InjectedPanic};
 use crate::telemetry::Registry;
 
 /// Process-wide gauge of live parked pool threads. Lifecycle tests
@@ -71,6 +72,12 @@ struct State {
     /// epoch, kept so the caller re-raises the *original* panic (with
     /// its message) instead of a generic "a worker panicked".
     panic_payload: Option<Box<dyn Any + Send>>,
+    /// Slot whose thread *exited* this epoch (injected-fault death, as
+    /// opposed to a caught job panic, which leaves the thread alive).
+    /// `run` respawns a replacement at the same slot.
+    panicked_slot: Option<usize>,
+    /// Armed fault plan consulted by workers at epoch claim.
+    faults: Option<Arc<FaultPlan>>,
     shutdown: bool,
 }
 
@@ -85,6 +92,8 @@ struct PoolStats {
     wakes: AtomicU64,
     /// Jobs executed across all slots (one per slot per epoch).
     jobs: AtomicU64,
+    /// Worker threads respawned after a quarantined death.
+    respawns: AtomicU64,
     /// Nanoseconds each slot has spent inside jobs.
     busy_ns: Vec<AtomicU64>,
 }
@@ -112,6 +121,9 @@ impl Shared {
 pub struct WorkerPool {
     shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
+    /// Quarantine budget: how many injected worker deaths `run` will
+    /// absorb (respawn + continue) before escalating to the caller.
+    respawn_budget: u32,
 }
 
 impl WorkerPool {
@@ -125,6 +137,8 @@ impl WorkerPool {
                 job: None,
                 active: 0,
                 panic_payload: None,
+                panicked_slot: None,
+                faults: None,
                 shutdown: false,
             }),
             go: Condvar::new(),
@@ -133,6 +147,7 @@ impl WorkerPool {
                 parks: AtomicU64::new(0),
                 wakes: AtomicU64::new(0),
                 jobs: AtomicU64::new(0),
+                respawns: AtomicU64::new(0),
                 busy_ns: (0..workers.max(1)).map(|_| AtomicU64::new(0)).collect(),
             },
         });
@@ -145,12 +160,20 @@ impl WorkerPool {
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { shared, handles }
+        WorkerPool { shared, handles, respawn_budget: 1 }
     }
 
     /// Total worker slots (spawned threads + the caller's slot 0).
     pub fn workers(&self) -> usize {
         self.handles.len() + 1
+    }
+
+    /// Arm a fault plan: workers consult it once per epoch claim and an
+    /// armed `pool:panic` spec takes exactly one worker thread down
+    /// (before it claims any tile). With no plan armed the epoch path
+    /// is untouched.
+    pub fn set_faults(&mut self, faults: Arc<FaultPlan>) {
+        self.shared.lock().faults = Some(faults);
     }
 
     /// Execute `job(slot)` once on every slot and block until all
@@ -162,6 +185,15 @@ impl WorkerPool {
     /// re-raised here after every worker has quiesced — the step fails
     /// as a clean unwind with the real message (never a hang) and the
     /// pool remains usable.
+    ///
+    /// An *injected* worker death (the [`InjectedPanic`] marker from an
+    /// armed fault plan) is handled one level earlier: the dead thread
+    /// is quarantined and a replacement respawned at the same slot, and
+    /// — while the respawn budget lasts — the step is treated as
+    /// complete, since the fault fires before the worker claims any
+    /// tile and the surviving slots drain the whole shared cursor. Once
+    /// the budget is spent the marker escalates like any other panic
+    /// (the pool is still made whole first, so it stays usable).
     pub fn run(&mut self, job: &(dyn Fn(usize) + Sync)) {
         if self.handles.is_empty() {
             let t0 = Instant::now();
@@ -183,12 +215,13 @@ impl WorkerPool {
             st.epoch = st.epoch.wrapping_add(1);
             st.active = self.handles.len();
             st.panic_payload = None;
+            st.panicked_slot = None;
             self.shared.go.notify_all();
         }
         let t0 = Instant::now();
         let caller = catch_unwind(AssertUnwindSafe(|| job(0)));
         self.record_slot0(t0);
-        let worker_panic = {
+        let (worker_panic, dead_slot) = {
             let mut st = self.shared.lock();
             while st.active > 0 {
                 st = self
@@ -198,14 +231,38 @@ impl WorkerPool {
                     .unwrap_or_else(PoisonError::into_inner);
             }
             st.job = None;
-            st.panic_payload.take()
+            (st.panic_payload.take(), st.panicked_slot.take())
         };
         if let Err(payload) = caller {
             resume_unwind(payload);
         }
         if let Some(payload) = worker_panic {
+            if payload.downcast_ref::<InjectedPanic>().is_some() {
+                if let Some(slot) = dead_slot {
+                    self.respawn(slot);
+                }
+                if self.respawn_budget > 0 {
+                    self.respawn_budget -= 1;
+                    return;
+                }
+            }
             resume_unwind(payload);
         }
+    }
+
+    /// Replace the exited thread at `slot` with a fresh one parked on
+    /// the same shared state (the replacement sees the current epoch as
+    /// already-claimed, so it first runs on the *next* epoch).
+    fn respawn(&mut self, slot: usize) {
+        let epoch = self.shared.lock().epoch;
+        let shared = Arc::clone(&self.shared);
+        let h = std::thread::Builder::new()
+            .name(format!("hostencil-pool-{slot}"))
+            .spawn(move || worker_loop_from(&shared, slot, epoch))
+            .expect("respawn pool worker");
+        let old = std::mem::replace(&mut self.handles[slot - 1], h);
+        let _ = old.join();
+        self.shared.stats.respawns.fetch_add(1, Ordering::Relaxed);
     }
 
     fn record_slot0(&self, t0: Instant) {
@@ -240,6 +297,13 @@ impl WorkerPool {
             &[],
             move || s.stats.jobs.load(Ordering::Relaxed),
         );
+        let s = Arc::clone(&self.shared);
+        reg.counter_fn(
+            "hostencil_pool_respawns_total",
+            "Worker threads respawned after a quarantined (injected) death.",
+            &[],
+            move || s.stats.respawns.load(Ordering::Relaxed),
+        );
         for slot in 0..self.shared.stats.busy_ns.len() {
             let s = Arc::clone(&self.shared);
             let label = slot.to_string();
@@ -267,10 +331,17 @@ impl Drop for WorkerPool {
 }
 
 fn worker_loop(shared: &Shared, slot: usize) {
+    worker_loop_from(shared, slot, 0)
+}
+
+/// Worker body, parameterized on the last epoch already counted as
+/// claimed (0 for initial spawns; the current epoch for respawned
+/// replacements, whose dead predecessor already decremented `active`).
+fn worker_loop_from(shared: &Shared, slot: usize, start_epoch: u64) {
     LIVE_WORKERS.fetch_add(1, Ordering::SeqCst);
-    let mut seen = 0u64;
+    let mut seen = start_epoch;
     loop {
-        let job = {
+        let (job, faults) = {
             let mut st = shared.lock();
             loop {
                 if st.shutdown {
@@ -285,7 +356,7 @@ fn worker_loop(shared: &Shared, slot: usize) {
                     Some(job) if st.epoch != seen => {
                         seen = st.epoch;
                         shared.stats.wakes.fetch_add(1, Ordering::Relaxed);
-                        break job;
+                        break (job, st.faults.clone());
                     }
                     _ => {
                         shared.stats.parks.fetch_add(1, Ordering::Relaxed);
@@ -294,6 +365,25 @@ fn worker_loop(shared: &Shared, slot: usize) {
                 }
             }
         };
+        // An armed `pool:panic` spec kills exactly one worker (the CAS
+        // in `fire` picks the winner) *before* it claims any tile, so
+        // the surviving slots drain the shared cursor and the step
+        // still completes bit-identically. The marker payload and slot
+        // tell `run` to quarantine + respawn instead of escalating.
+        if let Some(f) = &faults {
+            if f.fire(FaultSite::Pool, FaultKind::Panic) {
+                let mut st = shared.lock();
+                st.panic_payload.get_or_insert(Box::new(InjectedPanic { step: f.step() }));
+                st.panicked_slot = Some(slot);
+                st.active -= 1;
+                if st.active == 0 {
+                    shared.done.notify_one();
+                }
+                drop(st);
+                LIVE_WORKERS.fetch_sub(1, Ordering::SeqCst);
+                return;
+            }
+        }
         // A panicking job must not take the worker down: stash the
         // payload (first one wins), keep the completed-count honest so
         // the caller never hangs, and let `run` re-raise it after the
@@ -415,6 +505,57 @@ mod tests {
             hits.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(hits.load(Ordering::SeqCst), 3, "the pool must stay usable");
+    }
+
+    #[test]
+    fn injected_worker_death_is_quarantined_and_respawned() {
+        let mut pool = WorkerPool::new(3);
+        let reg = Registry::new();
+        pool.register_telemetry(&reg);
+        pool.set_faults(FaultPlan::single(FaultSite::Pool, FaultKind::Panic, 0, 5));
+        // cursor fan-out: the dead slot never claims a tile, so the
+        // survivors cover every tile exactly once and run() absorbs
+        // the death instead of unwinding
+        let n = 256;
+        let done: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        let cursor = AtomicUsize::new(0);
+        pool.run(&|_slot| loop {
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            done[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(done.iter().all(|d| d.load(Ordering::Relaxed) == 1), "every tile exactly once");
+        let text = reg.render();
+        assert!(text.contains("hostencil_pool_respawns_total 1"), "{text}");
+        // the replacement thread participates in the next epoch
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3, "the pool must be whole again");
+    }
+
+    #[test]
+    fn a_second_injected_death_escalates_but_leaves_the_pool_whole() {
+        let mut pool = WorkerPool::new(3);
+        pool.set_faults(FaultPlan::single(FaultSite::Pool, FaultKind::Panic, 0, 5));
+        pool.run(&|_| {}); // first death: absorbed, budget spent
+        pool.set_faults(FaultPlan::single(FaultSite::Pool, FaultKind::Panic, 0, 7));
+        let r = catch_unwind(AssertUnwindSafe(|| pool.run(&|_| {})));
+        let payload = r.expect_err("budget spent: the marker must escalate");
+        assert!(
+            payload.downcast_ref::<InjectedPanic>().is_some(),
+            "the marker payload must reach the caller intact"
+        );
+        // escalation still respawned the dead slot, so the pool stays
+        // usable (and correctly sized) for the caller's recovery path
+        let hits = AtomicUsize::new(0);
+        pool.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
     }
 
     #[test]

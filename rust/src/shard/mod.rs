@@ -44,11 +44,16 @@
 //! `--shards N` cannot oversubscribe). The steady state allocates
 //! nothing — see `rust/tests/zero_alloc_shard.rs`.
 
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::fault::{
+    FaultKind, FaultPlan, FaultSite, HALO_BACKOFF_BASE, HALO_DEADLINE, HALO_MAX_ATTEMPTS,
+};
 use crate::grid::{Dim3, Domain, Field3, Region, RegionClass};
+use crate::recovery::fnv1a64_f32;
 use crate::runtime::pool::WorkerPool;
 use crate::stencil::propagator::Plan;
 use crate::stencil::{inner_row, pml_row, row_segments, simd, Consts, SourceBatch};
@@ -117,27 +122,99 @@ pub enum Side {
     High,
 }
 
+/// Why one transport operation failed. Transport errors are
+/// *retryable by contract*: the engine's bounded-retry loop re-invokes
+/// the operation with exponential backoff, and only when the attempt
+/// budget or the per-exchange deadline is exhausted does the failure
+/// escalate into an [`ExchangeError`] (which the coordinator turns
+/// into a checkpoint + `SoftAbort`, never a panic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportError {
+    /// The band is not available right now (peer not yet published,
+    /// connection lost, injected drop) — a retry may heal it.
+    Unavailable(&'static str),
+    /// The band arrived but is known-bad at the transport layer.
+    Corrupt(&'static str),
+}
+
+impl TransportError {
+    pub fn detail(self) -> &'static str {
+        match self {
+            TransportError::Unavailable(s) | TransportError::Corrupt(s) => s,
+        }
+    }
+}
+
+/// Publisher-computed checksums of one posted band: FNV-1a 64 over
+/// each leapfrog level's f32 bit stream. The engine verifies collected
+/// bytes against these *before* unpacking into the halo, so a band
+/// corrupted in flight is detected and re-collected — never silently
+/// applied to the wavefield.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BandCheck {
+    pub u: u64,
+    pub um: u64,
+}
+
+/// A halo exchange that could not be completed within its retry
+/// budget: which seam operation failed, after how many attempts, and
+/// why. Surfaced from [`ShardedEngine::advance_batch`]; the global
+/// padded buffers still hold the pre-batch state (the failed batch is
+/// never gathered), so the caller can checkpoint and soft-abort with
+/// restorable state.
+#[derive(Clone, Debug)]
+pub struct ExchangeError {
+    pub shard: usize,
+    pub side: Side,
+    pub attempts: u32,
+    pub detail: String,
+}
+
+impl fmt::Display for ExchangeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "halo exchange failed at shard {} side {:?} after {} attempt(s): {}",
+            self.shard, self.side, self.attempts, self.detail
+        )
+    }
+}
+
+impl std::error::Error for ExchangeError {}
+
 /// The halo-exchange backend. Shards talk only in terms of opaque band
 /// buffers (`halo * ny * nx` floats per leapfrog level), so an
 /// implementation may live in-process, cross-process, or cross-node.
 ///
 /// Contract: `publish(i, side, ...)` posts shard `i`'s *owned* band on
 /// that side; `collect(i, side, ...)` fills shard `i`'s *halo* on that
-/// side from the neighbour's published owned band. The engine
-/// barrier-separates the publish and collect phases of a batch
-/// boundary, so a transport never sees a collect race a publish of the
-/// same exchange round.
+/// side from the neighbour's published owned band and returns the
+/// *publisher's* [`BandCheck`] checksums for end-to-end verification.
+/// Both operations are fallible and retry-safe: a retried `collect`
+/// must re-read the current mailbox, a retried `publish` must
+/// overwrite the previous attempt. The engine barrier-separates the
+/// publish and collect phases of a batch boundary, so a transport
+/// never sees a collect race a publish of the same exchange round.
 pub trait HaloTransport: Send + Sync {
-    fn publish(&self, from: usize, side: Side, u: &[f32], um: &[f32]);
-    fn collect(&self, to: usize, side: Side, u: &mut [f32], um: &mut [f32]);
+    fn publish(&self, from: usize, side: Side, u: &[f32], um: &[f32])
+        -> Result<(), TransportError>;
+    fn collect(
+        &self,
+        to: usize,
+        side: Side,
+        u: &mut [f32],
+        um: &mut [f32],
+    ) -> Result<BandCheck, TransportError>;
 }
 
 /// One posted band: both leapfrog levels of one shard's owned seam
-/// planes. Preallocated at construction — steady-state exchanges only
-/// `copy_from_slice` under a short mutex hold.
+/// planes, plus the publisher-side checksums. Preallocated at
+/// construction — steady-state exchanges only `copy_from_slice` and
+/// hash under a short mutex hold.
 struct Band {
     u: Vec<f32>,
     um: Vec<f32>,
+    check: BandCheck,
 }
 
 /// The in-process transport: a mailbox per (shard, side). Publishing
@@ -152,8 +229,13 @@ pub struct InProcessTransport {
 
 impl InProcessTransport {
     pub fn new(shards: usize, band_len: usize) -> InProcessTransport {
+        let zero_sum = fnv1a64_f32(&vec![0.0; band_len]);
         let mk = || {
-            Mutex::new(Band { u: vec![0.0; band_len], um: vec![0.0; band_len] })
+            Mutex::new(Band {
+                u: vec![0.0; band_len],
+                um: vec![0.0; band_len],
+                check: BandCheck { u: zero_sum, um: zero_sum },
+            })
         };
         InProcessTransport { bands: (0..shards).map(|_| [mk(), mk()]).collect() }
     }
@@ -167,15 +249,24 @@ fn side_idx(side: Side) -> usize {
 }
 
 impl HaloTransport for InProcessTransport {
-    fn publish(&self, from: usize, side: Side, u: &[f32], um: &[f32]) {
+    fn publish(&self, from: usize, side: Side, u: &[f32], um: &[f32])
+        -> Result<(), TransportError> {
         let mut b = self.bands[from][side_idx(side)]
             .lock()
             .unwrap_or_else(|p| p.into_inner());
         b.u.copy_from_slice(u);
         b.um.copy_from_slice(um);
+        b.check = BandCheck { u: fnv1a64_f32(u), um: fnv1a64_f32(um) };
+        Ok(())
     }
 
-    fn collect(&self, to: usize, side: Side, u: &mut [f32], um: &mut [f32]) {
+    fn collect(
+        &self,
+        to: usize,
+        side: Side,
+        u: &mut [f32],
+        um: &mut [f32],
+    ) -> Result<BandCheck, TransportError> {
         // shard `to`'s Low halo is its low neighbour's owned High band
         // (and vice versa): the seam is shared, the roles are mirrored
         let (nbr, nbr_side) = match side {
@@ -187,6 +278,87 @@ impl HaloTransport for InProcessTransport {
             .unwrap_or_else(|p| p.into_inner());
         u.copy_from_slice(&b.u);
         um.copy_from_slice(&b.um);
+        Ok(b.check)
+    }
+}
+
+/// A chaos decorator around any [`HaloTransport`]: consults the fault
+/// plan at the halo site on every collect and injects a dropped band
+/// (one `Unavailable` the retry heals), a stall (sleeps past
+/// [`HALO_DEADLINE`] then fails, deterministically exercising the
+/// timeout escalation), or transient wire corruption (flips one bit of
+/// the *collected* copy — the publisher's mailbox stays clean, so the
+/// checksum catches it and the retry re-reads a good band). Publish
+/// passes straight through. Installed by
+/// [`ShardedEngine::set_faults`]; absent a fault plan the engine uses
+/// the inner transport directly at zero cost.
+pub struct FaultyTransport {
+    inner: Box<dyn HaloTransport>,
+    faults: Arc<FaultPlan>,
+    /// How long an injected `halo:delay` stalls — always past the
+    /// engine's per-exchange deadline, so the timeout path is
+    /// exercised deterministically (`fault::HALO_STALL` at defaults).
+    stall: Duration,
+}
+
+impl FaultyTransport {
+    pub fn new(
+        inner: Box<dyn HaloTransport>,
+        faults: Arc<FaultPlan>,
+        stall: Duration,
+    ) -> FaultyTransport {
+        FaultyTransport { inner, faults, stall }
+    }
+}
+
+impl HaloTransport for FaultyTransport {
+    fn publish(&self, from: usize, side: Side, u: &[f32], um: &[f32])
+        -> Result<(), TransportError> {
+        self.inner.publish(from, side, u, um)
+    }
+
+    fn collect(
+        &self,
+        to: usize,
+        side: Side,
+        u: &mut [f32],
+        um: &mut [f32],
+    ) -> Result<BandCheck, TransportError> {
+        if self.faults.fire(FaultSite::Halo, FaultKind::Drop) {
+            return Err(TransportError::Unavailable("injected fault: band dropped"));
+        }
+        if self.faults.fire(FaultSite::Halo, FaultKind::Delay) {
+            std::thread::sleep(self.stall);
+            return Err(TransportError::Unavailable("injected fault: transport stalled"));
+        }
+        let check = self.inner.collect(to, side, u, um)?;
+        if self.faults.fire(FaultSite::Halo, FaultKind::Corrupt) {
+            let mid = u.len() / 2;
+            if let Some(x) = u.get_mut(mid) {
+                *x = f32::from_bits(x.to_bits() ^ 0x1);
+            }
+        }
+        Ok(check)
+    }
+}
+
+/// Placeholder transport while the real one is being wrapped by
+/// `set_faults`; never reachable on an exchange path.
+struct DisconnectedTransport;
+
+impl HaloTransport for DisconnectedTransport {
+    fn publish(&self, _: usize, _: Side, _: &[f32], _: &[f32]) -> Result<(), TransportError> {
+        Err(TransportError::Unavailable("transport disconnected"))
+    }
+
+    fn collect(
+        &self,
+        _: usize,
+        _: Side,
+        _: &mut [f32],
+        _: &mut [f32],
+    ) -> Result<BandCheck, TransportError> {
+        Err(TransportError::Unavailable("transport disconnected"))
     }
 }
 
@@ -219,6 +391,12 @@ struct Shard {
     /// Seam-band staging, `halo * ny * nx` floats per level.
     band_u: Vec<f32>,
     band_um: Vec<f32>,
+    /// Error slot for the exchange phases: the phase closures cannot
+    /// return values through the pool fan-out, so a failed seam
+    /// operation parks its [`ExchangeError`] here and `advance_batch`
+    /// scans the slots after each phase barrier. `None` in steady
+    /// state (the happy path never writes it).
+    fail: Option<ExchangeError>,
 }
 
 impl Shard {
@@ -424,6 +602,37 @@ struct ShardInstr {
     exchanges: Counter,
     bytes: Counter,
     latency: Histogram,
+    retries: Counter,
+}
+
+/// Run one transport operation under the bounded-retry protocol:
+/// exponential backoff between attempts, giving up when the attempt
+/// budget ([`HALO_MAX_ATTEMPTS`]) or the per-exchange `deadline` is
+/// exhausted — whichever comes first. The happy path is one call and
+/// no allocation; the error string only materializes on escalation.
+fn with_retry(
+    shard: usize,
+    side: Side,
+    deadline: Duration,
+    retries: Option<&Counter>,
+    mut op: impl FnMut() -> Result<(), &'static str>,
+) -> Result<(), ExchangeError> {
+    let start = Instant::now();
+    let mut attempt = 0u32;
+    loop {
+        attempt += 1;
+        let detail = match op() {
+            Ok(()) => return Ok(()),
+            Err(d) => d,
+        };
+        if attempt >= HALO_MAX_ATTEMPTS || start.elapsed() >= deadline {
+            return Err(ExchangeError { shard, side, attempts: attempt, detail: detail.to_string() });
+        }
+        if let Some(r) = retries {
+            r.inc();
+        }
+        std::thread::sleep(HALO_BACKOFF_BASE * (1 << (attempt - 1)));
+    }
 }
 
 /// The sharded propagation engine: per-shard buffers/plans/pools plus
@@ -438,6 +647,8 @@ pub struct ShardedEngine {
     transport: Box<dyn HaloTransport>,
     pool: Option<WorkerPool>,
     instr: Option<ShardInstr>,
+    /// Per-exchange deadline for the retry loop (tests shrink it).
+    deadline: Duration,
 }
 
 impl ShardedEngine {
@@ -491,6 +702,7 @@ impl ShardedEngine {
                 plan: None,
                 band_u: vec![0.0; band_len],
                 band_um: vec![0.0; band_len],
+                fail: None,
             };
             Plan::ensure(&mut sh.plan, &local, inner, "shard", telemetry, shard_tiles, |_| ());
             shard_v.push(sh);
@@ -513,6 +725,10 @@ impl ShardedEngine {
                 "Wall-clock latency of one batch-boundary halo exchange (publish + collect, all seams).",
                 &LATENCY_BOUNDS,
             ),
+            retries: reg.counter(
+                "hostencil_halo_retries_total",
+                "Halo transport operations retried after a transient failure (drop, corruption, unavailability).",
+            ),
         });
         Ok(ShardedEngine {
             domain: *domain,
@@ -524,7 +740,35 @@ impl ShardedEngine {
             transport: Box::new(InProcessTransport::new(slabs.len(), band_len)),
             pool,
             instr,
+            deadline: HALO_DEADLINE,
         })
+    }
+
+    /// Arm a fault plan on this engine: halo specs wrap the transport
+    /// in a [`FaultyTransport`] decorator, pool specs arm the outer
+    /// shard pool's injection check. Without the respective spec class
+    /// the seam is left untouched — the disarmed hot path is
+    /// bit-identical to a plan-free engine.
+    pub fn set_faults(&mut self, faults: &Arc<FaultPlan>) {
+        if faults.targets(FaultSite::Halo) {
+            // stall 25% past the *current* deadline: callers shrinking
+            // the deadline for fast tests should do so before arming
+            // (at the default deadline this is exactly HALO_STALL)
+            let stall = self.deadline + self.deadline / 4;
+            let inner = std::mem::replace(&mut self.transport, Box::new(DisconnectedTransport));
+            self.transport = Box::new(FaultyTransport::new(inner, Arc::clone(faults), stall));
+        }
+        if faults.targets(FaultSite::Pool) {
+            if let Some(p) = &mut self.pool {
+                p.set_faults(Arc::clone(faults));
+            }
+        }
+    }
+
+    /// Override the per-exchange deadline (default [`HALO_DEADLINE`]);
+    /// tests shrink it to keep injected-stall cases fast.
+    pub fn set_halo_deadline(&mut self, deadline: Duration) {
+        self.deadline = deadline;
     }
 
     pub fn shard_count(&self) -> usize {
@@ -566,9 +810,17 @@ impl ShardedEngine {
     /// Advance one fused batch of `batch.n_steps <= fuse` sub-steps on
     /// every shard (no inter-shard sync inside the batch), then run
     /// the batch-boundary halo exchange: a publish phase posting owned
-    /// seam bands and a collect phase overwriting halos — each phase a
-    /// barrier, so single-mailbox transports are race-free.
-    pub fn advance_batch(&mut self, batch: &SourceBatch) {
+    /// seam bands and a collect phase verifying checksums and
+    /// overwriting halos — each phase a barrier, so single-mailbox
+    /// transports are race-free.
+    ///
+    /// Every transport operation rides the bounded-retry protocol
+    /// (backoff + per-exchange deadline). An exhausted retry budget
+    /// surfaces as `Err(ExchangeError)`; in that case the batch is
+    /// *not* observable — the caller must skip the gather and its step
+    /// accounting, so the global padded buffers keep the pre-batch
+    /// state for a restorable checkpoint.
+    pub fn advance_batch(&mut self, batch: &SourceBatch) -> Result<(), ExchangeError> {
         let b = batch.n_steps;
         assert!(
             b >= 1 && b <= self.fuse,
@@ -579,8 +831,11 @@ impl ShardedEngine {
         let k = Consts::of(&gd).with_kernel(simd::active());
         let halo = self.halo;
         let n = self.shards.len();
+        let deadline = self.deadline;
         let ShardedEngine { shards, pool, transport, instr, .. } = self;
         let transport: &dyn HaloTransport = &**transport;
+        let retries = instr.as_ref().map(|i| i.retries.clone());
+        let retries = retries.as_ref();
 
         run_phase(pool, shards, |_i, sh| {
             for j in 0..b {
@@ -591,26 +846,68 @@ impl ShardedEngine {
         if n > 1 {
             let span = instr.as_ref().map(|i| i.latency.time());
             run_phase(pool, shards, |i, sh| {
+                let mut side = |sh: &mut Shard, s: Side| {
+                    if sh.fail.is_some() {
+                        return;
+                    }
+                    sh.pack(s, halo);
+                    let r = with_retry(i, s, deadline, retries, || {
+                        transport.publish(i, s, &sh.band_u, &sh.band_um).map_err(|e| e.detail())
+                    });
+                    if let Err(e) = r {
+                        sh.fail = Some(e);
+                    }
+                };
                 if i > 0 {
-                    sh.pack(Side::Low, halo);
-                    transport.publish(i, Side::Low, &sh.band_u, &sh.band_um);
+                    side(sh, Side::Low);
                 }
                 if i + 1 < n {
-                    sh.pack(Side::High, halo);
-                    transport.publish(i, Side::High, &sh.band_u, &sh.band_um);
+                    side(sh, Side::High);
                 }
             });
-            run_phase(pool, shards, |i, sh| {
-                if i > 0 {
-                    transport.collect(i, Side::Low, &mut sh.band_u, &mut sh.band_um);
-                    sh.unpack(Side::Low, halo);
-                }
-                if i + 1 < n {
-                    transport.collect(i, Side::High, &mut sh.band_u, &mut sh.band_um);
-                    sh.unpack(Side::High, halo);
-                }
-            });
+            // a failed publish leaves a stale mailbox with *valid*
+            // checksums of the previous round — collecting past it
+            // would apply stale planes silently, so the whole collect
+            // phase is skipped once any publish has failed
+            if shards.iter().all(|sh| sh.fail.is_none()) {
+                run_phase(pool, shards, |i, sh| {
+                    let mut side = |sh: &mut Shard, s: Side| {
+                        if sh.fail.is_some() {
+                            return;
+                        }
+                        let r = with_retry(i, s, deadline, retries, || {
+                            let check = transport
+                                .collect(i, s, &mut sh.band_u, &mut sh.band_um)
+                                .map_err(|e| e.detail())?;
+                            // end-to-end verification before the band
+                            // touches the wavefield: a corrupt band is
+                            // re-collected, never applied
+                            if fnv1a64_f32(&sh.band_u) != check.u
+                                || fnv1a64_f32(&sh.band_um) != check.um
+                            {
+                                return Err("collected band failed its checksum");
+                            }
+                            Ok(())
+                        });
+                        match r {
+                            Ok(()) => sh.unpack(s, halo),
+                            Err(e) => sh.fail = Some(e),
+                        }
+                    };
+                    if i > 0 {
+                        side(sh, Side::Low);
+                    }
+                    if i + 1 < n {
+                        side(sh, Side::High);
+                    }
+                });
+            }
             drop(span);
+            for sh in shards.iter_mut() {
+                if let Some(e) = sh.fail.take() {
+                    return Err(e);
+                }
+            }
             if let Some(i) = instr.as_ref() {
                 i.exchanges.add((n - 1) as u64);
                 let seam_bytes =
@@ -618,6 +915,7 @@ impl ShardedEngine {
                 i.bytes.add(((n - 1) * seam_bytes) as u64);
             }
         }
+        Ok(())
     }
 }
 
@@ -654,7 +952,9 @@ pub fn measure_sharded_steps_per_sec(
         let mut done = 0;
         while done < steps {
             let b = fuse.min(steps - done);
-            engine.advance_batch(&SourceBatch::silent(b));
+            engine
+                .advance_batch(&SourceBatch::silent(b))
+                .expect("measurement run has no transport faults");
             done += b;
         }
         t0.elapsed()
@@ -727,15 +1027,18 @@ mod tests {
     #[test]
     fn transport_routes_bands_between_seam_neighbours() {
         let t = InProcessTransport::new(3, 4);
-        t.publish(0, Side::High, &[1.0; 4], &[2.0; 4]);
-        t.publish(1, Side::Low, &[3.0; 4], &[4.0; 4]);
+        t.publish(0, Side::High, &[1.0; 4], &[2.0; 4]).unwrap();
+        t.publish(1, Side::Low, &[3.0; 4], &[4.0; 4]).unwrap();
         let (mut u, mut um) = ([0.0f32; 4], [0.0f32; 4]);
-        // shard 1's Low halo <- shard 0's owned High band
-        t.collect(1, Side::Low, &mut u, &mut um);
+        // shard 1's Low halo <- shard 0's owned High band, and the
+        // returned check matches the publisher-side hash end to end
+        let check = t.collect(1, Side::Low, &mut u, &mut um).unwrap();
         assert_eq!((u, um), ([1.0; 4], [2.0; 4]));
+        assert_eq!((check.u, check.um), (fnv1a64_f32(&u), fnv1a64_f32(&um)));
         // shard 0's High halo <- shard 1's owned Low band
-        t.collect(0, Side::High, &mut u, &mut um);
+        let check = t.collect(0, Side::High, &mut u, &mut um).unwrap();
         assert_eq!((u, um), ([3.0; 4], [4.0; 4]));
+        assert_eq!((check.u, check.um), (fnv1a64_f32(&u), fnv1a64_f32(&um)));
     }
 
     /// Quick in-module bit-identity check (fuse 1, random state, seam
@@ -781,7 +1084,9 @@ mod tests {
                 let amps: Vec<f32> = (0..sources.len())
                     .map(|i| 1e-2 * ((n * sources.len() + i + 1) as f32))
                     .collect();
-                engine.advance_batch(&SourceBatch { positions: &sources, amps: &amps, n_steps: 1 });
+                engine
+                    .advance_batch(&SourceBatch { positions: &sources, amps: &amps, n_steps: 1 })
+                    .expect("fault-free batch");
             }
             let mut gu = Field3::zeros(domain.padded());
             let mut gum = Field3::zeros(domain.padded());
@@ -791,5 +1096,87 @@ mod tests {
             // ghost ring stays zero
             assert_eq!(gu.unpad(R).pad(R).max_abs_diff(&gu), 0.0, "{shards} shards: ghost dirty");
         }
+    }
+
+    /// Drive a tiny 2-shard serial engine for 6 fuse-1 batches from an
+    /// impulse initial condition, advancing the fault plan's step clock
+    /// the way the coordinator does, and gather the result.
+    fn run_chaos_engine(
+        faults: Option<&Arc<FaultPlan>>,
+        deadline: Option<Duration>,
+        telemetry: Option<&Registry>,
+    ) -> Result<(Field3, Field3), ExchangeError> {
+        let h = 10.0;
+        let interior = Dim3::new(16, 6, 7);
+        let domain = Domain::new(interior, 2, h, cfl_dt(h, 3000.0)).expect("domain");
+        let v = Field3::full(interior, 3000.0);
+        let eta = wave::eta_profile(&domain, 3000.0);
+        let mut engine = ShardedEngine::new(&domain, &v, &eta, 1, 2, 1, telemetry).expect("engine");
+        if let Some(d) = deadline {
+            engine.set_halo_deadline(d);
+        }
+        if let Some(f) = faults {
+            engine.set_faults(f);
+        }
+        let mut u0 = Field3::zeros(domain.padded());
+        u0.set(R + 8, R + 3, R + 3, 1.0);
+        let um0 = Field3::zeros(domain.padded());
+        engine.load(&u0, &um0);
+        for n in 0..6u64 {
+            if let Some(f) = faults {
+                f.set_step(n);
+            }
+            engine.advance_batch(&SourceBatch::silent(1))?;
+        }
+        let mut gu = Field3::zeros(domain.padded());
+        let mut gum = Field3::zeros(domain.padded());
+        engine.gather_into(&mut gu, &mut gum);
+        Ok((gu, gum))
+    }
+
+    #[test]
+    fn dropped_band_retries_to_a_bit_identical_completion() {
+        let clean = run_chaos_engine(None, None, None).expect("clean run");
+        let reg = Registry::new();
+        let plan = FaultPlan::single(FaultSite::Halo, FaultKind::Drop, 3, 7);
+        let faulty = run_chaos_engine(Some(&plan), None, Some(&reg)).expect("drop must heal");
+        assert_eq!(plan.injected(FaultSite::Halo), 1, "exactly one injected drop");
+        assert!(
+            reg.counter("hostencil_halo_retries_total", "").get() >= 1,
+            "the healed drop must be visible as a retry"
+        );
+        assert_eq!(faulty.0.max_abs_diff(&clean.0), 0.0, "u diverged after a healed drop");
+        assert_eq!(faulty.1.max_abs_diff(&clean.1), 0.0, "um diverged after a healed drop");
+    }
+
+    #[test]
+    fn corrupted_band_is_caught_by_checksum_and_recollected() {
+        let clean = run_chaos_engine(None, None, None).expect("clean run");
+        let reg = Registry::new();
+        let plan = FaultPlan::single(FaultSite::Halo, FaultKind::Corrupt, 2, 11);
+        let faulty =
+            run_chaos_engine(Some(&plan), None, Some(&reg)).expect("corruption must heal");
+        assert_eq!(plan.injected(FaultSite::Halo), 1, "exactly one injected corruption");
+        assert!(
+            reg.counter("hostencil_halo_retries_total", "").get() >= 1,
+            "the checksum catch must be visible as a retry"
+        );
+        // the corrupt band was never applied: the re-collected clean
+        // band keeps the run bit-identical to the fault-free one
+        assert_eq!(faulty.0.max_abs_diff(&clean.0), 0.0, "u diverged: corrupt band applied");
+        assert_eq!(faulty.1.max_abs_diff(&clean.1), 0.0, "um diverged: corrupt band applied");
+    }
+
+    #[test]
+    fn stalled_transport_exhausts_the_deadline_and_escalates() {
+        let plan = FaultPlan::single(FaultSite::Halo, FaultKind::Delay, 2, 13);
+        // 5ms deadline set *before* arming, so the injected stall
+        // (deadline + 25%) overshoots it and the test stays fast
+        let err = run_chaos_engine(Some(&plan), Some(Duration::from_millis(5)), None)
+            .expect_err("a stall past the deadline must escalate");
+        assert_eq!(plan.injected(FaultSite::Halo), 1);
+        let msg = err.to_string();
+        assert!(msg.contains("transport stalled"), "got: {msg}");
+        assert!(msg.contains("halo exchange failed"), "got: {msg}");
     }
 }

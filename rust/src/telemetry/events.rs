@@ -16,6 +16,7 @@ use std::collections::BTreeMap;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
@@ -31,13 +32,21 @@ enum Sink {
 #[derive(Clone)]
 pub struct EventLog {
     sink: Arc<Mutex<Sink>>,
+    /// Events lost to file-sink I/O errors (a full disk must not kill
+    /// or silently lie to a multi-hour run — drops are *counted* and
+    /// exported as `hostencil_events_dropped_total`).
+    dropped: Arc<AtomicU64>,
     start: Instant,
 }
 
 impl EventLog {
     /// A log that drops everything (the default state).
     pub fn disabled() -> EventLog {
-        EventLog { sink: Arc::new(Mutex::new(Sink::Off)), start: Instant::now() }
+        EventLog {
+            sink: Arc::new(Mutex::new(Sink::Off)),
+            dropped: Arc::new(AtomicU64::new(0)),
+            start: Instant::now(),
+        }
     }
 
     /// A fresh log buffering lines in memory (tests, `--demo`).
@@ -92,9 +101,23 @@ impl EventLog {
             Sink::Off => {}
             Sink::Mem(lines) => lines.push(line),
             Sink::File(w) => {
-                let _ = writeln!(w, "{line}");
+                // a failed write must neither kill the run nor vanish:
+                // count the dropped event and keep going
+                if writeln!(w, "{line}").is_err() {
+                    self.dropped.fetch_add(1, Ordering::Relaxed);
+                }
             }
         }
+    }
+
+    /// Events lost to file-sink write/flush errors so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Shared drop counter, for registering an exposition collector.
+    pub(crate) fn dropped_handle(&self) -> Arc<AtomicU64> {
+        Arc::clone(&self.dropped)
     }
 
     /// Buffered lines (in-memory sink only; empty for off/file sinks).
@@ -106,10 +129,14 @@ impl EventLog {
     }
 
     /// Flush a file sink (no-op otherwise). Call before process exit;
-    /// dropping the last clone also flushes via `BufWriter`'s drop.
+    /// dropping the last clone also flushes via `BufWriter`'s drop. A
+    /// failed flush counts one drop (the buffered tail may be lost)
+    /// rather than erroring out of a finishing run.
     pub fn flush(&self) {
         if let Sink::File(w) = &mut *self.lock() {
-            let _ = w.flush();
+            if w.flush().is_err() {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
         }
     }
 }
@@ -165,6 +192,21 @@ mod tests {
         log.to_memory();
         clone.emit("watchdog_nonfinite", &[]);
         assert_eq!(log.lines().len(), 1, "clone writes must land in the shared sink");
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn full_disk_counts_drops_instead_of_killing_the_run() {
+        let log = EventLog::disabled();
+        log.to_file(Path::new("/dev/full")).expect("open the always-full device");
+        // enough payload to overflow the BufWriter and force real
+        // writes; every failed write/flush must count, never panic
+        let big = "x".repeat(4096);
+        for _ in 0..8 {
+            log.emit("spam", &[("pad", Json::Str(big.clone()))]);
+        }
+        log.flush();
+        assert!(log.dropped() >= 1, "ENOSPC must be counted, got {}", log.dropped());
     }
 
     #[test]

@@ -280,6 +280,16 @@ impl Registry {
             &[],
             || crate::runtime::pool::live_worker_threads() as i64,
         );
+        // ... and the flight recorder's loss count: a full disk under
+        // `--events` degrades to counted drops, and the count rides
+        // every exposition so the degradation is visible.
+        let dropped = reg.0.events.dropped_handle();
+        reg.counter_fn(
+            "hostencil_events_dropped_total",
+            "Flight-recorder events lost to file-sink write errors (run kept alive).",
+            &[],
+            move || dropped.load(std::sync::atomic::Ordering::Relaxed),
+        );
         reg
     }
 
@@ -576,6 +586,24 @@ mod tests {
     fn every_registry_carries_the_pool_occupancy_gauge() {
         let text = Registry::new().render();
         assert!(text.contains("# TYPE hostencil_pool_workers gauge"), "{text}");
+    }
+
+    #[test]
+    fn every_registry_exposes_the_event_drop_counter() {
+        let reg = Registry::new();
+        let text = reg.render();
+        assert!(text.contains("hostencil_events_dropped_total 0"), "{text}");
+        // the collector reads the registry's own event log live
+        #[cfg(target_os = "linux")]
+        {
+            reg.events().to_file(std::path::Path::new("/dev/full")).expect("always-full device");
+            let big = crate::json::Json::Str("x".repeat(4096));
+            for _ in 0..8 {
+                reg.events().emit("spam", &[("pad", big.clone())]);
+            }
+            reg.events().flush();
+            assert!(!reg.render().contains("hostencil_events_dropped_total 0"));
+        }
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Integration: the chaos-harness invariants at the crate's public
+//! surface. Two families of checks:
+//!
+//! 1. **Exhaustive snapshot corruption** — every single-byte flip and
+//!    every truncation length of a serialized checkpoint must produce
+//!    a named error, never a panic and never a silent accept. The
+//!    trailing checksum is verified before any length field is
+//!    trusted, so no corrupted header can drive a giant allocation.
+//! 2. **Fault injection end-to-end** — the CLI-level chaos contract
+//!    driven through the public coordinator API: an injected transport
+//!    fault either heals to a bit-identical completion or soft-aborts
+//!    with a checkpoint that restores and reconverges; a corrupted
+//!    retention-ring slot is skipped by checksum and the fallback slot
+//!    resumes onto the unfaulted trajectory.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use hostencil::coordinator::{Coordinator, Mode};
+use hostencil::fault::{FaultKind, FaultPlan, FaultSite};
+use hostencil::grid::{Dim3, Domain};
+use hostencil::recovery::{self, Checkpoint};
+use hostencil::stencil;
+use hostencil::wave::{self, Source, VelocityModel};
+
+/// A compact snapshot with every section non-empty, so the exhaustive
+/// sweeps cover header, ragged traces, energy log, and both buffers.
+fn small_checkpoint() -> Checkpoint {
+    Checkpoint {
+        interior: Dim3::new(2, 3, 4),
+        pml_width: 1,
+        h: 10.0,
+        dt: 1.25e-3,
+        steps_done: 7,
+        launches: 49,
+        traces: vec![vec![0.5, -0.25, 0.125], vec![-1.0]],
+        energy_log: vec![1.0, 2.5, 0.75],
+        u_pad: (0..24).map(|i| i as f32 * 0.5).collect(),
+        um_pad: (0..24).map(|i| -(i as f32) * 0.25).collect(),
+    }
+}
+
+#[test]
+fn every_byte_flip_of_a_snapshot_is_a_named_error_never_a_panic() {
+    let bytes = small_checkpoint().to_bytes();
+    Checkpoint::from_bytes(&bytes).expect("the pristine snapshot must parse");
+    for i in 0..bytes.len() {
+        let mut mutated = bytes.clone();
+        mutated[i] ^= 0xFF;
+        let outcome =
+            catch_unwind(AssertUnwindSafe(|| Checkpoint::from_bytes(&mutated).map(|_| ())));
+        match outcome {
+            Ok(Ok(())) => panic!("flipping byte {i} was accepted silently"),
+            Ok(Err(e)) => {
+                let msg = e.to_string();
+                assert!(!msg.is_empty(), "flip at byte {i} produced an unnamed error");
+            }
+            Err(_) => panic!("flipping byte {i} panicked the parser"),
+        }
+    }
+}
+
+#[test]
+fn every_truncation_of_a_snapshot_is_a_named_error_never_a_panic() {
+    let bytes = small_checkpoint().to_bytes();
+    for len in 0..bytes.len() {
+        let cut = &bytes[..len];
+        let outcome = catch_unwind(AssertUnwindSafe(|| Checkpoint::from_bytes(cut).map(|_| ())));
+        match outcome {
+            Ok(Ok(())) => panic!("truncating to {len} bytes was accepted silently"),
+            Ok(Err(e)) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("too short")
+                        || msg.contains("checksum")
+                        || msg.contains("truncated"),
+                    "truncation to {len} bytes: unexpected error {msg:?}"
+                );
+            }
+            Err(_) => panic!("truncating to {len} bytes panicked the parser"),
+        }
+    }
+}
+
+#[test]
+fn extended_snapshots_are_rejected_too() {
+    // appended garbage breaks the trailing checksum; appended zeros
+    // after a recomputed checksum would still fail the exact-length
+    // check — either way, never a panic
+    let mut bytes = small_checkpoint().to_bytes();
+    bytes.extend_from_slice(&[0u8; 16]);
+    let err = Checkpoint::from_bytes(&bytes).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "{err}");
+}
+
+/// The shared sharded configuration for the end-to-end fault legs:
+/// fused degree 2, two z-slab shards, two worker threads.
+fn chaos_coordinator() -> Coordinator<'static> {
+    let interior = Dim3::new(20, 12, 12);
+    let h = 10.0;
+    let v0 = 2500.0f32;
+    let domain = Domain::new(interior, 4, h, stencil::cfl_dt(h, v0 as f64)).unwrap();
+    let v = VelocityModel::Constant(v0).build(interior);
+    let eta = wave::eta_profile(&domain, v0 as f64);
+    let src = Source { pos: Dim3::new(10, 6, 6), f0: 15.0, amplitude: 1.0 };
+    let mut c = Coordinator::new(
+        None,
+        domain,
+        Mode::Golden,
+        "tf_s2",
+        "gmem",
+        v,
+        eta,
+        src,
+        vec![Dim3::new(5, 6, 6)],
+    )
+    .unwrap();
+    c.set_cpu_threads(2);
+    c.set_shards(2).unwrap();
+    c
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hostencil_chaosit_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn dropped_halo_band_heals_to_a_bit_identical_completion() {
+    let mut oracle = chaos_coordinator();
+    oracle.run(12).unwrap();
+
+    let plan = FaultPlan::single(FaultSite::Halo, FaultKind::Drop, 4, 1);
+    let mut c = chaos_coordinator();
+    c.set_faults(std::sync::Arc::clone(&plan));
+    let s = c.run(12).unwrap();
+    assert_eq!(s.steps, 12, "the retry seam must absorb a dropped band");
+    assert!(c.soft_abort().is_none());
+    assert_eq!(plan.injected(FaultSite::Halo), 1, "the drop must actually fire");
+    assert_eq!(c.state_digest(), oracle.state_digest(), "healed run must be bit-identical");
+}
+
+#[test]
+fn stalled_halo_soft_aborts_and_the_checkpoint_resumes_bitwise() {
+    let dir = scratch_dir("stall");
+    let path = dir.join("trip.ckpt");
+    let mut oracle = chaos_coordinator();
+    oracle.run(12).unwrap();
+
+    let mut c = chaos_coordinator();
+    c.set_checkpointing(0, Some(path.clone()));
+    c.set_halo_deadline(Duration::from_millis(5));
+    c.set_faults(FaultPlan::single(FaultSite::Halo, FaultKind::Delay, 4, 1));
+    let s = c.run(12).unwrap();
+    let abort = c.soft_abort().expect("an exhausted exchange deadline must soft-abort");
+    assert_eq!(abort.kind.name(), "halo_stall");
+    assert!(s.steps < 12);
+
+    let mut resumed = chaos_coordinator();
+    let (used, skipped) = resumed.restore_from_ring(&path, 1).unwrap();
+    assert_eq!(used, path);
+    assert!(skipped.is_empty(), "{skipped:?}");
+    assert_eq!(resumed.steps_done(), abort.step, "the trip snapshot holds pre-batch state");
+    resumed.run(12 - abort.step).unwrap();
+    assert_eq!(
+        resumed.state_digest(),
+        oracle.state_digest(),
+        "restore + resume must reconverge on the unfaulted run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn ring_fallback_skips_a_corrupt_slot_and_reconverges() {
+    let dir = scratch_dir("ring");
+    let path = dir.join("run.ckpt");
+
+    // write a two-slot ring at steps 4 and 8, remembering the final
+    // digest at step 12
+    let mut writer = chaos_coordinator();
+    writer.set_checkpointing(4, Some(path.clone()));
+    writer.set_checkpoint_keep(2);
+    writer.run(12).unwrap();
+    let want = writer.state_digest();
+    let ring = recovery::ring_paths(&path, 2);
+    assert_eq!(Checkpoint::load(&ring[0]).unwrap().steps_done, 12);
+    assert_eq!(Checkpoint::load(&ring[1]).unwrap().steps_done, 8);
+
+    // a reader armed with restore-time corruption: the newest slot is
+    // flipped, detected by checksum, and skipped with a note
+    let mut r = chaos_coordinator();
+    r.set_faults(FaultPlan::single(FaultSite::Restore, FaultKind::Corrupt, 0, 1));
+    let (used, skipped) = r.restore_from_ring(&path, 2).unwrap();
+    assert_eq!(used, ring[1], "the fallback must land on the older slot");
+    assert_eq!(skipped.len(), 1, "{skipped:?}");
+    assert!(skipped[0].contains("checksum"), "{}", skipped[0]);
+    assert_eq!(r.steps_done(), 8);
+    r.run(4).unwrap();
+    assert_eq!(r.state_digest(), want, "the fallback slot must resume onto the trajectory");
+    let _ = std::fs::remove_dir_all(&dir);
+}
